@@ -1,0 +1,65 @@
+//! Full §6.3-style cluster simulation on one model: all four policies,
+//! CSV output for plotting.
+//!
+//! Run: `cargo run --release --example cluster_sim -- --model yi-34b \
+//!       --requests 20000 --out results.csv`
+
+use std::fmt::Write as _;
+
+use pecsched::config::{ModelSpec, PolicyKind};
+use pecsched::exp::{run_cell, trace_for, ExpParams};
+use pecsched::util::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let model_name = args.str_or("model", "yi-34b");
+    let model = ModelSpec::by_name(&model_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown model {model_name}"))?;
+    let p = ExpParams {
+        n_requests: args.parse_or("requests", 20_000usize)?,
+        seed: args.parse_or("seed", 42u64)?,
+        load: args.parse_or("load", 0.7f64)?,
+    };
+    let trace = trace_for(&model, &p);
+    eprintln!(
+        "model={} requests={} longs={} window={:.0}s",
+        model.name,
+        trace.len(),
+        trace.longs().count(),
+        trace.span()
+    );
+
+    let mut csv = String::from(
+        "policy,p1,p25,p50,p75,p99,short_rps,long_jct_mean,preemptions,\
+         idle_rate,starved_frac\n",
+    );
+    for kind in PolicyKind::comparison_set() {
+        let mut m = run_cell(&model, kind, &trace);
+        let d = m.short_queue_delay.paper_percentiles();
+        writeln!(
+            csv,
+            "{},{:.4},{:.4},{:.4},{:.4},{:.4},{:.3},{:.1},{},{:.4},{:.3}",
+            m.policy,
+            d[0],
+            d[1],
+            d[2],
+            d[3],
+            d[4],
+            m.short_rps(),
+            m.long_jct.mean(),
+            m.preemptions,
+            m.gpu_idle_rate,
+            m.starved_frac()
+        )?;
+        eprintln!("{} done", m.policy);
+    }
+
+    match args.get("out") {
+        Some(path) => {
+            std::fs::write(path, &csv)?;
+            eprintln!("wrote {path}");
+        }
+        None => print!("{csv}"),
+    }
+    Ok(())
+}

@@ -1,0 +1,128 @@
+//! End-to-end serving driver (DESIGN.md §6): load the real AOT-compiled
+//! model through PJRT, serve a mixed short/long workload through the rust
+//! engine in both FIFO and PecSched modes, and report TTFT percentiles,
+//! queueing delay and throughput — the single-host incarnation of the
+//! paper's headline comparison, on *real* execution (L1 Pallas kernels
+//! inside L2 HLO driven by the L3 coordinator).
+//!
+//! Run after `make artifacts`:
+//!   `cargo run --release --example serve_e2e`
+
+use std::time::Instant;
+
+use pecsched::runtime::Artifacts;
+use pecsched::server::{EngineConfig, EngineMode, ServeRequest, ServerHandle};
+use pecsched::util::Rng;
+
+struct WorkloadResult {
+    ttfts_short: Vec<f64>,
+    queue_short: Vec<f64>,
+    wall_s: f64,
+    completed: usize,
+    preemptions: u64,
+}
+
+fn run_mode(mode: EngineMode, n: usize, seed: u64) -> anyhow::Result<WorkloadResult> {
+    let dir = Artifacts::default_dir();
+    anyhow::ensure!(
+        Artifacts::available(&dir),
+        "artifacts missing — run `make artifacts` first"
+    );
+    let cfg = EngineConfig {
+        mode,
+        long_prompt_threshold: 192,
+        ..EngineConfig::default()
+    };
+    let handle = ServerHandle::start(&dir, cfg)?;
+
+    // Mixed workload: mostly short prompts, every 10th request a "long"
+    // prompt (chunk-prefilled, preemptible). Deterministic via seed.
+    let mut rng = Rng::seed_from_u64(seed);
+    let t0 = Instant::now();
+    let mut rxs = Vec::new();
+    let mut is_long = Vec::new();
+    for i in 0..n {
+        let long = i % 10 == 9;
+        let plen = if long {
+            256 + rng.below(128)
+        } else {
+            8 + rng.below(48)
+        };
+        let prompt: Vec<i32> =
+            (0..plen).map(|_| rng.below(2000) as i32 + 1).collect();
+        is_long.push(long);
+        rxs.push(handle.submit(ServeRequest {
+            id: i as u64,
+            prompt,
+            max_new_tokens: 6,
+        }));
+    }
+
+    let mut ttfts_short = Vec::new();
+    let mut queue_short = Vec::new();
+    let mut completed = 0;
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let r = rx.recv()?;
+        completed += 1;
+        if !is_long[i] {
+            ttfts_short.push(r.ttft_s);
+            queue_short.push(r.queue_s);
+        }
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let stats = handle.shutdown()?;
+    Ok(WorkloadResult {
+        ttfts_short,
+        queue_short,
+        wall_s,
+        completed,
+        preemptions: stats.preemptions,
+    })
+}
+
+fn pct(xs: &mut [f64], q: f64) -> f64 {
+    xs.sort_by(|a, b| a.total_cmp(b));
+    xs[((xs.len() - 1) as f64 * q) as usize]
+}
+
+fn main() -> anyhow::Result<()> {
+    let n = std::env::var("SERVE_REQUESTS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(60usize);
+    println!("serving {n} requests per mode on the PJRT CPU engine...\n");
+
+    let mut rows = Vec::new();
+    for (name, mode) in [("FIFO", EngineMode::Fifo), ("PecSched", EngineMode::PecSched)] {
+        let mut r = run_mode(mode, n, 7)?;
+        let p50 = pct(&mut r.ttfts_short, 0.5);
+        let p99 = pct(&mut r.ttfts_short, 0.99);
+        let q99 = pct(&mut r.queue_short, 0.99);
+        println!(
+            "{name:<9} completed={:<4} wall={:.2}s throughput={:.2} req/s\n\
+             {:<9} short TTFT p50={:.3}s p99={:.3}s; short queue p99={:.3}s; \
+             preemptions={}",
+            r.completed,
+            r.wall_s,
+            r.completed as f64 / r.wall_s,
+            "",
+            p50,
+            p99,
+            q99,
+            r.preemptions
+        );
+        rows.push((name, p99));
+    }
+
+    let (_, fifo_p99) = rows[0];
+    let (_, pec_p99) = rows[1];
+    println!(
+        "\nshort-request TTFT p99: PecSched {:.3}s vs FIFO {:.3}s \
+         ({:.0}% reduction) — the paper's head-of-line-blocking fix, \
+         reproduced on real execution.",
+        pec_p99,
+        fifo_p99,
+        (1.0 - pec_p99 / fifo_p99) * 100.0
+    );
+    Ok(())
+}

@@ -1,0 +1,48 @@
+//! Fast-SP planner demo: §5.3's hybrid strategy selection across sequence
+//! lengths and replica counts for one model, including the per-stage
+//! comm/comp breakdown the selector reasons over.
+//!
+//! Run: `cargo run --release --example sp_planner -- --model phi-3-14b`
+
+use pecsched::config::ModelSpec;
+use pecsched::costmodel::{sp, CostModel, SpChoice, SpStage};
+use pecsched::util::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let model_name = args.str_or("model", "phi-3-14b");
+    let model = ModelSpec::by_name(&model_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown model {model_name}"))?;
+    let cm = CostModel::new(model.clone(), Default::default());
+
+    println!("=== {} (TP={}) — stage cost breakdown ===", model.name, model.tp);
+    for &len in &[100_000u32, 300_000, 500_000] {
+        let n = cm.replicas_for_long(len, 131_072);
+        let seg = len as f64 / (n * model.tp) as f64;
+        println!("\ninput {len} tokens over {n} replicas (segment/GPU = {seg:.0}):");
+        for stage in [SpStage::Attention, SpStage::Mlp] {
+            for choice in [SpChoice::Megatron, SpChoice::Ulysses] {
+                let c = sp::stage_cost(&cm, stage, choice, seg, 8);
+                println!(
+                    "  {:?}/{:?}: comm={:.2}ms comp={:.2}ms per layer",
+                    stage,
+                    choice,
+                    c.comm_s * 1e3,
+                    c.comp_s * 1e3
+                );
+            }
+        }
+        let fast = sp::plan_fast_sp(&cm, len, n, 8);
+        let ring = sp::plan_ring_only(&cm, len, n, 8);
+        println!(
+            "  -> plan: attn={:?} mlp={:?}; fast {:.1}s vs ring-only {:.1}s \
+             ({:.2}x speedup)",
+            fast.attn,
+            fast.mlp,
+            fast.total_time(&cm, len),
+            ring.total_time(&cm, len),
+            ring.total_time(&cm, len) / fast.total_time(&cm, len)
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,14 @@
+"""L1: Pallas kernels for the paper's compute hot-spot (attention)."""
+
+from .flash_decode import flash_decode
+from .flash_prefill import flash_prefill, vmem_bytes
+from .ref import attention_decode_ref, attention_prefill_ref, repeat_kv
+
+__all__ = [
+    "flash_prefill",
+    "flash_decode",
+    "vmem_bytes",
+    "attention_prefill_ref",
+    "attention_decode_ref",
+    "repeat_kv",
+]

@@ -1,0 +1,148 @@
+"""L1 Pallas kernel: single-token decode attention over a KV cache.
+
+One query token per head attends to ``length`` cached KV positions. The
+grid streams KV cache tiles HBM->VMEM (one ``(block_k, d_h)`` tile per grid
+step) and folds them into the same online-softmax recurrence the prefill
+kernel uses. ``length`` arrives as a tiny int32 array so the same compiled
+artifact serves every context length up to the bucket capacity — this is
+what lets the rust decode engine batch requests with ragged contexts.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_MASK = -1e30
+
+
+def _decode_kernel(
+    len_ref,
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    acc_ref,
+    m_ref,
+    l_ref,
+    *,
+    sm_scale: float,
+    block_k: int,
+):
+    j = pl.program_id(1)
+    nk = pl.num_programs(1)
+    length = len_ref[0]
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _MASK)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # Tiles entirely past the valid length contribute nothing; skip them.
+    @pl.when(j * block_k < length)
+    def _body():
+        q = q_ref[...].astype(jnp.float32)  # (1, d_h)
+        k = k_ref[0].astype(jnp.float32)  # (block_k, d_h)
+        v = v_ref[0].astype(jnp.float32)
+
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        s = s * sm_scale  # (1, block_k)
+
+        k_pos = j * block_k + jax.lax.broadcasted_iota(jnp.int32, (1, block_k), 1)
+        mask = k_pos < length
+        s = jnp.where(mask, s, _MASK)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    @pl.when(j == nk - 1)
+    def _finalize():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[...] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("sm_scale", "block_k", "interpret")
+)
+def flash_decode(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    length: jax.Array,
+    *,
+    sm_scale: float | None = None,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """Decode-step attention: one query token against a KV cache.
+
+    Args:
+      q: ``(num_q_heads, d_h)`` query for the new token.
+      k: ``(num_kv_heads, capacity, d_h)`` key cache (bucket capacity).
+      v: ``(num_kv_heads, capacity, d_h)`` value cache.
+      length: scalar int32 array — number of valid cache positions
+        (includes the new token's own K/V, already written at
+        ``length - 1``).
+      sm_scale: softmax scale; defaults to ``1/sqrt(d_h)``.
+      block_k: KV tile size; must divide ``capacity``.
+      interpret: run the Pallas interpreter (required on CPU).
+
+    Returns:
+      ``(num_q_heads, d_h)`` attention output.
+    """
+    n_q_heads, d_h = q.shape
+    n_kv_heads, capacity, _ = k.shape
+    if n_q_heads % n_kv_heads != 0:
+        raise ValueError(
+            f"num_q_heads ({n_q_heads}) must be a multiple of "
+            f"num_kv_heads ({n_kv_heads})"
+        )
+    if capacity % block_k != 0:
+        raise ValueError(
+            f"capacity ({capacity}) must be divisible by block_k ({block_k})"
+        )
+    group = n_q_heads // n_kv_heads
+    if sm_scale is None:
+        sm_scale = 1.0 / (d_h ** 0.5)
+
+    grid = (n_q_heads, capacity // block_k)
+    length = jnp.asarray(length, jnp.int32).reshape((1,))
+
+    kernel = functools.partial(
+        _decode_kernel, sm_scale=sm_scale, block_k=block_k
+    )
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda h, j: (0,)),
+            pl.BlockSpec((1, d_h), lambda h, j: (h, 0)),
+            pl.BlockSpec((1, block_k, d_h), lambda h, j, g=group: (h // g, j, 0)),
+            pl.BlockSpec((1, block_k, d_h), lambda h, j, g=group: (h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, d_h), lambda h, j: (h, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_q_heads, d_h), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, d_h), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(length, q, k, v)

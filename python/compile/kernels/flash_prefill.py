@@ -1,0 +1,195 @@
+"""L1 Pallas kernel: blockwise causal flash-attention prefill (GQA-aware).
+
+This is the paper's compute hot-spot (FlashAttention-2 in the authors' vLLM
+build) re-thought for TPU per DESIGN.md §Hardware-Adaptation:
+
+  * the grid dimension over KV blocks plays the role the paper's ring hops /
+    CUDA threadblock tiles play — each grid step streams one (block_k, d_h)
+    K/V tile HBM->VMEM and folds it into the online-softmax state, exactly
+    the computation one ring-attention hop performs on a sequence segment;
+  * online-softmax running state (m, l, acc) lives in VMEM scratch sized by
+    BlockSpec, not CUDA shared memory;
+  * matmuls are shaped for the MXU (block sizes multiples of the lane width
+    when run on real hardware; the interpret path accepts any divisor).
+
+Run with ``interpret=True`` on CPU — real-TPU lowering emits Mosaic
+custom-calls the CPU PJRT plugin cannot execute (see /opt/xla-example).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# Mask value: a large negative finite number. -inf breaks the online-softmax
+# recurrence (exp(-inf - -inf) = nan) so we mask with this and additionally
+# zero out masked probabilities explicitly.
+_MASK = -1e30
+
+
+def _prefill_kernel(
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    acc_ref,
+    m_ref,
+    l_ref,
+    *,
+    sm_scale: float,
+    block_q: int,
+    block_k: int,
+    causal: bool,
+):
+    """One (head, q-block, kv-block) grid step of flash attention."""
+    i = pl.program_id(1)  # q block index
+    j = pl.program_id(2)  # kv block index
+    nk = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _MASK)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # Under causality, kv blocks strictly above the diagonal contribute
+    # nothing; skip their FLOPs entirely (the analogue of FlashAttention-2's
+    # early-exit over masked tiles). A (i, j) tile intersects the causal
+    # region iff its first kv position <= the q block's last position.
+    should_run = (j * block_k <= (i + 1) * block_q - 1) if causal else (j >= 0)
+
+    @pl.when(should_run)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)  # (block_q, d_h)
+        k = k_ref[0].astype(jnp.float32)  # (block_k, d_h)
+        v = v_ref[0].astype(jnp.float32)  # (block_k, d_h)
+
+        s = jax.lax.dot_general(
+            q,
+            k,
+            (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        s = s * sm_scale  # (block_q, block_k)
+
+        if causal:
+            q_pos = i * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0
+            )
+            k_pos = j * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1
+            )
+            mask = q_pos >= k_pos
+            s = jnp.where(mask, s, _MASK)
+
+        m_prev = m_ref[...]  # (block_q, 1)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+
+        p = jnp.exp(s - m_new)
+        if causal:
+            p = jnp.where(mask, p, 0.0)
+
+        alpha = jnp.exp(m_prev - m_new)  # (block_q, 1)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    @pl.when(j == nk - 1)
+    def _finalize():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("sm_scale", "block_q", "block_k", "causal", "interpret"),
+)
+def flash_prefill(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    sm_scale: float | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    causal: bool = True,
+    interpret: bool = True,
+) -> jax.Array:
+    """Causal flash attention over a full prompt.
+
+    Args:
+      q: ``(num_q_heads, seq, d_h)`` queries.
+      k: ``(num_kv_heads, seq, d_h)`` keys; ``num_q_heads`` must be a
+        multiple of ``num_kv_heads`` (GQA mapping is done in the BlockSpec
+        index map, no materialised repeat).
+      v: ``(num_kv_heads, seq, d_h)`` values.
+      sm_scale: softmax scale; defaults to ``1/sqrt(d_h)``.
+      block_q / block_k: VMEM tile sizes; must divide ``seq``.
+      causal: apply a causal mask.
+      interpret: run the Pallas interpreter (required on CPU).
+
+    Returns:
+      ``(num_q_heads, seq, d_h)`` attention output, same dtype as ``q``.
+    """
+    n_q_heads, seq, d_h = q.shape
+    n_kv_heads = k.shape[0]
+    if n_q_heads % n_kv_heads != 0:
+        raise ValueError(
+            f"num_q_heads ({n_q_heads}) must be a multiple of "
+            f"num_kv_heads ({n_kv_heads})"
+        )
+    if seq % block_q != 0 or seq % block_k != 0:
+        raise ValueError(
+            f"seq ({seq}) must be divisible by block_q ({block_q}) and "
+            f"block_k ({block_k})"
+        )
+    group = n_q_heads // n_kv_heads
+    if sm_scale is None:
+        sm_scale = 1.0 / (d_h ** 0.5)
+
+    grid = (n_q_heads, seq // block_q, seq // block_k)
+
+    kernel = functools.partial(
+        _prefill_kernel,
+        sm_scale=sm_scale,
+        block_q=block_q,
+        block_k=block_k,
+        causal=causal,
+    )
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d_h), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, block_k, d_h), lambda h, i, j, g=group: (h // g, j, 0)),
+            pl.BlockSpec((1, block_k, d_h), lambda h, i, j, g=group: (h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d_h), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_q_heads, seq, d_h), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, d_h), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+def vmem_bytes(block_q: int, block_k: int, d_h: int, dtype_bytes: int = 4) -> int:
+    """Static VMEM footprint estimate for one grid step (DESIGN.md §8).
+
+    q + k + v + o tiles plus the f32 scratch accumulators. Used by the
+    perf notes to pick block sizes that stay under ~16 MiB/core.
+    """
+    tiles = (block_q + 2 * block_k + block_q) * d_h * dtype_bytes
+    scratch = (block_q * d_h + 2 * block_q) * 4
+    return tiles + scratch

@@ -1,0 +1,74 @@
+"""Pure-jnp oracle for the Pallas kernels.
+
+These are the ground truth the pytest suite (and hypothesis sweeps) hold the
+kernels to: plain materialised-softmax attention with explicit GQA head
+repetition. No pallas, no blocking — every op is a textbook einsum.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def repeat_kv(x: jnp.ndarray, n_rep: int) -> jnp.ndarray:
+    """Expand ``(n_kv_heads, ...)`` to ``(n_kv_heads * n_rep, ...)`` GQA-style."""
+    if n_rep == 1:
+        return x
+    return jnp.repeat(x, n_rep, axis=0)
+
+
+def attention_prefill_ref(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    sm_scale: float | None = None,
+    causal: bool = True,
+) -> jnp.ndarray:
+    """Reference causal attention. Shapes as in ``flash_prefill``."""
+    n_q_heads, seq, d_h = q.shape
+    n_kv_heads = k.shape[0]
+    group = n_q_heads // n_kv_heads
+    if sm_scale is None:
+        sm_scale = 1.0 / (d_h ** 0.5)
+
+    k = repeat_kv(k, group)
+    v = repeat_kv(v, group)
+
+    s = jnp.einsum("hqd,hkd->hqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s * sm_scale
+    if causal:
+        mask = jnp.tril(jnp.ones((seq, seq), dtype=bool))
+        s = jnp.where(mask[None, :, :], s, -jnp.inf)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("hqk,hkd->hqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def attention_decode_ref(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    length: int,
+    *,
+    sm_scale: float | None = None,
+) -> jnp.ndarray:
+    """Reference decode-step attention. Shapes as in ``flash_decode``."""
+    n_q_heads, d_h = q.shape
+    n_kv_heads, capacity, _ = k.shape
+    group = n_q_heads // n_kv_heads
+    if sm_scale is None:
+        sm_scale = 1.0 / (d_h ** 0.5)
+
+    k = repeat_kv(k, group)
+    v = repeat_kv(v, group)
+
+    s = jnp.einsum("hd,hkd->hk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s * sm_scale
+    pos = jnp.arange(capacity)
+    s = jnp.where(pos[None, :] < length, s, -jnp.inf)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("hk,hkd->hd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,292 @@
+"""L2: the serving model — a decoder-only transformer in JAX, calling the
+L1 Pallas kernels for attention.
+
+This is the compute graph the rust coordinator serves. It is authored and
+AOT-lowered here (build time only); rust loads the resulting HLO text via
+PJRT and Python never appears on the request path.
+
+Architecture (llama-family): RMSNorm -> GQA attention (RoPE) -> residual ->
+RMSNorm -> SwiGLU MLP -> residual, with a tied-embedding option left off so
+the weight manifest stays a flat ordered list.
+
+Two entry points per shape bucket:
+  * ``prefill``: ``tokens (1, S)`` -> last-position logits + KV caches padded
+    to the decode capacity ``C`` (so rust never re-packs KV host-side; the
+    prefill artifact hands the decode artifact exactly the buffer layout it
+    expects — this is the KV "migration" hand-off of the paper's
+    disaggregated short-request path).
+  * ``decode``: one token + KV caches + ``length`` -> logits + updated caches
+    (functional update via dynamic_update_slice; rust feeds the output
+    buffers straight back in as the next step's inputs, so the cache lives
+    on-device for the whole generation).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import flash_decode, flash_prefill
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Hyper-parameters of the served model (the "pec-tiny" default)."""
+
+    vocab: int = 2048
+    d_model: int = 256
+    n_layers: int = 4
+    n_q_heads: int = 8
+    n_kv_heads: int = 4
+    d_head: int = 32
+    d_ff: int = 704
+    rope_theta: float = 10000.0
+    # Pallas tile sizes (must divide every prefill bucket & the capacity).
+    block_q: int = 64
+    block_k: int = 64
+
+    @property
+    def n_params(self) -> int:
+        c = self
+        per_layer = (
+            2 * c.d_model  # two RMSNorm gains
+            + c.d_model * c.n_q_heads * c.d_head  # wq
+            + 2 * c.d_model * c.n_kv_heads * c.d_head  # wk, wv
+            + c.n_q_heads * c.d_head * c.d_model  # wo
+            + 3 * c.d_model * c.d_ff  # gate, up, down
+        )
+        return (
+            c.vocab * c.d_model  # embedding
+            + c.n_layers * per_layer
+            + c.d_model  # final norm
+            + c.d_model * c.vocab  # lm head
+        )
+
+
+def param_spec(cfg: ModelConfig) -> list[tuple[str, tuple[int, ...]]]:
+    """Ordered (name, shape) list — the contract shared with the rust runtime.
+
+    The tuple of arrays passed to the jitted functions follows exactly this
+    order, so HLO parameter ``i+fixed`` corresponds to entry ``i`` here. The
+    manifest emitted by aot.py serialises this list.
+    """
+    c = cfg
+    spec: list[tuple[str, tuple[int, ...]]] = [("embedding", (c.vocab, c.d_model))]
+    for layer in range(c.n_layers):
+        p = f"layers.{layer}."
+        spec += [
+            (p + "attn_norm", (c.d_model,)),
+            (p + "wq", (c.d_model, c.n_q_heads * c.d_head)),
+            (p + "wk", (c.d_model, c.n_kv_heads * c.d_head)),
+            (p + "wv", (c.d_model, c.n_kv_heads * c.d_head)),
+            (p + "wo", (c.n_q_heads * c.d_head, c.d_model)),
+            (p + "mlp_norm", (c.d_model,)),
+            (p + "w_gate", (c.d_model, c.d_ff)),
+            (p + "w_up", (c.d_model, c.d_ff)),
+            (p + "w_down", (c.d_ff, c.d_model)),
+        ]
+    spec += [("final_norm", (c.d_model,)), ("lm_head", (c.d_model, c.vocab))]
+    return spec
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> list[jnp.ndarray]:
+    """Deterministic scaled-gaussian init in manifest order."""
+    rng = np.random.default_rng(seed)
+    params = []
+    for name, shape in param_spec(cfg):
+        if name.endswith("norm"):
+            arr = np.ones(shape, np.float32)
+        else:
+            fan_in = shape[0]
+            arr = rng.normal(0.0, 1.0 / math.sqrt(fan_in), size=shape).astype(
+                np.float32
+            )
+        params.append(jnp.asarray(arr))
+    return params
+
+
+# ---------------------------------------------------------------------------
+# building blocks
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x: jnp.ndarray, gain: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * gain
+
+
+def _rope_angles(positions: jnp.ndarray, d_head: int, theta: float) -> tuple:
+    """cos/sin tables for RoPE at the given integer positions: (P, d_head/2)."""
+    half = d_head // 2
+    inv_freq = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[:, None] * inv_freq[None, :]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """Rotate pairs. x: (heads, P, d_head); cos/sin: (P, d_head/2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1
+    ).astype(x.dtype)
+
+
+def _unstack_layer(cfg: ModelConfig, params: list, layer: int) -> dict[str, Any]:
+    base = 1 + layer * 9
+    keys = (
+        "attn_norm wq wk wv wo mlp_norm w_gate w_up w_down"
+    ).split()
+    return dict(zip(keys, params[base : base + 9]))
+
+
+def _mlp(x: jnp.ndarray, lp: dict[str, Any]) -> jnp.ndarray:
+    h = jax.nn.silu(x @ lp["w_gate"]) * (x @ lp["w_up"])
+    return h @ lp["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# prefill
+# ---------------------------------------------------------------------------
+
+
+def prefill(
+    cfg: ModelConfig,
+    params: list[jnp.ndarray],
+    tokens: jnp.ndarray,
+    capacity: int,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Process a full prompt.
+
+    Args:
+      tokens: ``(seq,)`` int32 prompt token ids.
+      capacity: KV-cache capacity the decode bucket expects; the returned
+        caches are zero-padded to it.
+
+    Returns:
+      ``(logits, k_cache, v_cache)`` with logits ``(vocab,)`` for the last
+      position and caches ``(n_layers, n_kv_heads, capacity, d_head)``.
+    """
+    c = cfg
+    seq = tokens.shape[0]
+    x = params[0][tokens]  # (seq, d_model)
+    positions = jnp.arange(seq)
+    cos, sin = _rope_angles(positions, c.d_head, c.rope_theta)
+
+    k_caches, v_caches = [], []
+    for layer in range(c.n_layers):
+        lp = _unstack_layer(c, params, layer)
+        h = rmsnorm(x, lp["attn_norm"])
+        # (seq, H*dh) -> (H, seq, dh)
+        q = (h @ lp["wq"]).reshape(seq, c.n_q_heads, c.d_head).transpose(1, 0, 2)
+        k = (h @ lp["wk"]).reshape(seq, c.n_kv_heads, c.d_head).transpose(1, 0, 2)
+        v = (h @ lp["wv"]).reshape(seq, c.n_kv_heads, c.d_head).transpose(1, 0, 2)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+
+        o = flash_prefill(
+            q, k, v, block_q=min(c.block_q, seq), block_k=min(c.block_k, seq)
+        )  # (Hq, seq, dh)
+        o = o.transpose(1, 0, 2).reshape(seq, c.n_q_heads * c.d_head)
+        x = x + o @ lp["wo"]
+        x = x + _mlp(rmsnorm(x, lp["mlp_norm"]), lp)
+
+        pad = capacity - seq
+        k_caches.append(jnp.pad(k, ((0, 0), (0, pad), (0, 0))))
+        v_caches.append(jnp.pad(v, ((0, 0), (0, pad), (0, 0))))
+
+    x_last = rmsnorm(x[-1], params[-2])
+    logits = x_last @ params[-1]
+    return logits, jnp.stack(k_caches), jnp.stack(v_caches)
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+
+def decode(
+    cfg: ModelConfig,
+    params: list[jnp.ndarray],
+    token: jnp.ndarray,
+    k_cache: jnp.ndarray,
+    v_cache: jnp.ndarray,
+    length: jnp.ndarray,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One decode step.
+
+    Args:
+      token: scalar int32 — the token generated at position ``length - 1``.
+      k_cache/v_cache: ``(n_layers, n_kv_heads, capacity, d_head)`` with
+        ``length - 1`` valid positions on entry.
+      length: scalar int32 — valid positions *after* this token's KV is
+        written (i.e. the new token sits at index ``length - 1``).
+
+    Returns:
+      ``(logits, k_cache, v_cache)`` — next-token logits ``(vocab,)`` and
+      caches with ``length`` valid positions.
+    """
+    c = cfg
+    x = params[0][token]  # (d_model,)
+    pos = (length - 1).astype(jnp.int32)
+    cos, sin = _rope_angles(pos[None], c.d_head, c.rope_theta)
+
+    new_k, new_v = [], []
+    for layer in range(c.n_layers):
+        lp = _unstack_layer(c, params, layer)
+        h = rmsnorm(x, lp["attn_norm"])
+        q = (h @ lp["wq"]).reshape(c.n_q_heads, 1, c.d_head)
+        k = (h @ lp["wk"]).reshape(c.n_kv_heads, 1, c.d_head)
+        v = (h @ lp["wv"]).reshape(c.n_kv_heads, 1, c.d_head)
+        q = apply_rope(q, cos, sin)[:, 0]  # (Hq, dh)
+        k = apply_rope(k, cos, sin)  # (Hkv, 1, dh)
+
+        kc = jax.lax.dynamic_update_slice(
+            k_cache[layer], k.astype(k_cache.dtype), (0, pos, 0)
+        )
+        vc = jax.lax.dynamic_update_slice(
+            v_cache[layer], v.astype(v_cache.dtype), (0, pos, 0)
+        )
+        new_k.append(kc)
+        new_v.append(vc)
+
+        o = flash_decode(q, kc, vc, length, block_k=c.block_k)  # (Hq, dh)
+        x = x + o.reshape(c.n_q_heads * c.d_head) @ lp["wo"]
+        x = x + _mlp(rmsnorm(x, lp["mlp_norm"]), lp)
+
+    logits = rmsnorm(x, params[-2]) @ params[-1]
+    return logits, jnp.stack(new_k), jnp.stack(new_v)
+
+
+# ---------------------------------------------------------------------------
+# reference generation (used by python tests to produce golden outputs the
+# rust integration tests compare against)
+# ---------------------------------------------------------------------------
+
+
+def generate_greedy_ref(
+    cfg: ModelConfig,
+    params: list[jnp.ndarray],
+    prompt: np.ndarray,
+    n_new: int,
+    capacity: int,
+) -> list[int]:
+    """Greedy generation through the prefill+decode path (jit'd, CPU)."""
+    logits, kc, vc = jax.jit(
+        lambda p, t: prefill(cfg, p, t, capacity), static_argnums=()
+    )(params, jnp.asarray(prompt, jnp.int32))
+    out = [int(jnp.argmax(logits))]
+    length = len(prompt)
+    step = jax.jit(lambda p, t, k, v, l: decode(cfg, p, t, k, v, l))
+    for _ in range(n_new - 1):
+        length += 1
+        logits, kc, vc = step(
+            params, jnp.int32(out[-1]), kc, vc, jnp.int32(length)
+        )
+        out.append(int(jnp.argmax(logits)))
+    return out

@@ -1,0 +1,186 @@
+"""§4.2 as executable numerics: Megatron SP and Ulysses SP attention layers.
+
+These simulate the two intra-node SP strategies the fast-SP planner picks
+between, with communication made explicit as array reshuffles:
+
+* **Megatron SP** — each GPU holds a sequence segment; the first A2A
+  re-shards QKV from sequence-split to head-split, full-sequence attention
+  runs per head partition, the second A2A re-shards back to sequence-split
+  for the post-attention linear.
+* **Ulysses SP** — each GPU holds a sequence segment and (with TP) a head
+  partition of the parameters; all-gather assembles the full sequence, each
+  GPU computes its heads' attention for the whole sequence, the output
+  projection runs against the local parameter shard and a reduce-scatter
+  re-shards to sequence-split.
+
+Both must produce bit-identical results to a single-GPU attention layer —
+that equivalence is what lets the cluster scheduler treat the SP choice as
+a pure performance decision (§5.3), and it is what the pytest suite checks.
+Comm volumes counted by these simulations are asserted against the
+§5.3 closed forms used by the rust cost model.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class AttnParams:
+    """One attention layer's parameters (no GQA here — §4.2's exposition
+    uses MHA; the kernel layer handles GQA)."""
+
+    wq: jnp.ndarray  # (d, d)
+    wk: jnp.ndarray
+    wv: jnp.ndarray
+    wo: jnp.ndarray  # (d, d)
+    n_heads: int
+
+    @classmethod
+    def init(cls, d: int, n_heads: int, seed: int = 0) -> "AttnParams":
+        rng = np.random.default_rng(seed)
+        mk = lambda: jnp.asarray(
+            rng.normal(0, d ** -0.5, size=(d, d)).astype(np.float32)
+        )
+        return cls(wq=mk(), wk=mk(), wv=mk(), wo=mk(), n_heads=n_heads)
+
+
+def _split_heads(x: jnp.ndarray, n_heads: int) -> jnp.ndarray:
+    s, d = x.shape
+    return x.reshape(s, n_heads, d // n_heads).transpose(1, 0, 2)
+
+
+def _merge_heads(x: jnp.ndarray) -> jnp.ndarray:
+    h, s, dh = x.shape
+    return x.transpose(1, 0, 2).reshape(s, h * dh)
+
+
+def attention_layer_ref(x: jnp.ndarray, p: AttnParams) -> jnp.ndarray:
+    """Single-device attention layer (Eqs. 2–5), non-causal."""
+    q = _split_heads(x @ p.wq, p.n_heads)
+    k = _split_heads(x @ p.wk, p.n_heads)
+    v = _split_heads(x @ p.wv, p.n_heads)
+    s = jnp.einsum("hqd,hkd->hqk", q, k) / jnp.sqrt(q.shape[-1])
+    a = jnp.exp(s - s.max(-1, keepdims=True))
+    a = a / a.sum(-1, keepdims=True)
+    o = jnp.einsum("hqk,hkd->hqd", a, v)
+    return _merge_heads(o) @ p.wo
+
+
+@dataclasses.dataclass
+class SpTrace:
+    """Simulated execution record: output + counted comm volume (elements)."""
+
+    output: jnp.ndarray
+    comm_elems: int
+
+
+def megatron_sp(x: jnp.ndarray, p: AttnParams, n_gpus: int) -> SpTrace:
+    """Megatron-SP attention over `n_gpus` sequence shards (Fig. 5a).
+
+    Comm counted: first A2A (QKV head re-shard) + second A2A (output
+    re-shard). Volumes match 2·s·d per A2A participant pair.
+    """
+    seq, d = x.shape
+    assert seq % n_gpus == 0 and p.n_heads % n_gpus == 0
+    seg = seq // n_gpus
+    hpg = p.n_heads // n_gpus
+    comm = 0
+
+    # Each GPU projects its own segment (no comm: parameters replicated in
+    # the SP dimension).
+    qkv_local = []
+    for g in range(n_gpus):
+        xs = x[g * seg : (g + 1) * seg]
+        qkv_local.append(
+            (
+                _split_heads(xs @ p.wq, p.n_heads),
+                _split_heads(xs @ p.wk, p.n_heads),
+                _split_heads(xs @ p.wv, p.n_heads),
+            )
+        )
+
+    # First A2A: gather each head partition's QKV for the full sequence.
+    # Every GPU sends (n_gpus-1)/n_gpus of its 3 projected segments.
+    comm += 3 * (n_gpus - 1) * seg * d
+
+    outs = []
+    for g in range(n_gpus):
+        heads = slice(g * hpg, (g + 1) * hpg)
+        q = jnp.concatenate([ql[heads] for ql, _, _ in qkv_local], axis=1)
+        k = jnp.concatenate([kl[heads] for _, kl, _ in qkv_local], axis=1)
+        v = jnp.concatenate([vl[heads] for _, _, vl in qkv_local], axis=1)
+        s = jnp.einsum("hqd,hkd->hqk", q, k) / jnp.sqrt(q.shape[-1])
+        a = jnp.exp(s - s.max(-1, keepdims=True))
+        a = a / a.sum(-1, keepdims=True)
+        outs.append(jnp.einsum("hqk,hkd->hqd", a, v))  # (hpg, seq, dh)
+
+    # Second A2A: gather the head dim, split the sequence dim.
+    comm += (n_gpus - 1) * seq * (d // n_gpus)
+
+    o_full = jnp.concatenate(outs, axis=0)  # (n_heads, seq, dh)
+    merged = _merge_heads(o_full)
+    final = []
+    for g in range(n_gpus):
+        final.append(merged[g * seg : (g + 1) * seg] @ p.wo)
+    return SpTrace(output=jnp.concatenate(final, axis=0), comm_elems=comm)
+
+
+def ulysses_sp(x: jnp.ndarray, p: AttnParams, n_gpus: int) -> SpTrace:
+    """Ulysses-SP attention over `n_gpus` sequence shards (Fig. 5b).
+
+    Simulated with TP-style parameter sharding on the output projection:
+    each GPU holds a head partition of `wo`'s rows, computes a partial
+    product for the full sequence, and a reduce-scatter sums + re-shards.
+    Comm counted: all-gather of the sequence + reduce-scatter of outputs.
+    """
+    seq, d = x.shape
+    assert seq % n_gpus == 0 and p.n_heads % n_gpus == 0
+    seg = seq // n_gpus
+    hpg = p.n_heads // n_gpus
+    dh = d // p.n_heads
+    comm = 0
+
+    # All-gather: every GPU receives the other GPUs' segments.
+    comm += (n_gpus - 1) * seg * d
+    x_full = x  # after gather, every GPU sees the full sequence
+
+    partials = []
+    for g in range(n_gpus):
+        heads = slice(g * hpg, (g + 1) * hpg)
+        # Column-sharded QKV projections: this GPU's head partition only.
+        wq = p.wq[:, g * hpg * dh : (g + 1) * hpg * dh]
+        wk = p.wk[:, g * hpg * dh : (g + 1) * hpg * dh]
+        wv = p.wv[:, g * hpg * dh : (g + 1) * hpg * dh]
+        q = _split_heads(x_full @ wq, hpg)
+        k = _split_heads(x_full @ wk, hpg)
+        v = _split_heads(x_full @ wv, hpg)
+        s = jnp.einsum("hqd,hkd->hqk", q, k) / jnp.sqrt(dh)
+        a = jnp.exp(s - s.max(-1, keepdims=True))
+        a = a / a.sum(-1, keepdims=True)
+        o = _merge_heads(jnp.einsum("hqk,hkd->hqd", a, v))  # (seq, hpg*dh)
+        # Row-sharded output projection: partial sums over the full model
+        # dim (Eq. 5's O^h W_L^i term).
+        wo_rows = p.wo[g * hpg * dh : (g + 1) * hpg * dh, :]
+        partials.append(o @ wo_rows)
+        _ = heads
+
+    # Reduce-scatter: sum partials, re-shard by sequence.
+    comm += (n_gpus - 1) * seq * d // n_gpus * n_gpus  # ring RS volume
+    total = sum(partials[1:], partials[0])
+    return SpTrace(output=total, comm_elems=comm)
+
+
+def megatron_comm_closed_form(seq: int, d: int, n_gpus: int) -> int:
+    """Element count the simulation must report for Megatron SP."""
+    seg = seq // n_gpus
+    return 3 * (n_gpus - 1) * seg * d + (n_gpus - 1) * seq * (d // n_gpus)
+
+
+def ulysses_comm_closed_form(seq: int, d: int, n_gpus: int) -> int:
+    """Element count the simulation must report for Ulysses SP."""
+    seg = seq // n_gpus
+    return (n_gpus - 1) * seg * d + (n_gpus - 1) * seq * d

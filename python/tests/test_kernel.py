@@ -1,0 +1,251 @@
+"""Kernel vs ref allclose — the CORE correctness signal for L1.
+
+Fixed-shape grids cover the bucket shapes the AOT pipeline actually emits;
+the hypothesis sweeps walk the (heads, kv_heads, seq, d_h, blocks, dtype)
+space around them.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    attention_decode_ref,
+    attention_prefill_ref,
+    flash_decode,
+    flash_prefill,
+    vmem_bytes,
+)
+
+_TOL = dict(rtol=2e-3, atol=2e-3)  # bf16-friendly; f32 is far tighter
+
+
+def _rand(rng, shape, dtype):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# flash_prefill
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_q_heads,n_kv_heads", [(1, 1), (4, 4), (8, 4), (8, 2)])
+@pytest.mark.parametrize("seq", [64, 128, 256])
+@pytest.mark.parametrize("d_h", [32, 64])
+def test_prefill_matches_ref(n_q_heads, n_kv_heads, seq, d_h):
+    rng = np.random.default_rng(seq * d_h + n_q_heads)
+    q = _rand(rng, (n_q_heads, seq, d_h), jnp.float32)
+    k = _rand(rng, (n_kv_heads, seq, d_h), jnp.float32)
+    v = _rand(rng, (n_kv_heads, seq, d_h), jnp.float32)
+    out = flash_prefill(q, k, v, block_q=64, block_k=64)
+    ref = attention_prefill_ref(q, k, v)
+    np.testing.assert_allclose(out, ref, **_TOL)
+
+
+@pytest.mark.parametrize("block_q,block_k", [(32, 32), (64, 32), (32, 64), (128, 128)])
+def test_prefill_block_shapes(block_q, block_k):
+    rng = np.random.default_rng(7)
+    q = _rand(rng, (4, 128, 32), jnp.float32)
+    k = _rand(rng, (2, 128, 32), jnp.float32)
+    v = _rand(rng, (2, 128, 32), jnp.float32)
+    out = flash_prefill(q, k, v, block_q=block_q, block_k=block_k)
+    ref = attention_prefill_ref(q, k, v)
+    np.testing.assert_allclose(out, ref, **_TOL)
+
+
+def test_prefill_non_causal():
+    rng = np.random.default_rng(11)
+    q = _rand(rng, (2, 128, 32), jnp.float32)
+    k = _rand(rng, (2, 128, 32), jnp.float32)
+    v = _rand(rng, (2, 128, 32), jnp.float32)
+    out = flash_prefill(q, k, v, block_q=64, block_k=64, causal=False)
+    ref = attention_prefill_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(out, ref, **_TOL)
+
+
+def test_prefill_bf16():
+    rng = np.random.default_rng(13)
+    q = _rand(rng, (4, 128, 64), jnp.bfloat16)
+    k = _rand(rng, (2, 128, 64), jnp.bfloat16)
+    v = _rand(rng, (2, 128, 64), jnp.bfloat16)
+    out = flash_prefill(q, k, v, block_q=64, block_k=64)
+    ref = attention_prefill_ref(q, k, v)
+    np.testing.assert_allclose(
+        out.astype(np.float32), ref.astype(np.float32), rtol=3e-2, atol=3e-2
+    )
+
+
+def test_prefill_custom_scale():
+    rng = np.random.default_rng(17)
+    q = _rand(rng, (2, 64, 32), jnp.float32)
+    k = _rand(rng, (2, 64, 32), jnp.float32)
+    v = _rand(rng, (2, 64, 32), jnp.float32)
+    out = flash_prefill(q, k, v, sm_scale=0.5, block_q=32, block_k=32)
+    ref = attention_prefill_ref(q, k, v, sm_scale=0.5)
+    np.testing.assert_allclose(out, ref, **_TOL)
+
+
+def test_prefill_first_row_attends_only_itself():
+    """Causality invariant: token 0's output is exactly v[0] per head group."""
+    rng = np.random.default_rng(19)
+    q = _rand(rng, (4, 64, 32), jnp.float32)
+    k = _rand(rng, (2, 64, 32), jnp.float32)
+    v = _rand(rng, (2, 64, 32), jnp.float32)
+    out = flash_prefill(q, k, v, block_q=32, block_k=32)
+    for h in range(4):
+        np.testing.assert_allclose(out[h, 0], v[h // 2, 0], rtol=1e-5, atol=1e-5)
+
+
+def test_prefill_invariant_to_future_tokens():
+    """Causality invariant: perturbing suffix tokens leaves prefix output alone."""
+    rng = np.random.default_rng(23)
+    q = _rand(rng, (2, 128, 32), jnp.float32)
+    k = _rand(rng, (2, 128, 32), jnp.float32)
+    v = _rand(rng, (2, 128, 32), jnp.float32)
+    out1 = flash_prefill(q, k, v, block_q=32, block_k=32)
+    k2 = k.at[:, 96:].set(k[:, 96:] * -3.0 + 1.0)
+    v2 = v.at[:, 96:].set(v[:, 96:] * 5.0)
+    out2 = flash_prefill(q, k2, v2, block_q=32, block_k=32)
+    np.testing.assert_allclose(out1[:, :96], out2[:, :96], rtol=1e-5, atol=1e-5)
+
+
+def test_prefill_rejects_bad_shapes():
+    q = jnp.zeros((3, 64, 32))
+    k = jnp.zeros((2, 64, 32))
+    with pytest.raises(ValueError, match="multiple"):
+        flash_prefill(q, k, k)
+    q = jnp.zeros((2, 100, 32))
+    k = jnp.zeros((2, 100, 32))
+    with pytest.raises(ValueError, match="divisible"):
+        flash_prefill(q, k, k, block_q=64, block_k=64)
+
+
+def test_prefill_under_vmap():
+    """Batched use at L2 goes through vmap; it must agree with per-item calls."""
+    rng = np.random.default_rng(29)
+    q = _rand(rng, (3, 2, 64, 32), jnp.float32)
+    k = _rand(rng, (3, 2, 64, 32), jnp.float32)
+    v = _rand(rng, (3, 2, 64, 32), jnp.float32)
+    f = lambda a, b, c: flash_prefill(a, b, c, block_q=32, block_k=32)
+    batched = jax.vmap(f)(q, k, v)
+    for b in range(3):
+        np.testing.assert_allclose(batched[b], f(q[b], k[b], v[b]), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n_kv=st.sampled_from([1, 2, 4]),
+    group=st.sampled_from([1, 2, 4]),
+    seq_blocks=st.integers(1, 4),
+    d_h=st.sampled_from([16, 32, 64]),
+    block=st.sampled_from([32, 64]),
+    seed=st.integers(0, 2**16),
+)
+def test_prefill_hypothesis(n_kv, group, seq_blocks, d_h, block, seed):
+    seq = seq_blocks * block
+    rng = np.random.default_rng(seed)
+    q = _rand(rng, (n_kv * group, seq, d_h), jnp.float32)
+    k = _rand(rng, (n_kv, seq, d_h), jnp.float32)
+    v = _rand(rng, (n_kv, seq, d_h), jnp.float32)
+    out = flash_prefill(q, k, v, block_q=block, block_k=block)
+    ref = attention_prefill_ref(q, k, v)
+    np.testing.assert_allclose(out, ref, **_TOL)
+
+
+# ---------------------------------------------------------------------------
+# flash_decode
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_q_heads,n_kv_heads", [(1, 1), (8, 4), (8, 2)])
+@pytest.mark.parametrize("capacity", [128, 256, 512])
+def test_decode_matches_ref(n_q_heads, n_kv_heads, capacity):
+    rng = np.random.default_rng(capacity + n_q_heads)
+    q = _rand(rng, (n_q_heads, 32), jnp.float32)
+    k = _rand(rng, (n_kv_heads, capacity, 32), jnp.float32)
+    v = _rand(rng, (n_kv_heads, capacity, 32), jnp.float32)
+    for length in (1, capacity // 2 + 3, capacity):
+        out = flash_decode(q, k, v, jnp.int32(length), block_k=64)
+        ref = attention_decode_ref(q, k, v, length)
+        np.testing.assert_allclose(out, ref, **_TOL)
+
+
+def test_decode_ignores_garbage_past_length():
+    """Positions >= length must not leak into the output."""
+    rng = np.random.default_rng(31)
+    q = _rand(rng, (4, 32), jnp.float32)
+    k = _rand(rng, (2, 128, 32), jnp.float32)
+    v = _rand(rng, (2, 128, 32), jnp.float32)
+    out1 = flash_decode(q, k, v, jnp.int32(50), block_k=32)
+    k2 = k.at[:, 50:].set(1e4)
+    v2 = v.at[:, 50:].set(-1e4)
+    out2 = flash_decode(q, k2, v2, jnp.int32(50), block_k=32)
+    np.testing.assert_allclose(out1, out2, rtol=1e-6, atol=1e-6)
+
+
+def test_decode_length_one_returns_v0():
+    rng = np.random.default_rng(37)
+    q = _rand(rng, (4, 32), jnp.float32)
+    k = _rand(rng, (2, 128, 32), jnp.float32)
+    v = _rand(rng, (2, 128, 32), jnp.float32)
+    out = flash_decode(q, k, v, jnp.int32(1), block_k=32)
+    for h in range(4):
+        np.testing.assert_allclose(out[h], v[h // 2, 0], rtol=1e-5, atol=1e-5)
+
+
+def test_decode_rejects_bad_shapes():
+    q = jnp.zeros((3, 32))
+    kv = jnp.zeros((2, 128, 32))
+    with pytest.raises(ValueError, match="multiple"):
+        flash_decode(q, kv, kv, jnp.int32(4))
+    q = jnp.zeros((2, 32))
+    kv = jnp.zeros((2, 100, 32))
+    with pytest.raises(ValueError, match="divisible"):
+        flash_decode(q, kv, kv, jnp.int32(4), block_k=64)
+
+
+def test_decode_consistent_with_prefill_last_row():
+    """Decode over a cache == last row of a causal prefill on the same seq."""
+    rng = np.random.default_rng(41)
+    seq = 128
+    q = _rand(rng, (4, seq, 32), jnp.float32)
+    k = _rand(rng, (2, seq, 32), jnp.float32)
+    v = _rand(rng, (2, seq, 32), jnp.float32)
+    pre = flash_prefill(q, k, v, block_q=32, block_k=32)
+    dec = flash_decode(q[:, -1], k, v, jnp.int32(seq), block_k=32)
+    np.testing.assert_allclose(dec, pre[:, -1], rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n_kv=st.sampled_from([1, 2, 4]),
+    group=st.sampled_from([1, 2, 4]),
+    cap_blocks=st.integers(1, 6),
+    block=st.sampled_from([32, 64]),
+    d_h=st.sampled_from([16, 32]),
+    seed=st.integers(0, 2**16),
+    frac=st.floats(0.01, 1.0),
+)
+def test_decode_hypothesis(n_kv, group, cap_blocks, block, d_h, seed, frac):
+    capacity = cap_blocks * block
+    length = max(1, int(frac * capacity))
+    rng = np.random.default_rng(seed)
+    q = _rand(rng, (n_kv * group, d_h), jnp.float32)
+    k = _rand(rng, (n_kv, capacity, d_h), jnp.float32)
+    v = _rand(rng, (n_kv, capacity, d_h), jnp.float32)
+    out = flash_decode(q, k, v, jnp.int32(length), block_k=block)
+    ref = attention_decode_ref(q, k, v, length)
+    np.testing.assert_allclose(out, ref, **_TOL)
+
+
+# ---------------------------------------------------------------------------
+# misc
+# ---------------------------------------------------------------------------
+
+
+def test_vmem_budget():
+    """DESIGN.md §8: the production block shape stays well under 16 MiB."""
+    assert vmem_bytes(128, 128, 128) < 16 * 1024 * 1024
+    assert vmem_bytes(128, 128, 128, dtype_bytes=2) < vmem_bytes(128, 128, 128)

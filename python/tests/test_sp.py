@@ -1,0 +1,139 @@
+"""SP substrate tests: ring attention and Megatron/Ulysses SP must all be
+numerically lossless vs dense attention — the property the paper's whole
+long-request path rests on ("handle long requests losslessly", §7)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention_prefill_ref
+from compile.kernels.ring_attention import ring_attention, ring_hop_comm_bytes
+from compile.sp_numerics import (
+    AttnParams,
+    attention_layer_ref,
+    megatron_comm_closed_form,
+    megatron_sp,
+    ulysses_comm_closed_form,
+    ulysses_sp,
+)
+
+_TOL = dict(rtol=2e-4, atol=2e-4)
+
+
+def _rand(shape, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# ring attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_nodes", [1, 2, 4, 8])
+@pytest.mark.parametrize("causal", [True, False])
+def test_ring_attention_lossless(n_nodes, causal):
+    q = _rand((4, 128, 32), 1)
+    k = _rand((4, 128, 32), 2)
+    v = _rand((4, 128, 32), 3)
+    out = ring_attention(q, k, v, n_nodes, causal=causal)
+    ref = attention_prefill_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(out, ref, **_TOL)
+
+
+def test_ring_attention_matches_across_ring_lengths():
+    q = _rand((2, 96, 16), 4)
+    k = _rand((2, 96, 16), 5)
+    v = _rand((2, 96, 16), 6)
+    a = ring_attention(q, k, v, 2)
+    b = ring_attention(q, k, v, 6)
+    np.testing.assert_allclose(a, b, **_TOL)
+
+
+def test_ring_attention_rejects_ragged():
+    q = _rand((2, 100, 16), 7)
+    with pytest.raises(ValueError):
+        ring_attention(q, q, q, 3)
+
+
+def test_ring_hop_bytes():
+    # 2 (K and V) * seg * kv_heads * d_head * 2 bytes
+    assert ring_hop_comm_bytes(1024, 4, 8, 128) == 2 * 256 * 8 * 128 * 2
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n_nodes=st.sampled_from([2, 3, 4]),
+    seg=st.sampled_from([16, 32]),
+    heads=st.sampled_from([1, 2, 4]),
+    seed=st.integers(0, 1000),
+)
+def test_ring_attention_hypothesis(n_nodes, seg, heads, seed):
+    seq = n_nodes * seg
+    q = _rand((heads, seq, 16), seed)
+    k = _rand((heads, seq, 16), seed + 1)
+    v = _rand((heads, seq, 16), seed + 2)
+    out = ring_attention(q, k, v, n_nodes)
+    ref = attention_prefill_ref(q, k, v)
+    np.testing.assert_allclose(out, ref, **_TOL)
+
+
+# ---------------------------------------------------------------------------
+# Megatron / Ulysses SP
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_gpus", [1, 2, 4])
+def test_megatron_sp_lossless(n_gpus):
+    p = AttnParams.init(d=64, n_heads=4, seed=0)
+    x = _rand((32, 64), 10)
+    trace = megatron_sp(x, p, n_gpus)
+    ref = attention_layer_ref(x, p)
+    np.testing.assert_allclose(trace.output, ref, **_TOL)
+
+
+@pytest.mark.parametrize("n_gpus", [1, 2, 4])
+def test_ulysses_sp_lossless(n_gpus):
+    p = AttnParams.init(d=64, n_heads=4, seed=1)
+    x = _rand((32, 64), 11)
+    trace = ulysses_sp(x, p, n_gpus)
+    ref = attention_layer_ref(x, p)
+    np.testing.assert_allclose(trace.output, ref, **_TOL)
+
+
+def test_megatron_and_ulysses_agree():
+    p = AttnParams.init(d=128, n_heads=8, seed=2)
+    x = _rand((64, 128), 12)
+    m = megatron_sp(x, p, 4)
+    u = ulysses_sp(x, p, 4)
+    np.testing.assert_allclose(m.output, u.output, **_TOL)
+
+
+def test_comm_volumes_match_closed_forms():
+    # The counted element traffic must equal the closed forms the rust
+    # cost model's §5.3 selector is built from.
+    p = AttnParams.init(d=64, n_heads=4, seed=3)
+    x = _rand((32, 64), 13)
+    for n in (2, 4):
+        m = megatron_sp(x, p, n)
+        u = ulysses_sp(x, p, n)
+        assert m.comm_elems == megatron_comm_closed_form(32, 64, n)
+        assert u.comm_elems == ulysses_comm_closed_form(32, 64, n)
+
+
+def test_single_gpu_sp_has_zero_comm():
+    p = AttnParams.init(d=64, n_heads=4, seed=4)
+    x = _rand((32, 64), 14)
+    assert megatron_sp(x, p, 1).comm_elems == 0
+    assert ulysses_sp(x, p, 1).comm_elems == 0
+
+
+def test_ulysses_gather_volume_below_megatron_a2a_at_many_heads():
+    # The §3.3 trade-off: Megatron's A2A grows with 3x QKV while Ulysses
+    # gathers the sequence once; with equal d the Ulysses gather is
+    # smaller, which is why it wins when bandwidth binds.
+    seq, d, n = 64, 128, 4
+    assert ulysses_comm_closed_form(seq, d, n) < megatron_comm_closed_form(
+        seq, d, n
+    ) + (n - 1) * seq * d

@@ -1,0 +1,77 @@
+//! Benchmarks of the real PJRT serving path: prefill latency per bucket,
+//! decode step latency, and end-to-end engine throughput in FIFO vs
+//! PecSched modes. Skips cleanly when artifacts are missing.
+//!
+//! These are the numbers EXPERIMENTS.md §E2E reports.
+
+use pecsched::runtime::Artifacts;
+use pecsched::server::{EngineConfig, EngineMode, ServeRequest, ServerHandle};
+use pecsched::util::Bench;
+
+fn main() {
+    let dir = Artifacts::default_dir();
+    if !Artifacts::available(&dir) {
+        println!(
+            "runtime_bench: no artifacts at {} — run `make artifacts`",
+            dir.display()
+        );
+        return;
+    }
+    println!("--- runtime_bench: PJRT CPU serving path ---");
+    let arts = Artifacts::load(&dir).expect("artifacts");
+    println!("platform: {}", arts.platform());
+
+    // Prefill latency per bucket.
+    for bucket in arts.buckets() {
+        let prompt: Vec<i32> = (0..bucket as i32).map(|i| i % 500 + 1).collect();
+        Bench::new(&format!("prefill/s{bucket}"))
+            .budget_ms(2500)
+            .min_iters(5)
+            .run(|| arts.prefill(&prompt).unwrap().logits[0]);
+    }
+
+    // Decode step latency (the per-token cost of generation).
+    let bucket = arts.buckets()[0];
+    let prompt: Vec<i32> = (0..bucket as i32).map(|i| i % 500 + 1).collect();
+    let pre = arts.prefill(&prompt).unwrap();
+    let r = Bench::new("decode_step")
+        .budget_ms(2500)
+        .min_iters(20)
+        .run(|| {
+            arts.decode(7, &pre.k_cache, &pre.v_cache, (bucket + 1) as i32)
+                .unwrap()
+                .logits[0]
+        });
+    println!("  -> {:.1} tokens/s single-stream", 1.0 / r.mean_s);
+
+    // End-to-end engine throughput, FIFO vs PecSched.
+    for (name, mode) in [("fifo", EngineMode::Fifo), ("pecsched", EngineMode::PecSched)] {
+        Bench::new(&format!("engine_e2e/{name}/24req"))
+            .budget_ms(6000)
+            .min_iters(2)
+            .run(|| {
+                let h = ServerHandle::start(
+                    &dir,
+                    EngineConfig {
+                        mode,
+                        ..EngineConfig::default()
+                    },
+                )
+                .unwrap();
+                let rxs: Vec<_> = (0..24)
+                    .map(|i| {
+                        let plen = if i % 8 == 7 { 260 } else { 16 + i % 24 };
+                        h.submit(ServeRequest {
+                            id: i as u64,
+                            prompt: (0..plen).map(|j| (j % 700) as i32 + 1).collect(),
+                            max_new_tokens: 4,
+                        })
+                    })
+                    .collect();
+                for rx in rxs {
+                    rx.recv().unwrap();
+                }
+                h.shutdown().unwrap().completed
+            });
+    }
+}

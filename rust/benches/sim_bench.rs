@@ -1,0 +1,82 @@
+//! End-to-end simulator benchmarks — one per paper experiment family.
+//!
+//! Reports events/second of the discrete-event engine (the L3 perf target
+//! in DESIGN.md §8) and per-cell wall time of the experiment grids.
+//! criterion is unavailable offline; the in-crate harness (util::Bench)
+//! warms up and reports mean/p50/p99/min.
+
+use pecsched::config::{AblationFlags, ModelSpec, PolicyKind};
+use pecsched::exp::capacity_rps;
+use pecsched::sim::{run_sim, SimConfig, Simulation};
+use pecsched::trace::TraceConfig;
+use pecsched::util::Bench;
+
+fn trace(model: &ModelSpec, n: usize, seed: u64) -> pecsched::trace::Trace {
+    TraceConfig {
+        n_requests: n,
+        rps: capacity_rps(model, 0.8),
+        seed,
+        long_quantile: 0.998,
+        ..TraceConfig::default()
+    }
+    .generate()
+}
+
+fn main() {
+    println!("--- sim_bench: discrete-event engine throughput ---");
+
+    // Fig 9-11 cell: one full (model, policy) simulation.
+    for kind in [
+        PolicyKind::Fifo,
+        PolicyKind::Reservation,
+        PolicyKind::Priority,
+        PolicyKind::PecSched(AblationFlags::full()),
+    ] {
+        let model = ModelSpec::mistral_7b();
+        let t = trace(&model, 4000, 1);
+        Bench::new(&format!("fig9_cell/{}/4k_reqs", kind.name()))
+            .budget_ms(3000)
+            .min_iters(3)
+            .run(|| {
+                let cfg = match kind {
+                    PolicyKind::PecSched(f) => SimConfig::pecsched(model.clone(), f),
+                    _ => SimConfig::baseline(model.clone()),
+                };
+                run_sim(cfg, &t, kind).shorts_completed
+            });
+    }
+
+    // Raw event throughput (the §Perf headline number).
+    let model = ModelSpec::mistral_7b();
+    let t = trace(&model, 8000, 2);
+    let kind = PolicyKind::PecSched(AblationFlags::full());
+    let mut events_per_run = 0u64;
+    let r = Bench::new("event_engine/pecsched/8k_reqs")
+        .budget_ms(4000)
+        .min_iters(3)
+        .run(|| {
+            let cfg = SimConfig::pecsched(model.clone(), AblationFlags::full());
+            let mut sim = Simulation::new(cfg, &t, kind);
+            let m = sim.run();
+            events_per_run = sim.state.events_processed;
+            m.shorts_completed
+        });
+    println!(
+        "  -> {:.2}M events/s ({} events per run)",
+        events_per_run as f64 / r.mean_s / 1e6,
+        events_per_run
+    );
+
+    // Fig 15 cell: big-cluster scheduling (dispatch scan cost dominates).
+    let big = ModelSpec::llama31_70b();
+    let t = trace(&big, 2000, 3);
+    Bench::new("fig15_cell/llama70b/512gpu/2k_reqs")
+        .budget_ms(4000)
+        .min_iters(2)
+        .run(|| {
+            let mut cfg = SimConfig::pecsched(big.clone(), AblationFlags::full());
+            cfg.cluster = pecsched::config::ClusterSpec::with_total_gpus(512);
+            run_sim(cfg, &t, PolicyKind::PecSched(AblationFlags::full()))
+                .shorts_completed
+        });
+}

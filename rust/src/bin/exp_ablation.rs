@@ -1,0 +1,59 @@
+//! Figs. 12–14 + Table 6 — §6.4 ablation study: PecSched vs /PE, /Dis,
+//! /CoL, /FSP on short delay, short throughput, long JCT and preemptions.
+
+use pecsched::config::{ModelSpec, PolicyKind};
+use pecsched::exp::{banner, fmt_pcts, run_cell, trace_for, ExpParams};
+
+fn main() {
+    let p = ExpParams::from_env();
+    banner("Figs 12-14 + Table 6: ablation study");
+    println!(
+        "(paper: /PE has 75-376% higher short p99 and 21-48% lower \
+         throughput; /Dis,/CoL,/FSP raise long JCT by 21-29%/23-26%/39-55%; \
+         preemptions: /FSP > /CoL > /Dis > PecSched)\n"
+    );
+
+    for model in ModelSpec::catalog() {
+        let trace = trace_for(&model, &p);
+        println!("=== {} ===", model.name);
+        let mut rows = Vec::new();
+        for kind in PolicyKind::ablation_set() {
+            rows.push(run_cell(&model, kind, &trace));
+        }
+        let base_p99 = rows[0].short_queue_delay.quantile(0.99);
+        let base_rps = rows[0].short_rps();
+        let base_jct = rows[0].long_jct.mean();
+
+        println!("Fig 12 (short queueing delay):");
+        for m in &mut rows {
+            let pcts = m.short_queue_delay.paper_percentiles();
+            println!("  {}", fmt_pcts(&m.policy, pcts));
+        }
+        println!("Fig 13 (short throughput):");
+        for m in &rows {
+            println!(
+                "  {:<16} {:>8.2} RPS ({:+.0}% vs PecSched)",
+                m.policy,
+                m.short_rps(),
+                (m.short_rps() / base_rps - 1.0) * 100.0
+            );
+        }
+        println!("Fig 14 (long avg JCT):");
+        for m in &rows {
+            println!(
+                "  {:<16} {:>9.1}s ({:+.0}% vs PecSched)",
+                m.policy,
+                m.long_jct.mean(),
+                (m.long_jct.mean() / base_jct - 1.0) * 100.0
+            );
+        }
+        println!("Table 6 (preemptions of long requests):");
+        for m in &rows {
+            if m.policy != "PecSched/PE" {
+                println!("  {:<16} {:>10}", m.policy, m.preemptions);
+            }
+        }
+        let _ = base_p99;
+        println!();
+    }
+}

@@ -1,0 +1,63 @@
+//! Fig. 1 — input and output length distributions of the (synthetic)
+//! Azure LLM inference trace.
+//!
+//! Prints the histogram series of both distributions plus the headline
+//! statistics §3.1 quotes: ~80% of inputs below 2K tokens, outputs under
+//! 800, long tail decaying with length.
+
+use pecsched::exp::{banner, ExpParams};
+use pecsched::trace::{histogram, percentile_of, LengthStats, TraceConfig};
+
+fn main() {
+    let p = ExpParams::from_env();
+    let trace = TraceConfig {
+        n_requests: p.n_requests.max(20_000),
+        rps: 10.0,
+        seed: p.seed,
+        ..TraceConfig::default()
+    }
+    .generate();
+
+    let inputs: Vec<u32> = trace.requests.iter().map(|r| r.input_len).collect();
+    let outputs: Vec<u32> = trace.requests.iter().map(|r| r.output_len).collect();
+
+    banner("Fig 1(a): input length distribution");
+    let edges = [64, 128, 256, 512, 1024, 2048, 4096, 9000, 200_000, 500_000];
+    for (edge, count) in histogram(&inputs, &edges) {
+        let frac = count as f64 / inputs.len() as f64;
+        println!(
+            "<= {edge:>7}: {count:>7} ({:>5.1}%) {}",
+            frac * 100.0,
+            "#".repeat((frac * 120.0) as usize)
+        );
+    }
+    let s = LengthStats::inputs(&trace);
+    println!(
+        "inputs: mean={:.0} p50={} p80={} p95={} p99={} max={}",
+        s.mean, s.p50, s.p80, s.p95, s.p99, s.max
+    );
+    println!(
+        "fraction below 2K tokens: {:.1}% (paper: ~80%)",
+        percentile_of(&inputs, 2000) * 100.0
+    );
+    println!(
+        "long-request fraction: {:.2}% (paper: rewritten p95 tail)",
+        trace.longs().count() as f64 / trace.len() as f64 * 100.0
+    );
+
+    banner("Fig 1(b): output length distribution");
+    let edges = [16, 32, 64, 128, 256, 512, 800];
+    for (edge, count) in histogram(&outputs, &edges) {
+        let frac = count as f64 / outputs.len() as f64;
+        println!(
+            "<= {edge:>7}: {count:>7} ({:>5.1}%) {}",
+            frac * 100.0,
+            "#".repeat((frac * 120.0) as usize)
+        );
+    }
+    let s = LengthStats::outputs(&trace);
+    println!(
+        "outputs: mean={:.0} p50={} p95={} max={} (paper: under 800)",
+        s.mean, s.p50, s.p95, s.max
+    );
+}

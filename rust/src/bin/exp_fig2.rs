@@ -1,0 +1,38 @@
+//! Fig. 2 — FIFO with vs without long requests: normalized queueing delay
+//! percentiles (a) and short-request throughput (b), across all four
+//! models. Reproduces §3.2's head-of-line-blocking measurement.
+
+use pecsched::config::{ModelSpec, PolicyKind};
+use pecsched::exp::{banner, fmt_pcts, run_cell, trace_for, ExpParams};
+
+fn main() {
+    let p = ExpParams::from_env();
+    banner("Fig 2: FIFO, short requests with vs without long requests");
+    println!(
+        "(paper: w/ longs p99 is 2.5x/2.78x/3.84x/10.2x higher; throughput \
+         drops to 0.64x/0.56x/0.39x/0.19x)\n"
+    );
+
+    for model in ModelSpec::catalog() {
+        let trace = trace_for(&model, &p);
+        let without = trace.without_longs();
+
+        let mut with_m = run_cell(&model, PolicyKind::Fifo, &trace);
+        let mut wo_m = run_cell(&model, PolicyKind::Fifo, &without);
+
+        let pw = with_m.short_queue_delay.paper_percentiles();
+        let po = wo_m.short_queue_delay.paper_percentiles();
+        println!("--- {} ---", model.name);
+        println!("{}", fmt_pcts("w/ longs", pw));
+        println!("{}", fmt_pcts("w/o longs", po));
+        let ratio = if po[4] > 0.0 { pw[4] / po[4] } else { f64::NAN };
+        println!("p99 delay ratio (w/ / w/o): {ratio:.2}x");
+        println!(
+            "throughput: w/ {:.2} RPS, w/o {:.2} RPS -> {:.2}x",
+            with_m.short_rps(),
+            wo_m.short_rps(),
+            with_m.short_rps() / wo_m.short_rps()
+        );
+        println!();
+    }
+}

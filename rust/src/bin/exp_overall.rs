@@ -1,0 +1,82 @@
+//! Figs. 9–11 — §6.3 overall comparison: all four policies × all four
+//! models on the standard trace.
+//!
+//! * Fig. 9 : queueing-delay percentiles of short requests
+//! * Fig. 10: throughput (RPS) of short requests
+//! * Fig. 11: average JCT of long requests (unbounded under Priority)
+
+use pecsched::config::{ModelSpec, PolicyKind};
+use pecsched::exp::{banner, fmt_pcts, run_cell, trace_for, ExpParams};
+
+fn main() {
+    let p = ExpParams::from_env();
+    banner("Figs 9-11: overall comparison (FIFO / Reservation / Priority / PecSched)");
+    println!(
+        "(paper: PecSched ~= Priority on short p99; 58-87% below FIFO and \
+         61-92% below Reservation; long JCT +4-7% vs FIFO, +6-13% vs \
+         Reservation; Priority long JCT unbounded)\n"
+    );
+
+    for model in ModelSpec::catalog() {
+        let trace = trace_for(&model, &p);
+        println!("=== {} ===", model.name);
+        let mut rows = Vec::new();
+        for kind in PolicyKind::comparison_set() {
+            let m = run_cell(&model, kind, &trace);
+            rows.push(m);
+        }
+        // Fig 9: delay percentiles.
+        println!("Fig 9 (queueing delay of shorts):");
+        let mut fifo_p99 = 0.0;
+        for m in &mut rows {
+            let pcts = m.short_queue_delay.paper_percentiles();
+            if m.policy == "FIFO" {
+                fifo_p99 = pcts[4];
+            }
+            println!("  {}", fmt_pcts(&m.policy, pcts));
+        }
+        // Headline reductions.
+        for m in &mut rows {
+            if m.policy == "PecSched" {
+                let p99 = m.short_queue_delay.quantile(0.99);
+                println!(
+                    "  PecSched p99 reduction vs FIFO: {:.0}%",
+                    (1.0 - p99 / fifo_p99.max(1e-12)) * 100.0
+                );
+            }
+        }
+        // Fig 10: throughput.
+        println!("Fig 10 (short-request throughput):");
+        let mut fifo_rps = 0.0;
+        for m in &rows {
+            if m.policy == "FIFO" {
+                fifo_rps = m.short_rps();
+            }
+            println!("  {:<14} {:>8.2} RPS", m.policy, m.short_rps());
+        }
+        for m in &rows {
+            if m.policy == "PecSched" {
+                println!(
+                    "  PecSched throughput vs FIFO: {:+.0}%",
+                    (m.short_rps() / fifo_rps.max(1e-12) - 1.0) * 100.0
+                );
+            }
+        }
+        // Fig 11: long JCT.
+        println!("Fig 11 (avg JCT of longs):");
+        for m in &rows {
+            let starved = if m.policy == "Priority" {
+                format!("  [{:.0}% starved -> effectively unbounded]", m.starved_frac() * 100.0)
+            } else {
+                String::new()
+            };
+            println!(
+                "  {:<14} {:>9.1}s{}",
+                m.policy,
+                m.long_jct.mean(),
+                starved
+            );
+        }
+        println!();
+    }
+}

@@ -1,0 +1,44 @@
+//! §5.3 supporting experiment — the fast-SP strategy-selection crossover:
+//! which (attention, MLP) combination wins per sequence length and model,
+//! and the fast-SP vs ring-only prefill-time gap the /FSP ablation rests
+//! on.
+
+use pecsched::config::ModelSpec;
+use pecsched::costmodel::{sp, CostModel};
+use pecsched::exp::banner;
+
+fn main() {
+    banner("Fast-SP planner: strategy selection and speedup vs ring-only");
+    println!(
+        "(paper: Megatron/Ulysses picked per stage from comm+comp volume \
+         estimates; ring attention kept across nodes)\n"
+    );
+    let lens: [u32; 5] = [100_000, 200_000, 300_000, 400_000, 500_000];
+    for model in ModelSpec::catalog() {
+        let cm = CostModel::new(model.clone(), Default::default());
+        println!("=== {} (TP={}) ===", model.name, model.tp);
+        println!(
+            "{:>9} {:>9} {:>6} {:>11} {:>11} {:>12} {:>12} {:>9}",
+            "input", "replicas", "nodes", "attn", "mlp", "fast (s)", "ring (s)", "speedup"
+        );
+        for &len in &lens {
+            let n = cm.replicas_for_long(len, 131_072);
+            let fast = sp::plan_fast_sp(&cm, len, n, 8);
+            let ring = sp::plan_ring_only(&cm, len, n, 8);
+            let tf = fast.total_time(&cm, len);
+            let tr = ring.total_time(&cm, len);
+            println!(
+                "{:>9} {:>9} {:>6} {:>11} {:>11} {:>12.1} {:>12.1} {:>8.2}x",
+                len,
+                n,
+                fast.n_nodes,
+                format!("{:?}", fast.attn),
+                format!("{:?}", fast.mlp),
+                tf,
+                tr,
+                tr / tf
+            );
+        }
+        println!();
+    }
+}

@@ -1,0 +1,23 @@
+//! Table 1 — GPU idle rate (Eq. 1) under FIFO vs Reservation, all models.
+
+use pecsched::config::{ModelSpec, PolicyKind};
+use pecsched::exp::{banner, run_cell, trace_for, ExpParams};
+
+fn main() {
+    let p = ExpParams::from_env();
+    banner("Table 1: GPU idle rate, FIFO vs Reservation");
+    println!("(paper: FIFO ~1e-4; Reservation 0.16 / 0.22 / 0.25 / 0.41)\n");
+    println!(
+        "{:<16} {:>12} {:>12}",
+        "model", "FIFO", "Reservation"
+    );
+    for model in ModelSpec::catalog() {
+        let trace = trace_for(&model, &p);
+        let fifo = run_cell(&model, PolicyKind::Fifo, &trace);
+        let resv = run_cell(&model, PolicyKind::Reservation, &trace);
+        println!(
+            "{:<16} {:>12.4} {:>12.4}",
+            model.name, fifo.gpu_idle_rate, resv.gpu_idle_rate
+        );
+    }
+}

@@ -1,0 +1,22 @@
+//! Table 2 — fraction of long requests starved under the Priority policy.
+
+use pecsched::config::{ModelSpec, PolicyKind};
+use pecsched::exp::{banner, run_cell, trace_for, ExpParams};
+
+fn main() {
+    let p = ExpParams::from_env();
+    banner("Table 2: long requests starved under Priority");
+    println!("(paper: 92% / 97% / 100% / 100%)\n");
+    println!("{:<16} {:>8} {:>8} {:>10}", "model", "longs", "starved", "fraction");
+    for model in ModelSpec::catalog() {
+        let trace = trace_for(&model, &p);
+        let m = run_cell(&model, PolicyKind::Priority, &trace);
+        println!(
+            "{:<16} {:>8} {:>8} {:>9.0}%",
+            model.name,
+            m.longs_total,
+            m.longs_starved,
+            m.starved_frac() * 100.0
+        );
+    }
+}

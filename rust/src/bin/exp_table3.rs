@@ -1,0 +1,22 @@
+//! Table 3 — total preemptions of long-request prefill when fast SP is
+//! *not* used (the motivating measurement; equals the /FSP ablation row of
+//! Table 6). Preemption counts grow with model size.
+
+use pecsched::config::{AblationFlags, ModelSpec, PolicyKind};
+use pecsched::exp::{banner, run_cell, trace_for, ExpParams};
+
+fn main() {
+    let p = ExpParams::from_env();
+    banner("Table 3: long-request prefill preemptions without fast SP");
+    println!("(paper: 167,394 / 205,947 / 278,504 / 379,305 — shape: grows with model)\n");
+    println!("{:<16} {:>12}", "model", "preemptions");
+    for model in ModelSpec::catalog() {
+        let trace = trace_for(&model, &p);
+        let m = run_cell(
+            &model,
+            PolicyKind::PecSched(AblationFlags::no_fast_sp()),
+            &trace,
+        );
+        println!("{:<16} {:>12}", model.name, m.preemptions);
+    }
+}

@@ -1,0 +1,39 @@
+//! Table 7 — p99 ratio of scheduling time to JCT for short and long
+//! requests under PecSched.
+//!
+//! Scheduling time is the *wall-clock* cost of the policy's placement
+//! decisions (arrival handling + dispatch), exactly what the paper's
+//! overhead accounting covers; JCT is simulated time. The claim under test
+//! is the paper's: the ratio is far below 1% and falls with model size.
+
+use pecsched::config::{AblationFlags, ModelSpec, PolicyKind};
+use pecsched::exp::{banner, run_cell, trace_for, ExpParams};
+
+fn main() {
+    let p = ExpParams::from_env();
+    banner("Table 7: p99 scheduling-time / JCT ratio under PecSched");
+    println!("(paper: shorts 0.354%/0.282%/0.196%/0.071%; longs 0.183%/0.147%/0.055%/0.019%)\n");
+    println!(
+        "{:<16} {:>14} {:>14}",
+        "model", "short p99", "long p99"
+    );
+    for model in ModelSpec::catalog() {
+        let trace = trace_for(&model, &p);
+        let mut m = run_cell(
+            &model,
+            PolicyKind::PecSched(AblationFlags::full()),
+            &trace,
+        );
+        let s = if m.sched_overhead_short.is_empty() {
+            f64::NAN
+        } else {
+            m.sched_overhead_short.quantile(0.99) * 100.0
+        };
+        let l = if m.sched_overhead_long.is_empty() {
+            f64::NAN
+        } else {
+            m.sched_overhead_long.quantile(0.99) * 100.0
+        };
+        println!("{:<16} {:>13.4}% {:>13.4}%", model.name, s, l);
+    }
+}

@@ -1,0 +1,218 @@
+//! Cluster topology: nodes, GPUs, model replicas (TP groups) and the
+//! replica-set selection rule of §5/§6.2 (same-node first, then the
+//! combination with the smallest total local queue length).
+
+
+use crate::config::{ClusterSpec, ModelSpec};
+
+/// Index of a model replica in the topology.
+pub type ReplicaId = usize;
+
+/// Static placement of one model replica.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ReplicaMeta {
+    pub id: ReplicaId,
+    /// Node hosting this replica (TP groups never span nodes).
+    pub node: usize,
+    /// GPUs in this replica (= model TP size).
+    pub gpus: usize,
+}
+
+/// The cluster as the scheduler sees it.
+#[derive(Debug, Clone)]
+pub struct Topology {
+    pub nodes: usize,
+    pub gpus_per_node: usize,
+    pub replicas: Vec<ReplicaMeta>,
+}
+
+impl Topology {
+    /// Place as many TP groups of `model` as fit, node by node.
+    pub fn build(cluster: &ClusterSpec, model: &ModelSpec) -> Self {
+        assert!(
+            model.tp <= cluster.gpus_per_node,
+            "TP group larger than a node"
+        );
+        let per_node = cluster.gpus_per_node / model.tp;
+        let mut replicas = Vec::new();
+        for node in 0..cluster.nodes {
+            for _ in 0..per_node {
+                replicas.push(ReplicaMeta {
+                    id: replicas.len(),
+                    node,
+                    gpus: model.tp,
+                });
+            }
+        }
+        Self {
+            nodes: cluster.nodes,
+            gpus_per_node: cluster.gpus_per_node,
+            replicas,
+        }
+    }
+
+    pub fn n_replicas(&self) -> usize {
+        self.replicas.len()
+    }
+
+    pub fn replicas_on_node(&self, node: usize) -> impl Iterator<Item = &ReplicaMeta> {
+        self.replicas.iter().filter(move |r| r.node == node)
+    }
+
+    /// GPU count per replica, for idle-rate weighting.
+    pub fn gpu_weights(&self) -> Vec<usize> {
+        self.replicas.iter().map(|r| r.gpus).collect()
+    }
+
+    /// Pick `n` replicas for a long request among those where
+    /// `eligible[id]` holds, per the paper's rule: prefer combinations
+    /// within one node; across valid combinations minimise total local
+    /// queue length (`queue_tokens[id]`). Returns `None` when fewer than
+    /// `n` replicas are eligible.
+    pub fn choose_group(
+        &self,
+        n: usize,
+        eligible: &[bool],
+        queue_tokens: &[u64],
+    ) -> Option<Vec<ReplicaId>> {
+        assert_eq!(eligible.len(), self.n_replicas());
+        assert_eq!(queue_tokens.len(), self.n_replicas());
+        if n == 0 {
+            return Some(Vec::new());
+        }
+
+        // Single-node candidates: any node with >= n eligible replicas.
+        let mut best_single: Option<(u64, Vec<ReplicaId>)> = None;
+        for node in 0..self.nodes {
+            let mut cands: Vec<ReplicaId> = self
+                .replicas_on_node(node)
+                .filter(|r| eligible[r.id])
+                .map(|r| r.id)
+                .collect();
+            if cands.len() < n {
+                continue;
+            }
+            cands.sort_by_key(|&id| queue_tokens[id]);
+            cands.truncate(n);
+            let cost: u64 = cands.iter().map(|&id| queue_tokens[id]).sum();
+            if best_single.as_ref().map_or(true, |(c, _)| cost < *c) {
+                best_single = Some((cost, cands));
+            }
+        }
+        if let Some((_, group)) = best_single {
+            return Some(group);
+        }
+
+        // Cross-node: greedily take whole nodes ranked by (eligible count
+        // desc, queue cost asc) to minimise the number of nodes spanned,
+        // then fill with the globally cheapest leftovers.
+        let mut all: Vec<ReplicaId> = (0..self.n_replicas())
+            .filter(|&id| eligible[id])
+            .collect();
+        if all.len() < n {
+            return None;
+        }
+        all.sort_by(|&a, &b| {
+            let na = self.replicas[a].node;
+            let nb = self.replicas[b].node;
+            // Rank nodes by eligible capacity so the group spans few nodes.
+            let cap = |node: usize| {
+                self.replicas_on_node(node)
+                    .filter(|r| eligible[r.id])
+                    .count()
+            };
+            cap(nb)
+                .cmp(&cap(na))
+                .then(na.cmp(&nb))
+                .then(queue_tokens[a].cmp(&queue_tokens[b]))
+        });
+        all.truncate(n);
+        Some(all)
+    }
+
+    /// Number of distinct nodes a replica set spans.
+    pub fn nodes_spanned(&self, group: &[ReplicaId]) -> usize {
+        let mut nodes: Vec<usize> = group.iter().map(|&id| self.replicas[id].node).collect();
+        nodes.sort_unstable();
+        nodes.dedup();
+        nodes.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterSpec;
+
+    fn topo(tp: usize) -> Topology {
+        let mut m = ModelSpec::mistral_7b();
+        m.tp = tp;
+        Topology::build(&ClusterSpec::default(), &m)
+    }
+
+    #[test]
+    fn build_places_replicas_per_node() {
+        let t = topo(1);
+        assert_eq!(t.n_replicas(), 32);
+        assert_eq!(t.replicas_on_node(0).count(), 8);
+        let t4 = topo(4);
+        assert_eq!(t4.n_replicas(), 8);
+        assert_eq!(t4.replicas[7].node, 3);
+    }
+
+    #[test]
+    fn choose_group_prefers_single_node() {
+        let t = topo(1);
+        let eligible = vec![true; 32];
+        // Make node 2's replicas cheapest.
+        let mut q = vec![100u64; 32];
+        for r in t.replicas_on_node(2) {
+            q[r.id] = 1;
+        }
+        let g = t.choose_group(4, &eligible, &q).unwrap();
+        assert_eq!(t.nodes_spanned(&g), 1);
+        assert!(g.iter().all(|&id| t.replicas[id].node == 2));
+    }
+
+    #[test]
+    fn choose_group_spans_nodes_when_needed() {
+        let t = topo(4); // 2 replicas per node
+        let eligible = vec![true; 8];
+        let q = vec![0u64; 8];
+        let g = t.choose_group(4, &eligible, &q).unwrap();
+        assert_eq!(g.len(), 4);
+        assert_eq!(t.nodes_spanned(&g), 2);
+    }
+
+    #[test]
+    fn choose_group_respects_eligibility() {
+        let t = topo(4);
+        let mut eligible = vec![false; 8];
+        eligible[3] = true;
+        eligible[6] = true;
+        let q = vec![0u64; 8];
+        let g = t.choose_group(2, &eligible, &q).unwrap();
+        let mut got = g.clone();
+        got.sort_unstable();
+        assert_eq!(got, vec![3, 6]);
+        assert!(t.choose_group(3, &eligible, &q).is_none());
+    }
+
+    #[test]
+    fn choose_group_minimises_queue_cost() {
+        let t = topo(1);
+        let eligible = vec![true; 32];
+        let mut q: Vec<u64> = (0..32u64).map(|i| i * 10).collect();
+        q[5] = 0;
+        let g = t.choose_group(1, &eligible, &q).unwrap();
+        assert!(g == vec![5] || q[g[0]] == 0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn build_rejects_oversized_tp() {
+        let mut m = ModelSpec::mistral_7b();
+        m.tp = 16;
+        Topology::build(&ClusterSpec::default(), &m);
+    }
+}

@@ -1,0 +1,221 @@
+//! Cluster, model and scheduler configuration.
+//!
+//! The model catalog mirrors Table 5 of the paper (Mistral-v0.3 7B,
+//! Phi-3 14B, Yi 34B, Llama-3.1 70B with their TP sizes); the cluster spec
+//! mirrors §6.2's testbed (4× p4de.24xlarge: 8× A100-80G per node, NVLink
+//! in-node, 400 Gbps across nodes).
+
+mod model;
+mod policy;
+
+pub use model::{ModelSpec, BYTES_PER_PARAM};
+pub use policy::{AblationFlags, PolicyKind};
+
+
+/// Hardware characteristics of one accelerator + its interconnects.
+///
+/// Defaults are A100-80G SXM numbers (the paper's p4de testbed). The
+/// efficiency factors fold achievable-vs-peak into the analytical model;
+/// they are the usual published MFU/bandwidth-utilisation ranges, not fits
+/// to the paper's data.
+#[derive(Debug, Clone)]
+pub struct HwSpec {
+    /// Peak dense bf16 FLOP/s per GPU.
+    pub peak_flops: f64,
+    /// Peak HBM bandwidth per GPU, bytes/s.
+    pub hbm_bw: f64,
+    /// HBM capacity per GPU, bytes.
+    pub hbm_bytes: f64,
+    /// Per-GPU NVLink/NVSwitch bandwidth inside a node, bytes/s.
+    pub nvlink_bw: f64,
+    /// Per-node network bandwidth across nodes, bytes/s (400 Gbps).
+    pub net_bw: f64,
+    /// Fraction of peak FLOPs achieved by dense prefill kernels.
+    pub flops_eff: f64,
+    /// Fraction of peak bandwidth achieved by memory-bound kernels.
+    pub bw_eff: f64,
+    /// Fixed per-batch launch/runtime overhead for a prefill, seconds.
+    pub kernel_overhead: f64,
+    /// Computational-efficiency degradation per additional ring-attention
+    /// hop (ring attention's efficiency falls as the ring grows — USP
+    /// [Fang & Zhao 2024], cited as [28] in the paper).
+    pub ring_penalty_per_hop: f64,
+    /// Fraction of HBM usable for KV cache after runtime reserves.
+    pub kv_mem_frac: f64,
+}
+
+impl Default for HwSpec {
+    fn default() -> Self {
+        Self {
+            peak_flops: 312e12,
+            hbm_bw: 2.039e12,
+            hbm_bytes: 80e9,
+            nvlink_bw: 600e9,
+            net_bw: 50e9,
+            flops_eff: 0.5,
+            bw_eff: 0.8,
+            kernel_overhead: 3e-3,
+            ring_penalty_per_hop: 0.08,
+            kv_mem_frac: 0.90,
+        }
+    }
+}
+
+/// Shape of the cluster: `nodes` × `gpus_per_node` accelerators.
+#[derive(Debug, Clone)]
+pub struct ClusterSpec {
+    pub nodes: usize,
+    pub gpus_per_node: usize,
+    pub hw: HwSpec,
+}
+
+impl Default for ClusterSpec {
+    fn default() -> Self {
+        // §6.2: four p4de.24xlarge instances.
+        Self {
+            nodes: 4,
+            gpus_per_node: 8,
+            hw: HwSpec::default(),
+        }
+    }
+}
+
+impl ClusterSpec {
+    pub fn total_gpus(&self) -> usize {
+        self.nodes * self.gpus_per_node
+    }
+
+    /// Number of model replicas (TP groups) this cluster hosts for `model`.
+    /// TP groups never span nodes.
+    pub fn replicas_for(&self, model: &ModelSpec) -> usize {
+        (self.gpus_per_node / model.tp) * self.nodes
+    }
+
+    /// Scale the cluster to `total` GPUs keeping 8-GPU nodes (§6.6).
+    pub fn with_total_gpus(total: usize) -> Self {
+        let gpn = 8;
+        assert!(total % gpn == 0, "total GPUs must be a multiple of 8");
+        Self {
+            nodes: total / gpn,
+            gpus_per_node: gpn,
+            hw: HwSpec::default(),
+        }
+    }
+}
+
+/// Tunables of the scheduling system itself (defaults follow §5/§6.2).
+#[derive(Debug, Clone)]
+pub struct SchedParams {
+    /// Input length (tokens) above which a request is "long". The trace
+    /// generator rewrites the ≥p95 tail to U(100K, 500K), so anything at or
+    /// above this threshold is a rewritten long request.
+    pub long_threshold: u32,
+    /// Target tokens per replica when choosing the SP degree of a long
+    /// prefill (paper: "a sufficient number of model replicas").
+    pub sp_target_tokens: u32,
+    /// Context-switch cost of pausing/resuming a long prefill, seconds
+    /// (§5.1: only one layer's intermediate data, <5% of KV — cheap).
+    pub preempt_ctx_switch: f64,
+    /// Per-replica cap on colocated short-prefill tokens while a long
+    /// request decodes there (§5.2 "constrains the token count per GPU").
+    pub colocate_max_tokens: u32,
+    /// Number of model replicas dedicated to short-request decode, by model
+    /// name (§6.2: 4, 4, 1, 1).
+    pub decode_replicas: usize,
+    /// Decode tokens simulated per event (batching decode rounds into
+    /// chunks keeps the event count tractable without changing totals).
+    pub decode_chunk: u32,
+    /// PecSched preempts a long prefill only when the best ordinary
+    /// replica's estimated queueing wait exceeds this (seconds). Keeps
+    /// preemption for genuine blocking rather than every transient burst,
+    /// bounding long-request suspension (§5's "reduce the duration and
+    /// frequency of preemptions").
+    pub preempt_wait_threshold: f64,
+    /// Minimum uninterrupted run time a resumed long prefill is granted
+    /// before it may be preempted again (seconds). Without a quantum, a
+    /// sustained short stream re-preempts immediately after every resume
+    /// and the long starves — the anti-starvation guarantee §5 implies
+    /// ("without significantly affecting the JCT of long requests").
+    pub preempt_min_quantum: f64,
+}
+
+impl Default for SchedParams {
+    fn default() -> Self {
+        Self {
+            long_threshold: 100_000,
+            sp_target_tokens: 65_536,
+            preempt_ctx_switch: 0.015,
+            colocate_max_tokens: 2048,
+            decode_replicas: 4,
+            decode_chunk: 8,
+            preempt_wait_threshold: 0.25,
+            preempt_min_quantum: 1.0,
+        }
+    }
+}
+
+impl SchedParams {
+    /// §6.2 decode-replica allocation for the paper's four models.
+    pub fn decode_replicas_for(model: &ModelSpec) -> usize {
+        match model.name.as_str() {
+            "mistral-7b" => 4,
+            "phi-3-14b" => 4,
+            "yi-34b" => 1,
+            "llama-3.1-70b" => 1,
+            _ => 2,
+        }
+    }
+
+    pub fn for_model(model: &ModelSpec) -> Self {
+        Self {
+            decode_replicas: Self::decode_replicas_for(model),
+            ..Self::default()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_cluster_matches_testbed() {
+        let c = ClusterSpec::default();
+        assert_eq!(c.total_gpus(), 32);
+        assert_eq!(c.nodes, 4);
+    }
+
+    #[test]
+    fn replicas_for_respects_tp() {
+        let c = ClusterSpec::default();
+        let m7 = ModelSpec::mistral_7b();
+        let m70 = ModelSpec::llama31_70b();
+        assert_eq!(c.replicas_for(&m7), 32 / m7.tp);
+        assert_eq!(c.replicas_for(&m70), 32 / m70.tp);
+    }
+
+    #[test]
+    fn scaled_cluster() {
+        let c = ClusterSpec::with_total_gpus(8192);
+        assert_eq!(c.nodes, 1024);
+        assert_eq!(c.total_gpus(), 8192);
+    }
+
+    #[test]
+    #[should_panic]
+    fn scaled_cluster_rejects_ragged() {
+        ClusterSpec::with_total_gpus(12);
+    }
+
+    #[test]
+    fn decode_replica_allocation_matches_paper() {
+        assert_eq!(
+            SchedParams::decode_replicas_for(&ModelSpec::mistral_7b()),
+            4
+        );
+        assert_eq!(
+            SchedParams::decode_replicas_for(&ModelSpec::llama31_70b()),
+            1
+        );
+    }
+}

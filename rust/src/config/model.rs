@@ -1,0 +1,161 @@
+//! The model catalog: the four models of Table 5 with their architecture
+//! hyper-parameters (public model cards) and TP sizes.
+
+
+/// Serving weight precision (bf16).
+pub const BYTES_PER_PARAM: f64 = 2.0;
+
+/// Architecture of a served model, as the cost model needs it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelSpec {
+    pub name: String,
+    /// Total parameter count.
+    pub n_params: f64,
+    /// Model (hidden) dimension `d`.
+    pub d_model: usize,
+    /// Number of transformer layers `N_l`.
+    pub n_layers: usize,
+    /// Query heads `N_h`.
+    pub n_q_heads: usize,
+    /// KV heads `N_h^{KV}` (GQA).
+    pub n_kv_heads: usize,
+    /// Head dimension `d_h`.
+    pub d_head: usize,
+    /// MLP inner dimension.
+    pub d_ff: usize,
+    /// Vocabulary size.
+    pub vocab: usize,
+    /// Tensor-parallel degree of one model replica (Table 5).
+    pub tp: usize,
+}
+
+impl ModelSpec {
+    pub fn mistral_7b() -> Self {
+        Self {
+            name: "mistral-7b".into(),
+            n_params: 7.25e9,
+            d_model: 4096,
+            n_layers: 32,
+            n_q_heads: 32,
+            n_kv_heads: 8,
+            d_head: 128,
+            d_ff: 14336,
+            vocab: 32768,
+            tp: 1,
+        }
+    }
+
+    pub fn phi3_14b() -> Self {
+        Self {
+            name: "phi-3-14b".into(),
+            n_params: 14.0e9,
+            d_model: 5120,
+            n_layers: 40,
+            n_q_heads: 40,
+            n_kv_heads: 10,
+            d_head: 128,
+            d_ff: 17920,
+            vocab: 32064,
+            tp: 2,
+        }
+    }
+
+    pub fn yi_34b() -> Self {
+        Self {
+            name: "yi-34b".into(),
+            n_params: 34.4e9,
+            d_model: 7168,
+            n_layers: 60,
+            n_q_heads: 56,
+            n_kv_heads: 8,
+            d_head: 128,
+            d_ff: 20480,
+            vocab: 64000,
+            tp: 4,
+        }
+    }
+
+    pub fn llama31_70b() -> Self {
+        Self {
+            name: "llama-3.1-70b".into(),
+            n_params: 70.6e9,
+            d_model: 8192,
+            n_layers: 80,
+            n_q_heads: 64,
+            n_kv_heads: 8,
+            d_head: 128,
+            d_ff: 28672,
+            vocab: 128256,
+            tp: 4,
+        }
+    }
+
+    /// The paper's evaluation set, in its presentation order.
+    pub fn catalog() -> Vec<Self> {
+        vec![
+            Self::mistral_7b(),
+            Self::phi3_14b(),
+            Self::yi_34b(),
+            Self::llama31_70b(),
+        ]
+    }
+
+    pub fn by_name(name: &str) -> Option<Self> {
+        Self::catalog().into_iter().find(|m| m.name == name)
+    }
+
+    /// Weight bytes of a full replica (all TP shards together).
+    pub fn weight_bytes(&self) -> f64 {
+        self.n_params * BYTES_PER_PARAM
+    }
+
+    /// KV-cache bytes per token (both K and V, all layers, bf16).
+    pub fn kv_bytes_per_token(&self) -> f64 {
+        2.0 * self.n_layers as f64
+            * self.n_kv_heads as f64
+            * self.d_head as f64
+            * BYTES_PER_PARAM
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn catalog_has_four_models_in_paper_order() {
+        let names: Vec<_> = ModelSpec::catalog()
+            .iter()
+            .map(|m| m.name.clone())
+            .collect();
+        assert_eq!(
+            names,
+            ["mistral-7b", "phi-3-14b", "yi-34b", "llama-3.1-70b"]
+        );
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        for m in ModelSpec::catalog() {
+            assert_eq!(ModelSpec::by_name(&m.name).unwrap(), m);
+        }
+        assert!(ModelSpec::by_name("gpt-5").is_none());
+    }
+
+    #[test]
+    fn head_dims_consistent() {
+        for m in ModelSpec::catalog() {
+            assert_eq!(m.d_model, m.n_q_heads * m.d_head, "{}", m.name);
+            assert_eq!(m.n_q_heads % m.n_kv_heads, 0, "{}", m.name);
+        }
+    }
+
+    #[test]
+    fn kv_bytes_scale_with_model() {
+        let small = ModelSpec::mistral_7b().kv_bytes_per_token();
+        let big = ModelSpec::llama31_70b().kv_bytes_per_token();
+        assert!(big > small);
+        // Mistral: 2 * 32 * 8 * 128 * 2 = 131072 B/token.
+        assert_eq!(small, 131072.0);
+    }
+}

@@ -1,0 +1,152 @@
+//! Scheduling policy selection and PecSched ablation switches (§6.4).
+
+
+/// Which of PecSched's mechanisms are enabled. Turning one off yields the
+/// corresponding §6.4 ablation variant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AblationFlags {
+    /// Preemption of long-request prefill by short-request prefill (§5.1).
+    /// Off ⇒ PecSched/PE.
+    pub preemption: bool,
+    /// Prefill/decode disaggregation for short requests (§5.2).
+    /// Off ⇒ PecSched/Dis.
+    pub disaggregation: bool,
+    /// Colocation of long-request decode with short-request prefill (§5.2).
+    /// Off ⇒ PecSched/CoL: short prefill preempts long decode too.
+    pub colocation: bool,
+    /// Hybrid fast SP for long-request prefill (§5.3).
+    /// Off ⇒ PecSched/FSP: plain cluster-wide ring attention.
+    pub fast_sp: bool,
+}
+
+impl Default for AblationFlags {
+    fn default() -> Self {
+        Self {
+            preemption: true,
+            disaggregation: true,
+            colocation: true,
+            fast_sp: true,
+        }
+    }
+}
+
+impl AblationFlags {
+    pub fn full() -> Self {
+        Self::default()
+    }
+    pub fn no_preemption() -> Self {
+        Self {
+            preemption: false,
+            ..Self::default()
+        }
+    }
+    pub fn no_disaggregation() -> Self {
+        Self {
+            disaggregation: false,
+            ..Self::default()
+        }
+    }
+    pub fn no_colocation() -> Self {
+        Self {
+            colocation: false,
+            ..Self::default()
+        }
+    }
+    pub fn no_fast_sp() -> Self {
+        Self {
+            fast_sp: false,
+            ..Self::default()
+        }
+    }
+
+    /// Paper notation for the variant ("/PE", "/Dis", ...).
+    pub fn label(&self) -> &'static str {
+        match (
+            self.preemption,
+            self.disaggregation,
+            self.colocation,
+            self.fast_sp,
+        ) {
+            (true, true, true, true) => "PecSched",
+            (false, true, true, true) => "PecSched/PE",
+            (true, false, true, true) => "PecSched/Dis",
+            (true, true, false, true) => "PecSched/CoL",
+            (true, true, true, false) => "PecSched/FSP",
+            _ => "PecSched/custom",
+        }
+    }
+}
+
+/// The four cluster-level scheduling strategies of §6.2.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PolicyKind {
+    /// vLLM-style strict global FIFO.
+    Fifo,
+    /// Llumnix-style static partitioning: a pool sized for 500K-token
+    /// requests is reserved for longs, the rest serves shorts.
+    Reservation,
+    /// Past-Future-style: shorts always first, longs on leftovers.
+    Priority,
+    /// The paper's system.
+    PecSched(AblationFlags),
+}
+
+impl PolicyKind {
+    pub fn name(&self) -> String {
+        match self {
+            PolicyKind::Fifo => "FIFO".into(),
+            PolicyKind::Reservation => "Reservation".into(),
+            PolicyKind::Priority => "Priority".into(),
+            PolicyKind::PecSched(f) => f.label().into(),
+        }
+    }
+
+    /// Everything §6.3 compares.
+    pub fn comparison_set() -> Vec<Self> {
+        vec![
+            Self::Fifo,
+            Self::Reservation,
+            Self::Priority,
+            Self::PecSched(AblationFlags::full()),
+        ]
+    }
+
+    /// Everything §6.4 compares.
+    pub fn ablation_set() -> Vec<Self> {
+        vec![
+            Self::PecSched(AblationFlags::full()),
+            Self::PecSched(AblationFlags::no_preemption()),
+            Self::PecSched(AblationFlags::no_disaggregation()),
+            Self::PecSched(AblationFlags::no_colocation()),
+            Self::PecSched(AblationFlags::no_fast_sp()),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn labels_match_paper_notation() {
+        assert_eq!(AblationFlags::full().label(), "PecSched");
+        assert_eq!(AblationFlags::no_preemption().label(), "PecSched/PE");
+        assert_eq!(AblationFlags::no_disaggregation().label(), "PecSched/Dis");
+        assert_eq!(AblationFlags::no_colocation().label(), "PecSched/CoL");
+        assert_eq!(AblationFlags::no_fast_sp().label(), "PecSched/FSP");
+    }
+
+    #[test]
+    fn comparison_set_is_the_paper_lineup() {
+        let names: Vec<_> = PolicyKind::comparison_set()
+            .iter()
+            .map(|p| p.name())
+            .collect();
+        assert_eq!(names, ["FIFO", "Reservation", "Priority", "PecSched"]);
+    }
+
+    #[test]
+    fn ablation_set_has_five_variants() {
+        assert_eq!(PolicyKind::ablation_set().len(), 5);
+    }
+}

@@ -1,0 +1,246 @@
+//! Analytical execution-time model for the simulated A100 cluster.
+//!
+//! The paper's experiments run on real GPUs; our substitute (DESIGN.md §2)
+//! is a roofline model: compute-bound phases are FLOPs / achievable FLOP/s,
+//! memory-bound phases are bytes / achievable bandwidth, and collective
+//! communication is volume / link bandwidth. Scheduling outcomes depend on
+//! the *relative* magnitudes of these terms, which a roofline preserves.
+//!
+//! [`sp`] implements §5.3's Megatron/Ulysses/ring-attention communication
+//! and computation volumes verbatim and the fast-SP strategy selector.
+
+pub mod sp;
+pub mod tpu;
+
+pub use sp::{SpChoice, SpPlan, SpStage};
+pub use tpu::{estimate_flash_prefill, KernelConfig, KernelEstimate, TpuSpec};
+
+use crate::config::{HwSpec, ModelSpec, BYTES_PER_PARAM};
+
+/// Execution-time oracle for one model on one hardware spec.
+///
+/// All times are seconds; all methods are pure. The simulator calls these
+/// on the hot path, so everything is closed-form (no allocation).
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    pub model: ModelSpec,
+    pub hw: HwSpec,
+}
+
+impl CostModel {
+    pub fn new(model: ModelSpec, hw: HwSpec) -> Self {
+        Self { model, hw }
+    }
+
+    /// Achievable FLOP/s of `n` GPUs on dense matmul work.
+    fn flops_rate(&self, n_gpus: usize) -> f64 {
+        self.hw.peak_flops * self.hw.flops_eff * n_gpus as f64
+    }
+
+    /// Achievable HBM bytes/s of `n` GPUs.
+    fn bw_rate(&self, n_gpus: usize) -> f64 {
+        self.hw.hbm_bw * self.hw.bw_eff * n_gpus as f64
+    }
+
+    // ------------------------------------------------------------------
+    // FLOP and byte counts
+    // ------------------------------------------------------------------
+
+    /// Total FLOPs to prefill `s` prompt tokens (causal attention counted
+    /// at half the dense score matrix).
+    pub fn prefill_flops(&self, s: u64) -> f64 {
+        let m = &self.model;
+        let s = s as f64;
+        let d = m.d_model as f64;
+        let qkv = 2.0
+            * s
+            * (d * (m.n_q_heads * m.d_head) as f64
+                + 2.0 * d * (m.n_kv_heads * m.d_head) as f64
+                + (m.n_q_heads * m.d_head) as f64 * d);
+        // QK^T and PV: 2 * 2 * (s^2/2) * Hq * dh per layer.
+        let attn = 2.0 * s * s * (m.n_q_heads * m.d_head) as f64;
+        let mlp = 2.0 * s * 3.0 * d * m.d_ff as f64;
+        m.n_layers as f64 * (qkv + attn + mlp) + 2.0 * d * m.vocab as f64
+    }
+
+    /// FLOPs of one decode iteration for a single sequence.
+    pub fn decode_flops(&self, context: u64) -> f64 {
+        let m = &self.model;
+        let linear = 2.0 * m.n_params;
+        let attn = 2.0
+            * 2.0
+            * context as f64
+            * (m.n_q_heads * m.d_head) as f64
+            * m.n_layers as f64;
+        linear + attn
+    }
+
+    /// Bytes read from HBM in one decode iteration: the weight shard plus
+    /// the batch's KV cache (the reason decode is memory-bound).
+    pub fn decode_bytes(&self, batch_context_tokens: u64) -> f64 {
+        self.model.weight_bytes()
+            + batch_context_tokens as f64 * self.model.kv_bytes_per_token()
+    }
+
+    // ------------------------------------------------------------------
+    // Phase durations
+    // ------------------------------------------------------------------
+
+    /// Prefill latency of a *short* request on one model replica (its TP
+    /// group works on it jointly).
+    pub fn short_prefill_time(&self, input_len: u32) -> f64 {
+        let t = self.prefill_flops(input_len as u64) / self.flops_rate(self.model.tp);
+        t + self.hw.kernel_overhead
+    }
+
+    /// One decode iteration of a batch on one replica.
+    ///
+    /// `batch_context_tokens` is the sum of current context lengths across
+    /// the batched sequences. Decode is memory-bound: the replica streams
+    /// its weight shard once per iteration plus every sequence's KV.
+    pub fn decode_iter_time(&self, batch: usize, batch_context_tokens: u64) -> f64 {
+        if batch == 0 {
+            return 0.0;
+        }
+        let bytes = self.decode_bytes(batch_context_tokens);
+        let mem_t = bytes / self.bw_rate(self.model.tp);
+        let flops: f64 = self.decode_flops(batch_context_tokens / batch as u64)
+            * batch as f64;
+        let comp_t = flops / self.flops_rate(self.model.tp);
+        mem_t.max(comp_t)
+    }
+
+    /// Prefill latency of a *long* request over `n_replicas` replicas using
+    /// the given SP plan (already chosen by [`sp::plan_fast_sp`] or the
+    /// ring-only fallback).
+    pub fn long_prefill_time(&self, input_len: u32, plan: &SpPlan) -> f64 {
+        plan.total_time(self, input_len)
+    }
+
+    /// One decode iteration of a long request whose KV is sharded across
+    /// `n_replicas` replicas (ring decode: each replica scans its segment;
+    /// the single-token Q broadcast + partial-output all-reduce ride on
+    /// inter-node links but are tiny).
+    pub fn long_decode_iter_time(&self, context: u64, n_replicas: usize) -> f64 {
+        let seg = context as f64 / n_replicas as f64;
+        let kv_bytes = seg * self.model.kv_bytes_per_token();
+        let mem_t =
+            (self.model.weight_bytes() + kv_bytes) / self.bw_rate(self.model.tp);
+        // Q broadcast + output all-reduce: one token's activations per hop.
+        let comm =
+            2.0 * self.model.d_model as f64 * BYTES_PER_PARAM * n_replicas as f64
+                / self.hw.net_bw;
+        mem_t + comm
+    }
+
+    // ------------------------------------------------------------------
+    // Capacity planning
+    // ------------------------------------------------------------------
+
+    /// KV-cache token capacity of one replica (HBM across its TP shards
+    /// minus weights, times the usable fraction).
+    pub fn kv_capacity_tokens(&self) -> u64 {
+        let total = self.hw.hbm_bytes * self.model.tp as f64 * self.hw.kv_mem_frac;
+        let free = (total - self.model.weight_bytes()).max(0.0);
+        (free / self.model.kv_bytes_per_token()) as u64
+    }
+
+    /// Number of replicas a long request needs: enough to hold its KV
+    /// (with headroom for activations) and enough to hit the SP prefill
+    /// token target (§5: "a sufficient number of model replicas").
+    pub fn replicas_for_long(&self, input_len: u32, sp_target_tokens: u32) -> usize {
+        let mem_need = (1.3 * input_len as f64 * self.model.kv_bytes_per_token()
+            / (self.hw.hbm_bytes * self.model.tp as f64 * self.hw.kv_mem_frac
+                - self.model.weight_bytes()))
+        .ceil() as usize;
+        let speed_need =
+            (input_len as f64 / sp_target_tokens as f64).ceil() as usize;
+        mem_need.max(speed_need).max(1)
+    }
+
+    /// KV transfer time for migrating a short request's cache to a decode
+    /// replica (§5.2). The transfer overlaps prefill layer-by-layer, so the
+    /// exposed latency is roughly one layer's worth.
+    pub fn kv_migration_exposed_time(&self, input_len: u32) -> f64 {
+        let total = input_len as f64 * self.model.kv_bytes_per_token();
+        let per_layer = total / self.model.n_layers as f64;
+        per_layer / self.hw.nvlink_bw
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::HwSpec;
+
+    fn cm(model: ModelSpec) -> CostModel {
+        CostModel::new(model, HwSpec::default())
+    }
+
+    #[test]
+    fn short_prefill_scales_superlinearly() {
+        let c = cm(ModelSpec::mistral_7b());
+        let t1 = c.short_prefill_time(512);
+        let t2 = c.short_prefill_time(2048);
+        assert!(t2 > 3.5 * t1, "t1={t1} t2={t2}");
+        // Sanity: a 2K prompt on one A100 takes a few hundred ms.
+        assert!(t2 > 0.05 && t2 < 2.0, "t2={t2}");
+    }
+
+    #[test]
+    fn bigger_models_are_slower() {
+        let t7 = cm(ModelSpec::mistral_7b()).short_prefill_time(2048);
+        let t70 = cm(ModelSpec::llama31_70b()).short_prefill_time(2048);
+        // 70B runs TP=4, so the gap is ~10x/4, not 10x.
+        assert!(t70 > 1.5 * t7, "t7={t7} t70={t70}");
+    }
+
+    #[test]
+    fn decode_is_memory_bound_at_small_batch() {
+        let c = cm(ModelSpec::mistral_7b());
+        let t = c.decode_iter_time(1, 1024);
+        let mem_only = c.decode_bytes(1024) / (c.hw.hbm_bw * c.hw.bw_eff);
+        assert!((t - mem_only).abs() / mem_only < 1e-9);
+        // ~9ms for a 7B model on one A100.
+        assert!(t > 0.004 && t < 0.02, "t={t}");
+    }
+
+    #[test]
+    fn decode_iter_grows_with_batch_context() {
+        let c = cm(ModelSpec::yi_34b());
+        assert!(c.decode_iter_time(8, 64_000) > c.decode_iter_time(8, 8_000));
+        assert_eq!(c.decode_iter_time(0, 0), 0.0);
+    }
+
+    #[test]
+    fn kv_capacity_positive_and_ordered() {
+        for m in ModelSpec::catalog() {
+            let cap = cm(m.clone()).kv_capacity_tokens();
+            assert!(cap > 50_000, "{}: cap={cap}", m.name);
+        }
+    }
+
+    #[test]
+    fn long_replica_need_grows_with_length() {
+        let c = cm(ModelSpec::llama31_70b());
+        let r100 = c.replicas_for_long(100_000, 131_072);
+        let r500 = c.replicas_for_long(500_000, 131_072);
+        assert!(r500 > r100);
+        assert!(r100 >= 1);
+    }
+
+    #[test]
+    fn migration_exposed_time_is_small() {
+        let c = cm(ModelSpec::mistral_7b());
+        let t = c.kv_migration_exposed_time(2048);
+        assert!(t < 1e-3, "exposed migration {t}s should be sub-ms");
+    }
+
+    #[test]
+    fn long_decode_faster_with_more_replicas() {
+        let c = cm(ModelSpec::llama31_70b());
+        let t2 = c.long_decode_iter_time(400_000, 2);
+        let t4 = c.long_decode_iter_time(400_000, 4);
+        assert!(t4 < t2);
+    }
+}

@@ -1,0 +1,368 @@
+//! §5.3 — Fast Sequence Parallelism: the hybrid SP planner.
+//!
+//! Implements the paper's communication/computation volume formulas
+//! verbatim (notation: `T` = TP size, `G` = GPUs per node, `s` = sequence
+//! segment per GPU, `N_h`/`N_h^KV` = query/KV heads, `d_h` = head dim,
+//! `d` = model dim), evaluates the four stage combinations
+//! (attention ∈ {Megatron, Ulysses}) × (MLP ∈ {Megatron, Ulysses}) and
+//! picks the lowest-latency plan. Across nodes the plan always uses ring
+//! attention; ring length is what fast SP shortens (nodes instead of
+//! replicas), which is where the /FSP ablation loses its time.
+
+
+use super::CostModel;
+use crate::config::BYTES_PER_PARAM;
+
+/// Intra-node SP strategy for one stage.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpChoice {
+    Megatron,
+    Ulysses,
+}
+
+/// One pipeline stage of the hybrid plan.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpStage {
+    Attention,
+    Mlp,
+}
+
+/// Per-layer cost of one (stage, choice) pair, in seconds.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StageCost {
+    pub comm_s: f64,
+    pub comp_s: f64,
+}
+
+impl StageCost {
+    pub fn total(&self) -> f64 {
+        self.comm_s + self.comp_s
+    }
+}
+
+/// A fully resolved SP execution plan for one long-request prefill.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpPlan {
+    /// Model replicas participating.
+    pub n_replicas: usize,
+    /// GPUs participating (`n_replicas * tp`).
+    pub n_gpus: usize,
+    /// Nodes spanned.
+    pub n_nodes: usize,
+    /// Ring-attention ring length: nodes for fast SP, replicas for
+    /// ring-only (/FSP).
+    pub ring_len: usize,
+    /// Chosen intra-node strategy for the attention stage.
+    pub attn: SpChoice,
+    /// Chosen intra-node strategy for the MLP stage.
+    pub mlp: SpChoice,
+    /// True for the /FSP fallback (plain ring attention everywhere).
+    pub ring_only: bool,
+    /// Estimated per-layer intra-node communication time, seconds.
+    pub intra_comm_per_layer: f64,
+}
+
+/// §5.3 attention-stage volumes. Returns (comm elements in the node,
+/// computation elements per GPU).
+fn attn_volumes(
+    choice: SpChoice,
+    s: f64,
+    d: f64,
+    n_h: f64,
+    n_kv: f64,
+    d_h: f64,
+    t: f64,
+    g: f64,
+) -> (f64, f64) {
+    match choice {
+        SpChoice::Megatron => {
+            // all-gather + reduce-scatter over the TP region.
+            let comm = 2.0 * s * d * (t - 1.0) * g;
+            // QKV generation, self-attention, post-attention linear.
+            let comp = 2.0 * s * d * (n_h + n_kv) * d_h / t
+                + 4.0 * (s * t) * (s * t) * d / t
+                + 2.0 * s * d * d;
+            (comm, comp)
+        }
+        SpChoice::Ulysses => {
+            // two A2A passes + parameter transmission for TP regions.
+            let comm = 2.0 * s * (n_h + n_kv) * d_h * (g - 1.0)
+                + (d * (n_h + n_kv) * d_h + d * d) * g * (t - 1.0) / t;
+            let comp = 2.0 * s * d * (n_h + n_kv) * d_h
+                + 4.0 * (s * g) * (s * g) * d / g
+                + 2.0 * s * d * d;
+            (comm, comp)
+        }
+    }
+}
+
+/// §5.3 MLP-stage volumes.
+fn mlp_volumes(choice: SpChoice, s: f64, d: f64, t: f64, g: f64) -> (f64, f64) {
+    match choice {
+        SpChoice::Megatron => (2.0 * s * d * (t - 1.0) * g, 16.0 * s * d * d),
+        SpChoice::Ulysses => (8.0 * d * d * (t - 1.0) * g / t, 16.0 * s * d * d),
+    }
+}
+
+/// Evaluate one (stage, choice) pair into seconds using the hardware spec.
+pub fn stage_cost(
+    cm: &CostModel,
+    stage: SpStage,
+    choice: SpChoice,
+    seg_per_gpu: f64,
+    gpus_per_node: usize,
+) -> StageCost {
+    let m = &cm.model;
+    let (comm_elems, comp_elems) = match stage {
+        SpStage::Attention => attn_volumes(
+            choice,
+            seg_per_gpu,
+            m.d_model as f64,
+            m.n_q_heads as f64,
+            m.n_kv_heads as f64,
+            m.d_head as f64,
+            m.tp as f64,
+            gpus_per_node as f64,
+        ),
+        SpStage::Mlp => mlp_volumes(
+            choice,
+            seg_per_gpu,
+            m.d_model as f64,
+            m.tp as f64,
+            gpus_per_node as f64,
+        ),
+    };
+    // Node-internal volume moves over NVLink, shared by the node's GPUs.
+    let comm_s = comm_elems * BYTES_PER_PARAM
+        / (cm.hw.nvlink_bw * gpus_per_node as f64);
+    let comp_s = comp_elems / (cm.hw.peak_flops * cm.hw.flops_eff);
+    StageCost { comm_s, comp_s }
+}
+
+/// Choose the fastest hybrid plan for `input_len` tokens over `n_replicas`
+/// replicas (§5.3: four combinations, pick minimal estimated latency).
+pub fn plan_fast_sp(
+    cm: &CostModel,
+    input_len: u32,
+    n_replicas: usize,
+    gpus_per_node: usize,
+) -> SpPlan {
+    let n_gpus = n_replicas * cm.model.tp;
+    let n_nodes = n_gpus.div_ceil(gpus_per_node).max(1);
+    let gpn = gpus_per_node.min(n_gpus);
+    let seg = input_len as f64 / n_gpus as f64;
+
+    let mut best: Option<(f64, SpChoice, SpChoice, f64)> = None;
+    for attn in [SpChoice::Megatron, SpChoice::Ulysses] {
+        for mlp in [SpChoice::Megatron, SpChoice::Ulysses] {
+            let a = stage_cost(cm, SpStage::Attention, attn, seg, gpn);
+            let m = stage_cost(cm, SpStage::Mlp, mlp, seg, gpn);
+            let total = a.total() + m.total();
+            let comm = a.comm_s + m.comm_s;
+            if best.map_or(true, |(t, ..)| total < t) {
+                best = Some((total, attn, mlp, comm));
+            }
+        }
+    }
+    let (_, attn, mlp, comm) = best.unwrap();
+    SpPlan {
+        n_replicas,
+        n_gpus,
+        n_nodes,
+        ring_len: n_nodes,
+        attn,
+        mlp,
+        ring_only: false,
+        intra_comm_per_layer: comm,
+    }
+}
+
+/// The /FSP fallback: plain ring attention with every replica a ring node
+/// and standard Megatron-style TP inside each replica.
+pub fn plan_ring_only(
+    cm: &CostModel,
+    input_len: u32,
+    n_replicas: usize,
+    gpus_per_node: usize,
+) -> SpPlan {
+    let n_gpus = n_replicas * cm.model.tp;
+    let n_nodes = n_gpus.div_ceil(gpus_per_node).max(1);
+    let gpn = gpus_per_node.min(n_gpus);
+    let seg = input_len as f64 / n_gpus as f64;
+    let a = stage_cost(cm, SpStage::Attention, SpChoice::Megatron, seg, gpn);
+    let m = stage_cost(cm, SpStage::Mlp, SpChoice::Megatron, seg, gpn);
+    SpPlan {
+        n_replicas,
+        n_gpus,
+        n_nodes,
+        ring_len: n_replicas.max(1),
+        attn: SpChoice::Megatron,
+        mlp: SpChoice::Megatron,
+        ring_only: true,
+        intra_comm_per_layer: a.comm_s + m.comm_s,
+    }
+}
+
+impl SpPlan {
+    /// Inter-node ring-attention KV traffic per layer: each hop forwards
+    /// one node-segment's K and V.
+    fn ring_comm_per_layer(&self, cm: &CostModel, input_len: u32) -> f64 {
+        if self.ring_len <= 1 {
+            return 0.0;
+        }
+        let m = &cm.model;
+        let seg_node = input_len as f64 / self.ring_len as f64;
+        let hop_bytes = 2.0
+            * seg_node
+            * (m.n_kv_heads * m.d_head) as f64
+            * BYTES_PER_PARAM;
+        (self.ring_len as f64 - 1.0) * hop_bytes / cm.hw.net_bw
+    }
+
+    /// End-to-end prefill latency estimate for this plan.
+    ///
+    /// Compute: the model's full prefill FLOPs spread over the plan's GPUs,
+    /// inflated by the ring-efficiency penalty (ring attention's
+    /// computational efficiency degrades with ring length — the effect
+    /// fast SP exists to avoid). Ring KV traffic overlaps compute, so it
+    /// only costs when it exceeds the per-layer compute. Intra-node
+    /// collective time adds on top.
+    pub fn total_time(&self, cm: &CostModel, input_len: u32) -> f64 {
+        let flops = cm.prefill_flops(input_len as u64);
+        let rate =
+            cm.hw.peak_flops * cm.hw.flops_eff * self.n_gpus as f64;
+        let penalty =
+            1.0 + cm.hw.ring_penalty_per_hop * (self.ring_len as f64 - 1.0);
+        let comp = flops / rate * penalty;
+
+        let layers = cm.model.n_layers as f64;
+        let ring = self.ring_comm_per_layer(cm, input_len) * layers;
+        let intra = self.intra_comm_per_layer * layers;
+
+        comp.max(ring) + intra + cm.hw.kernel_overhead
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{HwSpec, ModelSpec};
+
+    fn cm(model: ModelSpec) -> CostModel {
+        CostModel::new(model, HwSpec::default())
+    }
+
+    #[test]
+    fn fast_sp_beats_ring_only() {
+        // The headline §5.3 claim: the hybrid plan cuts long prefill time.
+        for model in ModelSpec::catalog() {
+            let c = cm(model.clone());
+            let n = c.replicas_for_long(400_000, 131_072);
+            let fast = plan_fast_sp(&c, 400_000, n, 8);
+            let ring = plan_ring_only(&c, 400_000, n, 8);
+            let tf = fast.total_time(&c, 400_000);
+            let tr = ring.total_time(&c, 400_000);
+            assert!(
+                tf <= tr,
+                "{}: fast {tf}s should not exceed ring-only {tr}s",
+                model.name
+            );
+        }
+    }
+
+    #[test]
+    fn ring_len_shrinks_under_fast_sp() {
+        let c = cm(ModelSpec::mistral_7b());
+        let fast = plan_fast_sp(&c, 500_000, 8, 8);
+        let ring = plan_ring_only(&c, 500_000, 8, 8);
+        // 8 TP=1 replicas = 8 GPUs = 1 node.
+        assert_eq!(fast.ring_len, 1);
+        assert_eq!(ring.ring_len, 8);
+    }
+
+    #[test]
+    fn selector_degenerates_to_megatron_at_tp1() {
+        // With TP=1 the Megatron volumes collapse (comm term carries the
+        // (T-1) factor and the attention term the 1/T scaling), so the
+        // selector must pick it — §5.3's formulas decide, not a heuristic.
+        let c = cm(ModelSpec::mistral_7b());
+        let plan = plan_fast_sp(&c, 400_000, 4, 8);
+        assert_eq!(plan.attn, SpChoice::Megatron);
+        assert_eq!(plan.mlp, SpChoice::Megatron);
+    }
+
+    #[test]
+    fn selector_considers_ulysses_param_transmission_with_tp() {
+        // With TP>1 Ulysses' parameter-transmission term is nonzero and
+        // the choice is a genuine trade-off; both stages must still pick
+        // the minimum of the four §5.3 combinations.
+        let c = cm(ModelSpec::llama31_70b());
+        let plan = plan_fast_sp(&c, 400_000, 3, 8);
+        let seg = 400_000.0 / plan.n_gpus as f64;
+        let best = [SpChoice::Megatron, SpChoice::Ulysses]
+            .iter()
+            .map(|&ch| stage_cost(&c, SpStage::Attention, ch, seg, 8).total())
+            .fold(f64::INFINITY, f64::min);
+        let chosen =
+            stage_cost(&c, SpStage::Attention, plan.attn, seg, 8).total();
+        assert!((chosen - best).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mlp_choice_depends_on_segment_length() {
+        // Megatron MLP comm scales with s; Ulysses MLP comm is constant in
+        // s. For long segments with TP>1, Ulysses must win eventually.
+        let c = cm(ModelSpec::llama31_70b());
+        let seg_long = 131_072.0;
+        let meg = stage_cost(&c, SpStage::Mlp, SpChoice::Megatron, seg_long, 8);
+        let uly = stage_cost(&c, SpStage::Mlp, SpChoice::Ulysses, seg_long, 8);
+        assert!(uly.comm_s < meg.comm_s);
+    }
+
+    #[test]
+    fn megatron_attention_cheaper_compute_with_tp() {
+        // §4.2: Megatron splits heads across the TP region, so its
+        // QKV-generation term carries the 1/T factor.
+        let c = cm(ModelSpec::yi_34b());
+        let meg = stage_cost(&c, SpStage::Attention, SpChoice::Megatron, 8192.0, 8);
+        let uly = stage_cost(&c, SpStage::Attention, SpChoice::Ulysses, 8192.0, 8);
+        assert!(meg.comp_s != uly.comp_s);
+    }
+
+    #[test]
+    fn total_time_monotone_in_input() {
+        let c = cm(ModelSpec::phi3_14b());
+        let p = plan_fast_sp(&c, 100_000, 4, 8);
+        let t1 = p.total_time(&c, 100_000);
+        let p2 = plan_fast_sp(&c, 300_000, 4, 8);
+        let t2 = p2.total_time(&c, 300_000);
+        assert!(t2 > t1);
+    }
+
+    #[test]
+    fn more_replicas_cut_prefill_time() {
+        let c = cm(ModelSpec::llama31_70b());
+        let p2 = plan_fast_sp(&c, 400_000, 2, 8);
+        let p4 = plan_fast_sp(&c, 400_000, 4, 8);
+        assert!(p4.total_time(&c, 400_000) < p2.total_time(&c, 400_000));
+    }
+
+    #[test]
+    fn plan_times_are_minutes_not_hours() {
+        // Roofline sanity for the biggest case in the paper's range.
+        let c = cm(ModelSpec::llama31_70b());
+        let n = c.replicas_for_long(500_000, 131_072);
+        let p = plan_fast_sp(&c, 500_000, n, 8);
+        let t = p.total_time(&c, 500_000);
+        assert!(t > 30.0 && t < 3600.0, "t={t}s over {n} replicas");
+    }
+
+    #[test]
+    fn single_replica_plan_degenerates_cleanly() {
+        let c = cm(ModelSpec::mistral_7b());
+        let p = plan_fast_sp(&c, 8_192, 1, 8);
+        assert_eq!(p.n_nodes, 1);
+        assert_eq!(p.ring_len, 1);
+        assert!(p.total_time(&c, 8_192) > 0.0);
+    }
+}

@@ -1,0 +1,250 @@
+//! Real-TPU performance estimation for the L1 Pallas kernels.
+//!
+//! The kernels run under `interpret=True` on CPU (Mosaic custom-calls
+//! cannot execute on the CPU PJRT plugin), so on-hardware performance is
+//! *estimated* from kernel structure: VMEM footprint per grid step, MXU
+//! occupancy of the block matmuls, and the HBM↔VMEM traffic the BlockSpecs
+//! imply. This is the DESIGN.md §3/§8 deliverable — the numbers the
+//! EXPERIMENTS.md §Perf table reports for L1.
+
+use crate::config::ModelSpec;
+
+/// TPU-core hardware envelope (v4-lite-ish defaults; configurable).
+#[derive(Debug, Clone)]
+pub struct TpuSpec {
+    /// Peak bf16 MXU FLOP/s per core.
+    pub peak_flops: f64,
+    /// HBM bandwidth per core, bytes/s.
+    pub hbm_bw: f64,
+    /// VMEM per core, bytes.
+    pub vmem_bytes: f64,
+    /// MXU systolic array dimension (128 lanes).
+    pub mxu_dim: usize,
+}
+
+impl Default for TpuSpec {
+    fn default() -> Self {
+        Self {
+            peak_flops: 275e12,
+            hbm_bw: 1.2e12,
+            vmem_bytes: 16.0 * 1024.0 * 1024.0,
+            mxu_dim: 128,
+        }
+    }
+}
+
+/// Static description of one flash-attention kernel configuration.
+#[derive(Debug, Clone)]
+pub struct KernelConfig {
+    pub block_q: usize,
+    pub block_k: usize,
+    pub d_head: usize,
+    pub seq: usize,
+    pub n_q_heads: usize,
+    pub n_kv_heads: usize,
+    /// Bytes per stored element (2 = bf16).
+    pub dtype_bytes: usize,
+    pub causal: bool,
+}
+
+impl KernelConfig {
+    pub fn for_model(model: &ModelSpec, seq: usize) -> Self {
+        Self {
+            block_q: 128,
+            block_k: 128,
+            d_head: model.d_head,
+            seq,
+            n_q_heads: model.n_q_heads,
+            n_kv_heads: model.n_kv_heads,
+            dtype_bytes: 2,
+            causal: true,
+        }
+    }
+}
+
+/// The estimate the §Perf table reports.
+#[derive(Debug, Clone)]
+pub struct KernelEstimate {
+    /// Peak VMEM held by one grid step (tiles + scratch), bytes.
+    pub vmem_per_step: f64,
+    /// Fraction of the MXU's systolic array the block shapes fill.
+    pub mxu_occupancy: f64,
+    /// FLOPs per byte moved HBM↔VMEM.
+    pub arithmetic_intensity: f64,
+    /// Roofline-achievable fraction of peak FLOPs.
+    pub roofline_frac: f64,
+    /// Estimated kernel time on the TPU spec, seconds.
+    pub est_time_s: f64,
+}
+
+/// Estimate the flash-prefill kernel on `tpu`.
+pub fn estimate_flash_prefill(cfg: &KernelConfig, tpu: &TpuSpec) -> KernelEstimate {
+    let (bq, bk, dh) = (cfg.block_q as f64, cfg.block_k as f64, cfg.d_head as f64);
+
+    // VMEM per grid step: q, k, v tiles + output tile + f32 scratch
+    // (acc + m + l) — mirrors kernels/flash_prefill.py::vmem_bytes.
+    let tiles = (bq + 2.0 * bk + bq) * dh * cfg.dtype_bytes as f64;
+    let scratch = (bq * dh + 2.0 * bq) * 4.0;
+    let vmem_per_step = tiles + scratch;
+
+    // MXU occupancy: the QK^T matmul is (bq × dh) · (dh × bk); the array
+    // is mxu_dim × mxu_dim. Shapes below 128 underfill lanes/sublanes.
+    let m = cfg.mxu_fill(cfg.block_q);
+    let n = cfg.mxu_fill(cfg.block_k);
+    let k = cfg.mxu_fill(cfg.d_head);
+    let mxu_occupancy = m * n * k;
+
+    // Work and traffic per head: causal halves the score matrix.
+    let causal_frac = if cfg.causal { 0.5 } else { 1.0 };
+    let s = cfg.seq as f64;
+    let flops_per_head = 4.0 * s * s * dh * causal_frac; // QK^T + PV
+    // HBM traffic per q-head: Q once, K/V streamed once per q-block row
+    // that intersects the causal region (grid reuse), O once. GQA shares
+    // K/V across group = n_q/n_kv heads.
+    let q_blocks = s / bq;
+    let group = (cfg.n_q_heads / cfg.n_kv_heads.max(1)) as f64;
+    let kv_reads = q_blocks * causal_frac * s * dh * cfg.dtype_bytes as f64 * 2.0
+        / group;
+    let qo_traffic = 2.0 * s * dh * cfg.dtype_bytes as f64;
+    let bytes_per_head = kv_reads + qo_traffic;
+
+    let arithmetic_intensity = flops_per_head / bytes_per_head;
+    // Roofline: achievable = min(peak * occupancy, AI * BW).
+    let compute_roof = tpu.peak_flops * mxu_occupancy;
+    let memory_roof = arithmetic_intensity * tpu.hbm_bw;
+    let achievable = compute_roof.min(memory_roof);
+    let roofline_frac = achievable / tpu.peak_flops;
+
+    let total_flops = flops_per_head * cfg.n_q_heads as f64;
+    let est_time_s = total_flops / achievable;
+
+    KernelEstimate {
+        vmem_per_step,
+        mxu_occupancy,
+        arithmetic_intensity,
+        roofline_frac,
+        est_time_s,
+    }
+}
+
+impl KernelConfig {
+    /// Fill fraction of one MXU dimension for a block extent.
+    fn mxu_fill(&self, extent: usize) -> f64 {
+        let d = self.mxu_dim() as f64;
+        (extent as f64 / d).min(1.0)
+    }
+
+    fn mxu_dim(&self) -> usize {
+        128
+    }
+}
+
+/// Sweep block shapes and return the best (config, estimate) by est. time,
+/// subject to the VMEM budget — the L1 "iterate on block shapes" loop of
+/// the PERFORMANCE OPTIMIZATION process, run analytically.
+pub fn best_block_shapes(
+    model: &ModelSpec,
+    seq: usize,
+    tpu: &TpuSpec,
+) -> (KernelConfig, KernelEstimate) {
+    let mut best: Option<(KernelConfig, KernelEstimate)> = None;
+    for &bq in &[64usize, 128, 256, 512] {
+        for &bk in &[64usize, 128, 256, 512] {
+            if bq > seq || bk > seq {
+                continue;
+            }
+            let mut cfg = KernelConfig::for_model(model, seq);
+            cfg.block_q = bq;
+            cfg.block_k = bk;
+            let est = estimate_flash_prefill(&cfg, tpu);
+            if est.vmem_per_step > tpu.vmem_bytes {
+                continue;
+            }
+            if best
+                .as_ref()
+                .map_or(true, |(_, b)| est.est_time_s < b.est_time_s)
+            {
+                best = Some((cfg, est));
+            }
+        }
+    }
+    best.expect("no feasible block shape")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> KernelConfig {
+        KernelConfig::for_model(&ModelSpec::mistral_7b(), 4096)
+    }
+
+    #[test]
+    fn vmem_stays_under_budget_at_production_blocks() {
+        let est = estimate_flash_prefill(&cfg(), &TpuSpec::default());
+        assert!(
+            est.vmem_per_step < 16.0 * 1024.0 * 1024.0,
+            "vmem {} over budget",
+            est.vmem_per_step
+        );
+    }
+
+    #[test]
+    fn full_blocks_fill_the_mxu() {
+        let est = estimate_flash_prefill(&cfg(), &TpuSpec::default());
+        assert!((est.mxu_occupancy - 1.0).abs() < 1e-9, "128-blocks fill the array");
+        let mut small = cfg();
+        small.block_q = 64;
+        let est2 = estimate_flash_prefill(&small, &TpuSpec::default());
+        assert!(est2.mxu_occupancy < 1.0);
+    }
+
+    #[test]
+    fn longer_sequences_raise_arithmetic_intensity() {
+        let mut a = cfg();
+        a.seq = 2048;
+        let mut b = cfg();
+        b.seq = 65536;
+        let tpu = TpuSpec::default();
+        let ea = estimate_flash_prefill(&a, &tpu);
+        let eb = estimate_flash_prefill(&b, &tpu);
+        assert!(eb.arithmetic_intensity > ea.arithmetic_intensity);
+    }
+
+    #[test]
+    fn roofline_frac_exceeds_half_at_long_seq() {
+        // DESIGN.md §8's L1 target: >= 0.5 of roofline for real workloads.
+        let mut c = cfg();
+        c.seq = 32768;
+        let est = estimate_flash_prefill(&c, &TpuSpec::default());
+        assert!(
+            est.roofline_frac >= 0.5,
+            "roofline fraction {} below target",
+            est.roofline_frac
+        );
+    }
+
+    #[test]
+    fn sweep_picks_feasible_fast_shape() {
+        let (best_cfg, est) = best_block_shapes(
+            &ModelSpec::llama31_70b(),
+            16384,
+            &TpuSpec::default(),
+        );
+        assert!(est.vmem_per_step <= TpuSpec::default().vmem_bytes);
+        assert!(best_cfg.block_q >= 128, "sweep should prefer MXU-filling blocks");
+        assert!(est.est_time_s > 0.0);
+    }
+
+    #[test]
+    fn estimated_time_scales_quadratically() {
+        let tpu = TpuSpec::default();
+        let mut a = cfg();
+        a.seq = 4096;
+        let mut b = cfg();
+        b.seq = 8192;
+        let ta = estimate_flash_prefill(&a, &tpu).est_time_s;
+        let tb = estimate_flash_prefill(&b, &tpu).est_time_s;
+        assert!(tb / ta > 3.0 && tb / ta < 5.0, "ratio {}", tb / ta);
+    }
+}

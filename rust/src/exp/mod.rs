@@ -1,0 +1,190 @@
+//! Shared experiment harness: runs (model × policy) grids over generated
+//! traces and formats the tables/series the paper reports.
+//!
+//! Every `exp_*` binary in `rust/src/bin/` is a thin wrapper over these
+//! helpers; DESIGN.md §5 maps each binary to its table/figure.
+
+use std::collections::HashMap;
+use std::sync::{Mutex, OnceLock};
+
+use crate::config::{ModelSpec, PolicyKind};
+use crate::metrics::RunMetrics;
+use crate::sim::{run_sim, SimConfig};
+use crate::trace::{Trace, TraceConfig};
+
+/// Common CLI knobs of the experiment binaries.
+#[derive(Debug, Clone)]
+pub struct ExpParams {
+    pub n_requests: usize,
+    pub seed: u64,
+    /// Arrival-rate scale relative to the per-model capacity estimate.
+    pub load: f64,
+}
+
+impl Default for ExpParams {
+    fn default() -> Self {
+        Self {
+            n_requests: 50_000,
+            seed: 42,
+            load: 0.6,
+        }
+    }
+}
+
+/// Long-request frequency used by the scheduling experiments.
+///
+/// The paper classifies the trace's ≥p95 inputs as long and rewrites them
+/// to U(100K, 500K). At that frequency the rewritten long work alone
+/// exceeds the 32-GPU testbed's capacity by an order of magnitude in our
+/// roofline (a 300K-token prefill is ~200 replica-seconds), which
+/// contradicts the regimes the paper reports (a reservation pool that
+/// idles 16–41%, FIFO long JCTs comparable to PecSched's). The paper does
+/// not publish its absolute arrival rate, so we keep the §6.2 rewrite
+/// *distribution* but lower the rewrite frequency to the largest value
+/// that preserves the paper's qualitative regime on this cluster:
+/// longs rare enough that the reservation pool idles, frequent enough for
+/// head-of-line blocking and preemption dynamics. DESIGN.md §2 documents
+/// this substitution.
+pub const EXP_LONG_QUANTILE: f64 = 0.9998;
+
+impl ExpParams {
+    pub fn from_env() -> Self {
+        let mut p = Self::default();
+        if let Ok(v) = std::env::var("PECSCHED_REQUESTS") {
+            p.n_requests = v.parse().expect("PECSCHED_REQUESTS");
+        }
+        if let Ok(v) = std::env::var("PECSCHED_SEED") {
+            p.seed = v.parse().expect("PECSCHED_SEED");
+        }
+        if let Ok(v) = std::env::var("PECSCHED_LOAD") {
+            p.load = v.parse().expect("PECSCHED_LOAD");
+        }
+        p
+    }
+}
+
+/// Estimate a sustainable short-request arrival rate for `model` on the
+/// default 32-GPU cluster, so every model runs near its own capacity
+/// (§6.2 replays the same trace; we must scale RPS per model or the big
+/// models drown).
+pub fn capacity_rps(model: &ModelSpec, load: f64) -> f64 {
+    let cluster = crate::config::ClusterSpec::default();
+    let cm = crate::costmodel::CostModel::new(model.clone(), cluster.hw.clone());
+    let n_replicas = cluster.replicas_for(model) as f64;
+    // Average short request: ~1.1K prompt, ~230 output tokens, decode
+    // amortised over a batch of ~8.
+    let service = cm.short_prefill_time(1100)
+        + 230.0 / 8.0 * cm.decode_iter_time(8, 8 * 1300);
+    load * n_replicas / service
+}
+
+/// Empirically calibrated short-request capacity of the default cluster
+/// for `model`: the highest arrival rate at which a shorts-only FIFO run
+/// keeps queueing delays bounded. Bisection over quick probe simulations;
+/// cached per model. This is the "cluster maximum capacity" §6.6 sets its
+/// arrival rates against, and the anchor every experiment's `load`
+/// multiplies.
+pub fn sustainable_rps(model: &ModelSpec) -> f64 {
+    static CACHE: OnceLock<Mutex<HashMap<String, f64>>> = OnceLock::new();
+    let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+    if let Some(&v) = cache.lock().unwrap().get(&model.name) {
+        return v;
+    }
+    let stable = |rps: f64| -> bool {
+        let trace = TraceConfig {
+            n_requests: 4000,
+            rps,
+            seed: 9,
+            long_quantile: 0.9999999, // effectively shorts-only
+            ..TraceConfig::default()
+        }
+        .generate()
+        .without_longs();
+        let mut m = run_sim(
+            SimConfig::baseline(model.clone()),
+            &trace,
+            PolicyKind::Fifo,
+        );
+        m.short_queue_delay.quantile(0.90) < 0.5
+    };
+    let mut lo = capacity_rps(model, 0.5);
+    let mut hi = capacity_rps(model, 12.0);
+    // Expand the bracket if even `hi` is stable (decode batching can beat
+    // the analytic estimate by a wide margin).
+    while stable(hi) && hi < capacity_rps(model, 100.0) {
+        lo = hi;
+        hi *= 2.0;
+    }
+    for _ in 0..8 {
+        let mid = 0.5 * (lo + hi);
+        if stable(mid) {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    cache.lock().unwrap().insert(model.name.clone(), lo);
+    lo
+}
+
+/// Generate the standard trace for a model at the given load (fraction of
+/// the calibrated shorts-only capacity).
+pub fn trace_for(model: &ModelSpec, p: &ExpParams) -> Trace {
+    TraceConfig {
+        n_requests: p.n_requests,
+        rps: p.load * sustainable_rps(model),
+        seed: p.seed,
+        long_quantile: EXP_LONG_QUANTILE,
+        ..TraceConfig::default()
+    }
+    .generate()
+}
+
+/// Run one (model, policy) cell on a prepared trace.
+pub fn run_cell(model: &ModelSpec, policy: PolicyKind, trace: &Trace) -> RunMetrics {
+    let cfg = match policy {
+        PolicyKind::PecSched(flags) => SimConfig::pecsched(model.clone(), flags),
+        _ => SimConfig::baseline(model.clone()),
+    };
+    run_sim(cfg, trace, policy)
+}
+
+/// Format the five paper percentiles as a table row.
+pub fn fmt_pcts(label: &str, p: [f64; 5]) -> String {
+    format!(
+        "{label:<16} p1={:>9.3}s p25={:>9.3}s p50={:>9.3}s p75={:>9.3}s p99={:>9.3}s",
+        p[0], p[1], p[2], p[3], p[4]
+    )
+}
+
+/// Normalize a percentile set by its own p99 (the paper plots normalized
+/// queueing delays; we normalize each figure by the baseline p99 so the
+/// ratios the text quotes are directly visible).
+pub fn normalize(p: [f64; 5], by: f64) -> [f64; 5] {
+    let d = if by > 0.0 { by } else { 1.0 };
+    [p[0] / d, p[1] / d, p[2] / d, p[3] / d, p[4] / d]
+}
+
+/// Markdown-ish section header used by all binaries.
+pub fn banner(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn capacity_rps_decreases_with_model_size() {
+        let r7 = capacity_rps(&ModelSpec::mistral_7b(), 0.7);
+        let r70 = capacity_rps(&ModelSpec::llama31_70b(), 0.7);
+        assert!(r7 > r70, "7B {r7} should exceed 70B {r70}");
+        assert!(r70 > 0.1);
+    }
+
+    #[test]
+    fn normalize_by_zero_is_identity() {
+        let p = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(normalize(p, 0.0), p);
+    }
+}

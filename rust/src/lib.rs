@@ -1,0 +1,34 @@
+//! PecSched: Preemptive and Efficient Cluster Scheduling for LLM Inference.
+//!
+//! A full reproduction of Zhang & Shen's PecSched (CS.DC 2024) as a
+//! three-layer rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the paper's contribution: a cluster-level
+//!   scheduler with preemptive long-request prefill, coordinated
+//!   prefill/decode colocation + disaggregation, and a hybrid
+//!   ("fast SP") sequence-parallel planner. Because the paper's testbed
+//!   (32× A100) is a hardware gate, the cluster is reproduced as a
+//!   discrete-event simulator ([`sim`]) over an analytical A100 cost model
+//!   ([`costmodel`]), plus a *real* single-host serving engine ([`server`])
+//!   that drives AOT-compiled artifacts through PJRT ([`runtime`]).
+//! * **Layer 2** — `python/compile/model.py`: the served transformer in JAX.
+//! * **Layer 1** — `python/compile/kernels/`: Pallas flash-attention
+//!   kernels, the compute hot-spot.
+//!
+//! Python never appears on the request path: `make artifacts` runs once and
+//! the rust binary is self-contained afterwards.
+//!
+//! See `DESIGN.md` for the full system inventory and the experiment index
+//! mapping every table/figure of the paper to a binary in `rust/src/bin/`.
+
+pub mod cluster;
+pub mod config;
+pub mod costmodel;
+pub mod exp;
+pub mod metrics;
+pub mod runtime;
+pub mod sched;
+pub mod server;
+pub mod sim;
+pub mod trace;
+pub mod util;

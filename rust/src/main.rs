@@ -1,0 +1,195 @@
+//! `pecsched` — leader entrypoint & CLI.
+//!
+//! Subcommands:
+//! * `simulate`  — run the cluster simulator for one (model, policy) pair;
+//! * `trace-gen` — emit an Azure-shape trace as CSV on stdout;
+//! * `serve`     — run the real PJRT serving engine on a synthetic workload;
+//! * `plan-sp`   — show the fast-SP strategy selection for a long request.
+//!
+//! Run `pecsched help` for flags.
+
+use anyhow::{bail, Result};
+
+use pecsched::config::{AblationFlags, ModelSpec, PolicyKind};
+use pecsched::costmodel::{sp, CostModel};
+use pecsched::exp::{self, ExpParams};
+use pecsched::server::{EngineConfig, EngineMode, ServeRequest, ServerHandle};
+use pecsched::sim::{run_sim, SimConfig};
+use pecsched::trace::TraceConfig;
+use pecsched::util::Args;
+
+const HELP: &str = "\
+pecsched — preemptive and efficient cluster scheduling for LLM inference
+
+USAGE: pecsched <command> [flags]
+
+COMMANDS
+  simulate   --model <name> --policy <p> [--requests N] [--seed S] [--load F]
+             policies: fifo | reservation | priority | pecsched |
+                       pecsched-no-pe | pecsched-no-dis | pecsched-no-col |
+                       pecsched-no-fsp
+             models:   mistral-7b | phi-3-14b | yi-34b | llama-3.1-70b
+  trace-gen  [--requests N] [--rps F] [--seed S]
+  serve      [--artifacts DIR] [--requests N] [--mode fifo|pecsched]
+  plan-sp    [--model <name>] [--input-len N]
+  help
+";
+
+fn parse_policy(s: &str) -> Result<PolicyKind> {
+    Ok(match s {
+        "fifo" => PolicyKind::Fifo,
+        "reservation" => PolicyKind::Reservation,
+        "priority" => PolicyKind::Priority,
+        "pecsched" => PolicyKind::PecSched(AblationFlags::full()),
+        "pecsched-no-pe" => PolicyKind::PecSched(AblationFlags::no_preemption()),
+        "pecsched-no-dis" => {
+            PolicyKind::PecSched(AblationFlags::no_disaggregation())
+        }
+        "pecsched-no-col" => PolicyKind::PecSched(AblationFlags::no_colocation()),
+        "pecsched-no-fsp" => PolicyKind::PecSched(AblationFlags::no_fast_sp()),
+        other => bail!("unknown policy {other}"),
+    })
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let cmd = args
+        .positional()
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("help");
+
+    match cmd {
+        "simulate" => cmd_simulate(&args),
+        "trace-gen" => cmd_trace_gen(&args),
+        "serve" => cmd_serve(&args),
+        "plan-sp" => cmd_plan_sp(&args),
+        _ => {
+            print!("{HELP}");
+            Ok(())
+        }
+    }
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let model_name = args.str_or("model", "mistral-7b");
+    let model = ModelSpec::by_name(&model_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown model {model_name}"))?;
+    let kind = parse_policy(&args.str_or("policy", "pecsched"))?;
+    let p = ExpParams {
+        n_requests: args.parse_or("requests", 4000usize)?,
+        seed: args.parse_or("seed", 42u64)?,
+        load: args.parse_or("load", 0.7f64)?,
+    };
+    let trace = exp::trace_for(&model, &p);
+    let cfg = match kind {
+        PolicyKind::PecSched(f) => SimConfig::pecsched(model.clone(), f),
+        _ => SimConfig::baseline(model.clone()),
+    };
+    let mut m = run_sim(cfg, &trace, kind);
+    println!("policy           {}", m.policy);
+    println!("model            {}", m.model);
+    println!(
+        "shorts completed {}/{}",
+        m.shorts_completed,
+        trace.shorts().count()
+    );
+    println!("longs completed  {}/{}", m.longs_completed, m.longs_total);
+    println!("short RPS        {:.2}", m.short_rps());
+    if !m.short_queue_delay.is_empty() {
+        println!(
+            "short p99 queue  {:.3}s",
+            m.short_queue_delay.quantile(0.99)
+        );
+    }
+    println!("long avg JCT     {:.1}s", m.long_jct.mean());
+    println!("preemptions      {}", m.preemptions);
+    println!("GPU idle rate    {:.4}", m.gpu_idle_rate);
+    Ok(())
+}
+
+fn cmd_trace_gen(args: &Args) -> Result<()> {
+    let t = TraceConfig {
+        n_requests: args.parse_or("requests", 10_000usize)?,
+        rps: args.parse_or("rps", 10.0f64)?,
+        seed: args.parse_or("seed", 42u64)?,
+        ..TraceConfig::default()
+    }
+    .generate();
+    print!("{}", t.to_csv());
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let dir = std::path::PathBuf::from(args.str_or("artifacts", "artifacts"));
+    let n = args.parse_or("requests", 64usize)?;
+    let mode = match args.str_or("mode", "pecsched").as_str() {
+        "fifo" => EngineMode::Fifo,
+        "pecsched" => EngineMode::PecSched,
+        m => bail!("unknown mode {m}"),
+    };
+    let cfg = EngineConfig {
+        mode,
+        ..EngineConfig::default()
+    };
+    let handle = ServerHandle::start(&dir, cfg)?;
+    let t0 = std::time::Instant::now();
+    let mut rxs = Vec::new();
+    for i in 0..n {
+        let plen = if i % 8 == 7 { 300 } else { 24 + (i % 16) };
+        let prompt: Vec<i32> = (0..plen)
+            .map(|j| ((i * 31 + j) % 2000) as i32 + 1)
+            .collect();
+        rxs.push(handle.submit(ServeRequest {
+            id: i as u64,
+            prompt,
+            max_new_tokens: 8,
+        }));
+    }
+    let mut ttfts = Vec::new();
+    for rx in rxs {
+        let r = rx.recv()?;
+        ttfts.push(r.ttft_s);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    ttfts.sort_by(|a, b| a.total_cmp(b));
+    let stats = handle.shutdown()?;
+    println!(
+        "served {} requests in {wall:.2}s ({:.2} req/s); \
+         ttft p50={:.3}s p99={:.3}s; preemptions={}",
+        stats.completed,
+        stats.completed as f64 / wall,
+        ttfts[ttfts.len() / 2],
+        ttfts[(ttfts.len() * 99) / 100],
+        stats.preemptions
+    );
+    Ok(())
+}
+
+fn cmd_plan_sp(args: &Args) -> Result<()> {
+    let model_name = args.str_or("model", "llama-3.1-70b");
+    let model = ModelSpec::by_name(&model_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown model {model_name}"))?;
+    let input_len: u32 = args.parse_or("input-len", 300_000u32)?;
+    let cm = CostModel::new(model, Default::default());
+    let n = cm.replicas_for_long(input_len, 131_072);
+    let fast = sp::plan_fast_sp(&cm, input_len, n, 8);
+    let ring = sp::plan_ring_only(&cm, input_len, n, 8);
+    println!(
+        "input {input_len} tokens -> {n} replicas ({} GPUs)",
+        fast.n_gpus
+    );
+    println!(
+        "fast SP  : attn={:?} mlp={:?} ring_len={} time={:.1}s",
+        fast.attn,
+        fast.mlp,
+        fast.ring_len,
+        fast.total_time(&cm, input_len)
+    );
+    println!(
+        "ring-only: ring_len={} time={:.1}s",
+        ring.ring_len,
+        ring.total_time(&cm, input_len)
+    );
+    Ok(())
+}

@@ -1,0 +1,277 @@
+//! Measurement machinery: percentile digests, GPU idle accounting (Eq. 1),
+//! throughput, JCT, preemption counters, scheduling-overhead timers and an
+//! execution-timeline recorder ([`timeline`]).
+
+pub mod timeline;
+
+pub use timeline::{Activity, Span, Timeline};
+
+
+/// The percentile set every delay figure in the paper reports.
+pub const PAPER_PERCENTILES: [f64; 5] = [0.01, 0.25, 0.50, 0.75, 0.99];
+
+/// Exact percentile digest (stores samples; fine at trace scale).
+#[derive(Debug, Clone, Default)]
+pub struct Digest {
+    samples: Vec<f64>,
+    sorted: bool,
+}
+
+impl Digest {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, v: f64) {
+        debug_assert!(v.is_finite(), "non-finite sample {v}");
+        self.samples.push(v);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.samples.sort_by(|a, b| a.total_cmp(b));
+            self.sorted = true;
+        }
+    }
+
+    /// Linear-interpolated quantile, `q` in [0, 1].
+    pub fn quantile(&mut self, q: f64) -> f64 {
+        assert!(!self.samples.is_empty(), "quantile of empty digest");
+        assert!((0.0..=1.0).contains(&q));
+        self.ensure_sorted();
+        let n = self.samples.len();
+        if n == 1 {
+            return self.samples[0];
+        }
+        let pos = q * (n - 1) as f64;
+        let lo = pos.floor() as usize;
+        let hi = pos.ceil() as usize;
+        let frac = pos - lo as f64;
+        self.samples[lo] * (1.0 - frac) + self.samples[hi] * frac
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn max(&mut self) -> f64 {
+        self.ensure_sorted();
+        *self.samples.last().expect("max of empty digest")
+    }
+
+    /// The paper's five percentiles (p1, p25, p50, p75, p99).
+    pub fn paper_percentiles(&mut self) -> [f64; 5] {
+        let mut out = [0.0; 5];
+        for (i, q) in PAPER_PERCENTILES.iter().enumerate() {
+            out[i] = self.quantile(*q);
+        }
+        out
+    }
+}
+
+/// Per-GPU-group busy/idle accounting for Eq. (1).
+///
+/// One `BusyTracker` tracks one replica (its GPUs move together). Busy
+/// intervals accumulate via `set_busy`/`set_idle` transitions.
+#[derive(Debug, Clone, Default)]
+pub struct BusyTracker {
+    busy_since: Option<f64>,
+    pub busy_total: f64,
+}
+
+impl BusyTracker {
+    pub fn set_busy(&mut self, now: f64) {
+        if self.busy_since.is_none() {
+            self.busy_since = Some(now);
+        }
+    }
+
+    pub fn set_idle(&mut self, now: f64) {
+        if let Some(t0) = self.busy_since.take() {
+            debug_assert!(now >= t0 - 1e-9, "time moved backwards: {t0} -> {now}");
+            self.busy_total += (now - t0).max(0.0);
+        }
+    }
+
+    pub fn is_busy(&self) -> bool {
+        self.busy_since.is_some()
+    }
+
+    /// Close any open interval at `end` and return total busy time.
+    pub fn finish(&mut self, end: f64) -> f64 {
+        self.set_idle(end);
+        self.busy_total
+    }
+}
+
+/// Eq. (1): GPU idle rate = sum(idle) / sum(exec + idle) over GPUs.
+pub fn idle_rate(busy_times: &[f64], gpu_weights: &[usize], horizon: f64) -> f64 {
+    assert_eq!(busy_times.len(), gpu_weights.len());
+    if horizon <= 0.0 {
+        return 0.0;
+    }
+    let mut busy = 0.0;
+    let mut total = 0.0;
+    for (b, &w) in busy_times.iter().zip(gpu_weights) {
+        busy += b.min(horizon) * w as f64;
+        total += horizon * w as f64;
+    }
+    if total <= 0.0 {
+        return 0.0;
+    }
+    ((total - busy) / total).clamp(0.0, 1.0)
+}
+
+/// Everything one simulation run reports.
+#[derive(Debug, Clone, Default)]
+pub struct RunMetrics {
+    pub policy: String,
+    pub model: String,
+    /// Queueing delay (arrival → prefill start) of short requests.
+    pub short_queue_delay: Digest,
+    /// Queueing delay of long requests.
+    pub long_queue_delay: Digest,
+    /// JCT (arrival → last token) of short requests.
+    pub short_jct: Digest,
+    /// JCT of long requests (only those that completed).
+    pub long_jct: Digest,
+    pub shorts_completed: usize,
+    pub longs_completed: usize,
+    pub longs_total: usize,
+    /// Long requests with no service by the time all shorts finished.
+    pub longs_starved: usize,
+    /// Total suspensions of long-request prefill (Tables 3/6) plus, under
+    /// /CoL, suspensions of long-request decode.
+    pub preemptions: u64,
+    /// Makespan of the run, seconds (all tracked work complete).
+    pub makespan: f64,
+    /// Time the last short request completed (throughput window).
+    pub t_shorts_done: f64,
+    /// Eq. (1) idle rate over the run.
+    pub gpu_idle_rate: f64,
+    /// Wall-clock scheduling time per request / simulated JCT (Table 7).
+    pub sched_overhead_short: Digest,
+    pub sched_overhead_long: Digest,
+}
+
+impl RunMetrics {
+    /// Throughput of short requests (Fig. 2b/3b/10), requests per second,
+    /// measured over the window in which the short workload was served
+    /// (so a policy that merely delays *long* completions is not
+    /// penalised, and one that delays shorts is).
+    pub fn short_rps(&self) -> f64 {
+        let window = if self.t_shorts_done > 0.0 {
+            self.t_shorts_done
+        } else {
+            self.makespan
+        };
+        if window <= 0.0 {
+            return 0.0;
+        }
+        self.shorts_completed as f64 / window
+    }
+
+    pub fn starved_frac(&self) -> f64 {
+        if self.longs_total == 0 {
+            return 0.0;
+        }
+        self.longs_starved as f64 / self.longs_total as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn digest_quantiles_exact_on_uniform() {
+        let mut d = Digest::new();
+        for i in 0..=100 {
+            d.add(i as f64);
+        }
+        assert_eq!(d.quantile(0.0), 0.0);
+        assert_eq!(d.quantile(0.5), 50.0);
+        assert_eq!(d.quantile(1.0), 100.0);
+        assert!((d.quantile(0.99) - 99.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn digest_interpolates() {
+        let mut d = Digest::new();
+        d.add(0.0);
+        d.add(10.0);
+        assert!((d.quantile(0.25) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn digest_single_sample() {
+        let mut d = Digest::new();
+        d.add(7.0);
+        assert_eq!(d.quantile(0.99), 7.0);
+        assert_eq!(d.mean(), 7.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn digest_empty_quantile_panics() {
+        Digest::new().quantile(0.5);
+    }
+
+    #[test]
+    fn busy_tracker_accumulates() {
+        let mut b = BusyTracker::default();
+        b.set_busy(1.0);
+        b.set_busy(2.0); // no-op, already busy
+        b.set_idle(4.0);
+        b.set_idle(5.0); // no-op
+        b.set_busy(10.0);
+        assert_eq!(b.finish(12.0), 5.0);
+    }
+
+    #[test]
+    fn idle_rate_eq1() {
+        // Two single-GPU replicas, one busy the whole horizon, one never.
+        assert!((idle_rate(&[10.0, 0.0], &[1, 1], 10.0) - 0.5).abs() < 1e-12);
+        // GPU weighting: a TP=4 idle replica dominates a TP=1 busy one.
+        let r = idle_rate(&[10.0, 0.0], &[1, 4], 10.0);
+        assert!((r - 0.8).abs() < 1e-12);
+        assert_eq!(idle_rate(&[], &[], 10.0), 0.0);
+    }
+
+    #[test]
+    fn rps_and_starvation() {
+        let m = RunMetrics {
+            shorts_completed: 50,
+            makespan: 10.0,
+            longs_total: 4,
+            longs_starved: 3,
+            ..Default::default()
+        };
+        assert!((m.short_rps() - 5.0).abs() < 1e-12);
+        assert!((m.starved_frac() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn paper_percentiles_ordering() {
+        let mut d = Digest::new();
+        for i in 0..1000 {
+            d.add((i % 37) as f64);
+        }
+        let p = d.paper_percentiles();
+        for w in p.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+    }
+}

@@ -1,0 +1,181 @@
+//! Execution-timeline recording: a compact event log of what each replica
+//! was doing when, with a text Gantt renderer for debugging scheduling
+//! behaviour (e.g. *seeing* head-of-line blocking vs preemption).
+
+/// What a replica spent an interval on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Activity {
+    Idle,
+    ShortPrefill,
+    ShortDecode,
+    LongPrefill,
+    LongDecode,
+    Suspended,
+    Down,
+}
+
+impl Activity {
+    fn glyph(self) -> char {
+        match self {
+            Activity::Idle => '.',
+            Activity::ShortPrefill => 's',
+            Activity::ShortDecode => 'd',
+            Activity::LongPrefill => 'L',
+            Activity::LongDecode => 'D',
+            Activity::Suspended => 'x',
+            Activity::Down => '!',
+        }
+    }
+}
+
+/// One recorded interval on one lane (replica).
+#[derive(Debug, Clone, Copy)]
+pub struct Span {
+    pub lane: usize,
+    pub start: f64,
+    pub end: f64,
+    pub activity: Activity,
+}
+
+/// Append-only timeline over a fixed number of lanes.
+#[derive(Debug, Default)]
+pub struct Timeline {
+    lanes: usize,
+    spans: Vec<Span>,
+}
+
+impl Timeline {
+    pub fn new(lanes: usize) -> Self {
+        Self {
+            lanes,
+            spans: Vec::new(),
+        }
+    }
+
+    pub fn record(&mut self, lane: usize, start: f64, end: f64, activity: Activity) {
+        assert!(lane < self.lanes, "lane {lane} out of range");
+        if end <= start {
+            return; // zero-length spans carry no information
+        }
+        self.spans.push(Span {
+            lane,
+            start,
+            end,
+            activity,
+        });
+    }
+
+    pub fn len(&self) -> usize {
+        self.spans.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.spans.is_empty()
+    }
+
+    pub fn horizon(&self) -> f64 {
+        self.spans.iter().map(|s| s.end).fold(0.0, f64::max)
+    }
+
+    /// Busy fraction of one lane over the recorded horizon.
+    pub fn utilization(&self, lane: usize) -> f64 {
+        let h = self.horizon();
+        if h <= 0.0 {
+            return 0.0;
+        }
+        let busy: f64 = self
+            .spans
+            .iter()
+            .filter(|s| s.lane == lane && s.activity != Activity::Idle)
+            .map(|s| s.end - s.start)
+            .sum();
+        (busy / h).clamp(0.0, 1.0)
+    }
+
+    /// Render an ASCII Gantt chart: one row per lane, `width` time buckets.
+    /// The dominant activity of each bucket wins its cell.
+    pub fn render(&self, width: usize) -> String {
+        let h = self.horizon();
+        if h <= 0.0 || width == 0 {
+            return String::new();
+        }
+        let dt = h / width as f64;
+        let mut out = String::new();
+        for lane in 0..self.lanes {
+            let mut row = vec![Activity::Idle; width];
+            let mut weight = vec![0.0f64; width];
+            for s in self.spans.iter().filter(|s| s.lane == lane) {
+                let b0 = (s.start / dt).floor() as usize;
+                let b1 = ((s.end / dt).ceil() as usize).min(width);
+                for (b, w) in weight.iter_mut().enumerate().take(b1).skip(b0) {
+                    let cell_start = b as f64 * dt;
+                    let cell_end = cell_start + dt;
+                    let overlap =
+                        (s.end.min(cell_end) - s.start.max(cell_start)).max(0.0);
+                    if overlap > *w {
+                        *w = overlap;
+                        row[b] = s.activity;
+                    }
+                }
+            }
+            out.push_str(&format!("r{lane:<3} |"));
+            for a in row {
+                out.push(a.glyph());
+            }
+            out.push_str("|\n");
+        }
+        out.push_str(&format!(
+            "      0s {:>width$.1}s\n",
+            h,
+            width = width.saturating_sub(3)
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_measures_utilization() {
+        let mut t = Timeline::new(2);
+        t.record(0, 0.0, 5.0, Activity::ShortPrefill);
+        t.record(0, 5.0, 10.0, Activity::Idle);
+        t.record(1, 0.0, 10.0, Activity::LongPrefill);
+        assert_eq!(t.horizon(), 10.0);
+        assert!((t.utilization(0) - 0.5).abs() < 1e-12);
+        assert!((t.utilization(1) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_length_spans_dropped() {
+        let mut t = Timeline::new(1);
+        t.record(0, 3.0, 3.0, Activity::ShortDecode);
+        assert!(t.is_empty());
+    }
+
+    #[test]
+    fn render_shows_dominant_activity() {
+        let mut t = Timeline::new(2);
+        t.record(0, 0.0, 8.0, Activity::LongPrefill);
+        t.record(0, 8.0, 10.0, Activity::Suspended);
+        t.record(1, 0.0, 10.0, Activity::ShortPrefill);
+        let g = t.render(10);
+        let lines: Vec<&str> = g.lines().collect();
+        assert!(lines[0].contains("LLLLLLLL"));
+        assert!(lines[0].contains("xx"));
+        assert!(lines[1].contains("ssssssssss"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn lane_bounds_checked() {
+        Timeline::new(1).record(2, 0.0, 1.0, Activity::Idle);
+    }
+
+    #[test]
+    fn empty_render_is_empty() {
+        assert_eq!(Timeline::new(3).render(40), "");
+    }
+}

@@ -1,0 +1,384 @@
+//! Artifact loading and PJRT execution.
+//!
+//! Loads the HLO-text artifacts emitted by `python/compile/aot.py`,
+//! compiles them on the PJRT CPU client, and exposes typed `prefill` /
+//! `decode` entry points. HLO *text* is the interchange format (not
+//! serialized protos — see aot.py / /opt/xla-example/README.md).
+//!
+//! Weights are uploaded once per process as XLA literals in manifest
+//! order; every call passes them by reference, so the request path does no
+//! host-side weight copies.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::Json;
+
+/// `manifest.json` — the contract written by aot.py.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub model: ManifestModel,
+    pub params: Vec<ParamSpec>,
+    pub weights_file: String,
+    pub weights_bytes: usize,
+    pub prefill_buckets: Vec<usize>,
+    pub decode_capacity: usize,
+    pub artifacts: Vec<ArtifactSpec>,
+    pub golden: Vec<Golden>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ManifestModel {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_q_heads: usize,
+    pub n_kv_heads: usize,
+    pub d_head: usize,
+    pub d_ff: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub kind: String,
+    pub file: String,
+    pub seq: usize,
+    pub capacity: usize,
+}
+
+/// Golden greedy generations for token-exact integration checks.
+#[derive(Debug, Clone)]
+pub struct Golden {
+    pub prompt: Vec<i32>,
+    pub padded_len: usize,
+    pub generated: Vec<i32>,
+}
+
+fn i32_arr(j: &Json) -> Result<Vec<i32>> {
+    j.as_arr()?
+        .iter()
+        .map(|v| Ok(v.as_i64()? as i32))
+        .collect()
+}
+
+impl Manifest {
+    /// Parse the manifest JSON (aot.py's format).
+    pub fn from_json(text: &str) -> Result<Self> {
+        let j = Json::parse(text)?;
+        let m = j.get("model")?;
+        let model = ManifestModel {
+            vocab: m.get("vocab")?.as_usize()?,
+            d_model: m.get("d_model")?.as_usize()?,
+            n_layers: m.get("n_layers")?.as_usize()?,
+            n_q_heads: m.get("n_q_heads")?.as_usize()?,
+            n_kv_heads: m.get("n_kv_heads")?.as_usize()?,
+            d_head: m.get("d_head")?.as_usize()?,
+            d_ff: m.get("d_ff")?.as_usize()?,
+        };
+        let params = j
+            .get("params")?
+            .as_arr()?
+            .iter()
+            .map(|p| {
+                Ok(ParamSpec {
+                    name: p.get("name")?.as_str()?.to_string(),
+                    shape: p
+                        .get("shape")?
+                        .as_arr()?
+                        .iter()
+                        .map(|d| d.as_usize())
+                        .collect::<Result<_>>()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let artifacts = j
+            .get("artifacts")?
+            .as_arr()?
+            .iter()
+            .map(|a| {
+                Ok(ArtifactSpec {
+                    name: a.get("name")?.as_str()?.to_string(),
+                    kind: a.get("kind")?.as_str()?.to_string(),
+                    file: a.get("file")?.as_str()?.to_string(),
+                    seq: a.opt("seq").map(|s| s.as_usize()).transpose()?.unwrap_or(0),
+                    capacity: a.get("capacity")?.as_usize()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let golden = match j.opt("golden") {
+            None => Vec::new(),
+            Some(g) => g
+                .as_arr()?
+                .iter()
+                .map(|e| {
+                    Ok(Golden {
+                        prompt: i32_arr(e.get("prompt")?)?,
+                        padded_len: e.get("padded_len")?.as_usize()?,
+                        generated: i32_arr(e.get("generated")?)?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?,
+        };
+        Ok(Self {
+            model,
+            params,
+            weights_file: j.get("weights_file")?.as_str()?.to_string(),
+            weights_bytes: j.get("weights_bytes")?.as_usize()?,
+            prefill_buckets: j
+                .get("prefill_buckets")?
+                .as_arr()?
+                .iter()
+                .map(|b| b.as_usize())
+                .collect::<Result<_>>()?,
+            decode_capacity: j.get("decode_capacity")?.as_usize()?,
+            artifacts,
+            golden,
+        })
+    }
+}
+
+/// A compiled model: weights on device + one executable per shape bucket.
+pub struct Artifacts {
+    pub manifest: Manifest,
+    pub dir: PathBuf,
+    client: xla::PjRtClient,
+    params: Vec<xla::Literal>,
+    prefill_exes: HashMap<usize, xla::PjRtLoadedExecutable>,
+    decode_exe: xla::PjRtLoadedExecutable,
+}
+
+/// Output of one prefill call.
+pub struct PrefillOut {
+    /// Last-position logits, length = vocab.
+    pub logits: Vec<f32>,
+    /// KV caches, shape (n_layers, n_kv_heads, capacity, d_head).
+    pub k_cache: xla::Literal,
+    pub v_cache: xla::Literal,
+}
+
+/// Output of one decode step.
+pub struct DecodeOut {
+    pub logits: Vec<f32>,
+    pub k_cache: xla::Literal,
+    pub v_cache: xla::Literal,
+}
+
+impl Artifacts {
+    /// Default artifact directory (repo-relative, overridable).
+    pub fn default_dir() -> PathBuf {
+        std::env::var("PECSCHED_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    pub fn available(dir: &Path) -> bool {
+        dir.join("manifest.json").exists()
+    }
+
+    /// Load the manifest, upload weights, compile every executable.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::from_json(
+            &std::fs::read_to_string(dir.join("manifest.json"))
+                .with_context(|| format!("reading {}/manifest.json", dir.display()))?,
+        )?;
+
+        let client = xla::PjRtClient::cpu()?;
+
+        // Weights: one flat f32 little-endian blob in manifest order.
+        let blob = std::fs::read(dir.join(&manifest.weights_file))?;
+        if blob.len() != manifest.weights_bytes {
+            bail!(
+                "weights.bin is {} bytes, manifest says {}",
+                blob.len(),
+                manifest.weights_bytes
+            );
+        }
+        let floats: Vec<f32> = le_bytes_to_f32(&blob)?;
+        let mut params = Vec::with_capacity(manifest.params.len());
+        let mut off = 0usize;
+        for p in &manifest.params {
+            let n: usize = p.shape.iter().product();
+            let slice = &floats[off..off + n];
+            off += n;
+            let dims: Vec<i64> = p.shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(slice).reshape(&dims)?;
+            params.push(lit);
+        }
+        if off != floats.len() {
+            bail!("weights.bin has {} trailing floats", floats.len() - off);
+        }
+
+        // Compile each artifact.
+        let mut prefill_exes = HashMap::new();
+        let mut decode_exe = None;
+        for a in &manifest.artifacts {
+            let proto = xla::HloModuleProto::from_text_file(
+                dir.join(&a.file)
+                    .to_str()
+                    .context("non-utf8 artifact path")?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp)?;
+            match a.kind.as_str() {
+                "prefill" => {
+                    prefill_exes.insert(a.seq, exe);
+                }
+                "decode" => decode_exe = Some(exe),
+                other => bail!("unknown artifact kind {other}"),
+            }
+        }
+        let decode_exe = decode_exe.context("manifest has no decode artifact")?;
+
+        Ok(Self {
+            manifest,
+            dir: dir.to_path_buf(),
+            client,
+            params,
+            prefill_exes,
+            decode_exe,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Prefill buckets available, ascending.
+    pub fn buckets(&self) -> Vec<usize> {
+        let mut b: Vec<usize> = self.prefill_exes.keys().copied().collect();
+        b.sort_unstable();
+        b
+    }
+
+    /// Smallest bucket that fits `len` prompt tokens.
+    pub fn bucket_for(&self, len: usize) -> Option<usize> {
+        self.buckets().into_iter().find(|&b| b >= len)
+    }
+
+    /// Right-pad a prompt to its bucket by repeating the last token (the
+    /// convention shared with aot.py's golden generator).
+    pub fn pad_prompt(&self, prompt: &[i32]) -> Result<(Vec<i32>, usize)> {
+        let bucket = self
+            .bucket_for(prompt.len())
+            .with_context(|| format!("prompt of {} tokens exceeds buckets", prompt.len()))?;
+        let mut padded = prompt.to_vec();
+        let last = *padded.last().context("empty prompt")?;
+        padded.resize(bucket, last);
+        Ok((padded, bucket))
+    }
+
+    /// Run prefill for a padded prompt of exactly a bucket length.
+    pub fn prefill(&self, padded: &[i32]) -> Result<PrefillOut> {
+        let exe = self
+            .prefill_exes
+            .get(&padded.len())
+            .with_context(|| format!("no prefill bucket of {}", padded.len()))?;
+        let tokens = xla::Literal::vec1(padded);
+        let mut args: Vec<&xla::Literal> = self.params.iter().collect();
+        args.push(&tokens);
+        let result = exe.execute::<&xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let (logits, k, v) = result.to_tuple3()?;
+        Ok(PrefillOut {
+            logits: logits.to_vec::<f32>()?,
+            k_cache: k,
+            v_cache: v,
+        })
+    }
+
+    /// One decode step. `length` counts valid cache positions *including*
+    /// the token being fed (which sits at `length - 1`).
+    pub fn decode(
+        &self,
+        token: i32,
+        k_cache: &xla::Literal,
+        v_cache: &xla::Literal,
+        length: i32,
+    ) -> Result<DecodeOut> {
+        let tok = xla::Literal::scalar(token);
+        let len = xla::Literal::scalar(length);
+        let mut args: Vec<&xla::Literal> = self.params.iter().collect();
+        args.push(&tok);
+        args.push(k_cache);
+        args.push(v_cache);
+        args.push(&len);
+        let result = self.decode_exe.execute::<&xla::Literal>(&args)?[0][0]
+            .to_literal_sync()?;
+        let (logits, k, v) = result.to_tuple3()?;
+        Ok(DecodeOut {
+            logits: logits.to_vec::<f32>()?,
+            k_cache: k,
+            v_cache: v,
+        })
+    }
+
+    /// Greedy generation end-to-end (prefill + decode loop).
+    pub fn generate_greedy(&self, prompt: &[i32], n_new: usize) -> Result<Vec<i32>> {
+        let (padded, bucket) = self.pad_prompt(prompt)?;
+        let pre = self.prefill(&padded)?;
+        let mut out = vec![argmax(&pre.logits) as i32];
+        let mut k = pre.k_cache;
+        let mut v = pre.v_cache;
+        let mut length = bucket;
+        for _ in 1..n_new {
+            length += 1;
+            let step = self.decode(*out.last().unwrap(), &k, &v, length as i32)?;
+            out.push(argmax(&step.logits) as i32);
+            k = step.k_cache;
+            v = step.v_cache;
+        }
+        Ok(out)
+    }
+}
+
+/// Index of the maximum element (greedy sampling).
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Decode a little-endian f32 blob.
+fn le_bytes_to_f32(blob: &[u8]) -> Result<Vec<f32>> {
+    if blob.len() % 4 != 0 {
+        bail!("weight blob not a multiple of 4 bytes");
+    }
+    Ok(blob
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_basic() {
+        assert_eq!(argmax(&[0.1, 3.0, 2.0]), 1);
+        assert_eq!(argmax(&[5.0]), 0);
+        // first max wins on ties
+        assert_eq!(argmax(&[2.0, 2.0]), 0);
+    }
+
+    #[test]
+    fn le_bytes_roundtrip() {
+        assert!(le_bytes_to_f32(&[0u8; 7]).is_err());
+        let mut v = Vec::new();
+        v.extend_from_slice(&1.5f32.to_le_bytes());
+        v.extend_from_slice(&(-2.0f32).to_le_bytes());
+        assert_eq!(le_bytes_to_f32(&v).unwrap(), vec![1.5, -2.0]);
+    }
+}

@@ -1,0 +1,12 @@
+//! PJRT runtime (Layer-3 ↔ Layer-2 boundary).
+//!
+//! Wraps the `xla` crate: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`, over
+//! the artifacts `make artifacts` produced. Python is never on this path.
+
+mod loader;
+
+pub use loader::{
+    argmax, ArtifactSpec, Artifacts, DecodeOut, Golden, Manifest,
+    ManifestModel, ParamSpec, PrefillOut,
+};

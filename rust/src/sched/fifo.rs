@@ -1,0 +1,60 @@
+//! FIFO (vLLM-style) cluster scheduling: strictly serve the global queue in
+//! arrival order. A long request at the head blocks all dispatch until
+//! enough replicas are simultaneously idle — the §3.2 head-of-line
+//! blocking this paper sets out to fix.
+
+use std::collections::VecDeque;
+
+use super::{try_start_long, Policy};
+use crate::sim::SimState;
+use crate::trace::ReqId;
+
+#[derive(Debug, Default)]
+pub struct Fifo {
+    global: VecDeque<ReqId>,
+}
+
+impl Fifo {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl Policy for Fifo {
+    fn on_arrival(&mut self, st: &mut SimState, req: ReqId) {
+        self.global.push_back(req);
+        self.dispatch(st);
+    }
+
+    fn dispatch(&mut self, st: &mut SimState) {
+        while let Some(&head) = self.global.front() {
+            if st.reqs[head].req.is_long {
+                // Strict FIFO: the long request must start before anything
+                // behind it. It needs its full replica set idle; nothing
+                // else is dispatched while it waits.
+                let placed =
+                    try_start_long(st, head, usize::MAX, &|r| r.is_idle() && !r.dedicated_decode);
+                match placed {
+                    Some(displaced) => {
+                        debug_assert!(displaced.is_empty(), "idle replicas had queues");
+                        self.global.pop_front();
+                    }
+                    None => break,
+                }
+            } else {
+                // Join the shortest local queue (token count, [36]) among
+                // replicas not owned by a long request.
+                let rid = st.least_loaded_prefill(|r| {
+                    !r.dedicated_decode && r.long_group.is_none()
+                });
+                match rid {
+                    Some(rid) => {
+                        st.enqueue_short_prefill(rid, head);
+                        self.global.pop_front();
+                    }
+                    None => break, // every replica long-occupied
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,66 @@
+//! Cluster-level scheduling policies (§2.1, §6.2): FIFO, Reservation,
+//! Priority and PecSched itself (with §6.4's ablation switches).
+//!
+//! Policies decide placement; the execution mechanics (preemption,
+//! colocation budgets, decode batching) live in [`crate::sim::SimState`].
+
+mod fifo;
+mod pecsched;
+mod priority;
+mod reservation;
+
+pub use fifo::Fifo;
+pub use pecsched::PecSched;
+pub use priority::Priority;
+pub use reservation::Reservation;
+
+use crate::config::PolicyKind;
+use crate::sim::SimState;
+use crate::trace::ReqId;
+
+/// A cluster-level scheduling strategy.
+pub trait Policy {
+    /// A request reached the cluster-wide global queue (step ① of Fig. 6).
+    fn on_arrival(&mut self, st: &mut SimState, req: ReqId);
+
+    /// Re-examine queues after any state change (replica freed, prefill
+    /// finished, long released, ...) and dispatch whatever now fits.
+    fn dispatch(&mut self, st: &mut SimState);
+}
+
+/// Instantiate the policy for a [`PolicyKind`].
+pub fn build_policy(kind: PolicyKind, st: &SimState) -> Box<dyn Policy> {
+    match kind {
+        PolicyKind::Fifo => Box::new(Fifo::new()),
+        PolicyKind::Reservation => Box::new(Reservation::new(st)),
+        PolicyKind::Priority => Box::new(Priority::new()),
+        PolicyKind::PecSched(flags) => Box::new(PecSched::new(flags)),
+    }
+}
+
+/// Start a long request on the cheapest eligible replica set.
+/// Returns displaced shorts (which the caller must re-place) or `None`
+/// when fewer than the needed replicas are eligible. `cap` bounds the SP
+/// degree (Reservation can only hand out its pool; others pass MAX and the
+/// degree is memory/speed-driven).
+pub(crate) fn try_start_long(
+    st: &mut SimState,
+    req: ReqId,
+    cap: usize,
+    eligible: &dyn Fn(&crate::sim::ReplicaRt) -> bool,
+) -> Option<Vec<ReqId>> {
+    let len = st.reqs[req].req.input_len;
+    let n = st.replicas_needed(len).min(cap).max(1);
+    let mask: Vec<bool> = st.replicas.iter().map(|r| !r.down && eligible(r)).collect();
+    if mask.iter().filter(|&&e| e).count() < n {
+        return None;
+    }
+    let loads: Vec<u64> = st
+        .replicas
+        .iter()
+        .map(|r| r.prefill_load_tokens(&st.reqs))
+        .collect();
+    let group = st.topo.choose_group(n, &mask, &loads)?;
+    let plan = st.plan_for_long(len, n);
+    Some(st.start_long_group(req, group, plan))
+}

@@ -1,0 +1,215 @@
+//! PecSched — the paper's scheduler (Fig. 6).
+//!
+//! Short requests walk the placement ladder of steps ②–⑤:
+//!   1. the local queue of an *idle* replica not occupied by a long
+//!      request;
+//!   2. colocation with a long request's decode, within the per-replica
+//!      token budget (§5.2);
+//!   3. a *bounded wait* on the lightest ordinary queue when that wait is
+//!      below `preempt_wait_threshold` (preemption is reserved for
+//!      genuine blocking — DESIGN.md §9);
+//!   4. preemption of a long request's prefill (§5.1) — the replica in a
+//!      long group with the lightest prefill load, which balances the
+//!      preempting batch across the group's GPUs, gated by the group's
+//!      minimum run quantum;
+//!   5. otherwise the lightest ordinary local queue.
+//! After prefill, the KV cache migrates to the dedicated decode pool
+//! (step ⑥) — handled mechanically by the simulator when disaggregation
+//! is on.
+//!
+//! Long requests take the cheapest same-node-first replica combination and
+//! wait only for those replicas' *running prefills* (§5.2); their queued
+//! shorts are displaced and re-placed through the same ladder.
+//!
+//! Each §6.4 ablation is one switched-off rung: /PE skips rung 3 and makes
+//! queued shorts wait behind long prefills; /Dis keeps decode local (the
+//! simulator then also blocks long-prefill resumption on decode drain);
+//! /CoL turns rung 2 into decode preemption; /FSP plans long prefills with
+//! ring-only SP.
+
+use std::collections::VecDeque;
+
+use super::{try_start_long, Policy};
+use crate::cluster::ReplicaId;
+use crate::config::AblationFlags;
+use crate::sim::{LongPhase, SimState};
+use crate::trace::ReqId;
+
+#[derive(Debug)]
+pub struct PecSched {
+    flags: AblationFlags,
+    pending_shorts: VecDeque<ReqId>,
+    pending_longs: VecDeque<ReqId>,
+}
+
+impl PecSched {
+    pub fn new(flags: AblationFlags) -> Self {
+        Self {
+            flags,
+            pending_shorts: VecDeque::new(),
+            pending_longs: VecDeque::new(),
+        }
+    }
+
+    /// Is `rid` a valid preemption target (member of a long group whose
+    /// current phase short prefill may interrupt)?
+    ///
+    /// Two rules shape the §5 duty cycle:
+    /// * a *running* prefill may only be interrupted after its minimum run
+    ///   quantum — the anti-starvation guarantee ("without significantly
+    ///   affecting the JCT of long requests");
+    /// * a *suspended* prefill's members all accept shorts, spreading the
+    ///   preempting batch evenly across the group's GPUs (§5.2), and the
+    ///   long resumes as soon as that batch drains.
+    fn preemptable(&self, st: &SimState, rid: ReplicaId) -> bool {
+        let Some(gid) = st.replicas[rid].long_group else {
+            return false;
+        };
+        let Some(g) = st.groups[gid].as_ref() else { return false };
+        match g.phase {
+            LongPhase::Prefill { running: true, .. } => {
+                st.now - g.last_resume >= st.params.preempt_min_quantum
+            }
+            LongPhase::Prefill { running: false, .. } => true,
+            // Colocation protects long decode; without it (/CoL) short
+            // prefill preempts the decode too.
+            LongPhase::Decode { paused: false } => {
+                !self.flags.colocation
+                    && st.now - g.last_resume >= st.params.preempt_min_quantum
+            }
+            LongPhase::Decode { paused: true } => !self.flags.colocation,
+            LongPhase::Waiting => false,
+        }
+    }
+
+    /// The placement ladder. Returns false only when no replica can even
+    /// hold the request in a queue (all ordinary replicas long-occupied
+    /// and preemption is off in a phase that forbids queueing... which
+    /// reduces to: park it in the global pending queue).
+    fn try_place_short(&self, st: &mut SimState, req: ReqId) -> bool {
+        let len = st.reqs[req].req.input_len;
+
+        // ② idle replica, no long occupancy.
+        if let Some(rid) = st.least_loaded_prefill(|r| {
+            !r.dedicated_decode && r.long_group.is_none() && r.is_idle()
+        }) {
+            st.enqueue_short_prefill(rid, req);
+            return true;
+        }
+
+        // ③④ colocate with a long request's decode, within budget.
+        if self.flags.colocation {
+            let budget = st.params.colocate_max_tokens as u64;
+            let cand = st
+                .replicas
+                .iter()
+                .filter(|r| {
+                    !r.dedicated_decode
+                        && r.colocated_tokens + len as u64 <= budget
+                        && r.long_group
+                            .and_then(|g| st.groups[g].as_ref())
+                            .map(|g| matches!(g.phase, LongPhase::Decode { .. }))
+                            .unwrap_or(false)
+                })
+                .min_by_key(|r| (r.colocated_tokens, r.id))
+                .map(|r| r.id);
+            if let Some(rid) = cand {
+                st.charge_colocation(rid, req);
+                st.enqueue_short_prefill(rid, req);
+                return true;
+            }
+        }
+
+        // If an ordinary replica can serve this prompt after only a short
+        // bounded wait, queue there instead of suspending a long request —
+        // preemption is for genuine blocking (§5: reduce the duration and
+        // frequency of preemptions).
+        let per_token = st.cm.short_prefill_time(1100) / 1100.0;
+        if let Some(rid) =
+            st.least_loaded_prefill(|r| !r.dedicated_decode && r.long_group.is_none())
+        {
+            let wait =
+                st.replicas[rid].prefill_load_tokens(&st.reqs) as f64 * per_token;
+            if wait <= st.params.preempt_wait_threshold {
+                st.enqueue_short_prefill(rid, req);
+                return true;
+            }
+        }
+
+        // ⑤ preempt a long prefill: lightest-loaded member replica across
+        // all long groups, balancing the preempting batch (§5.2).
+        if self.flags.preemption {
+            if let Some(rid) = st
+                .replicas
+                .iter()
+                .filter(|r| !r.dedicated_decode && self.preemptable(st, r.id))
+                .min_by_key(|r| (r.prefill_load_tokens(&st.reqs), r.id))
+                .map(|r| r.id)
+            {
+                st.enqueue_short_prefill(rid, req);
+                return true;
+            }
+        }
+
+        // Fallback: lightest ordinary local queue (busy but long-free).
+        if let Some(rid) =
+            st.least_loaded_prefill(|r| !r.dedicated_decode && r.long_group.is_none())
+        {
+            st.enqueue_short_prefill(rid, req);
+            return true;
+        }
+
+        // /PE world with every replica long-occupied: queue on the
+        // lightest long-occupied replica; the prefill waits for the long
+        // to finish (no preemption).
+        if !self.flags.preemption {
+            if let Some(rid) = st.least_loaded_prefill(|r| !r.dedicated_decode) {
+                st.enqueue_short_prefill(rid, req);
+                return true;
+            }
+        }
+
+        false
+    }
+
+    fn dispatch_longs(&mut self, st: &mut SimState) {
+        while let Some(&head) = self.pending_longs.front() {
+            let placed = try_start_long(st, head, usize::MAX, &|r| {
+                !r.dedicated_decode && r.long_group.is_none()
+            });
+            match placed {
+                Some(displaced) => {
+                    self.pending_longs.pop_front();
+                    for d in displaced {
+                        if !self.try_place_short(st, d) {
+                            self.pending_shorts.push_back(d);
+                        }
+                    }
+                }
+                None => break,
+            }
+        }
+    }
+}
+
+impl Policy for PecSched {
+    fn on_arrival(&mut self, st: &mut SimState, req: ReqId) {
+        if st.reqs[req].req.is_long {
+            self.pending_longs.push_back(req);
+            self.dispatch_longs(st);
+        } else if !self.try_place_short(st, req) {
+            self.pending_shorts.push_back(req);
+        }
+    }
+
+    fn dispatch(&mut self, st: &mut SimState) {
+        for _ in 0..self.pending_shorts.len() {
+            let Some(req) = self.pending_shorts.pop_front() else { break };
+            if !self.try_place_short(st, req) {
+                self.pending_shorts.push_back(req);
+                break;
+            }
+        }
+        self.dispatch_longs(st);
+    }
+}

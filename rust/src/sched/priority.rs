@@ -1,0 +1,61 @@
+//! Priority (Past-Future-style): short requests get high priority and are
+//! dispatched immediately; long requests run only on leftover idle
+//! capacity. Under a steady short-request stream this starves the longs —
+//! §3.2's Table 2.
+
+use std::collections::VecDeque;
+
+use super::{try_start_long, Policy};
+use crate::sim::SimState;
+use crate::trace::ReqId;
+
+#[derive(Debug, Default)]
+pub struct Priority {
+    shorts: VecDeque<ReqId>,
+    longs: VecDeque<ReqId>,
+}
+
+impl Priority {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl Policy for Priority {
+    fn on_arrival(&mut self, st: &mut SimState, req: ReqId) {
+        if st.reqs[req].req.is_long {
+            self.longs.push_back(req);
+        } else {
+            self.shorts.push_back(req);
+        }
+        self.dispatch(st);
+    }
+
+    fn dispatch(&mut self, st: &mut SimState) {
+        // High priority: shorts go straight to the lightest local queue.
+        while let Some(&head) = self.shorts.front() {
+            let rid = st
+                .least_loaded_prefill(|r| !r.dedicated_decode && r.long_group.is_none());
+            match rid {
+                Some(rid) => {
+                    st.enqueue_short_prefill(rid, head);
+                    self.shorts.pop_front();
+                }
+                None => break,
+            }
+        }
+        // Low priority: longs only start when a full replica set is idle
+        // *right now* — the short stream normally never lets this happen.
+        while let Some(&head) = self.longs.front() {
+            let placed =
+                try_start_long(st, head, usize::MAX, &|r| r.is_idle() && !r.dedicated_decode);
+            match placed {
+                Some(displaced) => {
+                    debug_assert!(displaced.is_empty());
+                    self.longs.pop_front();
+                }
+                None => break,
+            }
+        }
+    }
+}

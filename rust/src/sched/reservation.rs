@@ -1,0 +1,106 @@
+//! Reservation (Llumnix-style): statically partition the cluster. A pool
+//! sized to serve the largest long request (500K tokens, §6.2) is
+//! dedicated to longs; everything else serves shorts. The reserved pool
+//! idles most of the time — Table 1's observation.
+
+use std::collections::VecDeque;
+
+use super::{try_start_long, Policy};
+use crate::cluster::ReplicaId;
+use crate::sim::SimState;
+use crate::trace::ReqId;
+
+/// §6.2: the reservation is provisioned for the longest rewritten input.
+pub const RESERVE_FOR_TOKENS: u32 = 500_000;
+
+#[derive(Debug)]
+pub struct Reservation {
+    long_pool: Vec<ReplicaId>,
+    shorts: VecDeque<ReqId>,
+    longs: VecDeque<ReqId>,
+}
+
+impl Reservation {
+    pub fn new(st: &SimState) -> Self {
+        let n_total = st.topo.n_replicas();
+        // Llumnix-style provisioning: enough capacity that a 500K-token
+        // request never waits on another long request already in flight —
+        // two full 500K replica-sets — capped at half the cluster so the
+        // short partition survives (§6.2, Table 1's idle-rate regime).
+        let need = (2 * st.replicas_needed(RESERVE_FOR_TOKENS))
+            .min(n_total / 2)
+            .max(1);
+        // Reserve the first `need` replicas (placement is immaterial in a
+        // static partition; these stay together node-wise by construction).
+        let long_pool: Vec<ReplicaId> = (0..need).collect();
+        Self {
+            long_pool,
+            shorts: VecDeque::new(),
+            longs: VecDeque::new(),
+        }
+    }
+
+    pub fn long_pool(&self) -> &[ReplicaId] {
+        &self.long_pool
+    }
+
+    fn in_long_pool(&self, rid: ReplicaId) -> bool {
+        self.long_pool.contains(&rid)
+    }
+}
+
+impl Policy for Reservation {
+    fn on_arrival(&mut self, st: &mut SimState, req: ReqId) {
+        if st.reqs[req].req.is_long {
+            self.longs.push_back(req);
+        } else {
+            self.shorts.push_back(req);
+        }
+        self.dispatch(st);
+    }
+
+    fn dispatch(&mut self, st: &mut SimState) {
+        // Shorts: immediate dispatch within the short partition.
+        while let Some(&head) = self.shorts.front() {
+            let pool = &self.long_pool;
+            let rid = st.least_loaded_prefill(|r| {
+                !r.dedicated_decode
+                    && r.long_group.is_none()
+                    && !pool.contains(&r.id)
+            });
+            match rid {
+                Some(rid) => {
+                    st.enqueue_short_prefill(rid, head);
+                    self.shorts.pop_front();
+                }
+                None => break,
+            }
+        }
+        // Longs: FIFO within the reserved partition.
+        while let Some(&head) = self.longs.front() {
+            let pool: Vec<ReplicaId> = self.long_pool.clone();
+            let placed = try_start_long(st, head, pool.len(), &|r| {
+                r.is_idle() && pool.contains(&r.id)
+            });
+            match placed {
+                Some(displaced) => {
+                    debug_assert!(displaced.is_empty());
+                    self.longs.pop_front();
+                }
+                None => break,
+            }
+        }
+    }
+}
+
+impl Reservation {
+    /// Exposed for tests/benches: which replicas sit in the reserved pool.
+    pub fn pool_size(&self) -> usize {
+        self.long_pool.len()
+    }
+
+    #[allow(dead_code)]
+    fn debug_in_pool(&self, rid: ReplicaId) -> bool {
+        self.in_long_pool(rid)
+    }
+}

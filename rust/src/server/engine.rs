@@ -1,0 +1,509 @@
+//! The serving engine: a real, single-host incarnation of PecSched's
+//! request path over the PJRT runtime.
+//!
+//! One OS thread owns the compiled artifacts (xla handles are not Send)
+//! and runs a continuous-batching iteration loop; a channel front feeds it.
+//! The cluster-level ideas map down as:
+//!
+//! * **preemptive scheduling** — long prompts are prefilled *incrementally*
+//!   (bucket prefill + chunked extension steps), so a newly arrived short
+//!   prompt preempts a long prompt's prefill between chunks, the
+//!   single-host analogue of §5.1's between-kernel pause points;
+//! * **disaggregation** — prefill work and decode rounds are separate
+//!   queue disciplines inside the loop; shorts hand off to the decode set
+//!   right after prefill;
+//! * **FIFO mode** — the baseline: strict arrival order, a long prompt
+//!   blocks everything behind it (head-of-line blocking, measurable in
+//!   TTFT percentiles).
+
+use std::collections::VecDeque;
+use std::path::Path;
+use std::sync::mpsc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::runtime::{argmax, Artifacts};
+
+use super::kv::{KvPool, StreamId};
+
+/// Queue discipline of the engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineMode {
+    /// Strict arrival order (the vLLM baseline of §6.2).
+    Fifo,
+    /// Short prompts preempt long-prompt prefill chunks (PecSched).
+    PecSched,
+}
+
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    pub mode: EngineMode,
+    /// Prompts longer than this are "long" (chunk-prefilled, preemptible).
+    pub long_prompt_threshold: usize,
+    /// Decode-extension steps a long prefill advances per loop iteration
+    /// (the preemption granularity).
+    pub long_chunk: usize,
+    /// KV pool budget in tokens (across live streams).
+    pub kv_budget_tokens: usize,
+    pub kv_block_tokens: usize,
+    /// Max streams decoding concurrently in one round.
+    pub max_decode_batch: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        Self {
+            mode: EngineMode::PecSched,
+            long_prompt_threshold: 192,
+            long_chunk: 16,
+            kv_budget_tokens: 8192,
+            kv_block_tokens: 16,
+            max_decode_batch: 16,
+        }
+    }
+}
+
+/// A request submitted to the engine.
+#[derive(Debug, Clone)]
+pub struct ServeRequest {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+}
+
+/// Completion record with the latency breakdown the benchmarks report.
+#[derive(Debug, Clone)]
+pub struct ServeResult {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    /// Arrival → first generated token.
+    pub ttft_s: f64,
+    /// Arrival → completion.
+    pub total_s: f64,
+    /// Arrival → prefill start (queueing delay).
+    pub queue_s: f64,
+    pub prompt_len: usize,
+    pub was_long: bool,
+}
+
+enum Cmd {
+    Submit(ServeRequest, mpsc::Sender<ServeResult>),
+    Shutdown,
+}
+
+/// A live generation stream inside the engine.
+struct Stream {
+    id: StreamId,
+    req: ServeRequest,
+    reply: mpsc::Sender<ServeResult>,
+    arrived: Instant,
+    started: Option<Instant>,
+    first_token: Option<Instant>,
+    k: xla::Literal,
+    v: xla::Literal,
+    /// Valid cache positions.
+    length: usize,
+    /// Prompt tokens not yet absorbed (long prompts absorb incrementally).
+    pending_prompt: VecDeque<i32>,
+    generated: Vec<i32>,
+    last_token: i32,
+    was_long: bool,
+}
+
+/// Handle to a running engine thread.
+pub struct ServerHandle {
+    tx: mpsc::Sender<Cmd>,
+    join: Option<std::thread::JoinHandle<Result<EngineStats>>>,
+}
+
+/// Counters the engine reports on shutdown.
+#[derive(Debug, Clone, Default)]
+pub struct EngineStats {
+    pub completed: usize,
+    pub prefills: usize,
+    pub decode_steps: usize,
+    pub long_chunks: usize,
+    pub preemptions: u64,
+    pub peak_kv_utilization: f64,
+}
+
+impl ServerHandle {
+    /// Spawn the engine thread, loading artifacts from `dir`.
+    pub fn start(dir: &Path, cfg: EngineConfig) -> Result<Self> {
+        let (tx, rx) = mpsc::channel();
+        let dir = dir.to_path_buf();
+        let join = std::thread::Builder::new()
+            .name("pecsched-engine".into())
+            .spawn(move || -> Result<EngineStats> {
+                let arts = Artifacts::load(&dir)?;
+                Engine::new(arts, cfg).run(rx)
+            })
+            .context("spawning engine thread")?;
+        Ok(Self {
+            tx,
+            join: Some(join),
+        })
+    }
+
+    /// Submit a request; the result arrives on the returned receiver.
+    pub fn submit(&self, req: ServeRequest) -> mpsc::Receiver<ServeResult> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .send(Cmd::Submit(req, rtx))
+            .expect("engine thread gone");
+        rrx
+    }
+
+    /// Stop the engine and collect its counters.
+    pub fn shutdown(mut self) -> Result<EngineStats> {
+        let _ = self.tx.send(Cmd::Shutdown);
+        self.join
+            .take()
+            .expect("already joined")
+            .join()
+            .map_err(|_| anyhow::anyhow!("engine thread panicked"))?
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Cmd::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+struct Engine {
+    arts: Artifacts,
+    cfg: EngineConfig,
+    kv: KvPool,
+    /// FIFO arrival order (baseline mode drains strictly from here).
+    waiting: VecDeque<(ServeRequest, mpsc::Sender<ServeResult>, Instant)>,
+    /// Long stream currently absorbing its prompt (at most one at a time).
+    absorbing: Option<Stream>,
+    decoding: Vec<Stream>,
+    stats: EngineStats,
+}
+
+impl Engine {
+    fn new(arts: Artifacts, cfg: EngineConfig) -> Self {
+        let kv = KvPool::new(cfg.kv_budget_tokens, cfg.kv_block_tokens);
+        Self {
+            arts,
+            cfg,
+            kv,
+            waiting: VecDeque::new(),
+            absorbing: None,
+            decoding: Vec::new(),
+            stats: EngineStats::default(),
+        }
+    }
+
+    fn run(mut self, rx: mpsc::Receiver<Cmd>) -> Result<EngineStats> {
+        let mut shutdown = false;
+        loop {
+            // Drain the command channel without blocking if there is work;
+            // block when fully idle.
+            let idle = self.waiting.is_empty()
+                && self.absorbing.is_none()
+                && self.decoding.is_empty();
+            if idle && !shutdown {
+                match rx.recv() {
+                    Ok(cmd) => {
+                        if self.handle(cmd) {
+                            shutdown = true;
+                        }
+                    }
+                    Err(_) => shutdown = true,
+                }
+            }
+            loop {
+                match rx.try_recv() {
+                    Ok(cmd) => {
+                        if self.handle(cmd) {
+                            shutdown = true;
+                        }
+                    }
+                    Err(mpsc::TryRecvError::Empty) => break,
+                    Err(mpsc::TryRecvError::Disconnected) => {
+                        shutdown = true;
+                        break;
+                    }
+                }
+            }
+            if shutdown
+                && self.waiting.is_empty()
+                && self.absorbing.is_none()
+                && self.decoding.is_empty()
+            {
+                break;
+            }
+            self.step()?;
+        }
+        Ok(self.stats)
+    }
+
+    fn handle(&mut self, cmd: Cmd) -> bool {
+        match cmd {
+            Cmd::Submit(req, reply) => {
+                self.waiting.push_back((req, reply, Instant::now()));
+                false
+            }
+            Cmd::Shutdown => true,
+        }
+    }
+
+    fn is_long(&self, req: &ServeRequest) -> bool {
+        req.prompt.len() > self.cfg.long_prompt_threshold
+    }
+
+    /// One engine iteration: pick the highest-priority unit of work.
+    fn step(&mut self) -> Result<()> {
+        match self.cfg.mode {
+            EngineMode::Fifo => self.step_fifo(),
+            EngineMode::PecSched => self.step_pecsched(),
+        }
+    }
+
+    /// Baseline: strict arrival order. A long prompt at the head is fully
+    /// absorbed before anything behind it runs — head-of-line blocking.
+    fn step_fifo(&mut self) -> Result<()> {
+        if let Some(mut s) = self.absorbing.take() {
+            self.advance_absorb(&mut s)?;
+            if s.pending_prompt.is_empty() {
+                self.finish_prefill(s)?;
+            } else {
+                self.absorbing = Some(s);
+            }
+            return Ok(());
+        }
+        if let Some(&(ref req, _, _)) = self.waiting.front() {
+            if self.kv.can_admit(req.prompt.len() + req.max_new_tokens) {
+                let (req, reply, arrived) = self.waiting.pop_front().unwrap();
+                let s = self.start_prefill(req, reply, arrived)?;
+                if let Some(s) = s {
+                    self.absorbing = Some(s);
+                }
+                return Ok(());
+            }
+        }
+        self.decode_round()
+    }
+
+    /// PecSched: short prefill first (preempting the long absorb), then
+    /// decode rounds, then long-prefill chunks.
+    fn step_pecsched(&mut self) -> Result<()> {
+        // 1. Any waiting *short* prompt goes first (preemption of the
+        //    absorbing long prompt happens implicitly: its chunking yields
+        //    the engine between steps).
+        if let Some(pos) = self
+            .waiting
+            .iter()
+            .position(|(r, _, _)| !self.is_long(r))
+        {
+            let fits = {
+                let (r, _, _) = &self.waiting[pos];
+                self.kv.can_admit(r.prompt.len() + r.max_new_tokens)
+            };
+            if fits {
+                let (req, reply, arrived) = self.waiting.remove(pos).unwrap();
+                if self.absorbing.is_some() {
+                    self.stats.preemptions += 1;
+                }
+                let s = self.start_prefill(req, reply, arrived)?;
+                debug_assert!(s.is_none(), "short prompts absorb in one call");
+                return Ok(());
+            }
+        }
+        // 2. Decode rounds keep generation latency low.
+        if !self.decoding.is_empty() {
+            return self.decode_round();
+        }
+        // 3. Advance the absorbing long prompt by one chunk.
+        if let Some(mut s) = self.absorbing.take() {
+            self.advance_absorb(&mut s)?;
+            if s.pending_prompt.is_empty() {
+                self.finish_prefill(s)?;
+            } else {
+                self.absorbing = Some(s);
+            }
+            return Ok(());
+        }
+        // 4. Start the next waiting long prompt.
+        if let Some(pos) = self.waiting.iter().position(|(r, _, _)| self.is_long(r)) {
+            let fits = {
+                let (r, _, _) = &self.waiting[pos];
+                self.kv.can_admit(r.prompt.len() + r.max_new_tokens)
+            };
+            if fits {
+                let (req, reply, arrived) = self.waiting.remove(pos).unwrap();
+                if let Some(s) = self.start_prefill(req, reply, arrived)? {
+                    self.absorbing = Some(s);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Bucket-prefill the head of a prompt; long prompts keep the tail
+    /// pending for chunked absorption. Returns the stream if it still has
+    /// prompt to absorb, otherwise moves it straight to decoding.
+    fn start_prefill(
+        &mut self,
+        req: ServeRequest,
+        reply: mpsc::Sender<ServeResult>,
+        arrived: Instant,
+    ) -> Result<Option<Stream>> {
+        let started = Instant::now();
+        let capacity = self.arts.manifest.decode_capacity;
+        let budget = req.prompt.len() + req.max_new_tokens;
+        anyhow::ensure!(
+            budget <= capacity,
+            "request {} needs {budget} tokens; capacity {capacity}",
+            req.id
+        );
+        if !self.kv.admit(req.id, budget) {
+            anyhow::bail!("admission raced: kv pool exhausted");
+        }
+        self.stats.peak_kv_utilization =
+            self.stats.peak_kv_utilization.max(self.kv.utilization());
+
+        let buckets = self.arts.buckets();
+        let largest = *buckets.last().expect("no prefill buckets");
+        let head_len = req.prompt.len().min(largest);
+        // Head must land exactly on a bucket; pad within the prompt when
+        // the whole prompt fits, otherwise take the largest bucket worth.
+        let (padded, bucket, pending): (Vec<i32>, usize, VecDeque<i32>) =
+            if req.prompt.len() <= largest {
+                let (p, b) = self.arts.pad_prompt(&req.prompt)?;
+                (p, b, VecDeque::new())
+            } else {
+                let head = req.prompt[..head_len].to_vec();
+                let tail: VecDeque<i32> =
+                    req.prompt[head_len..].iter().copied().collect();
+                (head, largest, tail)
+            };
+
+        let pre = self.arts.prefill(&padded)?;
+        self.stats.prefills += 1;
+
+        let was_long = self.is_long(&req);
+        let mut s = Stream {
+            id: req.id,
+            last_token: argmax(&pre.logits) as i32,
+            req,
+            reply,
+            arrived,
+            started: Some(started),
+            first_token: None,
+            k: pre.k_cache,
+            v: pre.v_cache,
+            length: bucket,
+            pending_prompt: pending,
+            generated: Vec::new(),
+            was_long,
+        };
+
+        if s.pending_prompt.is_empty() {
+            // The prefill's last-position logits give the first token.
+            s.first_token = Some(Instant::now());
+            s.generated.push(s.last_token);
+            self.to_decode_or_finish(s)?;
+            Ok(None)
+        } else {
+            Ok(Some(s))
+        }
+    }
+
+    /// Absorb up to `long_chunk` pending prompt tokens via decode steps
+    /// (logits discarded) — the preemptible unit of long prefill.
+    fn advance_absorb(&mut self, s: &mut Stream) -> Result<()> {
+        for _ in 0..self.cfg.long_chunk {
+            let Some(tok) = s.pending_prompt.pop_front() else { break };
+            s.length += 1;
+            let out = self.arts.decode(tok, &s.k, &s.v, s.length as i32)?;
+            s.k = out.k_cache;
+            s.v = out.v_cache;
+            s.last_token = argmax(&out.logits) as i32;
+        }
+        self.stats.long_chunks += 1;
+        if s.pending_prompt.is_empty() {
+            s.first_token = Some(Instant::now());
+            s.generated.push(s.last_token);
+        }
+        Ok(())
+    }
+
+    fn finish_prefill(&mut self, s: Stream) -> Result<()> {
+        self.to_decode_or_finish(s)
+    }
+
+    fn to_decode_or_finish(&mut self, s: Stream) -> Result<()> {
+        if s.generated.len() >= s.req.max_new_tokens {
+            self.complete(s);
+            Ok(())
+        } else {
+            self.decoding.push(s);
+            Ok(())
+        }
+    }
+
+    /// One continuous-batching decode round: every active stream advances
+    /// one token; finished streams complete and leave the batch.
+    fn decode_round(&mut self) -> Result<()> {
+        let n = self.decoding.len().min(self.cfg.max_decode_batch);
+        let mut finished = Vec::new();
+        for i in 0..n {
+            let s = &mut self.decoding[i];
+            s.length += 1;
+            if !self.kv.grow(s.id, s.length) {
+                // Pool exhausted mid-flight: complete what we have rather
+                // than deadlock (tiny pool configs in tests hit this).
+                s.length -= 1;
+                finished.push(i);
+                continue;
+            }
+            let out = self.arts.decode(s.last_token, &s.k, &s.v, s.length as i32)?;
+            self.stats.decode_steps += 1;
+            s.k = out.k_cache;
+            s.v = out.v_cache;
+            s.last_token = argmax(&out.logits) as i32;
+            if s.first_token.is_none() {
+                s.first_token = Some(Instant::now());
+            }
+            s.generated.push(s.last_token);
+            if s.generated.len() >= s.req.max_new_tokens {
+                finished.push(i);
+            }
+        }
+        for i in finished.into_iter().rev() {
+            let s = self.decoding.swap_remove(i);
+            self.complete(s);
+        }
+        Ok(())
+    }
+
+    fn complete(&mut self, s: Stream) {
+        self.kv.release(s.id);
+        self.stats.completed += 1;
+        let now = Instant::now();
+        let res = ServeResult {
+            id: s.req.id,
+            prompt_len: s.req.prompt.len(),
+            was_long: s.was_long,
+            tokens: s.generated,
+            ttft_s: s
+                .first_token
+                .map(|t| (t - s.arrived).as_secs_f64())
+                .unwrap_or_default(),
+            total_s: (now - s.arrived).as_secs_f64(),
+            queue_s: s
+                .started
+                .map(|t| (t - s.arrived).as_secs_f64())
+                .unwrap_or_default(),
+        };
+        let _ = s.reply.send(res);
+    }
+}

@@ -1,0 +1,149 @@
+//! Paged KV-cache bookkeeping (vLLM-style block allocator).
+//!
+//! Each live stream's KV lives in device literals, but admission and
+//! memory pressure are governed here: token capacity is divided into
+//! fixed-size blocks, streams allocate blocks as their context grows, and
+//! the batcher refuses admission when the pool is dry. This is the
+//! "memory-intensive decode" constraint the paper's colocation and
+//! dedicated decode-replica sizing reason about.
+
+use std::collections::HashMap;
+
+/// Stream identifier within the engine.
+pub type StreamId = u64;
+
+#[derive(Debug)]
+pub struct KvPool {
+    block_tokens: usize,
+    total_blocks: usize,
+    free_blocks: usize,
+    held: HashMap<StreamId, usize>,
+}
+
+impl KvPool {
+    pub fn new(capacity_tokens: usize, block_tokens: usize) -> Self {
+        assert!(block_tokens > 0);
+        let total_blocks = capacity_tokens / block_tokens;
+        Self {
+            block_tokens,
+            total_blocks,
+            free_blocks: total_blocks,
+            held: HashMap::new(),
+        }
+    }
+
+    fn blocks_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.block_tokens)
+    }
+
+    /// Can a new stream of `tokens` context be admitted right now?
+    pub fn can_admit(&self, tokens: usize) -> bool {
+        self.blocks_for(tokens.max(1)) <= self.free_blocks
+    }
+
+    /// Reserve blocks for a new stream. Returns false (no change) if the
+    /// pool cannot hold it.
+    pub fn admit(&mut self, id: StreamId, tokens: usize) -> bool {
+        assert!(!self.held.contains_key(&id), "stream {id} already admitted");
+        let need = self.blocks_for(tokens.max(1));
+        if need > self.free_blocks {
+            return false;
+        }
+        self.free_blocks -= need;
+        self.held.insert(id, need);
+        true
+    }
+
+    /// Grow a stream to `tokens` total context (decode appends). Returns
+    /// false if the pool is exhausted — the caller must evict or wait.
+    pub fn grow(&mut self, id: StreamId, tokens: usize) -> bool {
+        let have = *self.held.get(&id).expect("grow of unknown stream");
+        let need = self.blocks_for(tokens);
+        if need <= have {
+            return true;
+        }
+        let extra = need - have;
+        if extra > self.free_blocks {
+            return false;
+        }
+        self.free_blocks -= extra;
+        self.held.insert(id, need);
+        true
+    }
+
+    /// Release everything a stream holds.
+    pub fn release(&mut self, id: StreamId) {
+        if let Some(b) = self.held.remove(&id) {
+            self.free_blocks += b;
+        }
+    }
+
+    pub fn free_tokens(&self) -> usize {
+        self.free_blocks * self.block_tokens
+    }
+
+    pub fn utilization(&self) -> f64 {
+        if self.total_blocks == 0 {
+            return 0.0;
+        }
+        1.0 - self.free_blocks as f64 / self.total_blocks as f64
+    }
+
+    pub fn live_streams(&self) -> usize {
+        self.held.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admit_grow_release_cycle() {
+        let mut p = KvPool::new(160, 16); // 10 blocks
+        assert!(p.admit(1, 64)); // 4 blocks
+        assert!(p.admit(2, 64)); // 4 blocks
+        assert_eq!(p.free_tokens(), 32);
+        assert!(!p.admit(3, 64)); // would need 4, only 2 left
+        assert!(p.grow(1, 80)); // 5 blocks now
+        assert!(!p.grow(2, 160)); // needs 10
+        p.release(1);
+        assert!(p.admit(3, 64));
+        assert_eq!(p.live_streams(), 2);
+    }
+
+    #[test]
+    fn grow_within_block_is_free() {
+        let mut p = KvPool::new(64, 16);
+        assert!(p.admit(1, 1));
+        let before = p.free_tokens();
+        assert!(p.grow(1, 15));
+        assert_eq!(p.free_tokens(), before);
+        assert!(p.grow(1, 17));
+        assert_eq!(p.free_tokens(), before - 16);
+    }
+
+    #[test]
+    fn utilization_bounds() {
+        let mut p = KvPool::new(64, 16);
+        assert_eq!(p.utilization(), 0.0);
+        p.admit(1, 64);
+        assert!((p.utilization() - 1.0).abs() < 1e-12);
+        assert!(!p.can_admit(1));
+    }
+
+    #[test]
+    #[should_panic]
+    fn double_admit_panics() {
+        let mut p = KvPool::new(64, 16);
+        p.admit(1, 1);
+        p.admit(1, 1);
+    }
+
+    #[test]
+    fn release_unknown_is_noop() {
+        let mut p = KvPool::new(64, 16);
+        p.release(99);
+        assert_eq!(p.free_tokens(), 64);
+    }
+}

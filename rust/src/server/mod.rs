@@ -1,0 +1,15 @@
+//! The real serving stack: a single-host PecSched engine over PJRT.
+//!
+//! [`ServerHandle`] spawns the engine thread (which owns the compiled
+//! artifacts); [`EngineMode`] switches between the FIFO baseline and the
+//! PecSched queue discipline so the end-to-end example can measure the
+//! head-of-line-blocking contrast on real execution.
+
+mod engine;
+mod kv;
+
+pub use engine::{
+    EngineConfig, EngineMode, EngineStats, ServeRequest, ServeResult,
+    ServerHandle,
+};
+pub use kv::{KvPool, StreamId};

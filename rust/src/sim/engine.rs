@@ -1,0 +1,186 @@
+//! The event loop: glues [`SimState`] to a [`crate::sched::Policy`] and
+//! collects [`RunMetrics`].
+
+use std::time::Instant;
+
+use crate::config::PolicyKind;
+use crate::metrics::{idle_rate, RunMetrics};
+use crate::sched::{build_policy, Policy};
+use crate::trace::Trace;
+
+use super::events::EventKind;
+use super::state::{SimConfig, SimState};
+
+/// One simulation run = one (trace, model, policy) triple.
+pub struct Simulation {
+    pub state: SimState,
+    policy: Box<dyn Policy>,
+    policy_kind: PolicyKind,
+}
+
+impl Simulation {
+    pub fn new(cfg: SimConfig, trace: &Trace, kind: PolicyKind) -> Self {
+        let state = SimState::new(&cfg, &trace.requests);
+        let policy = build_policy(kind, &state);
+        Self {
+            state,
+            policy,
+            policy_kind: kind,
+        }
+    }
+
+    /// Drive the event loop to completion and report.
+    pub fn run(&mut self) -> RunMetrics {
+        self.run_with_hook(|_, _| {})
+    }
+
+    /// Like [`Simulation::run`], with a hook invoked after every event —
+    /// the failure-injection and instrumentation entry point (see
+    /// `rust/tests/failure_tests.rs`).
+    pub fn run_with_hook<H>(&mut self, mut hook: H) -> RunMetrics
+    where
+        H: FnMut(&mut SimState, &mut dyn Policy),
+    {
+        let st = &mut self.state;
+        let max_events = 500_000_000u64;
+
+        while let Some(ev) = st.queue.pop() {
+            debug_assert!(ev.time >= st.now - 1e-9, "time went backwards");
+            st.now = ev.time.max(st.now);
+            st.events_processed += 1;
+            if st.events_processed > max_events {
+                panic!("event budget exhausted: likely a scheduling livelock");
+            }
+
+            match ev.kind {
+                EventKind::Arrival(req) => {
+                    let t0 = Instant::now();
+                    self.policy.on_arrival(st, req);
+                    st.reqs[req].sched_ns += t0.elapsed().as_nanos() as u64;
+                    // Starts triggered by this arrival are already billed
+                    // to it; drop them from the attribution log.
+                    st.recent_prefill_starts.clear();
+                }
+                EventKind::ShortPrefillDone { rid, req, gen } => {
+                    if st.on_short_prefill_done(rid, req, gen) {
+                        Self::timed_dispatch(&mut *self.policy, st);
+                    }
+                }
+                EventKind::MigrationDone { req, rid } => {
+                    st.on_migration_done(req, rid);
+                }
+                EventKind::DecodeRound { rid, gen } => {
+                    let done = st.on_decode_round(rid, gen);
+                    if !done.is_empty() || st.replicas[rid].is_idle() {
+                        Self::timed_dispatch(&mut *self.policy, st);
+                    }
+                }
+                EventKind::LongPrefillDone { gid, gen } => {
+                    if st.on_long_prefill_done(gid, gen) {
+                        Self::timed_dispatch(&mut *self.policy, st);
+                    }
+                }
+                EventKind::LongDecodeRound { gid, gen } => {
+                    if st.on_long_decode_round(gid, gen).is_some() {
+                        Self::timed_dispatch(&mut *self.policy, st);
+                    }
+                }
+            }
+
+            hook(st, &mut *self.policy);
+
+            if st.all_done() {
+                break;
+            }
+        }
+
+        self.collect()
+    }
+
+    /// Run `dispatch` under a wall-clock timer, attributing the cost to the
+    /// requests whose prefill started during this call (Table 7's
+    /// "scheduling decision time").
+    fn timed_dispatch(policy: &mut dyn Policy, st: &mut SimState) {
+        st.recent_prefill_starts.clear();
+        let t0 = Instant::now();
+        policy.dispatch(st);
+        let ns = t0.elapsed().as_nanos() as u64;
+        let started = std::mem::take(&mut st.recent_prefill_starts);
+        if !started.is_empty() {
+            let share = ns / started.len() as u64;
+            for i in &started {
+                st.reqs[*i].sched_ns += share;
+            }
+        }
+        st.recent_prefill_starts = started;
+        st.recent_prefill_starts.clear();
+    }
+
+    fn collect(&mut self) -> RunMetrics {
+        let st = &mut self.state;
+        let mut m = RunMetrics {
+            policy: self.policy_kind.name(),
+            model: st.cm.model.name.clone(),
+            ..Default::default()
+        };
+
+        let makespan = st
+            .reqs
+            .iter()
+            .filter_map(|r| r.finish)
+            .fold(st.now, f64::max);
+        m.makespan = makespan;
+
+        let t_shorts_done = st.t_shorts_done.unwrap_or(makespan);
+        m.t_shorts_done = t_shorts_done;
+        for rt in &st.reqs {
+            let is_long = rt.req.is_long;
+            if is_long {
+                m.longs_total += 1;
+                if let Some(d) = rt.queueing_delay() {
+                    m.long_queue_delay.add(d);
+                }
+                if let Some(j) = rt.jct() {
+                    m.long_jct.add(j);
+                    m.longs_completed += 1;
+                    m.sched_overhead_long
+                        .add(rt.sched_ns as f64 / 1e9 / j.max(1e-9));
+                }
+                // Starved = no service by the time the short workload was
+                // fully served (§3.2's Table 2 criterion).
+                let starved = match rt.prefill_start {
+                    None => true,
+                    Some(s) => s > t_shorts_done,
+                };
+                if starved {
+                    m.longs_starved += 1;
+                }
+            } else {
+                if let Some(d) = rt.queueing_delay() {
+                    m.short_queue_delay.add(d);
+                }
+                if let Some(j) = rt.jct() {
+                    m.short_jct.add(j);
+                    m.shorts_completed += 1;
+                    m.sched_overhead_short
+                        .add(rt.sched_ns as f64 / 1e9 / j.max(1e-9));
+                }
+            }
+        }
+
+        m.preemptions = st.preemptions;
+        let busy: Vec<f64> = st
+            .replicas
+            .iter_mut()
+            .map(|r| r.busy.finish(makespan))
+            .collect();
+        let weights: Vec<usize> = st.replicas.iter().map(|r| r.gpus).collect();
+        m.gpu_idle_rate = idle_rate(&busy, &weights, makespan);
+        m
+    }
+}
+
+/// Convenience wrapper: build + run in one call.
+pub fn run_sim(cfg: SimConfig, trace: &Trace, kind: PolicyKind) -> RunMetrics {
+    Simulation::new(cfg, trace, kind).run()
+}

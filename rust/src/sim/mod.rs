@@ -1,0 +1,16 @@
+//! Discrete-event cluster simulator.
+//!
+//! Reproduces the paper's testbed (DESIGN.md §2): request lifecycles
+//! (queue → prefill → decode), preemption with §5.1's layer-granularity
+//! checkpointing cost, §5.2's disaggregation/colocation mechanics, and
+//! §5.3's SP plans, all over the [`crate::costmodel`] roofline.
+
+mod engine;
+mod events;
+mod state;
+
+pub use engine::{run_sim, Simulation};
+pub use events::{Event, EventKind, EventQueue, GroupId};
+pub use state::{
+    LongGroup, LongPhase, ReplicaRt, ReqPhase, ReqRt, SimConfig, SimState,
+};

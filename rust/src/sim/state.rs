@@ -1,0 +1,1257 @@
+//! Simulation state and the mechanical primitives every policy drives.
+//!
+//! The state knows *how* work executes (prefill service times, batched
+//! decode rounds, SP groups, preemption mechanics from §5.1, colocation
+//! from §5.2); policies in [`crate::sched`] decide *where and when* work is
+//! placed. The split mirrors the paper: the same execution substrate under
+//! FIFO / Reservation / Priority / PecSched.
+
+use std::collections::VecDeque;
+
+use crate::cluster::{ReplicaId, Topology};
+use crate::config::{AblationFlags, ClusterSpec, ModelSpec, SchedParams};
+use crate::costmodel::{sp, CostModel, SpPlan};
+use crate::metrics::BusyTracker;
+use crate::trace::{ReqId, Request};
+
+use super::events::{EventKind, EventQueue, GroupId};
+
+/// Lifecycle of a request inside the simulator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReqPhase {
+    /// In the global queue (or a replica's local prefill queue).
+    Queued,
+    /// Prefill executing.
+    Prefilling,
+    /// KV handoff to a decode replica in flight (§5.2 disaggregation).
+    Migrating,
+    /// Waiting for a decode-batch slot.
+    DecodeQueued,
+    /// Generating tokens.
+    Decoding,
+    Done,
+}
+
+/// Per-request runtime bookkeeping.
+#[derive(Debug, Clone)]
+pub struct ReqRt {
+    pub req: Request,
+    pub phase: ReqPhase,
+    /// First time prefill compute actually started (queueing-delay end).
+    pub prefill_start: Option<f64>,
+    pub finish: Option<f64>,
+    /// Tokens generated so far.
+    pub generated: u32,
+    /// Replica whose colocation budget this request currently holds.
+    pub colocated_on: Option<ReplicaId>,
+    /// Wall-clock nanoseconds of scheduling work spent on this request.
+    pub sched_ns: u64,
+}
+
+impl ReqRt {
+    pub fn context_tokens(&self) -> u64 {
+        self.req.input_len as u64 + self.generated as u64
+    }
+    pub fn queueing_delay(&self) -> Option<f64> {
+        self.prefill_start.map(|s| s - self.req.arrival)
+    }
+    pub fn jct(&self) -> Option<f64> {
+        self.finish.map(|f| f - self.req.arrival)
+    }
+}
+
+/// Phase of a long request's SP group.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LongPhase {
+    /// Waiting for member replicas to drain their running short prefills.
+    Waiting,
+    /// Prefill with `remaining` seconds of work; `running` is false while
+    /// preempted (§5.1).
+    Prefill {
+        remaining: f64,
+        running: bool,
+        started_at: f64,
+    },
+    /// Decode; `paused` only ever true under the /CoL ablation.
+    Decode { paused: bool },
+}
+
+/// A long request bound to its replica set.
+#[derive(Debug, Clone)]
+pub struct LongGroup {
+    pub req: ReqId,
+    pub members: Vec<ReplicaId>,
+    pub plan: SpPlan,
+    pub phase: LongPhase,
+    /// Generation counter: bumping it cancels in-flight completion events.
+    pub gen: u64,
+    pub preemptions: u64,
+    /// Last time the prefill (re)gained the GPUs — preemption-quantum
+    /// anchor.
+    pub last_resume: f64,
+}
+
+/// Per-replica runtime state.
+#[derive(Debug, Clone)]
+pub struct ReplicaRt {
+    pub id: ReplicaId,
+    pub node: usize,
+    pub gpus: usize,
+    pub busy: BusyTracker,
+    // --- short prefill ---
+    pub prefill_queue: VecDeque<ReqId>,
+    pub queued_prefill_tokens: u64,
+    pub running_prefill: Option<ReqId>,
+    pub prefill_gen: u64,
+    // --- short decode (local on baselines, dedicated under PecSched) ---
+    pub decode_active: Vec<ReqId>,
+    pub decode_waiting: VecDeque<ReqId>,
+    /// Incremental sum of `context_tokens` over `decode_active` (kept in
+    /// lockstep so per-round admission is O(1), not O(batch²)).
+    pub decode_active_tokens: u64,
+    /// Incremental sum of `context_tokens` over `decode_waiting`.
+    pub decode_waiting_tokens: u64,
+    pub decode_running: bool,
+    pub decode_gen: u64,
+    // --- long occupancy ---
+    pub long_group: Option<GroupId>,
+    /// Prompt tokens of colocated shorts currently charged to this replica.
+    pub colocated_tokens: u64,
+    /// Member of the dedicated short-decode pool (§5.2/§6.2).
+    pub dedicated_decode: bool,
+    /// Replica is failed/unavailable (failure injection).
+    pub down: bool,
+}
+
+impl ReplicaRt {
+    /// Total prefill tokens queued or running (the "local queue length" of
+    /// §5, measured in tokens [36]).
+    pub fn prefill_load_tokens(&self, reqs: &[ReqRt]) -> u64 {
+        let running = self
+            .running_prefill
+            .map(|r| reqs[r].req.input_len as u64)
+            .unwrap_or(0);
+        self.queued_prefill_tokens + running
+    }
+
+    /// Context tokens held by the decode batch (active + waiting).
+    pub fn decode_load_tokens(&self, _reqs: &[ReqRt]) -> u64 {
+        self.decode_active_tokens + self.decode_waiting_tokens
+    }
+
+    /// Completely idle: eligible to seed a long group under FIFO-style
+    /// policies, or to take a short prefill immediately.
+    pub fn is_idle(&self) -> bool {
+        self.running_prefill.is_none()
+            && self.prefill_queue.is_empty()
+            && self.decode_active.is_empty()
+            && self.decode_waiting.is_empty()
+            && self.long_group.is_none()
+    }
+}
+
+/// Static configuration of one simulation run.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    pub cluster: ClusterSpec,
+    pub model: ModelSpec,
+    pub params: SchedParams,
+    /// Mechanism switches (§6.4); policies other than PecSched ignore most.
+    pub flags: AblationFlags,
+    /// Reserve a dedicated short-decode pool (true for PecSched variants
+    /// with disaggregation; false for all baselines).
+    pub dedicated_decode_pool: bool,
+    /// Hard cap on simulated events (runaway guard).
+    pub max_events: u64,
+}
+
+impl SimConfig {
+    pub fn baseline(model: ModelSpec) -> Self {
+        Self {
+            cluster: ClusterSpec::default(),
+            model,
+            params: SchedParams::default(),
+            flags: AblationFlags::full(),
+            dedicated_decode_pool: false,
+            max_events: 500_000_000,
+        }
+    }
+
+    pub fn pecsched(model: ModelSpec, flags: AblationFlags) -> Self {
+        let params = SchedParams::for_model(&model);
+        Self {
+            cluster: ClusterSpec::default(),
+            model,
+            params,
+            flags,
+            dedicated_decode_pool: flags.disaggregation,
+            max_events: 500_000_000,
+        }
+    }
+}
+
+/// Everything the event loop and the policies mutate.
+pub struct SimState {
+    pub now: f64,
+    pub queue: EventQueue,
+    pub cm: CostModel,
+    pub topo: Topology,
+    pub params: SchedParams,
+    pub flags: AblationFlags,
+    pub reqs: Vec<ReqRt>,
+    pub replicas: Vec<ReplicaRt>,
+    pub groups: Vec<Option<LongGroup>>,
+    /// KV token capacity of one replica (cached).
+    pub kv_capacity: u64,
+    /// ids of dedicated decode replicas (empty for baselines).
+    pub decode_pool: Vec<ReplicaId>,
+    /// Totals.
+    pub preemptions: u64,
+    pub shorts_done: usize,
+    pub shorts_total: usize,
+    pub longs_done: usize,
+    /// Time all shorts finished (starvation reference point).
+    pub t_shorts_done: Option<f64>,
+    pub events_processed: u64,
+    /// Requests whose prefill started since the engine last drained this
+    /// (overhead attribution for Table 7 — avoids rescanning all requests).
+    pub recent_prefill_starts: Vec<ReqId>,
+}
+
+impl SimState {
+    pub fn new(cfg: &SimConfig, requests: &[Request]) -> Self {
+        let topo = Topology::build(&cfg.cluster, &cfg.model);
+        let cm = CostModel::new(cfg.model.clone(), cfg.cluster.hw.clone());
+        let kv_capacity = cm.kv_capacity_tokens();
+
+        let mut replicas: Vec<ReplicaRt> = topo
+            .replicas
+            .iter()
+            .map(|m| ReplicaRt {
+                id: m.id,
+                node: m.node,
+                gpus: m.gpus,
+                busy: BusyTracker::default(),
+                prefill_queue: VecDeque::new(),
+                queued_prefill_tokens: 0,
+                running_prefill: None,
+                prefill_gen: 0,
+                decode_active: Vec::new(),
+                decode_waiting: VecDeque::new(),
+                decode_active_tokens: 0,
+                decode_waiting_tokens: 0,
+                decode_running: false,
+                decode_gen: 0,
+                long_group: None,
+                colocated_tokens: 0,
+                dedicated_decode: false,
+                down: false,
+            })
+            .collect();
+
+        // Dedicated decode pool: the tail replicas, spread over nodes as
+        // they fall (§6.2 allocates 4/4/1/1 whole replicas).
+        let mut decode_pool = Vec::new();
+        if cfg.dedicated_decode_pool {
+            let n = cfg.params.decode_replicas.min(replicas.len().saturating_sub(1));
+            for r in replicas.iter_mut().rev().take(n) {
+                r.dedicated_decode = true;
+                decode_pool.push(r.id);
+            }
+            decode_pool.reverse();
+        }
+
+        let mut queue = EventQueue::new();
+        let reqs: Vec<ReqRt> = requests
+            .iter()
+            .map(|&req| ReqRt {
+                req,
+                phase: ReqPhase::Queued,
+                prefill_start: None,
+                finish: None,
+                generated: 0,
+                colocated_on: None,
+                sched_ns: 0,
+            })
+            .collect();
+        for r in &reqs {
+            queue.push(r.req.arrival, EventKind::Arrival(r.req.id));
+        }
+        let shorts_total = reqs.iter().filter(|r| !r.req.is_long).count();
+
+        Self {
+            now: 0.0,
+            queue,
+            cm,
+            topo,
+            params: cfg.params.clone(),
+            flags: cfg.flags,
+            reqs,
+            replicas,
+            groups: Vec::new(),
+            kv_capacity,
+            decode_pool,
+            preemptions: 0,
+            shorts_done: 0,
+            shorts_total,
+            longs_done: 0,
+            t_shorts_done: None,
+            events_processed: 0,
+            recent_prefill_starts: Vec::new(),
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // capacity / placement helpers
+    // ------------------------------------------------------------------
+
+    /// SP degree a long request needs (§5 "sufficient number of replicas").
+    ///
+    /// The speed-driven degree is capped at half the schedulable replicas
+    /// so one long request never monopolises the cluster (the residual
+    /// must still carry the short stream); the memory-driven floor is
+    /// never compromised.
+    pub fn replicas_needed(&self, input_len: u32) -> usize {
+        let schedulable = self.topo.n_replicas() - self.decode_pool.len();
+        let mem_floor = self
+            .cm
+            .replicas_for_long(input_len, u32::MAX)
+            .clamp(1, schedulable);
+        let speed = self
+            .cm
+            .replicas_for_long(input_len, self.params.sp_target_tokens);
+        speed
+            .min((schedulable / 2).max(1))
+            .max(mem_floor)
+            .min(schedulable)
+            .max(1)
+    }
+
+    /// SP plan for a long prefill, honouring the /FSP ablation.
+    pub fn plan_for_long(&self, input_len: u32, n: usize) -> SpPlan {
+        if self.flags.fast_sp {
+            sp::plan_fast_sp(&self.cm, input_len, n, self.topo.gpus_per_node)
+        } else {
+            sp::plan_ring_only(&self.cm, input_len, n, self.topo.gpus_per_node)
+        }
+    }
+
+    /// Replica with the least prefill load among those satisfying `pred`.
+    pub fn least_loaded_prefill<F: Fn(&ReplicaRt) -> bool>(
+        &self,
+        pred: F,
+    ) -> Option<ReplicaId> {
+        self.replicas
+            .iter()
+            .filter(|r| !r.down && pred(r))
+            .min_by_key(|r| (r.prefill_load_tokens(&self.reqs), r.id))
+            .map(|r| r.id)
+    }
+
+    /// Dedicated decode replica with the lightest batch.
+    pub fn least_loaded_decode(&self) -> Option<ReplicaId> {
+        self.decode_pool
+            .iter()
+            .map(|&id| &self.replicas[id])
+            .filter(|r| !r.down)
+            .min_by_key(|r| (r.decode_load_tokens(&self.reqs), r.id))
+            .map(|r| r.id)
+    }
+
+    pub fn idle_replicas(&self) -> Vec<ReplicaId> {
+        self.replicas
+            .iter()
+            .filter(|r| r.is_idle() && !r.dedicated_decode && !r.down)
+            .map(|r| r.id)
+            .collect()
+    }
+
+    // ------------------------------------------------------------------
+    // failure injection
+    // ------------------------------------------------------------------
+
+    /// Crash a replica: every request whose state lives on it loses that
+    /// state and returns to `Queued` for the policy to re-place (KV caches
+    /// and in-flight prefill work are gone; generated tokens restart —
+    /// inference has no mid-stream checkpoint). A long group with a failed
+    /// member aborts entirely: its other members are released and the long
+    /// request is returned for re-dispatch. Returns all displaced requests.
+    pub fn fail_replica(&mut self, rid: ReplicaId) -> Vec<ReqId> {
+        let mut displaced = Vec::new();
+        let now = self.now;
+
+        // Abort any long group this replica belongs to.
+        if let Some(gid) = self.replicas[rid].long_group {
+            if let Some(g) = self.groups[gid].take() {
+                let rt = &mut self.reqs[g.req];
+                rt.phase = ReqPhase::Queued;
+                rt.generated = 0;
+                displaced.push(g.req);
+                for &m in &g.members {
+                    self.replicas[m].long_group = None;
+                    self.update_busy(m);
+                }
+            }
+        }
+
+        let r = &mut self.replicas[rid];
+        r.down = true;
+        // Cancel in-flight work by bumping generations.
+        r.prefill_gen += 1;
+        r.decode_gen += 1;
+        r.decode_running = false;
+        if let Some(req) = r.running_prefill.take() {
+            displaced.push(req);
+        }
+        displaced.extend(r.prefill_queue.drain(..));
+        r.queued_prefill_tokens = 0;
+        displaced.extend(r.decode_active.drain(..));
+        displaced.extend(r.decode_waiting.drain(..));
+        r.decode_active_tokens = 0;
+        r.decode_waiting_tokens = 0;
+        r.colocated_tokens = 0;
+        r.busy.set_idle(now);
+
+        for &req in &displaced {
+            let rt = &mut self.reqs[req];
+            if rt.phase != ReqPhase::Done {
+                rt.phase = ReqPhase::Queued;
+                // KV lost: decode progress restarts from the prompt.
+                rt.generated = 0;
+                rt.colocated_on = None;
+            }
+        }
+        displaced.retain(|&req| self.reqs[req].phase != ReqPhase::Done);
+        displaced
+    }
+
+    /// Bring a failed replica back (empty, schedulable again).
+    pub fn recover_replica(&mut self, rid: ReplicaId) {
+        let r = &mut self.replicas[rid];
+        debug_assert!(r.down, "recovering a live replica");
+        r.down = false;
+    }
+
+    // ------------------------------------------------------------------
+    // short prefill
+    // ------------------------------------------------------------------
+
+    /// Queue a short request on a replica's local prefill queue. The
+    /// decision that `rid` is the right place (idle / colocation /
+    /// preemption target) belongs to the policy.
+    pub fn enqueue_short_prefill(&mut self, rid: ReplicaId, req: ReqId) {
+        debug_assert!(!self.reqs[req].req.is_long);
+        debug_assert!(!self.replicas[rid].down, "placing work on a failed replica");
+        self.reqs[req].phase = ReqPhase::Queued;
+        let r = &mut self.replicas[rid];
+        r.prefill_queue.push_back(req);
+        r.queued_prefill_tokens += self.reqs[req].req.input_len as u64;
+        self.try_start_prefill(rid);
+    }
+
+    /// Charge a colocated short against the replica's token budget (§5.2).
+    pub fn charge_colocation(&mut self, rid: ReplicaId, req: ReqId) {
+        self.replicas[rid].colocated_tokens += self.reqs[req].req.input_len as u64;
+        self.reqs[req].colocated_on = Some(rid);
+    }
+
+    /// May a short prefill start on `rid` right now, given the replica's
+    /// long-occupancy and the mechanism flags?
+    fn prefill_admissible(&self, rid: ReplicaId) -> bool {
+        let r = &self.replicas[rid];
+        if r.running_prefill.is_some() || r.decode_running {
+            return false;
+        }
+        match r.long_group.and_then(|g| self.groups[g].as_ref()) {
+            None => true,
+            Some(g) => match g.phase {
+                // Preemption of long prefill (§5.1) — or, without the
+                // preemption mechanism, the short must wait.
+                LongPhase::Waiting | LongPhase::Prefill { .. } => {
+                    self.flags.preemption
+                }
+                // During long decode: colocation lets the short run
+                // concurrently; /CoL instead preempts the decode.
+                LongPhase::Decode { .. } => true,
+            },
+        }
+    }
+
+    /// Start the next queued short prefill on `rid` if admissible,
+    /// performing any preemption it implies.
+    pub fn try_start_prefill(&mut self, rid: ReplicaId) {
+        if self.replicas[rid].prefill_queue.is_empty() || !self.prefill_admissible(rid)
+        {
+            return;
+        }
+        // Preempt the long occupant if it is actively working.
+        if let Some(gid) = self.replicas[rid].long_group {
+            match self.groups[gid].as_ref().map(|g| g.phase) {
+                Some(LongPhase::Prefill { running: true, .. }) => {
+                    self.pause_long_prefill(gid)
+                }
+                Some(LongPhase::Decode { paused: false }) if !self.flags.colocation => {
+                    self.pause_long_decode(gid)
+                }
+                _ => {}
+            }
+        }
+
+        let r = &mut self.replicas[rid];
+        let req = r.prefill_queue.pop_front().unwrap();
+        let len = self.reqs[req].req.input_len;
+        r.queued_prefill_tokens -= len as u64;
+        r.running_prefill = Some(req);
+        r.prefill_gen += 1;
+        let gen = r.prefill_gen;
+        r.busy.set_busy(self.now);
+
+        let rt = &mut self.reqs[req];
+        rt.phase = ReqPhase::Prefilling;
+        if rt.prefill_start.is_none() {
+            rt.prefill_start = Some(self.now);
+            self.recent_prefill_starts.push(req);
+        }
+        let dur = self.cm.short_prefill_time(len);
+        self.queue
+            .push(self.now + dur, EventKind::ShortPrefillDone { rid, req, gen });
+    }
+
+    /// Handle a `ShortPrefillDone` event. Returns true if it was current.
+    pub fn on_short_prefill_done(&mut self, rid: ReplicaId, req: ReqId, gen: u64) -> bool {
+        if self.replicas[rid].prefill_gen != gen
+            || self.replicas[rid].running_prefill != Some(req)
+        {
+            return false; // stale
+        }
+        self.replicas[rid].running_prefill = None;
+
+        // Release any colocation budget the request held.
+        if let Some(crid) = self.reqs[req].colocated_on.take() {
+            let len = self.reqs[req].req.input_len as u64;
+            let c = &mut self.replicas[crid].colocated_tokens;
+            *c = c.saturating_sub(len);
+        }
+
+        // Route to decode: disaggregated (migrate to the pool) or local.
+        // Falls back to local decode when the whole pool is failed.
+        let decode_target = if self.flags.disaggregation {
+            self.least_loaded_decode()
+        } else {
+            None
+        };
+        if let Some(target) = decode_target {
+            self.reqs[req].phase = ReqPhase::Migrating;
+            let dur = self
+                .cm
+                .kv_migration_exposed_time(self.reqs[req].req.input_len);
+            self.queue
+                .push(self.now + dur, EventKind::MigrationDone { req, rid: target });
+        } else {
+            self.reqs[req].phase = ReqPhase::DecodeQueued;
+            let ctx = self.reqs[req].context_tokens();
+            let r = &mut self.replicas[rid];
+            r.decode_waiting.push_back(req);
+            r.decode_waiting_tokens += ctx;
+        }
+
+        // Keep the replica moving: next prefill, else decode, else resume
+        // its long occupant.
+        self.try_start_prefill(rid);
+        self.try_admit_decode(rid);
+        self.try_start_decode(rid);
+        if let Some(gid) = self.replicas[rid].long_group {
+            self.maybe_resume_long(gid);
+        }
+        self.update_busy(rid);
+        true
+    }
+
+    /// Handle `MigrationDone`: the short joins its decode replica.
+    pub fn on_migration_done(&mut self, req: ReqId, rid: ReplicaId) {
+        self.reqs[req].phase = ReqPhase::DecodeQueued;
+        let ctx = self.reqs[req].context_tokens();
+        let r = &mut self.replicas[rid];
+        r.decode_waiting.push_back(req);
+        r.decode_waiting_tokens += ctx;
+        self.try_admit_decode(rid);
+        self.try_start_decode(rid);
+        self.update_busy(rid);
+    }
+
+    // ------------------------------------------------------------------
+    // short decode (batched rounds)
+    // ------------------------------------------------------------------
+
+    /// Admit waiting requests into the decode batch while KV fits.
+    pub fn try_admit_decode(&mut self, rid: ReplicaId) {
+        loop {
+            let r = &self.replicas[rid];
+            let Some(&head) = r.decode_waiting.front() else { break };
+            let ctx = self.reqs[head].context_tokens();
+            let need = ctx + self.reqs[head].req.output_len as u64;
+            if !r.decode_active.is_empty()
+                && r.decode_active_tokens + need > self.kv_capacity
+            {
+                break;
+            }
+            let r = &mut self.replicas[rid];
+            r.decode_waiting.pop_front();
+            r.decode_waiting_tokens -= ctx;
+            r.decode_active.push(head);
+            r.decode_active_tokens += ctx;
+            self.reqs[head].phase = ReqPhase::Decoding;
+        }
+    }
+
+    /// Kick off decode rounds if the replica is free to run them.
+    pub fn try_start_decode(&mut self, rid: ReplicaId) {
+        let r = &self.replicas[rid];
+        if r.decode_running
+            || r.decode_active.is_empty()
+            || r.running_prefill.is_some()
+            || !r.prefill_queue.is_empty()
+        {
+            return;
+        }
+        // A preempting long prefill on this replica blocks local decode
+        // only in the non-disaggregated world where they share the engine;
+        // dedicated decode replicas never host longs.
+        self.schedule_decode_round(rid);
+    }
+
+    fn schedule_decode_round(&mut self, rid: ReplicaId) {
+        let chunk = self.params.decode_chunk as u64;
+        let r = &self.replicas[rid];
+        let batch = r.decode_active.len();
+        let iter = self.cm.decode_iter_time(batch, r.decode_active_tokens);
+        let r = &mut self.replicas[rid];
+        r.decode_running = true;
+        r.decode_gen += 1;
+        let gen = r.decode_gen;
+        r.busy.set_busy(self.now);
+        self.queue.push(
+            self.now + iter * chunk as f64,
+            EventKind::DecodeRound { rid, gen },
+        );
+    }
+
+    /// Handle a `DecodeRound` completion. Returns completed request ids.
+    pub fn on_decode_round(&mut self, rid: ReplicaId, gen: u64) -> Vec<ReqId> {
+        if self.replicas[rid].decode_gen != gen || !self.replicas[rid].decode_running {
+            return Vec::new();
+        }
+        self.replicas[rid].decode_running = false;
+        let chunk = self.params.decode_chunk;
+        let active = std::mem::take(&mut self.replicas[rid].decode_active);
+        let mut done = Vec::new();
+        let mut keep = Vec::new();
+        let mut tokens_delta: i64 = 0;
+        for req in active {
+            let rt = &mut self.reqs[req];
+            let step = chunk.min(rt.req.output_len - rt.generated);
+            rt.generated += step;
+            tokens_delta += step as i64;
+            if rt.generated >= rt.req.output_len {
+                tokens_delta -= rt.context_tokens() as i64;
+                done.push(req);
+            } else {
+                keep.push(req);
+            }
+        }
+        let r = &mut self.replicas[rid];
+        r.decode_active = keep;
+        r.decode_active_tokens = (r.decode_active_tokens as i64 + tokens_delta)
+            .max(0) as u64;
+        for &req in &done {
+            self.complete_request(req);
+        }
+
+        self.try_admit_decode(rid);
+        // Prefill has priority on shared replicas (vLLM default): pause
+        // decode rounds when prompts are waiting.
+        if !self.replicas[rid].prefill_queue.is_empty() {
+            self.try_start_prefill(rid);
+        } else if !self.replicas[rid].decode_active.is_empty() {
+            self.schedule_decode_round(rid);
+        }
+        if let Some(gid) = self.replicas[rid].long_group {
+            self.maybe_resume_long(gid);
+        }
+        self.update_busy(rid);
+        done
+    }
+
+    // ------------------------------------------------------------------
+    // long requests
+    // ------------------------------------------------------------------
+
+    /// Bind a long request to `members` and begin the §5 lifecycle.
+    /// Returns the short requests displaced from the members' local queues
+    /// (the policy re-dispatches them).
+    pub fn start_long_group(
+        &mut self,
+        req: ReqId,
+        members: Vec<ReplicaId>,
+        plan: SpPlan,
+    ) -> Vec<ReqId> {
+        debug_assert!(self.reqs[req].req.is_long);
+        let gid = self.groups.len();
+        let mut displaced = Vec::new();
+        for &rid in &members {
+            let r = &mut self.replicas[rid];
+            debug_assert!(r.long_group.is_none(), "replica already long-occupied");
+            debug_assert!(!r.dedicated_decode);
+            r.long_group = Some(gid);
+            while let Some(q) = r.prefill_queue.pop_front() {
+                r.queued_prefill_tokens -= self.reqs[q].req.input_len as u64;
+                displaced.push(q);
+            }
+        }
+        // Colocation budgets of displaced requests are released; the
+        // policy re-charges wherever it re-places them.
+        for &q in &displaced {
+            if let Some(crid) = self.reqs[q].colocated_on.take() {
+                let len = self.reqs[q].req.input_len as u64;
+                let c = &mut self.replicas[crid].colocated_tokens;
+                *c = c.saturating_sub(len);
+            }
+        }
+        self.groups.push(Some(LongGroup {
+            req,
+            members,
+            plan,
+            phase: LongPhase::Waiting,
+            gen: 0,
+            preemptions: 0,
+            last_resume: self.now,
+        }));
+        self.maybe_start_long(gid);
+        displaced
+    }
+
+    /// All member replicas drained of the work the long must wait for?
+    ///
+    /// With preemption enabled, queued shorts on a member are *preempters*
+    /// and must drain before the long starts/resumes. Without preemption
+    /// (/PE) queued shorts are *waiters*: the long runs first and they
+    /// wait behind it, so only a running prefill gates the long.
+    fn members_clear(&self, gid: GroupId) -> bool {
+        let g = self.groups[gid].as_ref().unwrap();
+        g.members.iter().all(|&rid| {
+            let r = &self.replicas[rid];
+            let prefill_clear = r.running_prefill.is_none()
+                && (!self.flags.preemption || r.prefill_queue.is_empty());
+            // Without disaggregation the preempting shorts decode locally,
+            // so resumption also waits for the decode batch to drain
+            // (exactly the /Dis penalty of §6.4).
+            let decode_clear = self.flags.disaggregation
+                || (r.decode_active.is_empty() && r.decode_waiting.is_empty());
+            prefill_clear && decode_clear
+        })
+    }
+
+    /// Move Waiting → Prefill when the members are clear.
+    pub fn maybe_start_long(&mut self, gid: GroupId) {
+        let Some(g) = self.groups[gid].as_ref() else { return };
+        if g.phase != LongPhase::Waiting || !self.members_clear(gid) {
+            return;
+        }
+        let input_len = self.reqs[g.req].req.input_len;
+        let dur = g.plan.total_time(&self.cm, input_len);
+        let req = g.req;
+        let members = g.members.clone();
+        let g = self.groups[gid].as_mut().unwrap();
+        g.phase = LongPhase::Prefill {
+            remaining: dur,
+            running: true,
+            started_at: self.now,
+        };
+        g.gen += 1;
+        g.last_resume = self.now;
+        let gen = g.gen;
+        let rt = &mut self.reqs[req];
+        rt.phase = ReqPhase::Prefilling;
+        if rt.prefill_start.is_none() {
+            rt.prefill_start = Some(self.now);
+            self.recent_prefill_starts.push(req);
+        }
+        self.queue
+            .push(self.now + dur, EventKind::LongPrefillDone { gid, gen });
+        for rid in members {
+            self.replicas[rid].busy.set_busy(self.now);
+            self.update_busy(rid);
+        }
+    }
+
+    /// §5.1 preemption: checkpoint the prefill between kernel operations.
+    pub fn pause_long_prefill(&mut self, gid: GroupId) {
+        let now = self.now;
+        let ctx = self.params.preempt_ctx_switch;
+        let Some(g) = self.groups[gid].as_mut() else { return };
+        if let LongPhase::Prefill {
+            remaining,
+            running: running @ true,
+            started_at,
+        } = &mut g.phase
+        {
+            *remaining = (*remaining - (now - *started_at)).max(0.0) + ctx;
+            *running = false;
+            g.gen += 1;
+            g.preemptions += 1;
+            self.preemptions += 1;
+        }
+    }
+
+    /// /CoL only: short prefill suspends long decode.
+    pub fn pause_long_decode(&mut self, gid: GroupId) {
+        let Some(g) = self.groups[gid].as_mut() else { return };
+        if let LongPhase::Decode { paused: paused @ false } = &mut g.phase {
+            *paused = true;
+            g.gen += 1;
+            g.preemptions += 1;
+            self.preemptions += 1;
+        }
+    }
+
+    /// Resume a paused long phase once its members are clear again.
+    pub fn maybe_resume_long(&mut self, gid: GroupId) {
+        if self.groups[gid].is_none() || !self.members_clear(gid) {
+            return;
+        }
+        let now = self.now;
+        let phase = self.groups[gid].as_ref().unwrap().phase;
+        match phase {
+            LongPhase::Waiting => self.maybe_start_long(gid),
+            LongPhase::Prefill {
+                remaining,
+                running: false,
+                ..
+            } => {
+                let g = self.groups[gid].as_mut().unwrap();
+                g.phase = LongPhase::Prefill {
+                    remaining,
+                    running: true,
+                    started_at: now,
+                };
+                g.gen += 1;
+                g.last_resume = now;
+                let gen = g.gen;
+                self.queue
+                    .push(now + remaining, EventKind::LongPrefillDone { gid, gen });
+                let members = self.groups[gid].as_ref().unwrap().members.clone();
+                for rid in members {
+                    self.update_busy(rid);
+                }
+            }
+            LongPhase::Decode { paused: true } => {
+                let g = self.groups[gid].as_mut().unwrap();
+                g.phase = LongPhase::Decode { paused: false };
+                g.gen += 1;
+                self.schedule_long_decode_round(gid);
+                let members = self.groups[gid].as_ref().unwrap().members.clone();
+                for rid in members {
+                    self.update_busy(rid);
+                }
+            }
+            _ => {}
+        }
+    }
+
+    /// Handle `LongPrefillDone`. Returns true if the event was current.
+    pub fn on_long_prefill_done(&mut self, gid: GroupId, gen: u64) -> bool {
+        let Some(g) = self.groups[gid].as_ref() else { return false };
+        if g.gen != gen {
+            return false;
+        }
+        match g.phase {
+            LongPhase::Prefill { running: true, .. } => {}
+            _ => return false,
+        }
+        let g = self.groups[gid].as_mut().unwrap();
+        g.phase = LongPhase::Decode { paused: false };
+        g.gen += 1;
+        let members = g.members.clone();
+        self.schedule_long_decode_round(gid);
+        // Shorts queued behind the prefill (e.g. under /PE) may now run,
+        // colocated with the decode phase.
+        for rid in members {
+            self.try_start_prefill(rid);
+            self.update_busy(rid);
+        }
+        true
+    }
+
+    fn schedule_long_decode_round(&mut self, gid: GroupId) {
+        let g = self.groups[gid].as_ref().unwrap();
+        let req = &self.reqs[g.req];
+        let chunk = self.params.decode_chunk as f64;
+        let iter = self
+            .cm
+            .long_decode_iter_time(req.context_tokens(), g.members.len());
+        let gen = g.gen;
+        self.queue.push(
+            self.now + iter * chunk,
+            EventKind::LongDecodeRound { gid, gen },
+        );
+    }
+
+    /// Handle `LongDecodeRound`. Returns `Some(freed_replicas)` when the
+    /// long request completed and released its group.
+    pub fn on_long_decode_round(&mut self, gid: GroupId, gen: u64) -> Option<Vec<ReplicaId>> {
+        let Some(g) = self.groups[gid].as_ref() else { return None };
+        if g.gen != gen {
+            return None;
+        }
+        if let LongPhase::Decode { paused: true } = g.phase {
+            return None;
+        }
+        let req = g.req;
+        let chunk = self.params.decode_chunk;
+        let rt = &mut self.reqs[req];
+        let step = chunk.min(rt.req.output_len - rt.generated);
+        rt.generated += step;
+        rt.phase = ReqPhase::Decoding;
+        if rt.generated >= rt.req.output_len {
+            let members = self.groups[gid].as_ref().unwrap().members.clone();
+            self.preemptions_commit(gid);
+            self.complete_request(req);
+            for &rid in &members {
+                self.replicas[rid].long_group = None;
+                self.try_start_prefill(rid);
+                self.update_busy(rid);
+            }
+            self.groups[gid] = None;
+            Some(members)
+        } else {
+            self.schedule_long_decode_round(gid);
+            None
+        }
+    }
+
+    fn preemptions_commit(&mut self, _gid: GroupId) {
+        // Group preemption counts are already folded into the global
+        // counter as they happen; hook kept for symmetry/extension.
+    }
+
+    // ------------------------------------------------------------------
+    // completion & accounting
+    // ------------------------------------------------------------------
+
+    fn complete_request(&mut self, req: ReqId) {
+        let rt = &mut self.reqs[req];
+        debug_assert!(rt.finish.is_none());
+        rt.phase = ReqPhase::Done;
+        rt.finish = Some(self.now);
+        if rt.req.is_long {
+            self.longs_done += 1;
+        } else {
+            self.shorts_done += 1;
+            if self.shorts_done == self.shorts_total && self.t_shorts_done.is_none() {
+                self.t_shorts_done = Some(self.now);
+            }
+        }
+    }
+
+    /// Recompute the busy flag of a replica after any transition.
+    pub fn update_busy(&mut self, rid: ReplicaId) {
+        let active = {
+            let r = &self.replicas[rid];
+            let long_active = r
+                .long_group
+                .and_then(|g| self.groups[g].as_ref())
+                .map(|g| {
+                    matches!(
+                        g.phase,
+                        LongPhase::Prefill { running: true, .. }
+                            | LongPhase::Decode { paused: false }
+                    )
+                })
+                .unwrap_or(false);
+            r.running_prefill.is_some() || r.decode_running || long_active
+        };
+        let now = self.now;
+        let r = &mut self.replicas[rid];
+        if active {
+            r.busy.set_busy(now);
+        } else {
+            r.busy.set_idle(now);
+        }
+    }
+
+    /// All requests finished?
+    pub fn all_done(&self) -> bool {
+        self.shorts_done + self.longs_done == self.reqs.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::Request;
+
+    fn short(id: usize, arrival: f64, len: u32, out: u32) -> Request {
+        Request {
+            id,
+            arrival,
+            input_len: len,
+            output_len: out,
+            is_long: false,
+        }
+    }
+
+    fn long(id: usize, arrival: f64, len: u32, out: u32) -> Request {
+        Request {
+            id,
+            arrival,
+            input_len: len,
+            output_len: out,
+            is_long: true,
+        }
+    }
+
+    fn state(reqs: &[Request], flags: AblationFlags, pool: bool) -> SimState {
+        let mut cfg = SimConfig::pecsched(ModelSpec::mistral_7b(), flags);
+        cfg.dedicated_decode_pool = pool;
+        SimState::new(&cfg, reqs)
+    }
+
+    /// Drain the event queue, running the mechanical handlers without any
+    /// policy (work only progresses if already placed).
+    fn drain(st: &mut SimState) {
+        while let Some(ev) = st.queue.pop() {
+            st.now = ev.time.max(st.now);
+            match ev.kind {
+                EventKind::Arrival(_) => {}
+                EventKind::ShortPrefillDone { rid, req, gen } => {
+                    st.on_short_prefill_done(rid, req, gen);
+                }
+                EventKind::MigrationDone { req, rid } => {
+                    st.on_migration_done(req, rid)
+                }
+                EventKind::DecodeRound { rid, gen } => {
+                    st.on_decode_round(rid, gen);
+                }
+                EventKind::LongPrefillDone { gid, gen } => {
+                    st.on_long_prefill_done(gid, gen);
+                }
+                EventKind::LongDecodeRound { gid, gen } => {
+                    st.on_long_decode_round(gid, gen);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn short_lifecycle_with_disaggregation() {
+        let reqs = [short(0, 0.0, 1000, 16)];
+        let mut st = state(&reqs, AblationFlags::full(), true);
+        assert!(!st.decode_pool.is_empty());
+        st.queue.pop(); // discard arrival; place manually
+        st.enqueue_short_prefill(0, 0);
+        assert_eq!(st.reqs[0].phase, ReqPhase::Prefilling);
+        drain(&mut st);
+        assert_eq!(st.reqs[0].phase, ReqPhase::Done);
+        assert!(st.reqs[0].finish.unwrap() > 0.0);
+        // decode happened on a dedicated replica, not replica 0
+        assert!(st.replicas[0].decode_active.is_empty());
+        assert_eq!(st.shorts_done, 1);
+    }
+
+    #[test]
+    fn short_lifecycle_local_decode_without_pool() {
+        let reqs = [short(0, 0.0, 1000, 16)];
+        let mut st = state(&reqs, AblationFlags::full(), false);
+        st.queue.pop();
+        st.enqueue_short_prefill(3, 0);
+        drain(&mut st);
+        assert_eq!(st.reqs[0].phase, ReqPhase::Done);
+        assert_eq!(st.shorts_done, 1);
+    }
+
+    #[test]
+    fn long_lifecycle_through_group() {
+        let reqs = [long(0, 0.0, 150_000, 8)];
+        let mut st = state(&reqs, AblationFlags::full(), true);
+        st.queue.pop();
+        let n = st.replicas_needed(150_000);
+        let members: Vec<_> = (0..n).collect();
+        let plan = st.plan_for_long(150_000, n);
+        let displaced = st.start_long_group(0, members.clone(), plan);
+        assert!(displaced.is_empty());
+        assert!(st.reqs[0].prefill_start.is_some(), "starts when idle");
+        drain(&mut st);
+        assert_eq!(st.reqs[0].phase, ReqPhase::Done);
+        for rid in members {
+            assert!(st.replicas[rid].long_group.is_none(), "released");
+        }
+        assert_eq!(st.longs_done, 1);
+    }
+
+    #[test]
+    fn preemption_pauses_and_resumes_long_prefill() {
+        let reqs = [long(0, 0.0, 200_000, 8), short(1, 0.0, 1500, 8)];
+        let mut st = state(&reqs, AblationFlags::full(), true);
+        st.queue.pop();
+        st.queue.pop();
+        let n = st.replicas_needed(200_000);
+        let plan = st.plan_for_long(200_000, n);
+        st.start_long_group(0, (0..n).collect(), plan);
+        let t_unpreempted = {
+            // Completion time currently scheduled for the long prefill.
+            st.groups[0].as_ref().unwrap().gen
+        };
+        // Short preempts member replica 0.
+        st.enqueue_short_prefill(0, 1);
+        assert_eq!(st.preemptions, 1, "pause counted");
+        match st.groups[0].as_ref().unwrap().phase {
+            LongPhase::Prefill { running, .. } => assert!(!running),
+            ref p => panic!("unexpected phase {p:?}"),
+        }
+        assert!(st.groups[0].as_ref().unwrap().gen > t_unpreempted);
+        drain(&mut st);
+        assert_eq!(st.shorts_done, 1);
+        assert_eq!(st.longs_done, 1);
+        // The long finished strictly after the short's prefill completed.
+        assert!(st.reqs[0].finish.unwrap() > st.reqs[1].prefill_start.unwrap());
+    }
+
+    #[test]
+    fn no_preemption_under_pe_flag() {
+        let reqs = [long(0, 0.0, 200_000, 8), short(1, 0.0, 1500, 8)];
+        let mut st = state(&reqs, AblationFlags::no_preemption(), true);
+        st.queue.pop();
+        st.queue.pop();
+        let n = st.replicas_needed(200_000);
+        let plan = st.plan_for_long(200_000, n);
+        st.start_long_group(0, (0..n).collect(), plan);
+        st.enqueue_short_prefill(0, 1);
+        assert_eq!(st.preemptions, 0);
+        // Short waits: still queued, not prefilling.
+        assert_eq!(st.reqs[1].phase, ReqPhase::Queued);
+        drain(&mut st);
+        assert_eq!(st.shorts_done + st.longs_done, 2);
+        // Short prefill started only after long prefill ended (it runs
+        // colocated with the decode phase).
+        assert!(st.reqs[1].prefill_start.unwrap() > st.reqs[0].prefill_start.unwrap());
+    }
+
+    #[test]
+    fn colocation_budget_is_charged_and_released() {
+        let reqs = [long(0, 0.0, 150_000, 64), short(1, 0.0, 1000, 4)];
+        let mut st = state(&reqs, AblationFlags::full(), true);
+        st.queue.pop();
+        st.queue.pop();
+        let n = st.replicas_needed(150_000);
+        let plan = st.plan_for_long(150_000, n);
+        st.start_long_group(0, (0..n).collect(), plan);
+        st.charge_colocation(0, 1);
+        assert_eq!(st.replicas[0].colocated_tokens, 1000);
+        st.enqueue_short_prefill(0, 1);
+        drain(&mut st);
+        assert_eq!(st.replicas[0].colocated_tokens, 0, "budget released");
+        assert_eq!(st.shorts_done, 1);
+    }
+
+    #[test]
+    fn col_ablation_preempts_decode() {
+        let reqs = [long(0, 0.0, 150_000, 400), short(1, 0.0, 1000, 4)];
+        let mut st = state(&reqs, AblationFlags::no_colocation(), true);
+        st.queue.pop();
+        st.queue.pop();
+        let n = st.replicas_needed(150_000);
+        let plan = st.plan_for_long(150_000, n);
+        st.start_long_group(0, (0..n).collect(), plan);
+        // Run until the long reaches its decode phase.
+        while !matches!(
+            st.groups[0].as_ref().map(|g| g.phase),
+            Some(LongPhase::Decode { .. })
+        ) {
+            let ev = st.queue.pop().expect("must reach decode");
+            st.now = ev.time.max(st.now);
+            match ev.kind {
+                EventKind::LongPrefillDone { gid, gen } => {
+                    st.on_long_prefill_done(gid, gen);
+                }
+                EventKind::LongDecodeRound { gid, gen } => {
+                    st.on_long_decode_round(gid, gen);
+                }
+                _ => {}
+            }
+        }
+        let before = st.preemptions;
+        st.enqueue_short_prefill(0, 1);
+        assert_eq!(st.preemptions, before + 1, "/CoL preempts decode");
+        match st.groups[0].as_ref().unwrap().phase {
+            LongPhase::Decode { paused } => assert!(paused),
+            ref p => panic!("unexpected phase {p:?}"),
+        }
+        drain(&mut st);
+        assert_eq!(st.shorts_done + st.longs_done, 2);
+    }
+
+    #[test]
+    fn displaced_shorts_are_returned() {
+        let reqs = [short(0, 0.0, 900, 4), short(1, 0.0, 900, 4), long(2, 0.0, 150_000, 4)];
+        let mut st = state(&reqs, AblationFlags::full(), true);
+        for _ in 0..3 {
+            st.queue.pop();
+        }
+        // Queue two shorts on replica 0: one runs, one queued.
+        st.enqueue_short_prefill(0, 0);
+        st.enqueue_short_prefill(0, 1);
+        let n = st.replicas_needed(150_000);
+        let plan = st.plan_for_long(150_000, n);
+        let displaced = st.start_long_group(2, (0..n).collect(), plan);
+        assert_eq!(displaced, vec![1], "queued short displaced, running kept");
+        // The group must wait for the running short prefill.
+        assert!(matches!(
+            st.groups[0].as_ref().unwrap().phase,
+            LongPhase::Waiting
+        ));
+    }
+
+    #[test]
+    fn decode_token_caches_stay_consistent() {
+        let reqs: Vec<Request> =
+            (0..20).map(|i| short(i, 0.0, 500 + i as u32, 40)).collect();
+        let mut st = state(&reqs, AblationFlags::full(), true);
+        for _ in 0..20 {
+            st.queue.pop();
+        }
+        for i in 0..20 {
+            st.enqueue_short_prefill(i % 4, i);
+        }
+        // Interleave: after every event, the caches must equal the naive sums.
+        while let Some(ev) = st.queue.pop() {
+            st.now = ev.time.max(st.now);
+            match ev.kind {
+                EventKind::ShortPrefillDone { rid, req, gen } => {
+                    st.on_short_prefill_done(rid, req, gen);
+                }
+                EventKind::MigrationDone { req, rid } => {
+                    st.on_migration_done(req, rid)
+                }
+                EventKind::DecodeRound { rid, gen } => {
+                    st.on_decode_round(rid, gen);
+                }
+                _ => {}
+            }
+            for r in &st.replicas {
+                let naive_a: u64 = r
+                    .decode_active
+                    .iter()
+                    .map(|&q| st.reqs[q].context_tokens())
+                    .sum();
+                let naive_w: u64 = r
+                    .decode_waiting
+                    .iter()
+                    .map(|&q| st.reqs[q].context_tokens())
+                    .sum();
+                assert_eq!(r.decode_active_tokens, naive_a, "active cache");
+                assert_eq!(r.decode_waiting_tokens, naive_w, "waiting cache");
+            }
+        }
+        assert_eq!(st.shorts_done, 20);
+    }
+}

@@ -1,0 +1,196 @@
+//! Importer for the real Azure LLM inference trace [21].
+//!
+//! `AzureLLMInferenceTrace_*.csv` rows look like:
+//! `TIMESTAMP,ContextTokens,GeneratedTokens` with an ISO-8601 timestamp
+//! (2024 release; the `_code`/`_conv` splits share the schema). This
+//! importer parses that format, shifts arrivals to seconds-from-start,
+//! and applies the paper's §6.2 rewrite (inputs at or above a quantile →
+//! U(long_min, long_max), flagged long) so a user with the real dataset
+//! can drop it in where the synthetic generator is used.
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::Rng;
+
+use super::{Request, Trace};
+
+/// §6.2 rewrite parameters.
+#[derive(Debug, Clone)]
+pub struct AzureRewrite {
+    pub long_quantile: f64,
+    pub long_min: u32,
+    pub long_max: u32,
+    pub seed: u64,
+}
+
+impl Default for AzureRewrite {
+    fn default() -> Self {
+        Self {
+            long_quantile: 0.95,
+            long_min: 100_000,
+            long_max: 500_000,
+            seed: 42,
+        }
+    }
+}
+
+/// Parse an ISO-8601-ish timestamp (`YYYY-MM-DD HH:MM:SS[.ffffff]`, with
+/// `T` or space separator, optional trailing zone) into epoch-ish seconds.
+/// Only differences matter, so days are folded via a simple civil-date
+/// count.
+pub fn parse_timestamp(ts: &str) -> Result<f64> {
+    let ts = ts.trim().trim_end_matches('Z');
+    let (date, time) = ts
+        .split_once(['T', ' '])
+        .with_context(|| format!("bad timestamp {ts}"))?;
+    let mut dit = date.split('-');
+    let y: i64 = dit.next().context("year")?.parse()?;
+    let m: i64 = dit.next().context("month")?.parse()?;
+    let d: i64 = dit.next().context("day")?.parse()?;
+    if !(1..=12).contains(&m) || !(1..=31).contains(&d) {
+        bail!("bad date {date}");
+    }
+    let mut tit = time.split(':');
+    let hh: f64 = tit.next().context("hour")?.parse()?;
+    let mm: f64 = tit.next().context("minute")?.parse()?;
+    let ss: f64 = tit.next().unwrap_or("0").parse()?;
+
+    // Days since civil epoch (Howard Hinnant's algorithm).
+    let y2 = if m <= 2 { y - 1 } else { y };
+    let era = if y2 >= 0 { y2 } else { y2 - 399 } / 400;
+    let yoe = y2 - era * 400;
+    let mp = (m + 9) % 12;
+    let doy = (153 * mp + 2) / 5 + d - 1;
+    let doe = yoe * 365 + yoe / 4 - yoe / 100 + doy;
+    let days = era * 146097 + doe - 719468;
+    Ok(days as f64 * 86400.0 + hh * 3600.0 + mm * 60.0 + ss)
+}
+
+/// Parse the Azure CSV text into a [`Trace`], applying the §6.2 rewrite.
+pub fn parse_azure_csv(text: &str, rw: &AzureRewrite) -> Result<Trace> {
+    let mut rows: Vec<(f64, u32, u32)> = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if lineno == 0 && line.to_uppercase().starts_with("TIMESTAMP") {
+            continue;
+        }
+        let f: Vec<&str> = line.split(',').collect();
+        if f.len() < 3 {
+            bail!("line {}: expected 3 fields", lineno + 1);
+        }
+        let t = parse_timestamp(f[0])?;
+        let ctx: u32 = f[1].trim().parse().with_context(|| {
+            format!("line {}: bad ContextTokens", lineno + 1)
+        })?;
+        let gen: u32 = f[2].trim().parse().with_context(|| {
+            format!("line {}: bad GeneratedTokens", lineno + 1)
+        })?;
+        rows.push((t, ctx.max(1), gen.max(1)));
+    }
+    if rows.is_empty() {
+        bail!("empty Azure trace");
+    }
+
+    // Arrival times relative to the first request.
+    let t0 = rows
+        .iter()
+        .map(|r| r.0)
+        .fold(f64::INFINITY, f64::min);
+
+    // Quantile threshold over the observed context lengths.
+    let mut lens: Vec<u32> = rows.iter().map(|r| r.1).collect();
+    lens.sort_unstable();
+    let idx = ((rw.long_quantile * (lens.len() - 1) as f64).round() as usize)
+        .min(lens.len() - 1);
+    let threshold = lens[idx];
+
+    let mut rng = Rng::seed_from_u64(rw.seed);
+    let reqs = rows
+        .into_iter()
+        .map(|(t, ctx, gen)| {
+            let is_long = ctx >= threshold && rw.long_quantile < 1.0;
+            let input_len = if is_long {
+                rng.u32_inclusive(rw.long_min, rw.long_max)
+            } else {
+                ctx
+            };
+            Request {
+                id: 0,
+                arrival: t - t0,
+                input_len,
+                output_len: gen,
+                is_long,
+            }
+        })
+        .collect();
+    Ok(Trace::new(reqs))
+}
+
+/// Load + rewrite an Azure trace file.
+pub fn load_azure_trace(path: &std::path::Path, rw: &AzureRewrite) -> Result<Trace> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    parse_azure_csv(&text, rw)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+TIMESTAMP,ContextTokens,GeneratedTokens
+2024-05-10 00:00:00.000,120,15
+2024-05-10 00:00:01.500,8000,200
+2024-05-10T00:00:03.250,450,80
+2024-05-10 00:01:00.000,2300,10
+";
+
+    #[test]
+    fn parses_and_shifts_arrivals() {
+        let t = parse_azure_csv(SAMPLE, &AzureRewrite {
+            long_quantile: 1.0,
+            ..Default::default()
+        })
+        .unwrap();
+        assert_eq!(t.len(), 4);
+        assert_eq!(t.requests[0].arrival, 0.0);
+        assert!((t.requests[1].arrival - 1.5).abs() < 1e-9);
+        assert!((t.requests[3].arrival - 60.0).abs() < 1e-9);
+        assert_eq!(t.requests[0].input_len, 120);
+        assert_eq!(t.requests[1].output_len, 200);
+        assert_eq!(t.longs().count(), 0);
+    }
+
+    #[test]
+    fn rewrite_flags_the_tail() {
+        let rw = AzureRewrite {
+            long_quantile: 0.9,
+            ..Default::default()
+        };
+        let t = parse_azure_csv(SAMPLE, &rw).unwrap();
+        let longs: Vec<_> = t.longs().collect();
+        assert_eq!(longs.len(), 1, "only the 8000-token row rewrites");
+        assert!((100_000..=500_000).contains(&longs[0].input_len));
+    }
+
+    #[test]
+    fn timestamp_differences_are_exact() {
+        let a = parse_timestamp("2024-05-10 23:59:59").unwrap();
+        let b = parse_timestamp("2024-05-11 00:00:01").unwrap();
+        assert!((b - a - 2.0).abs() < 1e-9);
+        // month boundary
+        let c = parse_timestamp("2024-02-29T23:00:00").unwrap();
+        let d = parse_timestamp("2024-03-01 01:00:00").unwrap();
+        assert!((d - c - 7200.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse_azure_csv("TIMESTAMP,a,b\nnot-a-time,1,2\n", &Default::default()).is_err());
+        assert!(parse_azure_csv("", &Default::default()).is_err());
+        assert!(parse_timestamp("2024-13-01 00:00:00").is_err());
+    }
+}

@@ -1,0 +1,238 @@
+//! Deterministic Azure-shape trace generation.
+
+use crate::util::Rng;
+
+use super::{Request, Trace};
+
+/// Parameters of the synthetic Azure-shape workload.
+///
+/// The lognormal bodies are fit to the paper's Fig. 1 description: ~80% of
+/// inputs below 2K tokens, frequency decaying with length, inputs clipped
+/// near 9K (the trace's observed maximum), outputs under 800 tokens.
+#[derive(Debug, Clone)]
+pub struct TraceConfig {
+    /// Number of requests to draw.
+    pub n_requests: usize,
+    /// Mean aggregate arrival rate, requests/second (Poisson process).
+    pub rps: f64,
+    /// Median input length of the lognormal body, tokens.
+    pub input_median: f64,
+    /// Lognormal sigma of the input body.
+    pub input_sigma: f64,
+    /// Clip for the input body (trace max ≈ 9K).
+    pub input_max: u32,
+    /// Median output length, tokens.
+    pub output_median: f64,
+    /// Lognormal sigma of the output body.
+    pub output_sigma: f64,
+    /// Clip for outputs (Fig. 1: < 800).
+    pub output_max: u32,
+    /// Quantile of the input body rewritten to long requests (§6.2: p95).
+    pub long_quantile: f64,
+    /// Long-input rewrite range (§6.2: 100K..500K).
+    pub long_min: u32,
+    pub long_max: u32,
+    /// RNG seed — everything is deterministic given the config.
+    pub seed: u64,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        Self {
+            n_requests: 10_000,
+            rps: 10.0,
+            input_median: 700.0,
+            input_sigma: 1.05,
+            input_max: 9_000,
+            output_median: 150.0,
+            output_sigma: 0.85,
+            output_max: 800,
+            long_quantile: 0.95,
+            long_min: 100_000,
+            long_max: 500_000,
+            seed: 42,
+        }
+    }
+}
+
+impl TraceConfig {
+    /// Small-workload preset for unit tests and the quickstart example.
+    pub fn small(n: usize, rps: f64, seed: u64) -> Self {
+        Self {
+            n_requests: n,
+            rps,
+            seed,
+            ..Self::default()
+        }
+    }
+
+    /// Draw the full trace.
+    ///
+    /// Following §6.2 exactly: lengths are drawn from the body
+    /// distribution, then every sample at or above the body's
+    /// `long_quantile` is *replaced* by a U(long_min, long_max) draw and
+    /// flagged long. Output lengths keep the body distribution for both
+    /// classes ("we directly mimic the output length distribution ...
+    /// without modification").
+    pub fn generate(&self) -> Trace {
+        assert!(self.n_requests > 0, "empty trace requested");
+        assert!(self.rps > 0.0, "non-positive arrival rate");
+        let mut rng = Rng::seed_from_u64(self.seed);
+
+        // The rewrite threshold is the body quantile, computed analytically
+        // from the lognormal: q_p = median * exp(sigma * z_p).
+        let z = normal_quantile(self.long_quantile);
+        let threshold = self.input_median * (self.input_sigma * z).exp();
+        let ln_in = self.input_median.ln();
+        let ln_out = self.output_median.ln();
+
+        let mut t = 0.0;
+        let mut reqs = Vec::with_capacity(self.n_requests);
+        for _ in 0..self.n_requests {
+            t += rng.exponential(self.rps);
+            let body = rng.lognormal(ln_in, self.input_sigma);
+            let (input_len, is_long) = if body >= threshold {
+                (rng.u32_inclusive(self.long_min, self.long_max), true)
+            } else {
+                (body.clamp(16.0, self.input_max as f64) as u32, false)
+            };
+            let output_len = rng
+                .lognormal(ln_out, self.output_sigma)
+                .clamp(1.0, self.output_max as f64) as u32;
+            reqs.push(Request {
+                id: 0,
+                arrival: t,
+                input_len,
+                output_len,
+                is_long,
+            });
+        }
+        Trace::new(reqs)
+    }
+}
+
+/// Inverse standard-normal CDF (Acklam's rational approximation; |err| <
+/// 1.15e-9 — far below what a workload generator can notice).
+pub fn normal_quantile(p: f64) -> f64 {
+    assert!(p > 0.0 && p < 1.0, "quantile outside (0,1)");
+    const A: [f64; 6] = [
+        -3.969683028665376e+01,
+        2.209460984245205e+02,
+        -2.759285104469687e+02,
+        1.383577518672690e+02,
+        -3.066479806614716e+01,
+        2.506628277459239e+00,
+    ];
+    const B: [f64; 5] = [
+        -5.447609879822406e+01,
+        1.615858368580409e+02,
+        -1.556989798598866e+02,
+        6.680131188771972e+01,
+        -1.328068155288572e+01,
+    ];
+    const C: [f64; 6] = [
+        -7.784894002430293e-03,
+        -3.223964580411365e-01,
+        -2.400758277161838e+00,
+        -2.549732539343734e+00,
+        4.374664141464968e+00,
+        2.938163982698783e+00,
+    ];
+    const D: [f64; 4] = [
+        7.784695709041462e-03,
+        3.224671290700398e-01,
+        2.445134137142996e+00,
+        3.754408661907416e+00,
+    ];
+    let plow = 0.02425;
+    if p < plow {
+        let q = (-2.0 * p.ln()).sqrt();
+        (((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    } else if p <= 1.0 - plow {
+        let q = p - 0.5;
+        let r = q * q;
+        (((((A[0] * r + A[1]) * r + A[2]) * r + A[3]) * r + A[4]) * r + A[5]) * q
+            / (((((B[0] * r + B[1]) * r + B[2]) * r + B[3]) * r + B[4]) * r + 1.0)
+    } else {
+        -normal_quantile(1.0 - p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let c = TraceConfig::small(500, 5.0, 7);
+        let a = c.generate();
+        let b = c.generate();
+        assert_eq!(a.requests, b.requests);
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = TraceConfig::small(500, 5.0, 1).generate();
+        let b = TraceConfig::small(500, 5.0, 2).generate();
+        assert_ne!(a.requests, b.requests);
+    }
+
+    #[test]
+    fn long_fraction_near_five_percent() {
+        let t = TraceConfig::default().generate();
+        let frac = t.longs().count() as f64 / t.len() as f64;
+        assert!(
+            (0.03..=0.07).contains(&frac),
+            "long fraction {frac} outside [0.03, 0.07]"
+        );
+    }
+
+    #[test]
+    fn eighty_percent_under_2k() {
+        // The paper's headline trace observation (§3.1).
+        let t = TraceConfig::default().generate();
+        let under = t
+            .requests
+            .iter()
+            .filter(|r| r.input_len < 2000)
+            .count() as f64;
+        let frac = under / t.len() as f64;
+        assert!(
+            (0.72..=0.88).contains(&frac),
+            "fraction under 2K = {frac}, expected ~0.8"
+        );
+    }
+
+    #[test]
+    fn long_lengths_in_rewrite_range() {
+        let t = TraceConfig::default().generate();
+        for r in t.longs() {
+            assert!((100_000..=500_000).contains(&r.input_len));
+        }
+        for r in t.shorts() {
+            assert!(r.input_len <= 9_000);
+        }
+    }
+
+    #[test]
+    fn outputs_bounded() {
+        let t = TraceConfig::default().generate();
+        assert!(t.requests.iter().all(|r| (1..=800).contains(&r.output_len)));
+    }
+
+    #[test]
+    fn arrival_rate_close_to_rps() {
+        let c = TraceConfig::small(20_000, 20.0, 3);
+        let t = c.generate();
+        let rate = t.len() as f64 / t.span();
+        assert!((rate - 20.0).abs() < 1.5, "rate {rate}");
+    }
+
+    #[test]
+    fn normal_quantile_sane() {
+        assert!((normal_quantile(0.5)).abs() < 1e-9);
+        assert!((normal_quantile(0.95) - 1.6449).abs() < 1e-3);
+        assert!((normal_quantile(0.05) + 1.6449).abs() < 1e-3);
+    }
+}

@@ -1,0 +1,181 @@
+//! Request traces: the Azure LLM inference trace substitute.
+//!
+//! The paper replays Microsoft's Azure LLM inference trace [21]. We cannot
+//! ship that dataset, but Fig. 1 + §3.1 + §6.2 fully characterise what the
+//! experiments need from it:
+//!
+//! * a highly skewed long-tail input-length distribution with ~80% of
+//!   requests under 2K tokens and a maximum around 9K;
+//! * output lengths long-tailed but bounded by ~800 tokens;
+//! * Poisson-ish arrivals at a configurable aggregate rate;
+//! * §6.2's rewrite: inputs at or above the 95th percentile are replaced by
+//!   U(100K, 500K) samples and flagged "long".
+//!
+//! [`TraceConfig::generate`] reproduces exactly that, deterministically from
+//! a seed. CSV import/export lets users swap in the real trace.
+
+mod azure;
+mod gen;
+mod stats;
+
+pub use azure::{load_azure_trace, parse_azure_csv, parse_timestamp, AzureRewrite};
+pub use gen::TraceConfig;
+pub use stats::{histogram, percentile_of, LengthStats};
+
+
+/// Identifier of a request within one trace.
+pub type ReqId = usize;
+
+/// One inference request.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Request {
+    pub id: ReqId,
+    /// Arrival time, seconds from trace start.
+    pub arrival: f64,
+    /// Prompt length in tokens.
+    pub input_len: u32,
+    /// Number of tokens the request will generate. Known to the *workload*,
+    /// never to the scheduler (§3.3: output length is unpredictable).
+    pub output_len: u32,
+    /// True iff this is a rewritten long-input request (§6.2).
+    pub is_long: bool,
+}
+
+impl Request {
+    /// Total tokens processed over the request's lifetime.
+    pub fn total_tokens(&self) -> u64 {
+        self.input_len as u64 + self.output_len as u64
+    }
+}
+
+/// A complete workload: requests sorted by arrival time.
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    pub requests: Vec<Request>,
+}
+
+impl Trace {
+    pub fn new(mut requests: Vec<Request>) -> Self {
+        requests.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
+        for (i, r) in requests.iter_mut().enumerate() {
+            r.id = i;
+        }
+        Self { requests }
+    }
+
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+
+    pub fn shorts(&self) -> impl Iterator<Item = &Request> {
+        self.requests.iter().filter(|r| !r.is_long)
+    }
+
+    pub fn longs(&self) -> impl Iterator<Item = &Request> {
+        self.requests.iter().filter(|r| r.is_long)
+    }
+
+    /// Duration of the arrival window.
+    pub fn span(&self) -> f64 {
+        self.requests.last().map(|r| r.arrival).unwrap_or(0.0)
+    }
+
+    /// Drop all long requests (the paper's Fig. 2 "w/o long" setting).
+    pub fn without_longs(&self) -> Self {
+        Self::new(self.shorts().copied().collect())
+    }
+
+    /// Serialize as CSV (`arrival,input_len,output_len,is_long`).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("arrival,input_len,output_len,is_long\n");
+        for r in &self.requests {
+            out.push_str(&format!(
+                "{:.6},{},{},{}\n",
+                r.arrival, r.input_len, r.output_len, r.is_long as u8
+            ));
+        }
+        out
+    }
+
+    /// Parse the CSV format produced by [`Trace::to_csv`] (also the format
+    /// to use when importing the real Azure trace).
+    pub fn from_csv(text: &str) -> anyhow::Result<Self> {
+        let mut reqs = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            if lineno == 0 && line.starts_with("arrival") {
+                continue;
+            }
+            if line.trim().is_empty() {
+                continue;
+            }
+            let f: Vec<&str> = line.split(',').collect();
+            anyhow::ensure!(f.len() == 4, "line {}: expected 4 fields", lineno + 1);
+            reqs.push(Request {
+                id: 0,
+                arrival: f[0].trim().parse()?,
+                input_len: f[1].trim().parse()?,
+                output_len: f[2].trim().parse()?,
+                is_long: f[3].trim() == "1" || f[3].trim() == "true",
+            });
+        }
+        Ok(Self::new(reqs))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Trace {
+        Trace::new(vec![
+            Request {
+                id: 9,
+                arrival: 2.0,
+                input_len: 100,
+                output_len: 10,
+                is_long: false,
+            },
+            Request {
+                id: 7,
+                arrival: 1.0,
+                input_len: 200_000,
+                output_len: 20,
+                is_long: true,
+            },
+        ])
+    }
+
+    #[test]
+    fn new_sorts_and_reindexes() {
+        let t = sample();
+        assert_eq!(t.requests[0].arrival, 1.0);
+        assert_eq!(t.requests[0].id, 0);
+        assert_eq!(t.requests[1].id, 1);
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let t = sample();
+        let back = Trace::from_csv(&t.to_csv()).unwrap();
+        assert_eq!(back.len(), t.len());
+        assert_eq!(back.requests[1].input_len, 100);
+        assert!(back.requests[0].is_long);
+    }
+
+    #[test]
+    fn without_longs_removes_longs() {
+        let t = sample();
+        let s = t.without_longs();
+        assert_eq!(s.len(), 1);
+        assert!(!s.requests[0].is_long);
+    }
+
+    #[test]
+    fn from_csv_rejects_garbage() {
+        assert!(Trace::from_csv("arrival,input_len\n1,2\n").is_err());
+    }
+}

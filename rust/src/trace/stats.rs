@@ -1,0 +1,92 @@
+//! Distribution summaries used by the Fig. 1 reproduction.
+
+use super::Trace;
+
+/// Summary statistics of a length distribution.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LengthStats {
+    pub count: usize,
+    pub mean: f64,
+    pub p50: u32,
+    pub p80: u32,
+    pub p95: u32,
+    pub p99: u32,
+    pub max: u32,
+}
+
+impl LengthStats {
+    pub fn of(mut lens: Vec<u32>) -> Self {
+        assert!(!lens.is_empty(), "stats of empty set");
+        lens.sort_unstable();
+        let count = lens.len();
+        let mean = lens.iter().map(|&x| x as f64).sum::<f64>() / count as f64;
+        let q = |p: f64| lens[((p * (count - 1) as f64).round() as usize).min(count - 1)];
+        Self {
+            count,
+            mean,
+            p50: q(0.50),
+            p80: q(0.80),
+            p95: q(0.95),
+            p99: q(0.99),
+            max: *lens.last().unwrap(),
+        }
+    }
+
+    pub fn inputs(trace: &Trace) -> Self {
+        Self::of(trace.requests.iter().map(|r| r.input_len).collect())
+    }
+
+    pub fn outputs(trace: &Trace) -> Self {
+        Self::of(trace.requests.iter().map(|r| r.output_len).collect())
+    }
+}
+
+/// Fraction of `lens` strictly below `threshold`.
+pub fn percentile_of(lens: &[u32], threshold: u32) -> f64 {
+    if lens.is_empty() {
+        return 0.0;
+    }
+    lens.iter().filter(|&&x| x < threshold).count() as f64 / lens.len() as f64
+}
+
+/// Histogram over log-spaced buckets — the Fig. 1 CDF/PDF series.
+/// Returns `(bucket_upper_edge, count)` pairs.
+pub fn histogram(lens: &[u32], edges: &[u32]) -> Vec<(u32, usize)> {
+    let mut counts = vec![0usize; edges.len()];
+    for &l in lens {
+        let idx = edges.iter().position(|&e| l <= e).unwrap_or(edges.len() - 1);
+        counts[idx] += 1;
+    }
+    edges.iter().copied().zip(counts).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::TraceConfig;
+
+    #[test]
+    fn stats_ordering_invariant() {
+        let t = TraceConfig::default().generate();
+        let s = LengthStats::inputs(&t);
+        assert!(s.p50 <= s.p80 && s.p80 <= s.p95 && s.p95 <= s.p99);
+        assert!(s.p99 <= s.max);
+        assert!(s.mean > 0.0);
+    }
+
+    #[test]
+    fn percentile_of_counts_strictly_below() {
+        assert_eq!(percentile_of(&[1, 2, 3, 4], 3), 0.5);
+        assert_eq!(percentile_of(&[], 3), 0.0);
+    }
+
+    #[test]
+    fn histogram_covers_everything() {
+        let lens = vec![1, 10, 100, 1000, 1_000_000];
+        let edges = vec![16, 256, 4096, u32::MAX];
+        let h = histogram(&lens, &edges);
+        let total: usize = h.iter().map(|&(_, c)| c).sum();
+        assert_eq!(total, lens.len());
+        assert_eq!(h[0], (16, 2));
+    }
+}

@@ -1,0 +1,125 @@
+//! Micro-benchmark timer (criterion replacement for the offline build).
+//!
+//! Warms up, runs timed iterations until a wall-clock budget, reports
+//! mean / p50 / p99 / min. `cargo bench` runs the harness=false benches in
+//! `rust/benches/`, each of which drives this.
+
+use std::time::{Duration, Instant};
+
+pub struct Bench {
+    name: String,
+    warmup: Duration,
+    budget: Duration,
+    min_iters: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct BenchReport {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p99_s: f64,
+    pub min_s: f64,
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Self {
+        Self {
+            name: name.to_string(),
+            warmup: Duration::from_millis(200),
+            budget: Duration::from_secs(2),
+            min_iters: 10,
+        }
+    }
+
+    pub fn budget_ms(mut self, ms: u64) -> Self {
+        self.budget = Duration::from_millis(ms);
+        self
+    }
+
+    pub fn min_iters(mut self, n: usize) -> Self {
+        self.min_iters = n;
+        self
+    }
+
+    /// Time `f` repeatedly; `f` returns a value that is black-boxed.
+    pub fn run<T, F: FnMut() -> T>(&self, mut f: F) -> BenchReport {
+        // Warmup.
+        let w0 = Instant::now();
+        while w0.elapsed() < self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::new();
+        let b0 = Instant::now();
+        while b0.elapsed() < self.budget || samples.len() < self.min_iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+            if samples.len() >= 1_000_000 {
+                break;
+            }
+        }
+        samples.sort_by(|a, b| a.total_cmp(b));
+        let n = samples.len();
+        let p99_idx = ((n * 99) / 100).min(n - 1);
+        let report = BenchReport {
+            name: self.name.clone(),
+            iters: n,
+            mean_s: samples.iter().sum::<f64>() / n as f64,
+            p50_s: samples[n / 2],
+            p99_s: samples[p99_idx],
+            min_s: samples[0],
+        };
+        println!("{report}");
+        report
+    }
+}
+
+impl std::fmt::Display for BenchReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<44} iters={:<7} mean={} p50={} p99={} min={}",
+            self.name,
+            self.iters,
+            fmt_s(self.mean_s),
+            fmt_s(self.p50_s),
+            fmt_s(self.p99_s),
+            fmt_s(self.min_s),
+        )
+    }
+}
+
+/// Human-scale duration formatting.
+pub fn fmt_s(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3}us", s * 1e6)
+    } else {
+        format!("{:.1}ns", s * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_and_reports() {
+        let r = Bench::new("noop").budget_ms(30).min_iters(5).run(|| 1 + 1);
+        assert!(r.iters >= 5);
+        assert!(r.min_s <= r.p50_s && r.p50_s <= r.p99_s);
+    }
+
+    #[test]
+    fn formats_durations() {
+        assert_eq!(fmt_s(2.5), "2.500s");
+        assert_eq!(fmt_s(0.0025), "2.500ms");
+        assert_eq!(fmt_s(2.5e-6), "2.500us");
+        assert_eq!(fmt_s(2.5e-9), "2.5ns");
+    }
+}

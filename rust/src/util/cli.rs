@@ -1,0 +1,110 @@
+//! Tiny `--flag value` argument parser (clap replacement).
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// Parsed `--key value` / `--switch` arguments plus positionals.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    flags: BTreeMap<String, String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse the process arguments (after argv[0]).
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Self {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.flags.insert(key.to_string(), v);
+                } else {
+                    out.flags.insert(key.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .ok()
+                .with_context(|| format!("invalid value for --{key}: {v}")),
+        }
+    }
+
+    pub fn require(&self, key: &str) -> Result<&str> {
+        match self.get(key) {
+            Some(v) => Ok(v),
+            None => bail!("missing required flag --{key}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn parses_flags_and_positionals() {
+        // NB: a bare `--switch` consumes a following non-flag token as its
+        // value, so positionals go before switches (or use `--switch=true`).
+        let a = args("run extra --model yi-34b --requests 500 --quick");
+        assert_eq!(a.positional(), ["run", "extra"]);
+        assert_eq!(a.str_or("model", "x"), "yi-34b");
+        assert_eq!(a.parse_or("requests", 0usize).unwrap(), 500);
+        assert!(a.has("quick"));
+        assert!(!a.has("missing"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = args("--load=0.5");
+        assert_eq!(a.parse_or("load", 0.0f64).unwrap(), 0.5);
+    }
+
+    #[test]
+    fn bad_parse_is_error() {
+        let a = args("--requests banana");
+        assert!(a.parse_or("requests", 0usize).is_err());
+        assert!(a.require("nope").is_err());
+    }
+}

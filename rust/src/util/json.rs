@@ -1,0 +1,318 @@
+//! Minimal JSON parser — just enough for `artifacts/manifest.json`.
+//!
+//! The build is fully offline (no serde_json); this is a strict
+//! recursive-descent parser over the JSON grammar with the usual escape
+//! handling. Numbers parse as f64 (ints extracted via accessors).
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    pub fn parse(text: &str) -> Result<Json> {
+        let mut p = Parser {
+            b: text.as_bytes(),
+            i: 0,
+        };
+        p.ws();
+        let v = p.value()?;
+        p.ws();
+        if p.i != p.b.len() {
+            bail!("trailing garbage at byte {}", p.i);
+        }
+        Ok(v)
+    }
+
+    pub fn get(&self, key: &str) -> Result<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key).with_context(|| format!("missing key {key}")),
+            _ => bail!("not an object (looking for {key})"),
+        }
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Result<&[Json]> {
+        match self {
+            Json::Arr(v) => Ok(v),
+            _ => bail!("not an array"),
+        }
+    }
+
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Json::Str(s) => Ok(s),
+            _ => bail!("not a string"),
+        }
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            Json::Num(n) => Ok(*n),
+            _ => bail!("not a number"),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        let f = self.as_f64()?;
+        if f < 0.0 || f.fract() != 0.0 {
+            bail!("not a non-negative integer: {f}");
+        }
+        Ok(f as usize)
+    }
+
+    pub fn as_i64(&self) -> Result<i64> {
+        let f = self.as_f64()?;
+        if f.fract() != 0.0 {
+            bail!("not an integer: {f}");
+        }
+        Ok(f as i64)
+    }
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn ws(&mut self) {
+        while self.i < self.b.len() && self.b[self.i].is_ascii_whitespace() {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Result<u8> {
+        self.b
+            .get(self.i)
+            .copied()
+            .context("unexpected end of input")
+    }
+
+    fn eat(&mut self, c: u8) -> Result<()> {
+        if self.peek()? != c {
+            bail!(
+                "expected '{}' at byte {}, found '{}'",
+                c as char,
+                self.i,
+                self.b[self.i] as char
+            );
+        }
+        self.i += 1;
+        Ok(())
+    }
+
+    fn lit(&mut self, s: &str, v: Json) -> Result<Json> {
+        if self.b[self.i..].starts_with(s.as_bytes()) {
+            self.i += s.len();
+            Ok(v)
+        } else {
+            bail!("bad literal at byte {}", self.i)
+        }
+    }
+
+    fn value(&mut self) -> Result<Json> {
+        match self.peek()? {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => Ok(Json::Str(self.string()?)),
+            b't' => self.lit("true", Json::Bool(true)),
+            b'f' => self.lit("false", Json::Bool(false)),
+            b'n' => self.lit("null", Json::Null),
+            _ => self.number(),
+        }
+    }
+
+    fn object(&mut self) -> Result<Json> {
+        self.eat(b'{')?;
+        let mut m = BTreeMap::new();
+        self.ws();
+        if self.peek()? == b'}' {
+            self.i += 1;
+            return Ok(Json::Obj(m));
+        }
+        loop {
+            self.ws();
+            let k = self.string()?;
+            self.ws();
+            self.eat(b':')?;
+            self.ws();
+            let v = self.value()?;
+            m.insert(k, v);
+            self.ws();
+            match self.peek()? {
+                b',' => self.i += 1,
+                b'}' => {
+                    self.i += 1;
+                    return Ok(Json::Obj(m));
+                }
+                c => bail!("expected ',' or '}}', found '{}'", c as char),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json> {
+        self.eat(b'[')?;
+        let mut v = Vec::new();
+        self.ws();
+        if self.peek()? == b']' {
+            self.i += 1;
+            return Ok(Json::Arr(v));
+        }
+        loop {
+            self.ws();
+            v.push(self.value()?);
+            self.ws();
+            match self.peek()? {
+                b',' => self.i += 1,
+                b']' => {
+                    self.i += 1;
+                    return Ok(Json::Arr(v));
+                }
+                c => bail!("expected ',' or ']', found '{}'", c as char),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.eat(b'"')?;
+        let mut s = String::new();
+        loop {
+            let c = self.peek()?;
+            self.i += 1;
+            match c {
+                b'"' => return Ok(s),
+                b'\\' => {
+                    let e = self.peek()?;
+                    self.i += 1;
+                    match e {
+                        b'"' => s.push('"'),
+                        b'\\' => s.push('\\'),
+                        b'/' => s.push('/'),
+                        b'b' => s.push('\u{8}'),
+                        b'f' => s.push('\u{c}'),
+                        b'n' => s.push('\n'),
+                        b'r' => s.push('\r'),
+                        b't' => s.push('\t'),
+                        b'u' => {
+                            let hex = std::str::from_utf8(
+                                self.b
+                                    .get(self.i..self.i + 4)
+                                    .context("truncated \\u escape")?,
+                            )?;
+                            self.i += 4;
+                            let cp = u32::from_str_radix(hex, 16)?;
+                            // No surrogate-pair support: the manifest is
+                            // ASCII; reject rather than mis-decode.
+                            let ch = char::from_u32(cp)
+                                .context("surrogate or invalid \\u escape")?;
+                            s.push(ch);
+                        }
+                        _ => bail!("bad escape \\{}", e as char),
+                    }
+                }
+                _ => {
+                    // Collect the full UTF-8 sequence.
+                    let start = self.i - 1;
+                    let len = utf8_len(c);
+                    self.i = start + len;
+                    s.push_str(std::str::from_utf8(
+                        self.b.get(start..start + len).context("truncated utf8")?,
+                    )?);
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        let start = self.i;
+        while self.i < self.b.len()
+            && matches!(self.b[self.i], b'-' | b'+' | b'.' | b'e' | b'E' | b'0'..=b'9')
+        {
+            self.i += 1;
+        }
+        let s = std::str::from_utf8(&self.b[start..self.i])?;
+        Ok(Json::Num(s.parse::<f64>().with_context(|| {
+            format!("bad number '{s}' at byte {start}")
+        })?))
+    }
+}
+
+fn utf8_len(first: u8) -> usize {
+    match first {
+        0x00..=0x7F => 1,
+        0xC0..=0xDF => 2,
+        0xE0..=0xEF => 3,
+        _ => 4,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_manifest_like_document() {
+        let doc = r#"{
+          "model": {"vocab": 2048, "d_model": 256},
+          "params": [{"name": "embedding", "shape": [2048, 256]}],
+          "golden": [{"prompt": [3, 17], "generated": [5, -1]}],
+          "ok": true, "pi": 3.25, "none": null
+        }"#;
+        let j = Json::parse(doc).unwrap();
+        assert_eq!(j.get("model").unwrap().get("vocab").unwrap().as_usize().unwrap(), 2048);
+        let p = &j.get("params").unwrap().as_arr().unwrap()[0];
+        assert_eq!(p.get("name").unwrap().as_str().unwrap(), "embedding");
+        assert_eq!(p.get("shape").unwrap().as_arr().unwrap()[1].as_usize().unwrap(), 256);
+        let g = &j.get("golden").unwrap().as_arr().unwrap()[0];
+        assert_eq!(g.get("generated").unwrap().as_arr().unwrap()[1].as_i64().unwrap(), -1);
+        assert_eq!(j.get("ok").unwrap(), &Json::Bool(true));
+        assert_eq!(j.get("pi").unwrap().as_f64().unwrap(), 3.25);
+        assert!(j.opt("missing").is_none());
+    }
+
+    #[test]
+    fn strings_with_escapes() {
+        let j = Json::parse(r#""a\n\"b\"A é""#).unwrap();
+        assert_eq!(j.as_str().unwrap(), "a\n\"b\"A é");
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Json::parse("{").is_err());
+        assert!(Json::parse("[1,]").is_err());
+        assert!(Json::parse("12 34").is_err());
+        assert!(Json::parse(r#"{"a" 1}"#).is_err());
+    }
+
+    #[test]
+    fn numbers() {
+        assert_eq!(Json::parse("-1.5e2").unwrap().as_f64().unwrap(), -150.0);
+        assert!(Json::parse("1.5").unwrap().as_usize().is_err());
+        assert!(Json::parse("-2").unwrap().as_usize().is_err());
+        assert_eq!(Json::parse("7").unwrap().as_usize().unwrap(), 7);
+    }
+
+    #[test]
+    fn nested_arrays() {
+        let j = Json::parse("[[1,2],[3]]").unwrap();
+        let a = j.as_arr().unwrap();
+        assert_eq!(a[0].as_arr().unwrap().len(), 2);
+        assert_eq!(a[1].as_arr().unwrap()[0].as_i64().unwrap(), 3);
+    }
+}

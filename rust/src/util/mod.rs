@@ -1,0 +1,14 @@
+//! Offline-build substrates: deterministic RNG, a minimal JSON parser,
+//! a tiny CLI-argument helper and a micro-benchmark timer. These replace
+//! rand/serde_json/clap/criterion, none of which are available in this
+//! fully vendored build (DESIGN.md §2 notes the substitution).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod rng;
+
+pub use bench::Bench;
+pub use cli::Args;
+pub use json::Json;
+pub use rng::Rng;

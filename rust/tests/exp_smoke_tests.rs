@@ -1,0 +1,104 @@
+//! Smoke tests over the experiment harness: every table/figure cell runs
+//! at miniature scale and reports internally consistent numbers, so the
+//! full experiment binaries cannot bit-rot.
+
+use pecsched::config::{AblationFlags, ModelSpec, PolicyKind};
+use pecsched::exp::{
+    capacity_rps, normalize, run_cell, sustainable_rps, trace_for, ExpParams,
+};
+use pecsched::trace::{LengthStats, TraceConfig};
+
+fn mini() -> ExpParams {
+    ExpParams {
+        n_requests: 1500,
+        seed: 5,
+        load: 0.8,
+    }
+}
+
+#[test]
+fn fig1_distribution_shape() {
+    let t = TraceConfig {
+        n_requests: 20_000,
+        ..TraceConfig::default()
+    }
+    .generate();
+    let s = LengthStats::inputs(&t);
+    assert!(s.p80 < 2200, "p80 {} should sit near 2K", s.p80);
+    let o = LengthStats::outputs(&t);
+    assert!(o.max <= 800);
+}
+
+#[test]
+fn sustainable_rps_is_cached_and_ordered() {
+    let m7 = ModelSpec::mistral_7b();
+    let a = sustainable_rps(&m7);
+    let b = sustainable_rps(&m7);
+    assert_eq!(a, b, "cache must return identical values");
+    assert!(a >= capacity_rps(&m7, 0.5), "calibration below analytic floor");
+}
+
+#[test]
+fn fig2_cells_run_and_longs_hurt_fifo() {
+    let model = ModelSpec::mistral_7b();
+    let p = mini();
+    let trace = trace_for(&model, &p);
+    let without = trace.without_longs();
+    let mut w = run_cell(&model, PolicyKind::Fifo, &trace);
+    let mut wo = run_cell(&model, PolicyKind::Fifo, &without);
+    if trace.longs().count() > 0 {
+        assert!(
+            w.short_queue_delay.quantile(0.99)
+                >= wo.short_queue_delay.quantile(0.99)
+        );
+    }
+}
+
+#[test]
+fn table1_idle_rates_ordered() {
+    let model = ModelSpec::yi_34b();
+    let p = mini();
+    let trace = trace_for(&model, &p);
+    let fifo = run_cell(&model, PolicyKind::Fifo, &trace);
+    let resv = run_cell(&model, PolicyKind::Reservation, &trace);
+    assert!(resv.gpu_idle_rate >= fifo.gpu_idle_rate);
+}
+
+#[test]
+fn ablation_cells_all_complete() {
+    let model = ModelSpec::phi3_14b();
+    let p = mini();
+    let trace = trace_for(&model, &p);
+    for kind in PolicyKind::ablation_set() {
+        let m = run_cell(&model, kind, &trace);
+        assert_eq!(
+            m.shorts_completed + m.longs_completed,
+            trace.len(),
+            "{}",
+            kind.name()
+        );
+    }
+}
+
+#[test]
+fn table7_overheads_are_small() {
+    let model = ModelSpec::mistral_7b();
+    let p = mini();
+    let trace = trace_for(&model, &p);
+    let mut m = run_cell(
+        &model,
+        PolicyKind::PecSched(AblationFlags::full()),
+        &trace,
+    );
+    if !m.sched_overhead_short.is_empty() {
+        // wall-clock scheduling / simulated JCT must be far below 1
+        assert!(m.sched_overhead_short.quantile(0.99) < 0.5);
+    }
+}
+
+#[test]
+fn normalize_helper() {
+    let p = normalize([1.0, 2.0, 4.0, 8.0, 10.0], 10.0);
+    assert_eq!(p[4], 1.0);
+    assert_eq!(p[0], 0.1);
+}

@@ -1,0 +1,162 @@
+//! Failure-injection tests: replica crashes lose in-flight state, displaced
+//! requests are re-placed and still complete, and the cluster conserves
+//! every request.
+
+use pecsched::config::{AblationFlags, ModelSpec, PolicyKind};
+use pecsched::exp;
+use pecsched::sched::{build_policy, Policy};
+use pecsched::sim::{ReqPhase, SimConfig, SimState, Simulation};
+use pecsched::trace::{Request, Trace, TraceConfig};
+
+fn shorts_trace(n: usize, rps: f64, seed: u64) -> Trace {
+    TraceConfig {
+        n_requests: n,
+        rps,
+        seed,
+        long_quantile: 0.9999999,
+        ..TraceConfig::default()
+    }
+    .generate()
+    .without_longs()
+}
+
+/// Drive a simulation manually so we can crash replicas mid-run.
+fn run_with_failure(
+    model: ModelSpec,
+    trace: &Trace,
+    kind: PolicyKind,
+    fail_at_frac: f64,
+    fail_rid: usize,
+    recover: bool,
+) -> pecsched::metrics::RunMetrics {
+    let cfg = match kind {
+        PolicyKind::PecSched(f) => SimConfig::pecsched(model, f),
+        _ => SimConfig::baseline(model),
+    };
+    let mut sim = Simulation::new(cfg, trace, kind);
+    let span = trace.span();
+    sim.run_with_hook(|st: &mut SimState, policy: &mut dyn Policy| {
+        // One-shot crash around the chosen point of the arrival window.
+        if st.now >= span * fail_at_frac && !st.replicas[fail_rid].down {
+            let displaced = st.fail_replica(fail_rid);
+            for req in displaced {
+                policy.on_arrival(st, req);
+            }
+        }
+        if recover && st.replicas[fail_rid].down && st.now >= span * (fail_at_frac + 0.2)
+        {
+            st.recover_replica(fail_rid);
+        }
+    })
+}
+
+#[test]
+fn crash_mid_run_loses_nothing() {
+    let model = ModelSpec::mistral_7b();
+    let rps = exp::capacity_rps(&model, 0.5);
+    let trace = shorts_trace(400, rps, 3);
+    for kind in [
+        PolicyKind::Fifo,
+        PolicyKind::Priority,
+        PolicyKind::PecSched(AblationFlags::full()),
+    ] {
+        let m = run_with_failure(model.clone(), &trace, kind, 0.3, 2, false);
+        assert_eq!(
+            m.shorts_completed,
+            trace.len(),
+            "{}: requests lost after crash",
+            kind.name()
+        );
+    }
+}
+
+#[test]
+fn crash_and_recovery_conserves_requests() {
+    let model = ModelSpec::phi3_14b();
+    let rps = exp::capacity_rps(&model, 0.5);
+    let trace = shorts_trace(300, rps, 5);
+    let m = run_with_failure(
+        model,
+        &trace,
+        PolicyKind::PecSched(AblationFlags::full()),
+        0.2,
+        1,
+        true,
+    );
+    assert_eq!(m.shorts_completed, trace.len());
+}
+
+#[test]
+fn crashed_long_group_is_redispatched() {
+    let model = ModelSpec::mistral_7b();
+    let mut reqs = vec![Request {
+        id: 0,
+        arrival: 0.0,
+        input_len: 200_000,
+        output_len: 16,
+        is_long: true,
+    }];
+    for i in 0..20 {
+        reqs.push(Request {
+            id: 0,
+            arrival: 0.5 + 0.2 * i as f64,
+            input_len: 1200,
+            output_len: 16,
+            is_long: false,
+        });
+    }
+    let trace = Trace::new(reqs);
+    let m = run_with_failure(
+        model,
+        &trace,
+        PolicyKind::PecSched(AblationFlags::full()),
+        0.05,
+        0,
+        true,
+    );
+    assert_eq!(m.longs_completed, 1, "aborted long must be re-run");
+    assert_eq!(m.shorts_completed, 20);
+}
+
+#[test]
+fn fail_replica_unit_semantics() {
+    // Direct state-level checks of what a crash destroys.
+    let model = ModelSpec::mistral_7b();
+    let cfg = SimConfig::pecsched(model, AblationFlags::full());
+    let reqs = [
+        Request {
+            id: 0,
+            arrival: 0.0,
+            input_len: 1000,
+            output_len: 8,
+            is_long: false,
+        },
+        Request {
+            id: 1,
+            arrival: 0.0,
+            input_len: 900,
+            output_len: 8,
+            is_long: false,
+        },
+    ];
+    let mut st = SimState::new(&cfg, &reqs);
+    st.queue.pop();
+    st.queue.pop();
+    st.enqueue_short_prefill(0, 0); // running
+    st.enqueue_short_prefill(0, 1); // queued behind it
+    let displaced = st.fail_replica(0);
+    assert_eq!(displaced.len(), 2);
+    assert!(st.replicas[0].down);
+    assert!(st.replicas[0].running_prefill.is_none());
+    assert_eq!(st.replicas[0].queued_prefill_tokens, 0);
+    assert_eq!(st.reqs[0].phase, ReqPhase::Queued);
+    // Down replicas are invisible to placement helpers.
+    assert!(!st.idle_replicas().contains(&0));
+    assert_ne!(
+        st.least_loaded_prefill(|_| true),
+        Some(0),
+        "down replica must not be chosen"
+    );
+    st.recover_replica(0);
+    assert!(st.idle_replicas().contains(&0));
+}

@@ -1,0 +1,323 @@
+//! Property-based tests (hand-rolled, seeded — proptest is not available
+//! in this fully-vendored offline build; DESIGN.md §2 documents the
+//! substitution). Each property runs across many random cases derived
+//! from a deterministic RNG, so failures are reproducible.
+
+use pecsched::cluster::Topology;
+use pecsched::config::{
+    AblationFlags, ClusterSpec, ModelSpec, PolicyKind,
+};
+use pecsched::metrics::Digest;
+use pecsched::server::KvPool;
+use pecsched::sim::{run_sim, SimConfig};
+use pecsched::trace::{Request, Trace};
+use pecsched::util::{Json, Rng};
+
+// ---------------------------------------------------------------------
+// simulator conservation properties over random workloads
+// ---------------------------------------------------------------------
+
+fn random_trace(rng: &mut Rng, n: usize, with_longs: bool) -> Trace {
+    let mut reqs = Vec::new();
+    let mut t = 0.0;
+    for _ in 0..n {
+        t += rng.exponential(20.0);
+        let is_long = with_longs && rng.f64() < 0.01;
+        let input_len = if is_long {
+            rng.u32_inclusive(100_000, 500_000)
+        } else {
+            rng.u32_inclusive(16, 9_000)
+        };
+        reqs.push(Request {
+            id: 0,
+            arrival: t,
+            input_len,
+            output_len: rng.u32_inclusive(1, 800),
+            is_long,
+        });
+    }
+    Trace::new(reqs)
+}
+
+fn policies() -> Vec<PolicyKind> {
+    let mut v = PolicyKind::comparison_set();
+    v.extend(PolicyKind::ablation_set().into_iter().skip(1));
+    v
+}
+
+#[test]
+fn prop_all_requests_complete_under_any_policy_and_seed() {
+    let mut rng = Rng::seed_from_u64(0xC0FFEE);
+    let models = ModelSpec::catalog();
+    for case in 0..12 {
+        let model = models[rng.below(models.len())].clone();
+        let n = 50 + rng.below(250);
+        let trace = random_trace(&mut rng, n, true);
+        let kind = policies()[rng.below(policies().len())];
+        let cfg = match kind {
+            PolicyKind::PecSched(f) => SimConfig::pecsched(model.clone(), f),
+            _ => SimConfig::baseline(model.clone()),
+        };
+        let m = run_sim(cfg, &trace, kind);
+        assert_eq!(
+            m.shorts_completed + m.longs_completed,
+            trace.len(),
+            "case {case}: {} on {} lost requests",
+            kind.name(),
+            model.name
+        );
+    }
+}
+
+#[test]
+fn prop_delays_nonnegative_and_jct_exceeds_delay() {
+    let mut rng = Rng::seed_from_u64(0xBEEF);
+    for _ in 0..6 {
+        let model = ModelSpec::mistral_7b();
+        let trace = random_trace(&mut rng, 200, true);
+        let kind = policies()[rng.below(policies().len())];
+        let cfg = match kind {
+            PolicyKind::PecSched(f) => SimConfig::pecsched(model.clone(), f),
+            _ => SimConfig::baseline(model.clone()),
+        };
+        let mut m = run_sim(cfg, &trace, kind);
+        if !m.short_queue_delay.is_empty() && !m.short_jct.is_empty() {
+            assert!(m.short_queue_delay.quantile(0.0) >= -1e-9);
+            // p99 JCT must dominate p99 queueing delay: execution adds time.
+            assert!(m.short_jct.quantile(0.99) >= m.short_queue_delay.quantile(0.99));
+        }
+    }
+}
+
+#[test]
+fn prop_no_longs_means_no_preemptions() {
+    let mut rng = Rng::seed_from_u64(0xABBA);
+    for _ in 0..6 {
+        let trace = random_trace(&mut rng, 150, false);
+        let kind = policies()[rng.below(policies().len())];
+        let model = ModelSpec::phi3_14b();
+        let cfg = match kind {
+            PolicyKind::PecSched(f) => SimConfig::pecsched(model.clone(), f),
+            _ => SimConfig::baseline(model.clone()),
+        };
+        let m = run_sim(cfg, &trace, kind);
+        assert_eq!(m.preemptions, 0, "{}", kind.name());
+    }
+}
+
+// ---------------------------------------------------------------------
+// replica-set selection properties
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_choose_group_valid_distinct_and_eligible() {
+    let mut rng = Rng::seed_from_u64(0xDEAD);
+    for _ in 0..200 {
+        let tp = [1usize, 2, 4][rng.below(3)];
+        let mut model = ModelSpec::mistral_7b();
+        model.tp = tp;
+        let topo = Topology::build(&ClusterSpec::default(), &model);
+        let nr = topo.n_replicas();
+        let eligible: Vec<bool> = (0..nr).map(|_| rng.f64() < 0.6).collect();
+        let loads: Vec<u64> = (0..nr).map(|_| rng.below(10_000) as u64).collect();
+        let n = 1 + rng.below(nr);
+        let n_eligible = eligible.iter().filter(|&&e| e).count();
+        match topo.choose_group(n, &eligible, &loads) {
+            None => assert!(n_eligible < n, "refused a feasible group"),
+            Some(g) => {
+                assert_eq!(g.len(), n);
+                let mut sorted = g.clone();
+                sorted.sort_unstable();
+                sorted.dedup();
+                assert_eq!(sorted.len(), n, "duplicate replica in group");
+                assert!(g.iter().all(|&id| eligible[id]), "ineligible replica");
+                // If some node could host the whole group, the chosen
+                // group must sit on a single node.
+                let single_possible = (0..topo.nodes).any(|node| {
+                    topo.replicas_on_node(node)
+                        .filter(|r| eligible[r.id])
+                        .count()
+                        >= n
+                });
+                if single_possible {
+                    assert_eq!(topo.nodes_spanned(&g), 1);
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// digest vs naive percentile
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_digest_matches_naive_quantile() {
+    let mut rng = Rng::seed_from_u64(0xF00D);
+    for _ in 0..50 {
+        let n = 1 + rng.below(500);
+        let xs: Vec<f64> = (0..n).map(|_| rng.f64() * 1000.0).collect();
+        let mut d = Digest::new();
+        for &x in &xs {
+            d.add(x);
+        }
+        let mut sorted = xs.clone();
+        sorted.sort_by(|a, b| a.total_cmp(b));
+        for q in [0.0, 0.25, 0.5, 0.77, 0.99, 1.0] {
+            let pos = q * (n - 1) as f64;
+            let (lo, hi) = (pos.floor() as usize, pos.ceil() as usize);
+            let frac = pos - lo as f64;
+            let naive = sorted[lo] * (1.0 - frac) + sorted[hi] * frac;
+            assert!((d.quantile(q) - naive).abs() < 1e-9);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// KV pool conservation
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_kv_pool_conserves_blocks() {
+    let mut rng = Rng::seed_from_u64(0x5EED);
+    for _ in 0..50 {
+        let cap = 64 + rng.below(4096);
+        let block = 1 + rng.below(64);
+        let total_tokens = (cap / block) * block;
+        let mut pool = KvPool::new(cap, block);
+        let mut live: Vec<(u64, usize)> = Vec::new();
+        let mut next_id = 0u64;
+        for _ in 0..200 {
+            match rng.below(3) {
+                0 => {
+                    let want = 1 + rng.below(300);
+                    if pool.admit(next_id, want) {
+                        live.push((next_id, want));
+                    }
+                    next_id += 1;
+                }
+                1 => {
+                    if !live.is_empty() {
+                        let i = rng.below(live.len());
+                        let (id, sz) = live[i];
+                        let grown = sz + rng.below(100);
+                        if pool.grow(id, grown) {
+                            live[i].1 = grown;
+                        }
+                    }
+                }
+                _ => {
+                    if !live.is_empty() {
+                        let i = rng.below(live.len());
+                        let (id, _) = live.swap_remove(i);
+                        pool.release(id);
+                    }
+                }
+            }
+            // Conservation: free tokens + a lower bound on held tokens
+            // never exceeds capacity, and free is within bounds.
+            assert!(pool.free_tokens() <= total_tokens);
+            let held_min: usize = live.iter().map(|&(_, sz)| sz.max(1)).sum();
+            let held_blocks_min = live
+                .iter()
+                .map(|&(_, sz)| sz.max(1).div_ceil(block))
+                .sum::<usize>();
+            assert!(
+                pool.free_tokens() + held_blocks_min * block <= total_tokens + block,
+                "free {} + held_min {} exceeds cap {}",
+                pool.free_tokens(),
+                held_min,
+                total_tokens
+            );
+            assert_eq!(pool.live_streams(), live.len());
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// JSON parser round-trip on random documents
+// ---------------------------------------------------------------------
+
+fn random_json(rng: &mut Rng, depth: usize) -> Json {
+    use std::collections::BTreeMap;
+    match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+        0 => Json::Null,
+        1 => Json::Bool(rng.f64() < 0.5),
+        2 => Json::Num((rng.below(2_000_001) as f64 - 1_000_000.0) / 4.0),
+        3 => {
+            let n = rng.below(12);
+            Json::Str(
+                (0..n)
+                    .map(|_| {
+                        let c = b"abcXYZ 0_9\"\\/\n"[rng.below(14)];
+                        c as char
+                    })
+                    .collect(),
+            )
+        }
+        4 => Json::Arr((0..rng.below(5)).map(|_| random_json(rng, depth - 1)).collect()),
+        _ => {
+            let mut m = BTreeMap::new();
+            for i in 0..rng.below(5) {
+                m.insert(format!("k{i}"), random_json(rng, depth - 1));
+            }
+            Json::Obj(m)
+        }
+    }
+}
+
+fn serialize(j: &Json, out: &mut String) {
+    match j {
+        Json::Null => out.push_str("null"),
+        Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+        Json::Num(n) => out.push_str(&format!("{n}")),
+        Json::Str(s) => {
+            out.push('"');
+            for c in s.chars() {
+                match c {
+                    '"' => out.push_str("\\\""),
+                    '\\' => out.push_str("\\\\"),
+                    '\n' => out.push_str("\\n"),
+                    c => out.push(c),
+                }
+            }
+            out.push('"');
+        }
+        Json::Arr(v) => {
+            out.push('[');
+            for (i, e) in v.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                serialize(e, out);
+            }
+            out.push(']');
+        }
+        Json::Obj(m) => {
+            out.push('{');
+            for (i, (k, v)) in m.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                serialize(&Json::Str(k.clone()), out);
+                out.push(':');
+                serialize(v, out);
+            }
+            out.push('}');
+        }
+    }
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    let mut rng = Rng::seed_from_u64(0x7E57);
+    for _ in 0..300 {
+        let doc = random_json(&mut rng, 3);
+        let mut text = String::new();
+        serialize(&doc, &mut text);
+        let back = Json::parse(&text).unwrap_or_else(|e| {
+            panic!("failed to reparse {text:?}: {e}");
+        });
+        assert_eq!(back, doc, "roundtrip mismatch for {text:?}");
+    }
+}

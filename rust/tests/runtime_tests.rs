@@ -1,0 +1,106 @@
+//! Integration tests over the PJRT runtime: load the AOT artifacts, run
+//! prefill/decode, and reproduce the golden generations token-for-token.
+//!
+//! These tests require `make artifacts` to have run; they skip (pass
+//! trivially with a notice) when the artifact directory is absent so that
+//! `cargo test` works in a fresh checkout.
+
+use pecsched::runtime::{argmax, Artifacts, Manifest};
+
+fn artifacts() -> Option<Artifacts> {
+    let dir = Artifacts::default_dir();
+    if !Artifacts::available(&dir) {
+        eprintln!("skipping: no artifacts at {}", dir.display());
+        return None;
+    }
+    Some(Artifacts::load(&dir).expect("artifacts load"))
+}
+
+#[test]
+fn manifest_parses_and_is_consistent() {
+    let dir = Artifacts::default_dir();
+    if !Artifacts::available(&dir) {
+        return;
+    }
+    let text = std::fs::read_to_string(dir.join("manifest.json")).unwrap();
+    let m = Manifest::from_json(&text).unwrap();
+    assert!(!m.params.is_empty());
+    let total: usize = m.params.iter().map(|p| p.shape.iter().product::<usize>()).sum();
+    assert_eq!(total * 4, m.weights_bytes);
+    assert!(!m.prefill_buckets.is_empty());
+    assert!(m.artifacts.iter().any(|a| a.kind == "decode"));
+    assert!(!m.golden.is_empty(), "aot.py must emit golden generations");
+}
+
+#[test]
+fn loads_and_reports_platform() {
+    let Some(a) = artifacts() else { return };
+    assert!(a.platform().to_lowercase().contains("cpu") || !a.platform().is_empty());
+    assert_eq!(a.buckets(), a.manifest.prefill_buckets);
+}
+
+#[test]
+fn prefill_shapes_and_finiteness() {
+    let Some(a) = artifacts() else { return };
+    let bucket = a.buckets()[0];
+    let prompt: Vec<i32> = (0..bucket as i32).map(|i| i % 100 + 1).collect();
+    let out = a.prefill(&prompt).unwrap();
+    assert_eq!(out.logits.len(), a.manifest.model.vocab);
+    assert!(out.logits.iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn decode_step_changes_logits_with_token() {
+    let Some(a) = artifacts() else { return };
+    let bucket = a.buckets()[0];
+    let prompt: Vec<i32> = (0..bucket as i32).map(|i| i % 64 + 1).collect();
+    let pre = a.prefill(&prompt).unwrap();
+    let l1 = a
+        .decode(5, &pre.k_cache, &pre.v_cache, (bucket + 1) as i32)
+        .unwrap();
+    let l2 = a
+        .decode(900, &pre.k_cache, &pre.v_cache, (bucket + 1) as i32)
+        .unwrap();
+    assert_ne!(argmax(&l1.logits) as i32, -1);
+    assert!(l1.logits != l2.logits, "different tokens must give different logits");
+}
+
+#[test]
+fn decode_is_deterministic() {
+    let Some(a) = artifacts() else { return };
+    let bucket = a.buckets()[0];
+    let prompt: Vec<i32> = (0..bucket as i32).map(|i| (i * 7) % 200 + 1).collect();
+    let pre = a.prefill(&prompt).unwrap();
+    let x = a.decode(3, &pre.k_cache, &pre.v_cache, (bucket + 1) as i32).unwrap();
+    let y = a.decode(3, &pre.k_cache, &pre.v_cache, (bucket + 1) as i32).unwrap();
+    assert_eq!(x.logits, y.logits);
+}
+
+#[test]
+fn golden_generations_match_jax_exactly() {
+    // The L1+L2+L3 composition check: rust's PJRT execution of the AOT
+    // artifacts must reproduce the JAX-side greedy generations token for
+    // token (same HLO, same weights, same arithmetic).
+    let Some(a) = artifacts() else { return };
+    for (i, g) in a.manifest.golden.clone().iter().enumerate() {
+        let got = a.generate_greedy(&g.prompt, g.generated.len()).unwrap();
+        assert_eq!(
+            got, g.generated,
+            "golden generation {i} diverged (prompt len {})",
+            g.prompt.len()
+        );
+    }
+}
+
+#[test]
+fn bucket_selection_and_padding() {
+    let Some(a) = artifacts() else { return };
+    let buckets = a.buckets();
+    let (padded, b) = a.pad_prompt(&[1, 2, 3]).unwrap();
+    assert_eq!(b, buckets[0]);
+    assert_eq!(padded.len(), b);
+    assert_eq!(&padded[..3], &[1, 2, 3]);
+    assert!(padded[3..].iter().all(|&t| t == 3));
+    let too_long = vec![1i32; buckets.last().unwrap() + 1];
+    assert!(a.pad_prompt(&too_long).is_err());
+}

@@ -1,0 +1,110 @@
+//! Integration tests over the real serving engine (PJRT CPU execution).
+//! Skipped gracefully when artifacts are absent.
+
+use pecsched::runtime::Artifacts;
+use pecsched::server::{
+    EngineConfig, EngineMode, ServeRequest, ServerHandle,
+};
+
+fn engine(mode: EngineMode) -> Option<ServerHandle> {
+    let dir = Artifacts::default_dir();
+    if !Artifacts::available(&dir) {
+        eprintln!("skipping: no artifacts at {}", dir.display());
+        return None;
+    }
+    Some(
+        ServerHandle::start(
+            &dir,
+            EngineConfig {
+                mode,
+                ..EngineConfig::default()
+            },
+        )
+        .expect("engine start"),
+    )
+}
+
+fn req(id: u64, plen: usize, new: usize) -> ServeRequest {
+    ServeRequest {
+        id,
+        prompt: (0..plen).map(|j| (j % 500) as i32 + 1).collect(),
+        max_new_tokens: new,
+    }
+}
+
+#[test]
+fn serves_a_single_request() {
+    let Some(h) = engine(EngineMode::PecSched) else { return };
+    let rx = h.submit(req(0, 12, 4));
+    let r = rx.recv().unwrap();
+    assert_eq!(r.tokens.len(), 4);
+    assert!(r.ttft_s > 0.0 && r.total_s >= r.ttft_s);
+    let stats = h.shutdown().unwrap();
+    assert_eq!(stats.completed, 1);
+    assert_eq!(stats.prefills, 1);
+}
+
+#[test]
+fn serves_concurrent_batch_deterministically() {
+    let Some(h) = engine(EngineMode::PecSched) else { return };
+    let rxs: Vec<_> = (0..6).map(|i| h.submit(req(i, 10 + i as usize, 5))).collect();
+    let mut first: Vec<Vec<i32>> = rxs.into_iter().map(|rx| rx.recv().unwrap().tokens).collect();
+    h.shutdown().unwrap();
+
+    // Same workload again: token streams must be identical (pure greedy
+    // decoding, deterministic artifacts).
+    let Some(h) = engine(EngineMode::PecSched) else { return };
+    let rxs: Vec<_> = (0..6).map(|i| h.submit(req(i, 10 + i as usize, 5))).collect();
+    let second: Vec<Vec<i32>> = rxs.into_iter().map(|rx| rx.recv().unwrap().tokens).collect();
+    h.shutdown().unwrap();
+    first.sort();
+    let mut second = second;
+    second.sort();
+    assert_eq!(first, second);
+}
+
+#[test]
+fn long_prompt_is_chunk_prefilled_and_preempted() {
+    let Some(h) = engine(EngineMode::PecSched) else { return };
+    // One long prompt (above the 192-token threshold), then shorts that
+    // should preempt its absorb loop.
+    let long_rx = h.submit(req(100, 300, 3));
+    std::thread::sleep(std::time::Duration::from_millis(30));
+    let short_rxs: Vec<_> = (0..4).map(|i| h.submit(req(i, 8, 3))).collect();
+    for rx in short_rxs {
+        let r = rx.recv().unwrap();
+        assert_eq!(r.tokens.len(), 3);
+        assert!(!r.was_long);
+    }
+    let long = long_rx.recv().unwrap();
+    assert!(long.was_long);
+    assert_eq!(long.tokens.len(), 3);
+    let stats = h.shutdown().unwrap();
+    assert_eq!(stats.completed, 5);
+    assert!(stats.long_chunks > 0, "long prompt must absorb in chunks");
+}
+
+#[test]
+fn fifo_mode_serves_everything_in_order_too() {
+    let Some(h) = engine(EngineMode::Fifo) else { return };
+    let rxs: Vec<_> = (0..5).map(|i| h.submit(req(i, 16, 2))).collect();
+    for rx in rxs {
+        assert_eq!(rx.recv().unwrap().tokens.len(), 2);
+    }
+    let stats = h.shutdown().unwrap();
+    assert_eq!(stats.completed, 5);
+    assert_eq!(stats.preemptions, 0, "FIFO never preempts");
+}
+
+#[test]
+fn rejects_request_exceeding_capacity() {
+    let Some(h) = engine(EngineMode::PecSched) else { return };
+    // prompt + max_new beyond the decode capacity: the engine thread
+    // errors out; the reply channel closes without a result.
+    let rx = h.submit(ServeRequest {
+        id: 0,
+        prompt: vec![1; 400],
+        max_new_tokens: 400,
+    });
+    assert!(rx.recv().is_err(), "oversized request must not complete");
+}

@@ -1,0 +1,254 @@
+//! Integration tests over the cluster simulator: every policy must serve a
+//! full workload correctly, and the qualitative relationships the paper
+//! reports (§3, §6.3, §6.4) must emerge from the mechanics.
+
+use pecsched::config::{AblationFlags, ModelSpec, PolicyKind};
+use pecsched::exp;
+use pecsched::sim::{run_sim, SimConfig};
+use pecsched::trace::{Request, Trace, TraceConfig};
+
+fn small_trace(n: usize, rps: f64, seed: u64) -> Trace {
+    TraceConfig {
+        n_requests: n,
+        rps,
+        seed,
+        ..TraceConfig::default()
+    }
+    .generate()
+}
+
+fn run(model: ModelSpec, kind: PolicyKind, trace: &Trace) -> pecsched::metrics::RunMetrics {
+    let cfg = match kind {
+        PolicyKind::PecSched(f) => SimConfig::pecsched(model, f),
+        _ => SimConfig::baseline(model),
+    };
+    run_sim(cfg, trace, kind)
+}
+
+fn all_policies() -> Vec<PolicyKind> {
+    let mut v = PolicyKind::comparison_set();
+    v.extend(PolicyKind::ablation_set().into_iter().skip(1));
+    v
+}
+
+#[test]
+fn every_policy_completes_every_request() {
+    let model = ModelSpec::mistral_7b();
+    let rps = exp::capacity_rps(&model, 0.5);
+    let trace = small_trace(400, rps, 7);
+    let shorts = trace.shorts().count();
+    let longs = trace.longs().count();
+    for kind in all_policies() {
+        let m = run(model.clone(), kind, &trace);
+        assert_eq!(
+            m.shorts_completed, shorts,
+            "{}: lost short requests",
+            kind.name()
+        );
+        assert_eq!(
+            m.longs_completed, longs,
+            "{}: lost long requests",
+            kind.name()
+        );
+        assert!(m.makespan > 0.0);
+    }
+}
+
+#[test]
+fn shorts_only_trace_has_no_preemptions_or_starvation() {
+    let model = ModelSpec::mistral_7b();
+    let rps = exp::capacity_rps(&model, 0.5);
+    let trace = small_trace(300, rps, 11).without_longs();
+    for kind in all_policies() {
+        let m = run(model.clone(), kind, &trace);
+        assert_eq!(m.preemptions, 0, "{}", kind.name());
+        assert_eq!(m.longs_total, 0);
+        assert_eq!(m.shorts_completed, trace.len());
+    }
+}
+
+#[test]
+fn fifo_long_blocks_shorts_behind_it() {
+    // Hand-built trace: a burst of shorts, one long, then more shorts.
+    // Under FIFO the tail shorts wait for the long; under PecSched they
+    // preempt its prefill and start almost immediately.
+    let mut reqs = Vec::new();
+    for i in 0..8 {
+        reqs.push(Request {
+            id: 0,
+            arrival: 0.1 * i as f64,
+            input_len: 1500,
+            output_len: 50,
+            is_long: false,
+        });
+    }
+    reqs.push(Request {
+        id: 0,
+        arrival: 1.0,
+        input_len: 300_000,
+        output_len: 100,
+        is_long: true,
+    });
+    for i in 0..16 {
+        reqs.push(Request {
+            id: 0,
+            arrival: 1.5 + 0.1 * i as f64,
+            input_len: 1500,
+            output_len: 50,
+            is_long: false,
+        });
+    }
+    let trace = Trace::new(reqs);
+    let model = ModelSpec::yi_34b();
+
+    let mut fifo = run(model.clone(), PolicyKind::Fifo, &trace);
+    let mut pec = run(
+        model,
+        PolicyKind::PecSched(AblationFlags::full()),
+        &trace,
+    );
+    let f99 = fifo.short_queue_delay.quantile(0.99);
+    let p99 = pec.short_queue_delay.quantile(0.99);
+    assert!(
+        p99 < 0.5 * f99,
+        "PecSched p99 {p99}s should be far below FIFO {f99}s"
+    );
+}
+
+#[test]
+fn pecsched_preempts_and_pe_ablation_does_not() {
+    let model = ModelSpec::phi3_14b();
+    let rps = exp::capacity_rps(&model, 0.7);
+    let trace = small_trace(600, rps, 13);
+    assert!(trace.longs().count() > 0, "trace needs longs");
+
+    let full = run(
+        model.clone(),
+        PolicyKind::PecSched(AblationFlags::full()),
+        &trace,
+    );
+    let no_pe = run(
+        model.clone(),
+        PolicyKind::PecSched(AblationFlags::no_preemption()),
+        &trace,
+    );
+    assert!(full.preemptions > 0, "expected preemptions under load");
+    assert_eq!(no_pe.preemptions, 0, "/PE must never preempt");
+}
+
+#[test]
+fn fsp_ablation_increases_preemptions() {
+    // Table 6's headline: slower ring-only prefill gets preempted more.
+    let model = ModelSpec::mistral_7b();
+    let rps = exp::capacity_rps(&model, 0.7);
+    let trace = small_trace(900, rps, 17);
+    let full = run(
+        model.clone(),
+        PolicyKind::PecSched(AblationFlags::full()),
+        &trace,
+    );
+    let fsp = run(
+        model,
+        PolicyKind::PecSched(AblationFlags::no_fast_sp()),
+        &trace,
+    );
+    assert!(
+        fsp.preemptions >= full.preemptions,
+        "/FSP {} should be >= PecSched {}",
+        fsp.preemptions,
+        full.preemptions
+    );
+}
+
+#[test]
+fn reservation_idles_more_than_fifo() {
+    let model = ModelSpec::yi_34b();
+    let rps = exp::capacity_rps(&model, 0.6);
+    let trace = small_trace(500, rps, 19);
+    let fifo = run(model.clone(), PolicyKind::Fifo, &trace);
+    let resv = run(model, PolicyKind::Reservation, &trace);
+    assert!(
+        resv.gpu_idle_rate > fifo.gpu_idle_rate,
+        "reservation {} vs fifo {}",
+        resv.gpu_idle_rate,
+        fifo.gpu_idle_rate
+    );
+}
+
+#[test]
+fn priority_starves_longs_under_steady_shorts() {
+    let model = ModelSpec::yi_34b();
+    let rps = exp::capacity_rps(&model, 0.8);
+    let trace = small_trace(1200, rps, 23);
+    assert!(trace.longs().count() >= 2);
+    let m = run(model, PolicyKind::Priority, &trace);
+    assert!(
+        m.starved_frac() > 0.5,
+        "priority should starve most longs, got {}",
+        m.starved_frac()
+    );
+}
+
+#[test]
+fn pecsched_low_delay_without_wrecking_long_jct() {
+    // §6.3's central claim in miniature: PecSched ≈ Priority on short
+    // delay, far better than FIFO, with long JCT within a modest factor
+    // of FIFO (not unbounded like Priority).
+    let model = ModelSpec::phi3_14b();
+    let rps = exp::capacity_rps(&model, 0.7);
+    let trace = small_trace(900, rps, 29);
+    let mut fifo = run(model.clone(), PolicyKind::Fifo, &trace);
+    let mut pec = run(
+        model.clone(),
+        PolicyKind::PecSched(AblationFlags::full()),
+        &trace,
+    );
+    let f99 = fifo.short_queue_delay.quantile(0.99);
+    let p99 = pec.short_queue_delay.quantile(0.99);
+    assert!(p99 <= f99, "pecsched p99 {p99} vs fifo {f99}");
+
+    let fifo_jct = fifo.long_jct.mean();
+    let pec_jct = pec.long_jct.mean();
+    assert!(
+        pec_jct < 2.0 * fifo_jct,
+        "long JCT blowup: pecsched {pec_jct} vs fifo {fifo_jct}"
+    );
+}
+
+#[test]
+fn queueing_delays_are_nonnegative_and_finite() {
+    let model = ModelSpec::mistral_7b();
+    let rps = exp::capacity_rps(&model, 0.7);
+    let trace = small_trace(400, rps, 31);
+    for kind in all_policies() {
+        let mut m = run(model.clone(), kind, &trace);
+        if !m.short_queue_delay.is_empty() {
+            let p = m.short_queue_delay.paper_percentiles();
+            assert!(p[0] >= -1e-9, "{}: negative delay", kind.name());
+            assert!(p[4].is_finite());
+            for w in p.windows(2) {
+                assert!(w[0] <= w[1] + 1e-12);
+            }
+        }
+    }
+}
+
+#[test]
+fn metrics_consistency_across_policies() {
+    let model = ModelSpec::mistral_7b();
+    let rps = exp::capacity_rps(&model, 0.6);
+    let trace = small_trace(300, rps, 37);
+    for kind in all_policies() {
+        let m = run(model.clone(), kind, &trace);
+        // every completed short contributes one delay and one jct sample
+        assert_eq!(m.short_jct.len(), m.shorts_completed, "{}", kind.name());
+        assert_eq!(
+            m.short_queue_delay.len(),
+            m.shorts_completed,
+            "{}",
+            kind.name()
+        );
+        assert!(m.gpu_idle_rate >= 0.0 && m.gpu_idle_rate <= 1.0);
+        assert!(m.short_rps() > 0.0);
+    }
+}
