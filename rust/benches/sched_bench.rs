@@ -1,16 +1,23 @@
 //! Micro-benchmarks of the scheduling-decision hot paths: placement-ladder
 //! cost per arrival, replica-set selection, SP planning, trace generation
 //! and the cost-model closed forms. These are the Table 7 "scheduling
-//! decision time" constituents.
+//! decision time" constituents. Results are written to `BENCH_sched.json`
+//! so the decision-path perf trajectory is tracked across PRs.
+//!
+//! `choose_group` is benched in both forms: the O(R + n log n) fast path
+//! with hoisted per-node capacities, and the retained naive scan
+//! (`choose_group_scan`) whose cross-node comparator recounts node
+//! capacity per comparison — the before/after pair for the 8192-GPU cell.
 
 use pecsched::cluster::Topology;
 use pecsched::config::{ClusterSpec, ModelSpec};
 use pecsched::costmodel::{sp, CostModel};
 use pecsched::trace::TraceConfig;
-use pecsched::util::{Bench, Rng};
+use pecsched::util::{write_json, Bench, BenchReport, Rng};
 
 fn main() {
     println!("--- sched_bench: decision-path microbenchmarks ---");
+    let mut reports: Vec<BenchReport> = Vec::new();
 
     // choose_group on a large cluster (the Fig 15 scaling driver).
     for gpus in [32usize, 512, 8192] {
@@ -20,35 +27,57 @@ fn main() {
         let mut rng = Rng::seed_from_u64(1);
         let eligible: Vec<bool> = (0..n).map(|_| rng.f64() < 0.7).collect();
         let loads: Vec<u64> = (0..n).map(|_| rng.below(100_000) as u64).collect();
-        Bench::new(&format!("choose_group/{gpus}gpus/4replicas"))
-            .budget_ms(1000)
-            .run(|| topo.choose_group(4, &eligible, &loads));
+        reports.push(
+            Bench::new(&format!("choose_group/{gpus}gpus/4replicas"))
+                .budget_ms(1000)
+                .run(|| topo.choose_group(4, &eligible, &loads)),
+        );
+        // The naive scan it replaced, kept as the before-side baseline —
+        // benched at every size so BENCH_sched.json records both halves
+        // of the regression gate (the 8192-GPU cell is the headline).
+        reports.push(
+            Bench::new(&format!("choose_group_scan/{gpus}gpus/4replicas"))
+                .budget_ms(1000)
+                .min_iters(2)
+                .run(|| topo.choose_group_scan(4, &eligible, &loads)),
+        );
     }
 
     // Fast-SP planning (§5.3's four-combination evaluation).
     let cm = CostModel::new(ModelSpec::llama31_70b(), Default::default());
-    Bench::new("plan_fast_sp/llama70b/400k")
-        .budget_ms(1000)
-        .run(|| sp::plan_fast_sp(&cm, 400_000, 4, 8));
+    reports.push(
+        Bench::new("plan_fast_sp/llama70b/400k")
+            .budget_ms(1000)
+            .run(|| sp::plan_fast_sp(&cm, 400_000, 4, 8)),
+    );
 
     // Cost-model closed forms (called on every simulated event).
-    Bench::new("short_prefill_time/2k")
-        .budget_ms(500)
-        .run(|| cm.short_prefill_time(2048));
-    Bench::new("decode_iter_time/b32")
-        .budget_ms(500)
-        .run(|| cm.decode_iter_time(32, 32 * 1300));
+    reports.push(
+        Bench::new("short_prefill_time/2k")
+            .budget_ms(500)
+            .run(|| cm.short_prefill_time(2048)),
+    );
+    reports.push(
+        Bench::new("decode_iter_time/b32")
+            .budget_ms(500)
+            .run(|| cm.decode_iter_time(32, 32 * 1300)),
+    );
 
     // Trace generation (workload generator throughput).
-    Bench::new("trace_gen/20k_requests")
-        .budget_ms(2000)
-        .min_iters(3)
-        .run(|| {
-            TraceConfig {
-                n_requests: 20_000,
-                ..TraceConfig::default()
-            }
-            .generate()
-            .len()
-        });
+    reports.push(
+        Bench::new("trace_gen/20k_requests")
+            .budget_ms(2000)
+            .min_iters(3)
+            .run(|| {
+                TraceConfig {
+                    n_requests: 20_000,
+                    ..TraceConfig::default()
+                }
+                .generate()
+                .len()
+            }),
+    );
+
+    write_json("BENCH_sched.json", "sched", &reports).expect("write BENCH_sched.json");
+    println!("wrote BENCH_sched.json ({} cells)", reports.len());
 }

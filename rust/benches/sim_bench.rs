@@ -3,13 +3,16 @@
 //! Reports events/second of the discrete-event engine (the L3 perf target
 //! in DESIGN.md §8) and per-cell wall time of the experiment grids.
 //! criterion is unavailable offline; the in-crate harness (util::Bench)
-//! warms up and reports mean/p50/p99/min.
+//! warms up and reports mean/p50/p99/min. Results are also written to
+//! `BENCH_sim.json` so the perf trajectory is tracked across PRs — the
+//! fig15 cell (512 GPUs) is the regression gate for the incremental
+//! replica index (dispatch used to rescan all replicas per arrival).
 
 use pecsched::config::{AblationFlags, ModelSpec, PolicyKind};
 use pecsched::exp::capacity_rps;
-use pecsched::sim::{run_sim, SimConfig, Simulation};
+use pecsched::sim::{SimConfig, Simulation};
 use pecsched::trace::TraceConfig;
-use pecsched::util::Bench;
+use pecsched::util::{write_json, Bench, BenchReport};
 
 fn trace(model: &ModelSpec, n: usize, seed: u64) -> pecsched::trace::Trace {
     TraceConfig {
@@ -22,8 +25,30 @@ fn trace(model: &ModelSpec, n: usize, seed: u64) -> pecsched::trace::Trace {
     .generate()
 }
 
+/// Run one full simulation per iteration, recording the event count so the
+/// report carries events/second alongside wall time.
+fn sim_cell(
+    name: &str,
+    budget_ms: u64,
+    min_iters: usize,
+    mut make: impl FnMut() -> Simulation,
+) -> BenchReport {
+    let mut events_per_run = 0u64;
+    let r = Bench::new(name)
+        .budget_ms(budget_ms)
+        .min_iters(min_iters)
+        .run(|| {
+            let mut sim = make();
+            let m = sim.run();
+            events_per_run = sim.state.events_processed;
+            m.shorts_completed
+        });
+    r.with_events_per_run(events_per_run)
+}
+
 fn main() {
     println!("--- sim_bench: discrete-event engine throughput ---");
+    let mut reports: Vec<BenchReport> = Vec::new();
 
     // Fig 9-11 cell: one full (model, policy) simulation.
     for kind in [
@@ -34,49 +59,46 @@ fn main() {
     ] {
         let model = ModelSpec::mistral_7b();
         let t = trace(&model, 4000, 1);
-        Bench::new(&format!("fig9_cell/{}/4k_reqs", kind.name()))
-            .budget_ms(3000)
-            .min_iters(3)
-            .run(|| {
+        reports.push(sim_cell(
+            &format!("fig9_cell/{}/4k_reqs", kind.name()),
+            3000,
+            3,
+            || {
                 let cfg = match kind {
                     PolicyKind::PecSched(f) => SimConfig::pecsched(model.clone(), f),
                     _ => SimConfig::baseline(model.clone()),
                 };
-                run_sim(cfg, &t, kind).shorts_completed
-            });
+                Simulation::new(cfg, &t, kind)
+            },
+        ));
     }
 
     // Raw event throughput (the §Perf headline number).
     let model = ModelSpec::mistral_7b();
     let t = trace(&model, 8000, 2);
     let kind = PolicyKind::PecSched(AblationFlags::full());
-    let mut events_per_run = 0u64;
-    let r = Bench::new("event_engine/pecsched/8k_reqs")
-        .budget_ms(4000)
-        .min_iters(3)
-        .run(|| {
-            let cfg = SimConfig::pecsched(model.clone(), AblationFlags::full());
-            let mut sim = Simulation::new(cfg, &t, kind);
-            let m = sim.run();
-            events_per_run = sim.state.events_processed;
-            m.shorts_completed
-        });
-    println!(
-        "  -> {:.2}M events/s ({} events per run)",
-        events_per_run as f64 / r.mean_s / 1e6,
-        events_per_run
-    );
+    let r = sim_cell("event_engine/pecsched/8k_reqs", 4000, 3, || {
+        Simulation::new(
+            SimConfig::pecsched(model.clone(), AblationFlags::full()),
+            &t,
+            kind,
+        )
+    });
+    if let Some(eps) = r.events_per_s {
+        println!("  -> {:.2}M events/s", eps / 1e6);
+    }
+    reports.push(r);
 
-    // Fig 15 cell: big-cluster scheduling (dispatch scan cost dominates).
+    // Fig 15 cell: big-cluster scheduling. Before the replica index this
+    // cell was dominated by O(R) dispatch scans at 512 GPUs.
     let big = ModelSpec::llama31_70b();
     let t = trace(&big, 2000, 3);
-    Bench::new("fig15_cell/llama70b/512gpu/2k_reqs")
-        .budget_ms(4000)
-        .min_iters(2)
-        .run(|| {
-            let mut cfg = SimConfig::pecsched(big.clone(), AblationFlags::full());
-            cfg.cluster = pecsched::config::ClusterSpec::with_total_gpus(512);
-            run_sim(cfg, &t, PolicyKind::PecSched(AblationFlags::full()))
-                .shorts_completed
-        });
+    reports.push(sim_cell("fig15_cell/llama70b/512gpu/2k_reqs", 4000, 2, || {
+        let mut cfg = SimConfig::pecsched(big.clone(), AblationFlags::full());
+        cfg.cluster = pecsched::config::ClusterSpec::with_total_gpus(512);
+        Simulation::new(cfg, &t, PolicyKind::PecSched(AblationFlags::full()))
+    }));
+
+    write_json("BENCH_sim.json", "sim", &reports).expect("write BENCH_sim.json");
+    println!("wrote BENCH_sim.json ({} cells)", reports.len());
 }

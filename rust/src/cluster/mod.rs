@@ -24,6 +24,9 @@ pub struct Topology {
     pub nodes: usize,
     pub gpus_per_node: usize,
     pub replicas: Vec<ReplicaMeta>,
+    /// Replica ids bucketed by node (ascending within each node), so
+    /// per-node walks are O(replicas-on-node) instead of O(R).
+    node_members: Vec<Vec<ReplicaId>>,
 }
 
 impl Topology {
@@ -35,8 +38,14 @@ impl Topology {
         );
         let per_node = cluster.gpus_per_node / model.tp;
         let mut replicas = Vec::new();
+        // (vec![v; n] clones and clones drop capacity, so build each
+        // bucket's allocation explicitly.)
+        let mut node_members: Vec<Vec<ReplicaId>> = (0..cluster.nodes)
+            .map(|_| Vec::with_capacity(per_node))
+            .collect();
         for node in 0..cluster.nodes {
             for _ in 0..per_node {
+                node_members[node].push(replicas.len());
                 replicas.push(ReplicaMeta {
                     id: replicas.len(),
                     node,
@@ -48,6 +57,7 @@ impl Topology {
             nodes: cluster.nodes,
             gpus_per_node: cluster.gpus_per_node,
             replicas,
+            node_members,
         }
     }
 
@@ -56,7 +66,7 @@ impl Topology {
     }
 
     pub fn replicas_on_node(&self, node: usize) -> impl Iterator<Item = &ReplicaMeta> {
-        self.replicas.iter().filter(move |r| r.node == node)
+        self.node_members[node].iter().map(move |&id| &self.replicas[id])
     }
 
     /// GPU count per replica, for idle-rate weighting.
@@ -69,7 +79,97 @@ impl Topology {
     /// within one node; across valid combinations minimise total local
     /// queue length (`queue_tokens[id]`). Returns `None` when fewer than
     /// `n` replicas are eligible.
+    ///
+    /// Per-node eligible capacities are computed once up front and the
+    /// top-`n` is taken by selection, so the whole call is
+    /// O(R + per_node·log(per_node) + n·log n) — the seed implementation
+    /// recounted a node's eligible replicas inside the cross-node sort
+    /// comparator (O(R) per comparison, effectively quadratic; the
+    /// `choose_group/8192gpus` cell of `sched_bench`). Debug builds assert
+    /// the result equals [`Topology::choose_group_scan`].
     pub fn choose_group(
+        &self,
+        n: usize,
+        eligible: &[bool],
+        queue_tokens: &[u64],
+    ) -> Option<Vec<ReplicaId>> {
+        assert_eq!(eligible.len(), self.n_replicas());
+        assert_eq!(queue_tokens.len(), self.n_replicas());
+        if n == 0 {
+            return Some(Vec::new());
+        }
+
+        // Hoisted: per-node eligible counts, one pass over the replicas.
+        let mut caps = vec![0usize; self.nodes];
+        let mut n_eligible = 0usize;
+        for r in &self.replicas {
+            if eligible[r.id] {
+                caps[r.node] += 1;
+                n_eligible += 1;
+            }
+        }
+
+        // Single-node candidates: any node with >= n eligible replicas.
+        // Node member lists are pre-bucketed, so each node costs its own
+        // size, not O(R). The total key (queue, id) reproduces the seed's
+        // stable sort-by-queue over an id-ascending list.
+        let mut best_single: Option<(u64, Vec<ReplicaId>)> = None;
+        let mut cands: Vec<ReplicaId> = Vec::new();
+        for node in 0..self.nodes {
+            if caps[node] < n {
+                continue;
+            }
+            cands.clear();
+            cands.extend(
+                self.node_members[node].iter().copied().filter(|&id| eligible[id]),
+            );
+            if cands.len() > n {
+                cands.select_nth_unstable_by_key(n - 1, |&id| (queue_tokens[id], id));
+                cands.truncate(n);
+            }
+            cands.sort_unstable_by_key(|&id| (queue_tokens[id], id));
+            let cost: u64 = cands.iter().map(|&id| queue_tokens[id]).sum();
+            if best_single.as_ref().map_or(true, |(c, _)| cost < *c) {
+                best_single = Some((cost, cands.clone()));
+            }
+        }
+        let got = if let Some((_, group)) = best_single {
+            Some(group)
+        } else if n_eligible < n {
+            None
+        } else {
+            // Cross-node: rank replicas by (node eligible-capacity desc,
+            // node asc, queue asc, id asc) and select the top n. The id
+            // tie-break makes the key total, so unstable selection equals
+            // the seed's stable comparator sort.
+            let key = |id: ReplicaId| {
+                let node = self.replicas[id].node;
+                (std::cmp::Reverse(caps[node]), node, queue_tokens[id], id)
+            };
+            let mut all: Vec<ReplicaId> = (0..self.n_replicas())
+                .filter(|&id| eligible[id])
+                .collect();
+            if all.len() > n {
+                all.select_nth_unstable_by_key(n - 1, |&id| key(id));
+                all.truncate(n);
+            }
+            all.sort_unstable_by_key(|&id| key(id));
+            Some(all)
+        };
+        debug_assert_eq!(
+            got,
+            self.choose_group_scan(n, eligible, queue_tokens),
+            "choose_group fast path diverged from the scan oracle"
+        );
+        got
+    }
+
+    /// The seed's naive replica-set selection, retained verbatim as the
+    /// equivalence oracle for [`Topology::choose_group`] (and as the
+    /// before-side of the `sched_bench` comparison). Its cross-node sort
+    /// recounts per-node eligible capacity inside the comparator — the
+    /// effectively-quadratic behaviour the fast path removes.
+    pub fn choose_group_scan(
         &self,
         n: usize,
         eligible: &[bool],

@@ -31,9 +31,12 @@ impl Policy for Fifo {
             if st.reqs[head].req.is_long {
                 // Strict FIFO: the long request must start before anything
                 // behind it. It needs its full replica set idle; nothing
-                // else is dispatched while it waits.
-                let placed =
-                    try_start_long(st, head, usize::MAX, &|r| r.is_idle() && !r.dedicated_decode);
+                // else is dispatched while it waits. The index's idle
+                // count lets the wait bail out in O(1).
+                let avail = st.index.idle_count();
+                let placed = try_start_long(st, head, usize::MAX, avail, &|r| {
+                    r.is_idle() && !r.dedicated_decode
+                });
                 match placed {
                     Some(displaced) => {
                         debug_assert!(displaced.is_empty(), "idle replicas had queues");
@@ -43,11 +46,9 @@ impl Policy for Fifo {
                 }
             } else {
                 // Join the shortest local queue (token count, [36]) among
-                // replicas not owned by a long request.
-                let rid = st.least_loaded_prefill(|r| {
-                    !r.dedicated_decode && r.long_group.is_none()
-                });
-                match rid {
+                // replicas not owned by a long request — O(log R) via the
+                // replica index.
+                match st.pick_least_loaded_ordinary() {
                     Some(rid) => {
                         st.enqueue_short_prefill(rid, head);
                         self.global.pop_front();
@@ -56,5 +57,9 @@ impl Policy for Fifo {
                 }
             }
         }
+    }
+
+    fn has_pending(&self) -> bool {
+        !self.global.is_empty()
     }
 }

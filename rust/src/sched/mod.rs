@@ -26,10 +26,19 @@ pub trait Policy {
     /// Re-examine queues after any state change (replica freed, prefill
     /// finished, long released, ...) and dispatch whatever now fits.
     fn dispatch(&mut self, st: &mut SimState);
+
+    /// Anything waiting in the policy's own queues? When false, `dispatch`
+    /// is a no-op and the engine skips the call (and its wall-clock
+    /// attribution timers) entirely.
+    fn has_pending(&self) -> bool {
+        true
+    }
 }
 
-/// Instantiate the policy for a [`PolicyKind`].
-pub fn build_policy(kind: PolicyKind, st: &SimState) -> Box<dyn Policy> {
+/// Instantiate the policy for a [`PolicyKind`]. Takes the state mutably so
+/// partition-based policies (Reservation) can tag their static split into
+/// the replica index.
+pub fn build_policy(kind: PolicyKind, st: &mut SimState) -> Box<dyn Policy> {
     match kind {
         PolicyKind::Fifo => Box::new(Fifo::new()),
         PolicyKind::Reservation => Box::new(Reservation::new(st)),
@@ -42,19 +51,28 @@ pub fn build_policy(kind: PolicyKind, st: &SimState) -> Box<dyn Policy> {
 /// Returns displaced shorts (which the caller must re-place) or `None`
 /// when fewer than the needed replicas are eligible. `cap` bounds the SP
 /// degree (Reservation can only hand out its pool; others pass MAX and the
-/// degree is memory/speed-driven).
+/// degree is memory/speed-driven). `avail` is the caller's index-derived
+/// count of eligible replicas: when it cannot cover the SP degree the
+/// attempt bails out in O(1) instead of building the O(R) eligibility
+/// mask — the common case while a long waits at the head of a queue.
 pub(crate) fn try_start_long(
     st: &mut SimState,
     req: ReqId,
     cap: usize,
+    avail: usize,
     eligible: &dyn Fn(&crate::sim::ReplicaRt) -> bool,
 ) -> Option<Vec<ReqId>> {
     let len = st.reqs[req].req.input_len;
     let n = st.replicas_needed(len).min(cap).max(1);
-    let mask: Vec<bool> = st.replicas.iter().map(|r| !r.down && eligible(r)).collect();
-    if mask.iter().filter(|&&e| e).count() < n {
+    debug_assert_eq!(
+        avail,
+        st.replicas.iter().filter(|r| !r.down && eligible(r)).count(),
+        "index availability count diverged from the eligibility mask"
+    );
+    if avail < n {
         return None;
     }
+    let mask: Vec<bool> = st.replicas.iter().map(|r| !r.down && eligible(r)).collect();
     let loads: Vec<u64> = st
         .replicas
         .iter()

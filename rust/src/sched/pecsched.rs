@@ -82,38 +82,27 @@ impl PecSched {
         }
     }
 
-    /// The placement ladder. Returns false only when no replica can even
-    /// hold the request in a queue (all ordinary replicas long-occupied
-    /// and preemption is off in a phase that forbids queueing... which
-    /// reduces to: park it in the global pending queue).
+    /// The placement ladder, every rung an O(log R) index lookup (each
+    /// cross-checked against the naive scan it replaced in debug builds).
+    /// Returns false only when no replica can even hold the request in a
+    /// queue (all ordinary replicas long-occupied and preemption is off in
+    /// a phase that forbids queueing... which reduces to: park it in the
+    /// global pending queue).
     fn try_place_short(&self, st: &mut SimState, req: ReqId) -> bool {
         let len = st.reqs[req].req.input_len;
 
         // ② idle replica, no long occupancy.
-        if let Some(rid) = st.least_loaded_prefill(|r| {
-            !r.dedicated_decode && r.long_group.is_none() && r.is_idle()
-        }) {
+        if let Some(rid) = st.pick_idle_ordinary() {
             st.enqueue_short_prefill(rid, req);
             return true;
         }
 
-        // ③④ colocate with a long request's decode, within budget.
+        // ③④ colocate with a long request's decode, within budget: the
+        // lightest-budget candidate; the budget cap is uniform, so if it
+        // does not fit nothing does.
         if self.flags.colocation {
             let budget = st.params.colocate_max_tokens as u64;
-            let cand = st
-                .replicas
-                .iter()
-                .filter(|r| {
-                    !r.dedicated_decode
-                        && r.colocated_tokens + len as u64 <= budget
-                        && r.long_group
-                            .and_then(|g| st.groups[g].as_ref())
-                            .map(|g| matches!(g.phase, LongPhase::Decode { .. }))
-                            .unwrap_or(false)
-                })
-                .min_by_key(|r| (r.colocated_tokens, r.id))
-                .map(|r| r.id);
-            if let Some(rid) = cand {
+            if let Some(rid) = st.pick_coloc_candidate(len, budget) {
                 st.charge_colocation(rid, req);
                 st.enqueue_short_prefill(rid, req);
                 return true;
@@ -125,9 +114,7 @@ impl PecSched {
         // preemption is for genuine blocking (§5: reduce the duration and
         // frequency of preemptions).
         let per_token = st.cm.short_prefill_time(1100) / 1100.0;
-        if let Some(rid) =
-            st.least_loaded_prefill(|r| !r.dedicated_decode && r.long_group.is_none())
-        {
+        if let Some(rid) = st.pick_least_loaded_ordinary() {
             let wait =
                 st.replicas[rid].prefill_load_tokens(&st.reqs) as f64 * per_token;
             if wait <= st.params.preempt_wait_threshold {
@@ -137,14 +124,12 @@ impl PecSched {
         }
 
         // ⑤ preempt a long prefill: lightest-loaded member replica across
-        // all long groups, balancing the preempting batch (§5.2).
+        // all long groups, balancing the preempting batch (§5.2). The
+        // index walks members in load order; the time-gated quantum check
+        // stays a query-time predicate.
         if self.flags.preemption {
-            if let Some(rid) = st
-                .replicas
-                .iter()
-                .filter(|r| !r.dedicated_decode && self.preemptable(st, r.id))
-                .min_by_key(|r| (r.prefill_load_tokens(&st.reqs), r.id))
-                .map(|r| r.id)
+            if let Some(rid) =
+                st.pick_preemptable(|st, rid| self.preemptable(st, rid))
             {
                 st.enqueue_short_prefill(rid, req);
                 return true;
@@ -152,9 +137,7 @@ impl PecSched {
         }
 
         // Fallback: lightest ordinary local queue (busy but long-free).
-        if let Some(rid) =
-            st.least_loaded_prefill(|r| !r.dedicated_decode && r.long_group.is_none())
-        {
+        if let Some(rid) = st.pick_least_loaded_ordinary() {
             st.enqueue_short_prefill(rid, req);
             return true;
         }
@@ -163,7 +146,7 @@ impl PecSched {
         // lightest long-occupied replica; the prefill waits for the long
         // to finish (no preemption).
         if !self.flags.preemption {
-            if let Some(rid) = st.least_loaded_prefill(|r| !r.dedicated_decode) {
+            if let Some(rid) = st.pick_any_ordinary_least_loaded() {
                 st.enqueue_short_prefill(rid, req);
                 return true;
             }
@@ -174,7 +157,8 @@ impl PecSched {
 
     fn dispatch_longs(&mut self, st: &mut SimState) {
         while let Some(&head) = self.pending_longs.front() {
-            let placed = try_start_long(st, head, usize::MAX, &|r| {
+            let avail = st.index.long_free_count();
+            let placed = try_start_long(st, head, usize::MAX, avail, &|r| {
                 !r.dedicated_decode && r.long_group.is_none()
             });
             match placed {
@@ -211,5 +195,9 @@ impl Policy for PecSched {
             }
         }
         self.dispatch_longs(st);
+    }
+
+    fn has_pending(&self) -> bool {
+        !self.pending_shorts.is_empty() || !self.pending_longs.is_empty()
     }
 }

@@ -32,11 +32,10 @@ impl Policy for Priority {
     }
 
     fn dispatch(&mut self, st: &mut SimState) {
-        // High priority: shorts go straight to the lightest local queue.
+        // High priority: shorts go straight to the lightest local queue
+        // (O(log R) via the replica index).
         while let Some(&head) = self.shorts.front() {
-            let rid = st
-                .least_loaded_prefill(|r| !r.dedicated_decode && r.long_group.is_none());
-            match rid {
+            match st.pick_least_loaded_ordinary() {
                 Some(rid) => {
                     st.enqueue_short_prefill(rid, head);
                     self.shorts.pop_front();
@@ -45,10 +44,13 @@ impl Policy for Priority {
             }
         }
         // Low priority: longs only start when a full replica set is idle
-        // *right now* — the short stream normally never lets this happen.
+        // *right now* — the short stream normally never lets this happen,
+        // so the O(1) idle-count bail-out is the hot path here.
         while let Some(&head) = self.longs.front() {
-            let placed =
-                try_start_long(st, head, usize::MAX, &|r| r.is_idle() && !r.dedicated_decode);
+            let avail = st.index.idle_count();
+            let placed = try_start_long(st, head, usize::MAX, avail, &|r| {
+                r.is_idle() && !r.dedicated_decode
+            });
             match placed {
                 Some(displaced) => {
                     debug_assert!(displaced.is_empty());
@@ -57,5 +59,9 @@ impl Policy for Priority {
                 None => break,
             }
         }
+    }
+
+    fn has_pending(&self) -> bool {
+        !self.shorts.is_empty() || !self.longs.is_empty()
     }
 }

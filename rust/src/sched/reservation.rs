@@ -16,12 +16,15 @@ pub const RESERVE_FOR_TOKENS: u32 = 500_000;
 #[derive(Debug)]
 pub struct Reservation {
     long_pool: Vec<ReplicaId>,
+    /// O(1) pool membership (replaces `Vec::contains` in the dispatch
+    /// closures).
+    in_pool: Vec<bool>,
     shorts: VecDeque<ReqId>,
     longs: VecDeque<ReqId>,
 }
 
 impl Reservation {
-    pub fn new(st: &SimState) -> Self {
+    pub fn new(st: &mut SimState) -> Self {
         let n_total = st.topo.n_replicas();
         // Llumnix-style provisioning: enough capacity that a 500K-token
         // request never waits on another long request already in flight —
@@ -33,8 +36,13 @@ impl Reservation {
         // Reserve the first `need` replicas (placement is immaterial in a
         // static partition; these stay together node-wise by construction).
         let long_pool: Vec<ReplicaId> = (0..need).collect();
+        // Tag the split into the replica index so each partition answers
+        // its own least-loaded / idle queries in O(log R).
+        st.index.set_partition(&long_pool);
+        let in_pool: Vec<bool> = (0..n_total).map(|id| id < need).collect();
         Self {
             long_pool,
+            in_pool,
             shorts: VecDeque::new(),
             longs: VecDeque::new(),
         }
@@ -45,7 +53,7 @@ impl Reservation {
     }
 
     fn in_long_pool(&self, rid: ReplicaId) -> bool {
-        self.long_pool.contains(&rid)
+        self.in_pool[rid]
     }
 }
 
@@ -60,15 +68,10 @@ impl Policy for Reservation {
     }
 
     fn dispatch(&mut self, st: &mut SimState) {
-        // Shorts: immediate dispatch within the short partition.
+        // Shorts: immediate dispatch within the short partition (index
+        // partition 0 — the pool was tagged as partition 1 at setup).
         while let Some(&head) = self.shorts.front() {
-            let pool = &self.long_pool;
-            let rid = st.least_loaded_prefill(|r| {
-                !r.dedicated_decode
-                    && r.long_group.is_none()
-                    && !pool.contains(&r.id)
-            });
-            match rid {
+            match st.pick_least_loaded_ordinary_in(0) {
                 Some(rid) => {
                     st.enqueue_short_prefill(rid, head);
                     self.shorts.pop_front();
@@ -76,12 +79,19 @@ impl Policy for Reservation {
                 None => break,
             }
         }
-        // Longs: FIFO within the reserved partition.
+        // Longs: FIFO within the reserved partition. The pool is borrowed
+        // (no per-dispatch clone) and membership is an O(1) lookup; the
+        // partition's idle count bails the attempt out in O(1).
         while let Some(&head) = self.longs.front() {
-            let pool: Vec<ReplicaId> = self.long_pool.clone();
-            let placed = try_start_long(st, head, pool.len(), &|r| {
-                r.is_idle() && pool.contains(&r.id)
-            });
+            let in_pool = &self.in_pool;
+            let avail = st.index.idle_count_in(1);
+            let placed = try_start_long(
+                st,
+                head,
+                self.long_pool.len(),
+                avail,
+                &|r| r.is_idle() && in_pool[r.id],
+            );
             match placed {
                 Some(displaced) => {
                     debug_assert!(displaced.is_empty());
@@ -90,6 +100,10 @@ impl Policy for Reservation {
                 None => break,
             }
         }
+    }
+
+    fn has_pending(&self) -> bool {
+        !self.shorts.is_empty() || !self.longs.is_empty()
     }
 }
 

@@ -20,8 +20,8 @@ pub struct Simulation {
 
 impl Simulation {
     pub fn new(cfg: SimConfig, trace: &Trace, kind: PolicyKind) -> Self {
-        let state = SimState::new(&cfg, &trace.requests);
-        let policy = build_policy(kind, &state);
+        let mut state = SimState::new(&cfg, &trace.requests);
+        let policy = build_policy(kind, &mut state);
         Self {
             state,
             policy,
@@ -99,21 +99,25 @@ impl Simulation {
 
     /// Run `dispatch` under a wall-clock timer, attributing the cost to the
     /// requests whose prefill started during this call (Table 7's
-    /// "scheduling decision time").
+    /// "scheduling decision time"). When the policy has nothing queued,
+    /// `dispatch` is a no-op and the whole call — including the pair of
+    /// `Instant::now()` reads — is skipped.
     fn timed_dispatch(policy: &mut dyn Policy, st: &mut SimState) {
+        if !policy.has_pending() {
+            return;
+        }
         st.recent_prefill_starts.clear();
         let t0 = Instant::now();
         policy.dispatch(st);
         let ns = t0.elapsed().as_nanos() as u64;
-        let started = std::mem::take(&mut st.recent_prefill_starts);
-        if !started.is_empty() {
-            let share = ns / started.len() as u64;
-            for i in &started {
-                st.reqs[*i].sched_ns += share;
+        if !st.recent_prefill_starts.is_empty() {
+            let share = ns / st.recent_prefill_starts.len() as u64;
+            for i in 0..st.recent_prefill_starts.len() {
+                let req = st.recent_prefill_starts[i];
+                st.reqs[req].sched_ns += share;
             }
+            st.recent_prefill_starts.clear();
         }
-        st.recent_prefill_starts = started;
-        st.recent_prefill_starts.clear();
     }
 
     fn collect(&mut self) -> RunMetrics {

@@ -1,0 +1,407 @@
+//! Incremental replica index: the ordered sets behind every O(log R)
+//! placement decision.
+//!
+//! Every rung of the PecSched placement ladder — and the baselines'
+//! least-loaded scans — used to be an O(R) filtered min-scan over all
+//! replicas per arrival. At 512+ GPUs the dispatch scans dominate the
+//! simulator's wall time (the fig15 cell), so the index maintains, in
+//! lockstep with every [`super::SimState`] mutation:
+//!
+//! * **idle ordinary replicas** (rung ②) — a set of ids per partition;
+//!   idle replicas all have zero prefill load, so ordering by id alone
+//!   reproduces the scan's `(load, id)` tie-break;
+//! * **ordinary long-free replicas** keyed by `prefill_load_tokens`
+//!   (bounded-wait rung, fallback rung ⑤, FIFO/Priority/Reservation
+//!   short dispatch), split by a static partition tag so Reservation's
+//!   short/long pools query their own slice without filtering;
+//! * **colocation candidates** — replicas whose long occupant is in its
+//!   decode phase, keyed by `colocated_tokens` (rung ③④); the budget
+//!   check is a threshold, so the global minimum decides feasibility;
+//! * **long-group members** keyed by `prefill_load_tokens` (preemption
+//!   rung ⑤ and the /PE everything-occupied fallback); the time-gated
+//!   `preemptable` predicate is applied at query time by walking the
+//!   set in key order, so the first accepted entry equals the scan's
+//!   filtered minimum;
+//! * **dedicated decode replicas** keyed by `decode_load_tokens`
+//!   (the per-prefill-completion migration target pick).
+//!
+//! The index never decides anything by itself: [`super::SimState`]
+//! recomputes a replica's [`IndexEntry`] after each mutation and calls
+//! [`SchedIndex::apply`], which diffs against the previously applied
+//! entry and touches only the sets that changed (O(log R) per update,
+//! O(1) when nothing changed). In debug builds every indexed query is
+//! cross-checked against the retained naive scan by `debug_assert!` —
+//! the equivalence oracle exercised by `rust/tests/prop_tests.rs`.
+
+use std::collections::BTreeSet;
+
+use crate::cluster::ReplicaId;
+
+use super::state::{LongGroup, LongPhase, ReplicaRt, ReqRt};
+
+/// Number of static partitions (0 = ordinary; 1 = a policy-reserved pool,
+/// used by Reservation's long partition).
+pub const N_PARTITIONS: usize = 2;
+
+/// Snapshot of where one replica belongs in the index. `None` / `false`
+/// means "absent from that set".
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct IndexEntry {
+    /// Member of the idle-ordinary set (implies `long_free_key == Some(0)`).
+    pub idle: bool,
+    /// Ordinary (no long occupant) — keyed by prefill load tokens.
+    pub long_free_key: Option<u64>,
+    /// Long occupant in decode phase — keyed by colocated tokens.
+    pub coloc_key: Option<u64>,
+    /// Member of a live long group — keyed by prefill load tokens.
+    pub member_key: Option<u64>,
+    /// Dedicated decode replica — keyed by decode load tokens.
+    pub decode_key: Option<u64>,
+}
+
+impl IndexEntry {
+    /// Compute the entry for a replica from current simulation state.
+    /// This is the single definition of set membership; the naive-scan
+    /// oracles in `state.rs` must stay predicate-for-predicate identical.
+    pub fn compute(r: &ReplicaRt, groups: &[Option<LongGroup>], reqs: &[ReqRt]) -> Self {
+        if r.down {
+            return Self::default();
+        }
+        if r.dedicated_decode {
+            return Self {
+                decode_key: Some(r.decode_load_tokens(reqs)),
+                ..Self::default()
+            };
+        }
+        let load = r.prefill_load_tokens(reqs);
+        match r.long_group {
+            None => Self {
+                idle: r.is_idle(),
+                long_free_key: Some(load),
+                ..Self::default()
+            },
+            Some(gid) => {
+                let g = groups[gid].as_ref();
+                debug_assert!(g.is_some(), "replica points at a released group");
+                let coloc = g
+                    .map(|g| matches!(g.phase, LongPhase::Decode { .. }))
+                    .unwrap_or(false);
+                Self {
+                    coloc_key: coloc.then_some(r.colocated_tokens),
+                    member_key: Some(load),
+                    ..Self::default()
+                }
+            }
+        }
+    }
+}
+
+/// The ordered sets. Keys are `(load, id)` so iteration order equals the
+/// naive scans' `min_by_key(|r| (load, r.id))` tie-breaking exactly.
+#[derive(Debug, Default)]
+pub struct SchedIndex {
+    /// Last entry applied per replica (the diff base).
+    entries: Vec<IndexEntry>,
+    /// Static partition tag per replica (0 unless a policy re-tags).
+    partition: Vec<u8>,
+    idle_ordinary: [BTreeSet<ReplicaId>; N_PARTITIONS],
+    long_free: [BTreeSet<(u64, ReplicaId)>; N_PARTITIONS],
+    coloc: BTreeSet<(u64, ReplicaId)>,
+    members: BTreeSet<(u64, ReplicaId)>,
+    decode: BTreeSet<(u64, ReplicaId)>,
+}
+
+impl SchedIndex {
+    pub fn new(n_replicas: usize) -> Self {
+        Self {
+            entries: vec![IndexEntry::default(); n_replicas],
+            partition: vec![0; n_replicas],
+            ..Self::default()
+        }
+    }
+
+    /// Re-tag replicas into partition 1 (everything else returns to 0),
+    /// re-bucketing current members. Called once by a policy at setup
+    /// (Reservation's static split); not meant for per-event use.
+    pub fn set_partition(&mut self, pool: &[ReplicaId]) {
+        let n = self.entries.len();
+        let mut tag = vec![0u8; n];
+        for &rid in pool {
+            tag[rid] = 1;
+        }
+        for rid in 0..n {
+            if tag[rid] == self.partition[rid] {
+                continue;
+            }
+            let e = self.entries[rid];
+            let (old, new) = (self.partition[rid] as usize, tag[rid] as usize);
+            if e.idle {
+                self.idle_ordinary[old].remove(&rid);
+                self.idle_ordinary[new].insert(rid);
+            }
+            if let Some(k) = e.long_free_key {
+                self.long_free[old].remove(&(k, rid));
+                self.long_free[new].insert((k, rid));
+            }
+            self.partition[rid] = tag[rid];
+        }
+    }
+
+    pub fn partition_of(&self, rid: ReplicaId) -> u8 {
+        self.partition[rid]
+    }
+
+    /// Diff `new` against the replica's previously applied entry and
+    /// update only the sets whose membership or key changed.
+    pub fn apply(&mut self, rid: ReplicaId, new: IndexEntry) {
+        let old = self.entries[rid];
+        if old == new {
+            return;
+        }
+        let p = self.partition[rid] as usize;
+        if old.idle != new.idle {
+            if new.idle {
+                self.idle_ordinary[p].insert(rid);
+            } else {
+                self.idle_ordinary[p].remove(&rid);
+            }
+        }
+        Self::rekey(&mut self.long_free[p], rid, old.long_free_key, new.long_free_key);
+        Self::rekey(&mut self.coloc, rid, old.coloc_key, new.coloc_key);
+        Self::rekey(&mut self.members, rid, old.member_key, new.member_key);
+        Self::rekey(&mut self.decode, rid, old.decode_key, new.decode_key);
+        self.entries[rid] = new;
+    }
+
+    fn rekey(
+        set: &mut BTreeSet<(u64, ReplicaId)>,
+        rid: ReplicaId,
+        old: Option<u64>,
+        new: Option<u64>,
+    ) {
+        if old == new {
+            return;
+        }
+        if let Some(k) = old {
+            set.remove(&(k, rid));
+        }
+        if let Some(k) = new {
+            set.insert((k, rid));
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // queries (all O(log R) or O(log R + skipped))
+    // ------------------------------------------------------------------
+
+    /// Smallest-id idle ordinary replica across all partitions.
+    pub fn first_idle(&self) -> Option<ReplicaId> {
+        self.idle_ordinary
+            .iter()
+            .filter_map(|s| s.first().copied())
+            .min()
+    }
+
+    /// Smallest-id idle ordinary replica in one partition.
+    pub fn first_idle_in(&self, part: u8) -> Option<ReplicaId> {
+        self.idle_ordinary[part as usize].first().copied()
+    }
+
+    pub fn idle_count(&self) -> usize {
+        self.idle_ordinary.iter().map(|s| s.len()).sum()
+    }
+
+    pub fn idle_count_in(&self, part: u8) -> usize {
+        self.idle_ordinary[part as usize].len()
+    }
+
+    /// Least-loaded ordinary (long-free) replica across all partitions,
+    /// `(load, id)`-minimal like the naive scan.
+    pub fn first_long_free(&self) -> Option<ReplicaId> {
+        self.long_free
+            .iter()
+            .filter_map(|s| s.first().copied())
+            .min()
+            .map(|(_, rid)| rid)
+    }
+
+    pub fn first_long_free_in(&self, part: u8) -> Option<ReplicaId> {
+        self.long_free[part as usize].first().map(|&(_, rid)| rid)
+    }
+
+    pub fn long_free_count(&self) -> usize {
+        self.long_free.iter().map(|s| s.len()).sum()
+    }
+
+    /// Lightest-colocation-budget replica whose long occupant decodes.
+    /// The budget gate is uniform, so if the minimum does not fit nothing
+    /// does — exactly the naive filtered min.
+    pub fn first_coloc_within(&self, add: u64, budget: u64) -> Option<ReplicaId> {
+        self.coloc
+            .first()
+            .filter(|&&(k, _)| k + add <= budget)
+            .map(|&(_, rid)| rid)
+    }
+
+    /// Walk long-group members in `(prefill load, id)` order; the caller
+    /// applies the time-gated `preemptable` predicate. The first accepted
+    /// entry equals the naive scan's filtered minimum.
+    pub fn members_by_load(&self) -> impl Iterator<Item = ReplicaId> + '_ {
+        self.members.iter().map(|&(_, rid)| rid)
+    }
+
+    /// `(load, id)`-minimal replica over ordinary ∪ long-occupied (the
+    /// /PE "everything is busy" fallback: any non-dedicated replica).
+    pub fn first_any_ordinary(&self) -> Option<ReplicaId> {
+        self.long_free
+            .iter()
+            .map(|s| s.first())
+            .chain(std::iter::once(self.members.first()))
+            .flatten()
+            .copied()
+            .min()
+            .map(|(_, rid)| rid)
+    }
+
+    /// Lightest dedicated decode replica.
+    pub fn first_decode(&self) -> Option<ReplicaId> {
+        self.decode.first().map(|&(_, rid)| rid)
+    }
+
+    // ------------------------------------------------------------------
+    // validation (tests / debug builds)
+    // ------------------------------------------------------------------
+
+    /// Recompute every entry from scratch and verify the sets match —
+    /// the whole-index consistency oracle used by the property tests.
+    pub fn validate(
+        &self,
+        replicas: &[ReplicaRt],
+        groups: &[Option<LongGroup>],
+        reqs: &[ReqRt],
+    ) -> Result<(), String> {
+        let mut fresh = SchedIndex::new(replicas.len());
+        fresh.partition.copy_from_slice(&self.partition);
+        for r in replicas {
+            fresh.apply(r.id, IndexEntry::compute(r, groups, reqs));
+        }
+        for rid in 0..replicas.len() {
+            if fresh.entries[rid] != self.entries[rid] {
+                return Err(format!(
+                    "replica {rid}: stale entry {:?}, state implies {:?}",
+                    self.entries[rid], fresh.entries[rid]
+                ));
+            }
+        }
+        for p in 0..N_PARTITIONS {
+            if fresh.idle_ordinary[p] != self.idle_ordinary[p] {
+                return Err(format!("idle_ordinary[{p}] diverged"));
+            }
+            if fresh.long_free[p] != self.long_free[p] {
+                return Err(format!("long_free[{p}] diverged"));
+            }
+        }
+        if fresh.coloc != self.coloc {
+            return Err("coloc set diverged".into());
+        }
+        if fresh.members != self.members {
+            return Err("members set diverged".into());
+        }
+        if fresh.decode != self.decode {
+            return Err("decode set diverged".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(long_free: Option<u64>, idle: bool) -> IndexEntry {
+        IndexEntry {
+            idle,
+            long_free_key: long_free,
+            ..IndexEntry::default()
+        }
+    }
+
+    #[test]
+    fn apply_diffs_and_queries_order_by_load_then_id() {
+        let mut ix = SchedIndex::new(4);
+        ix.apply(0, entry(Some(50), false));
+        ix.apply(1, entry(Some(10), false));
+        ix.apply(2, entry(Some(10), false));
+        ix.apply(3, entry(Some(0), true));
+        // idle wins rung ②; long-free min is the idle one too (load 0).
+        assert_eq!(ix.first_idle(), Some(3));
+        assert_eq!(ix.first_long_free(), Some(3));
+        // Remove the idle one; tie at 10 breaks by id.
+        ix.apply(3, IndexEntry::default());
+        assert_eq!(ix.first_idle(), None);
+        assert_eq!(ix.first_long_free(), Some(1));
+        // Rekey 1 heavier; 2 now wins.
+        ix.apply(1, entry(Some(99), false));
+        assert_eq!(ix.first_long_free(), Some(2));
+    }
+
+    #[test]
+    fn coloc_budget_gate_on_minimum() {
+        let mut ix = SchedIndex::new(2);
+        ix.apply(
+            0,
+            IndexEntry {
+                coloc_key: Some(1000),
+                member_key: Some(0),
+                ..IndexEntry::default()
+            },
+        );
+        ix.apply(
+            1,
+            IndexEntry {
+                coloc_key: Some(2000),
+                member_key: Some(0),
+                ..IndexEntry::default()
+            },
+        );
+        assert_eq!(ix.first_coloc_within(500, 2048), Some(0));
+        assert_eq!(ix.first_coloc_within(1100, 2048), None, "min does not fit");
+    }
+
+    #[test]
+    fn partitions_split_long_free_and_idle() {
+        let mut ix = SchedIndex::new(4);
+        for rid in 0..4 {
+            ix.apply(rid, entry(Some(rid as u64), rid == 0));
+        }
+        ix.set_partition(&[0, 1]);
+        assert_eq!(ix.first_long_free_in(1), Some(0));
+        assert_eq!(ix.first_long_free_in(0), Some(2));
+        assert_eq!(ix.first_idle_in(1), Some(0));
+        assert_eq!(ix.first_idle_in(0), None);
+        // Global queries still see both partitions.
+        assert_eq!(ix.first_long_free(), Some(0));
+        assert_eq!(ix.idle_count(), 1);
+        // Updates after re-tagging land in the right slice.
+        ix.apply(1, entry(Some(7), false));
+        assert_eq!(ix.first_long_free_in(1), Some(0));
+        ix.apply(0, IndexEntry::default());
+        assert_eq!(ix.first_long_free_in(1), Some(1));
+    }
+
+    #[test]
+    fn any_ordinary_merges_long_free_and_members() {
+        let mut ix = SchedIndex::new(3);
+        ix.apply(0, entry(Some(40), false));
+        ix.apply(
+            1,
+            IndexEntry {
+                member_key: Some(5),
+                ..IndexEntry::default()
+            },
+        );
+        ix.apply(2, entry(Some(60), false));
+        assert_eq!(ix.first_any_ordinary(), Some(1), "member is lightest");
+        assert_eq!(ix.members_by_load().collect::<Vec<_>>(), vec![1]);
+    }
+}

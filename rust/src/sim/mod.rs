@@ -7,10 +7,12 @@
 
 mod engine;
 mod events;
+mod index;
 mod state;
 
 pub use engine::{run_sim, Simulation};
 pub use events::{Event, EventKind, EventQueue, GroupId};
+pub use index::{IndexEntry, SchedIndex};
 pub use state::{
     LongGroup, LongPhase, ReplicaRt, ReqPhase, ReqRt, SimConfig, SimState,
 };

@@ -15,6 +15,7 @@ use crate::metrics::BusyTracker;
 use crate::trace::{ReqId, Request};
 
 use super::events::{EventKind, EventQueue, GroupId};
+use super::index::{IndexEntry, SchedIndex};
 
 /// Lifecycle of a request inside the simulator.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -216,6 +217,11 @@ pub struct SimState {
     /// Requests whose prefill started since the engine last drained this
     /// (overhead attribution for Table 7 — avoids rescanning all requests).
     pub recent_prefill_starts: Vec<ReqId>,
+    /// Incremental replica index: the ordered sets behind the O(log R)
+    /// placement queries. Kept in lockstep by [`SimState::reindex`]; in
+    /// debug builds every indexed pick is cross-checked against the naive
+    /// scan it replaced.
+    pub index: SchedIndex,
 }
 
 impl SimState {
@@ -279,6 +285,12 @@ impl SimState {
         }
         let shorts_total = reqs.iter().filter(|r| !r.req.is_long).count();
 
+        let mut index = SchedIndex::new(replicas.len());
+        let groups: Vec<Option<LongGroup>> = Vec::new();
+        for r in &replicas {
+            index.apply(r.id, IndexEntry::compute(r, &groups, &reqs));
+        }
+
         Self {
             now: 0.0,
             queue,
@@ -288,7 +300,7 @@ impl SimState {
             flags: cfg.flags,
             reqs,
             replicas,
-            groups: Vec::new(),
+            groups,
             kv_capacity,
             decode_pool,
             preemptions: 0,
@@ -298,7 +310,16 @@ impl SimState {
             t_shorts_done: None,
             events_processed: 0,
             recent_prefill_starts: Vec::new(),
+            index,
         }
+    }
+
+    /// Recompute `rid`'s index entry from current state and apply it.
+    /// Called after every mutation that can move a replica between the
+    /// index's ordered sets or change its key; a no-change refresh is O(1).
+    pub fn reindex(&mut self, rid: ReplicaId) {
+        let e = IndexEntry::compute(&self.replicas[rid], &self.groups, &self.reqs);
+        self.index.apply(rid, e);
     }
 
     // ------------------------------------------------------------------
@@ -348,14 +369,133 @@ impl SimState {
             .map(|r| r.id)
     }
 
-    /// Dedicated decode replica with the lightest batch.
+    /// Dedicated decode replica with the lightest batch — O(log R) via the
+    /// index, scan-checked in debug builds.
     pub fn least_loaded_decode(&self) -> Option<ReplicaId> {
+        let got = self.index.first_decode();
+        debug_assert_eq!(got, self.least_loaded_decode_scan(), "decode index oracle");
+        got
+    }
+
+    /// The naive O(R) scan `least_loaded_decode` replaced (equivalence
+    /// oracle).
+    fn least_loaded_decode_scan(&self) -> Option<ReplicaId> {
         self.decode_pool
             .iter()
             .map(|&id| &self.replicas[id])
             .filter(|r| !r.down)
             .min_by_key(|r| (r.decode_load_tokens(&self.reqs), r.id))
             .map(|r| r.id)
+    }
+
+    // ------------------------------------------------------------------
+    // indexed placement picks (each rung of the ladder in O(log R);
+    // debug builds re-run the naive scan and assert identical choices)
+    // ------------------------------------------------------------------
+
+    /// Rung ②: the idle ordinary replica the naive `(load, id)` min-scan
+    /// would pick (idle replicas all carry zero load, so smallest id).
+    pub fn pick_idle_ordinary(&self) -> Option<ReplicaId> {
+        let got = self.index.first_idle();
+        debug_assert_eq!(
+            got,
+            self.least_loaded_prefill(|r| {
+                !r.dedicated_decode && r.long_group.is_none() && r.is_idle()
+            }),
+            "idle index oracle"
+        );
+        got
+    }
+
+    /// Least-loaded ordinary (long-free) replica — the bounded-wait rung,
+    /// fallback rung ⑤ and the FIFO/Priority short dispatch.
+    pub fn pick_least_loaded_ordinary(&self) -> Option<ReplicaId> {
+        let got = self.index.first_long_free();
+        debug_assert_eq!(
+            got,
+            self.least_loaded_prefill(|r| !r.dedicated_decode && r.long_group.is_none()),
+            "long-free index oracle"
+        );
+        got
+    }
+
+    /// Least-loaded ordinary replica within one static partition
+    /// (Reservation's short slice; partitions are set once at policy
+    /// construction via [`SchedIndex::set_partition`]).
+    pub fn pick_least_loaded_ordinary_in(&self, part: u8) -> Option<ReplicaId> {
+        let got = self.index.first_long_free_in(part);
+        debug_assert_eq!(
+            got,
+            self.least_loaded_prefill(|r| {
+                !r.dedicated_decode
+                    && r.long_group.is_none()
+                    && self.index.partition_of(r.id) == part
+            }),
+            "partitioned long-free index oracle"
+        );
+        got
+    }
+
+    /// Least-loaded non-dedicated replica regardless of long occupancy —
+    /// the /PE "every replica long-occupied" fallback.
+    pub fn pick_any_ordinary_least_loaded(&self) -> Option<ReplicaId> {
+        let got = self.index.first_any_ordinary();
+        debug_assert_eq!(
+            got,
+            self.least_loaded_prefill(|r| !r.dedicated_decode),
+            "any-ordinary index oracle"
+        );
+        got
+    }
+
+    /// Rung ③④: lightest-budget colocation host for a prompt of `len`
+    /// tokens. The budget cap is uniform, so if the minimum-budget
+    /// candidate cannot fit the prompt, none can.
+    pub fn pick_coloc_candidate(&self, len: u32, budget: u64) -> Option<ReplicaId> {
+        let got = self.index.first_coloc_within(len as u64, budget);
+        debug_assert_eq!(
+            got,
+            self.replicas
+                .iter()
+                .filter(|r| {
+                    !r.dedicated_decode
+                        && r.colocated_tokens + len as u64 <= budget
+                        && r.long_group
+                            .and_then(|g| self.groups[g].as_ref())
+                            .map(|g| matches!(g.phase, LongPhase::Decode { .. }))
+                            .unwrap_or(false)
+                })
+                .min_by_key(|r| (r.colocated_tokens, r.id))
+                .map(|r| r.id),
+            "colocation index oracle"
+        );
+        got
+    }
+
+    /// Rung ⑤ (preemption): walk long-group members in `(prefill load,
+    /// id)` order and return the first that passes the time-gated
+    /// `preemptable` predicate — identical to the naive filtered min.
+    /// O(log R + s) where s is the members skipped by the quantum gate.
+    pub fn pick_preemptable<F: Fn(&Self, ReplicaId) -> bool>(
+        &self,
+        ok: F,
+    ) -> Option<ReplicaId> {
+        let got = self.index.members_by_load().find(|&rid| ok(self, rid));
+        debug_assert_eq!(
+            got,
+            self.replicas
+                .iter()
+                .filter(|r| {
+                    !r.down
+                        && !r.dedicated_decode
+                        && r.long_group.is_some()
+                        && ok(self, r.id)
+                })
+                .min_by_key(|r| (r.prefill_load_tokens(&self.reqs), r.id))
+                .map(|r| r.id),
+            "preemptable index oracle"
+        );
+        got
     }
 
     pub fn idle_replicas(&self) -> Vec<ReplicaId> {
@@ -422,6 +562,7 @@ impl SimState {
             }
         }
         displaced.retain(|&req| self.reqs[req].phase != ReqPhase::Done);
+        self.reindex(rid);
         displaced
     }
 
@@ -430,6 +571,7 @@ impl SimState {
         let r = &mut self.replicas[rid];
         debug_assert!(r.down, "recovering a live replica");
         r.down = false;
+        self.reindex(rid);
     }
 
     // ------------------------------------------------------------------
@@ -447,12 +589,14 @@ impl SimState {
         r.prefill_queue.push_back(req);
         r.queued_prefill_tokens += self.reqs[req].req.input_len as u64;
         self.try_start_prefill(rid);
+        self.reindex(rid);
     }
 
     /// Charge a colocated short against the replica's token budget (§5.2).
     pub fn charge_colocation(&mut self, rid: ReplicaId, req: ReqId) {
         self.replicas[rid].colocated_tokens += self.reqs[req].req.input_len as u64;
         self.reqs[req].colocated_on = Some(rid);
+        self.reindex(rid);
     }
 
     /// May a short prefill start on `rid` right now, given the replica's
@@ -531,6 +675,7 @@ impl SimState {
             let len = self.reqs[req].req.input_len as u64;
             let c = &mut self.replicas[crid].colocated_tokens;
             *c = c.saturating_sub(len);
+            self.reindex(crid);
         }
 
         // Route to decode: disaggregated (migrate to the pool) or local.
@@ -715,17 +860,21 @@ impl SimState {
                 let len = self.reqs[q].req.input_len as u64;
                 let c = &mut self.replicas[crid].colocated_tokens;
                 *c = c.saturating_sub(len);
+                self.reindex(crid);
             }
         }
         self.groups.push(Some(LongGroup {
             req,
-            members,
+            members: members.clone(),
             plan,
             phase: LongPhase::Waiting,
             gen: 0,
             preemptions: 0,
             last_resume: self.now,
         }));
+        for &rid in &members {
+            self.reindex(rid);
+        }
         self.maybe_start_long(gid);
         displaced
     }
@@ -977,6 +1126,7 @@ impl SimState {
         } else {
             r.busy.set_idle(now);
         }
+        self.reindex(rid);
     }
 
     /// All requests finished?

@@ -2,7 +2,11 @@
 //!
 //! Warms up, runs timed iterations until a wall-clock budget, reports
 //! mean / p50 / p99 / min. `cargo bench` runs the harness=false benches in
-//! `rust/benches/`, each of which drives this.
+//! `rust/benches/`, each of which drives this. Suites collect their
+//! [`BenchReport`]s and emit them as machine-readable JSON via
+//! [`write_json`] (`BENCH_sim.json` / `BENCH_sched.json`), so the perf
+//! trajectory — per-cell wall time and events per second — is tracked
+//! across PRs instead of living in scrollback.
 
 use std::time::{Duration, Instant};
 
@@ -21,6 +25,30 @@ pub struct BenchReport {
     pub p50_s: f64,
     pub p99_s: f64,
     pub min_s: f64,
+    /// Simulated-event throughput, when the workload is an event-loop run
+    /// (set via [`BenchReport::with_events_per_run`]); `null` in the JSON
+    /// for pure micro-op cells.
+    pub events_per_s: Option<f64>,
+}
+
+impl BenchReport {
+    /// Derive events/second from the number of simulator events one
+    /// iteration processes.
+    pub fn with_events_per_run(mut self, events: u64) -> Self {
+        if self.mean_s > 0.0 {
+            self.events_per_s = Some(events as f64 / self.mean_s);
+        }
+        self
+    }
+
+    /// Operations per second (1 / mean) — meaningful for every cell.
+    pub fn ops_per_s(&self) -> f64 {
+        if self.mean_s > 0.0 {
+            1.0 / self.mean_s
+        } else {
+            f64::INFINITY
+        }
+    }
 }
 
 impl Bench {
@@ -70,10 +98,53 @@ impl Bench {
             p50_s: samples[n / 2],
             p99_s: samples[p99_idx],
             min_s: samples[0],
+            events_per_s: None,
         };
         println!("{report}");
         report
     }
+}
+
+/// Write a bench suite's reports as JSON (`{"suite": ..., "results":
+/// [...]}`), one number-per-field so downstream tooling can diff runs
+/// without parsing the human-readable lines.
+pub fn write_json(path: &str, suite: &str, reports: &[BenchReport]) -> std::io::Result<()> {
+    fn esc(s: &str) -> String {
+        s.replace('\\', "\\\\").replace('"', "\\\"")
+    }
+    fn num(x: f64) -> String {
+        // `{:e}` keeps full precision and is valid JSON for finite values.
+        if x.is_finite() {
+            format!("{x:e}")
+        } else {
+            "null".into()
+        }
+    }
+    let mut out = String::new();
+    out.push_str(&format!("{{\"suite\": \"{}\", \"results\": [\n", esc(suite)));
+    for (i, r) in reports.iter().enumerate() {
+        if i > 0 {
+            out.push_str(",\n");
+        }
+        let events = r
+            .events_per_s
+            .map(|e| num(e))
+            .unwrap_or_else(|| "null".into());
+        out.push_str(&format!(
+            "  {{\"name\": \"{}\", \"iters\": {}, \"mean_s\": {}, \"p50_s\": {}, \
+             \"p99_s\": {}, \"min_s\": {}, \"ops_per_s\": {}, \"events_per_s\": {}}}",
+            esc(&r.name),
+            r.iters,
+            num(r.mean_s),
+            num(r.p50_s),
+            num(r.p99_s),
+            num(r.min_s),
+            num(r.ops_per_s()),
+            events,
+        ));
+    }
+    out.push_str("\n]}\n");
+    std::fs::write(path, out)
 }
 
 impl std::fmt::Display for BenchReport {

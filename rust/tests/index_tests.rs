@@ -1,0 +1,322 @@
+//! Unit tests of the incremental replica index: membership and keys must
+//! track every `SimState` mutation — placement, preemption, long-group
+//! displacement, colocation charge/release, decode migration, and the
+//! replica-down/recovery paths — and the indexed picks must equal the
+//! naive scans they replaced.
+
+use pecsched::config::{AblationFlags, ModelSpec, PolicyKind, SchedParams};
+use pecsched::sim::{LongPhase, ReqPhase, SimConfig, SimState, Simulation};
+use pecsched::trace::{Request, TraceConfig};
+
+fn short(id: usize, arrival: f64, len: u32, out: u32) -> Request {
+    Request {
+        id,
+        arrival,
+        input_len: len,
+        output_len: out,
+        is_long: false,
+    }
+}
+
+fn long(id: usize, arrival: f64, len: u32, out: u32) -> Request {
+    Request {
+        id,
+        arrival,
+        input_len: len,
+        output_len: out,
+        is_long: true,
+    }
+}
+
+fn state(reqs: &[Request], flags: AblationFlags, pool: bool) -> SimState {
+    let mut cfg = SimConfig::pecsched(ModelSpec::mistral_7b(), flags);
+    cfg.dedicated_decode_pool = pool;
+    SimState::new(&cfg, reqs)
+}
+
+fn check(st: &SimState, at: &str) {
+    st.index
+        .validate(&st.replicas, &st.groups, &st.reqs)
+        .unwrap_or_else(|e| panic!("index diverged {at}: {e}"));
+}
+
+#[test]
+fn fresh_state_is_fully_indexed() {
+    let reqs = [short(0, 0.0, 1000, 8)];
+    let st = state(&reqs, AblationFlags::full(), true);
+    check(&st, "at construction");
+    // All ordinary replicas are idle; the pick must be the smallest id.
+    assert_eq!(st.pick_idle_ordinary(), Some(0));
+    assert!(st.least_loaded_decode().is_some());
+}
+
+#[test]
+fn placement_and_prefill_lifecycle_keep_index_current() {
+    let reqs: Vec<Request> = (0..6).map(|i| short(i, 0.0, 800 + 10 * i as u32, 8)).collect();
+    let mut st = state(&reqs, AblationFlags::full(), true);
+    for _ in 0..6 {
+        st.queue.pop();
+    }
+    for i in 0..6 {
+        st.enqueue_short_prefill(i % 3, i);
+        check(&st, &format!("after enqueue {i}"));
+    }
+    // Replicas 0-2 hold work; the idle pick skips them.
+    assert_eq!(st.pick_idle_ordinary(), Some(3));
+    // Drain everything; the index must stay consistent at each event.
+    while let Some(ev) = st.queue.pop() {
+        st.now = ev.time.max(st.now);
+        use pecsched::sim::EventKind::*;
+        match ev.kind {
+            ShortPrefillDone { rid, req, gen } => {
+                st.on_short_prefill_done(rid, req, gen);
+            }
+            MigrationDone { req, rid } => st.on_migration_done(req, rid),
+            DecodeRound { rid, gen } => {
+                st.on_decode_round(rid, gen);
+            }
+            _ => {}
+        }
+        check(&st, "mid-drain");
+    }
+    assert_eq!(st.shorts_done, 6);
+    assert_eq!(st.pick_idle_ordinary(), Some(0), "all idle again");
+}
+
+#[test]
+fn long_group_displacement_and_release_reindex_members() {
+    let reqs = [
+        short(0, 0.0, 900, 4),
+        short(1, 0.0, 900, 4),
+        long(2, 0.0, 150_000, 4),
+    ];
+    let mut st = state(&reqs, AblationFlags::full(), true);
+    for _ in 0..3 {
+        st.queue.pop();
+    }
+    st.enqueue_short_prefill(0, 0);
+    st.enqueue_short_prefill(0, 1);
+    let n = st.replicas_needed(150_000);
+    let plan = st.plan_for_long(150_000, n);
+    let displaced = st.start_long_group(2, (0..n).collect(), plan);
+    assert_eq!(displaced, vec![1]);
+    check(&st, "after long-group start with displacement");
+    // Members left the ordinary sets: the long-free pick must avoid them.
+    if let Some(rid) = st.pick_least_loaded_ordinary() {
+        assert!(rid >= n, "member {rid} still indexed as long-free");
+    }
+    // Drain to completion; release must return members to the index.
+    while let Some(ev) = st.queue.pop() {
+        st.now = ev.time.max(st.now);
+        use pecsched::sim::EventKind::*;
+        match ev.kind {
+            ShortPrefillDone { rid, req, gen } => {
+                st.on_short_prefill_done(rid, req, gen);
+            }
+            MigrationDone { req, rid } => st.on_migration_done(req, rid),
+            DecodeRound { rid, gen } => {
+                st.on_decode_round(rid, gen);
+            }
+            LongPrefillDone { gid, gen } => {
+                st.on_long_prefill_done(gid, gen);
+                check(&st, "after long prefill done (members → coloc)");
+            }
+            LongDecodeRound { gid, gen } => {
+                st.on_long_decode_round(gid, gen);
+            }
+            _ => {}
+        }
+        check(&st, "mid-drain");
+    }
+    assert_eq!(st.longs_done, 1);
+    assert_eq!(st.pick_idle_ordinary(), Some(0), "members released");
+}
+
+#[test]
+fn preemption_pause_resume_keeps_index_current() {
+    let reqs = [long(0, 0.0, 200_000, 8), short(1, 0.0, 1500, 8)];
+    let mut st = state(&reqs, AblationFlags::full(), true);
+    st.queue.pop();
+    st.queue.pop();
+    let n = st.replicas_needed(200_000);
+    let plan = st.plan_for_long(200_000, n);
+    st.start_long_group(0, (0..n).collect(), plan);
+    check(&st, "after group start");
+    // The short preempts member 0 (§5.1).
+    st.enqueue_short_prefill(0, 1);
+    assert_eq!(st.preemptions, 1);
+    check(&st, "after preemption pause");
+    // Member 0 now has prefill load; the preemption walk must see it.
+    let got = st.pick_preemptable(|st, rid| {
+        // Suspended prefill members all accept shorts.
+        st.replicas[rid].long_group.is_some()
+            && matches!(
+                st.groups[st.replicas[rid].long_group.unwrap()]
+                    .as_ref()
+                    .unwrap()
+                    .phase,
+                LongPhase::Prefill { running: false, .. }
+            )
+    });
+    assert!(got.is_some());
+    assert_ne!(got, Some(0), "member 0 carries the preempting load");
+    // Drain; resume and completion keep the index in lockstep.
+    while let Some(ev) = st.queue.pop() {
+        st.now = ev.time.max(st.now);
+        use pecsched::sim::EventKind::*;
+        match ev.kind {
+            ShortPrefillDone { rid, req, gen } => {
+                st.on_short_prefill_done(rid, req, gen);
+            }
+            MigrationDone { req, rid } => st.on_migration_done(req, rid),
+            DecodeRound { rid, gen } => {
+                st.on_decode_round(rid, gen);
+            }
+            LongPrefillDone { gid, gen } => {
+                st.on_long_prefill_done(gid, gen);
+            }
+            LongDecodeRound { gid, gen } => {
+                st.on_long_decode_round(gid, gen);
+            }
+            _ => {}
+        }
+        check(&st, "mid-drain");
+    }
+    assert_eq!(st.shorts_done + st.longs_done, 2);
+}
+
+#[test]
+fn colocation_charge_and_release_rekey_candidates() {
+    let reqs = [long(0, 0.0, 150_000, 400), short(1, 2.0, 1000, 4)];
+    let mut st = state(&reqs, AblationFlags::full(), true);
+    st.queue.pop();
+    st.queue.pop();
+    let n = st.replicas_needed(150_000);
+    let plan = st.plan_for_long(150_000, n);
+    st.start_long_group(0, (0..n).collect(), plan);
+    // Run until the long decodes: members become colocation candidates.
+    while st.pick_coloc_candidate(1000, st.params.colocate_max_tokens as u64).is_none() {
+        let ev = st.queue.pop().expect("long must reach decode");
+        st.now = ev.time.max(st.now);
+        use pecsched::sim::EventKind::*;
+        match ev.kind {
+            LongPrefillDone { gid, gen } => {
+                st.on_long_prefill_done(gid, gen);
+            }
+            LongDecodeRound { gid, gen } => {
+                st.on_long_decode_round(gid, gen);
+            }
+            _ => {}
+        }
+        check(&st, "while waiting for decode phase");
+    }
+    // Lightest budget = smallest id among members.
+    assert_eq!(st.pick_coloc_candidate(1000, 2048), Some(0));
+    st.charge_colocation(0, 1);
+    check(&st, "after colocation charge");
+    // Replica 0 now carries budget; the next pick prefers another member.
+    if n > 1 {
+        assert_eq!(st.pick_coloc_candidate(1000, 2048), Some(1));
+    }
+    st.enqueue_short_prefill(0, 1);
+    check(&st, "after colocated enqueue");
+    // Finishing the short's prefill releases the budget and rekeys.
+    while st.replicas[0].colocated_tokens > 0 {
+        let ev = st.queue.pop().expect("short prefill must finish");
+        st.now = ev.time.max(st.now);
+        use pecsched::sim::EventKind::*;
+        match ev.kind {
+            ShortPrefillDone { rid, req, gen } => {
+                st.on_short_prefill_done(rid, req, gen);
+            }
+            MigrationDone { req, rid } => st.on_migration_done(req, rid),
+            DecodeRound { rid, gen } => {
+                st.on_decode_round(rid, gen);
+            }
+            LongPrefillDone { gid, gen } => {
+                st.on_long_prefill_done(gid, gen);
+            }
+            LongDecodeRound { gid, gen } => {
+                st.on_long_decode_round(gid, gen);
+            }
+            _ => {}
+        }
+        check(&st, "while draining colocated short");
+    }
+    assert_eq!(st.pick_coloc_candidate(1000, 2048), Some(0), "budget released");
+}
+
+#[test]
+fn replica_down_and_recovery_reindex() {
+    let reqs = [short(0, 0.0, 1000, 8), short(1, 0.0, 900, 8)];
+    let mut st = state(&reqs, AblationFlags::full(), true);
+    st.queue.pop();
+    st.queue.pop();
+    st.enqueue_short_prefill(0, 0);
+    st.enqueue_short_prefill(0, 1);
+    let displaced = st.fail_replica(0);
+    assert_eq!(displaced.len(), 2);
+    check(&st, "after fail_replica");
+    // A down replica must be invisible to every indexed pick.
+    assert_ne!(st.pick_idle_ordinary(), Some(0));
+    assert_ne!(st.pick_least_loaded_ordinary(), Some(0));
+    assert_ne!(st.pick_any_ordinary_least_loaded(), Some(0));
+    st.recover_replica(0);
+    check(&st, "after recovery");
+    assert_eq!(st.pick_idle_ordinary(), Some(0), "recovered replica indexed");
+    assert_eq!(st.reqs[0].phase, ReqPhase::Queued);
+}
+
+#[test]
+fn decode_pool_failure_reroutes_and_reindexes() {
+    let reqs = [short(0, 0.0, 1000, 16)];
+    let mut st = state(&reqs, AblationFlags::full(), true);
+    st.queue.pop();
+    let pool = st.decode_pool.clone();
+    assert!(!pool.is_empty());
+    let first = st.least_loaded_decode().unwrap();
+    st.fail_replica(first);
+    check(&st, "after decode-pool failure");
+    assert_ne!(st.least_loaded_decode(), Some(first));
+    // Fail the whole pool: the indexed pick must go empty (local decode
+    // fallback), exactly like the naive scan.
+    for rid in pool {
+        if !st.replicas[rid].down {
+            st.fail_replica(rid);
+        }
+    }
+    check(&st, "after whole-pool failure");
+    assert_eq!(st.least_loaded_decode(), None);
+}
+
+#[test]
+fn reservation_partition_survives_a_full_run() {
+    // End-to-end under the partitioned index (Reservation tags pool
+    // replicas into partition 1 at construction): a mixed trace must
+    // complete with the index consistent at every event.
+    let trace = TraceConfig {
+        n_requests: 250,
+        rps: 12.0,
+        seed: 11,
+        long_quantile: 0.98,
+        ..TraceConfig::default()
+    }
+    .generate();
+    let cfg = SimConfig::baseline(ModelSpec::mistral_7b());
+    let mut sim = Simulation::new(cfg, &trace, PolicyKind::Reservation);
+    let m = sim.run_with_hook(|st, _| {
+        st.index
+            .validate(&st.replicas, &st.groups, &st.reqs)
+            .unwrap_or_else(|e| panic!("index diverged at t={}: {e}", st.now));
+    });
+    assert_eq!(m.shorts_completed + m.longs_completed, trace.len());
+}
+
+#[test]
+fn params_are_visible_for_ladder_reasoning() {
+    // Guard: the bounded-wait rung reasons over these; if defaults move,
+    // the index tests above may need new constants.
+    let p = SchedParams::default();
+    assert!(p.colocate_max_tokens >= 1000);
+    assert!(p.preempt_min_quantum > 0.0);
+}

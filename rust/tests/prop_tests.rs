@@ -9,7 +9,7 @@ use pecsched::config::{
 };
 use pecsched::metrics::Digest;
 use pecsched::server::KvPool;
-use pecsched::sim::{run_sim, SimConfig};
+use pecsched::sim::{run_sim, SimConfig, Simulation};
 use pecsched::trace::{Request, Trace};
 use pecsched::util::{Json, Rng};
 
@@ -106,8 +106,85 @@ fn prop_no_longs_means_no_preemptions() {
 }
 
 // ---------------------------------------------------------------------
+// indexed placement ≡ naive scan (the replica-index equivalence oracle)
+// ---------------------------------------------------------------------
+
+/// Replay random traces under all four policies (plus ablations). In
+/// debug builds — which is how `cargo test` runs — every indexed pick
+/// (`pick_idle_ordinary`, `pick_least_loaded_ordinary[_in]`,
+/// `pick_coloc_candidate`, `pick_preemptable`, `least_loaded_decode`,
+/// `choose_group`, and `try_start_long`'s availability count) re-runs the
+/// naive O(R) scan it replaced and `debug_assert!`s an identical choice,
+/// so completing these runs proves indexed and scanned placement agree at
+/// every single decision. On top of that, the whole index is revalidated
+/// against a from-scratch rebuild at every simulated event.
+#[test]
+fn prop_indexed_placement_matches_scan_oracle() {
+    if !cfg!(debug_assertions) {
+        // The per-decision oracles are debug_assert!s; a release run would
+        // only exercise the whole-index validation below.
+        eprintln!("note: release build — per-decision scan oracles compiled out");
+    }
+    let mut rng = Rng::seed_from_u64(0x1DE0);
+    let models = ModelSpec::catalog();
+    for case in 0..10 {
+        let model = models[rng.below(models.len())].clone();
+        let n = 60 + rng.below(200);
+        let trace = random_trace(&mut rng, n, true);
+        let kind = policies()[case % policies().len()];
+        let cfg = match kind {
+            PolicyKind::PecSched(f) => SimConfig::pecsched(model.clone(), f),
+            _ => SimConfig::baseline(model.clone()),
+        };
+        let mut sim = Simulation::new(cfg, &trace, kind);
+        let m = sim.run_with_hook(|st, _policy| {
+            st.index
+                .validate(&st.replicas, &st.groups, &st.reqs)
+                .unwrap_or_else(|e| {
+                    panic!("case {case}: index diverged at t={}: {e}", st.now)
+                });
+        });
+        assert_eq!(
+            m.shorts_completed + m.longs_completed,
+            trace.len(),
+            "case {case}: {} lost requests",
+            kind.name()
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
 // replica-set selection properties
 // ---------------------------------------------------------------------
+
+/// The rewritten `choose_group` (hoisted per-node capacities + selection)
+/// must return exactly what the retained naive scan returns — asserted
+/// here explicitly so the property also holds under `--release`, where
+/// the `debug_assert!` inside `choose_group` compiles out.
+#[test]
+fn prop_choose_group_fast_matches_scan() {
+    let mut rng = Rng::seed_from_u64(0xFA57);
+    for _ in 0..300 {
+        let tp = [1usize, 2, 4, 8][rng.below(4)];
+        let mut model = ModelSpec::mistral_7b();
+        model.tp = tp;
+        let nodes = 1 + rng.below(12);
+        let mut cluster = ClusterSpec::default();
+        cluster.nodes = nodes;
+        let topo = Topology::build(&cluster, &model);
+        let nr = topo.n_replicas();
+        let density = [0.0, 0.2, 0.6, 1.0][rng.below(4)];
+        let eligible: Vec<bool> = (0..nr).map(|_| rng.f64() < density).collect();
+        // Duplicate-heavy loads exercise the tie-break equivalence.
+        let loads: Vec<u64> = (0..nr).map(|_| rng.below(4) as u64 * 100).collect();
+        let n = 1 + rng.below(nr + 1);
+        assert_eq!(
+            topo.choose_group(n, &eligible, &loads),
+            topo.choose_group_scan(n, &eligible, &loads),
+            "tp={tp} nodes={nodes} n={n}"
+        );
+    }
+}
 
 #[test]
 fn prop_choose_group_valid_distinct_and_eligible() {

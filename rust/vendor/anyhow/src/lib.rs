@@ -1,0 +1,149 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! This fully-vendored build has no registry access (DESIGN.md §2
+//! documents the substitution policy), so the subset of `anyhow` the
+//! codebase actually uses is reimplemented here: `Error`, `Result`,
+//! the `Context` extension trait on `Result`/`Option`, and the
+//! `anyhow!` / `bail!` / `ensure!` macros. Error values carry a flat,
+//! already-formatted message (context frames are prepended as
+//! `"{context}: {cause}"`), which is all the binaries and tests print.
+//!
+//! Like the real crate, `Error` deliberately does **not** implement
+//! `std::error::Error`, so the blanket `From<E: std::error::Error>`
+//! conversion used by `?` cannot collide with the reflexive
+//! `From<Error>` impl.
+
+use std::fmt;
+
+/// Flat-message error value.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from anything displayable (the `anyhow!` macro's
+    /// entry point).
+    pub fn msg<M: fmt::Display>(m: M) -> Self {
+        Self { msg: m.to_string() }
+    }
+
+    fn wrap<C: fmt::Display>(self, ctx: C) -> Self {
+        Self {
+            msg: format!("{ctx}: {}", self.msg),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Self { msg: e.to_string() }
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `.context(...)` / `.with_context(...)` on fallible values.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| e.into().wrap(ctx))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().wrap(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Format an [`Error`] from format-string arguments.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($($arg)*))
+    };
+}
+
+/// Early-return with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Bail unless `cond` holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: {}", ::std::stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<i64> {
+        let v: i64 = s.parse().context("not an integer")?;
+        ensure!(v >= 0, "negative: {v}");
+        Ok(v)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors_with_context() {
+        assert_eq!(parse("42").unwrap(), 42);
+        let e = parse("x").unwrap_err();
+        assert!(e.to_string().starts_with("not an integer: "));
+        assert_eq!(parse("-1").unwrap_err().to_string(), "negative: -1");
+    }
+
+    #[test]
+    fn option_context_and_macros() {
+        let none: Option<u32> = None;
+        assert_eq!(none.context("missing").unwrap_err().to_string(), "missing");
+        let e = anyhow!("bad {}", 7);
+        assert_eq!(format!("{e}"), "bad 7");
+        assert_eq!(format!("{e:?}"), "bad 7");
+    }
+
+    #[test]
+    fn with_context_is_lazy_on_ok() {
+        let mut called = false;
+        let r: Result<u8> = "3".parse::<u8>().with_context(|| {
+            called = true;
+            "not evaluated on Ok"
+        });
+        assert_eq!(r.unwrap(), 3);
+        assert!(!called, "with_context closure ran on Ok");
+    }
+}
