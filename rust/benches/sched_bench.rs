@@ -62,6 +62,26 @@ fn main() {
             .budget_ms(500)
             .run(|| cm.decode_iter_time(32, 32 * 1300)),
     );
+    // The epoch fast-forward closed form vs the loop it replaces (the
+    // O(1)-vs-O(rounds) pair behind DecodeMode::EpochClosedForm).
+    reports.push(
+        Bench::new("multi_round_decode_time/b32x100")
+            .budget_ms(500)
+            .run(|| cm.multi_round_decode_time(32, 32 * 1300, 100, 8)),
+    );
+    reports.push(
+        Bench::new("multi_round_decode_loop/b32x100")
+            .budget_ms(500)
+            .run(|| {
+                let mut tokens = 32u64 * 1300;
+                let mut t = 0.0;
+                for _ in 0..100 {
+                    t += cm.decode_iter_time(32, tokens) * 8.0;
+                    tokens += 32 * 8;
+                }
+                t
+            }),
+    );
 
     // Trace generation (workload generator throughput).
     reports.push(

@@ -8,7 +8,7 @@
 //! fig15 cell (512 GPUs) is the regression gate for the incremental
 //! replica index (dispatch used to rescan all replicas per arrival).
 
-use pecsched::config::{AblationFlags, ModelSpec, PolicyKind};
+use pecsched::config::{AblationFlags, DecodeMode, ModelSpec, PolicyKind};
 use pecsched::exp::capacity_rps;
 use pecsched::sim::{SimConfig, Simulation};
 use pecsched::trace::TraceConfig;
@@ -73,31 +73,47 @@ fn main() {
         ));
     }
 
-    // Raw event throughput (the §Perf headline number).
+    // Raw event throughput (the §Perf headline number), in both decode
+    // modes: the default epoch fast-forward and the retained per-round
+    // oracle, so BENCH_sim.json records the event-volume cut across PRs.
     let model = ModelSpec::mistral_7b();
     let t = trace(&model, 8000, 2);
     let kind = PolicyKind::PecSched(AblationFlags::full());
-    let r = sim_cell("event_engine/pecsched/8k_reqs", 4000, 3, || {
-        Simulation::new(
-            SimConfig::pecsched(model.clone(), AblationFlags::full()),
-            &t,
-            kind,
-        )
-    });
-    if let Some(eps) = r.events_per_s {
-        println!("  -> {:.2}M events/s", eps / 1e6);
+    for (mode, name) in [
+        (DecodeMode::Epoch, "event_engine/pecsched/8k_reqs"),
+        (DecodeMode::Round, "event_engine/pecsched_round_oracle/8k_reqs"),
+    ] {
+        let r = sim_cell(name, 4000, 3, || {
+            let mut cfg = SimConfig::pecsched(model.clone(), AblationFlags::full());
+            cfg.decode_mode = mode;
+            Simulation::new(cfg, &t, kind)
+        });
+        if let Some(eps) = r.events_per_s {
+            println!("  -> {:.2}M events/s", eps / 1e6);
+        }
+        reports.push(r);
     }
-    reports.push(r);
 
     // Fig 15 cell: big-cluster scheduling. Before the replica index this
-    // cell was dominated by O(R) dispatch scans at 512 GPUs.
+    // cell was dominated by O(R) dispatch scans at 512 GPUs; after PR 3 it
+    // runs on decode epoch fast-forward (the default), with the per-round
+    // oracle cell beside it as the before-side of the event-volume gate.
     let big = ModelSpec::llama31_70b();
     let t = trace(&big, 2000, 3);
-    reports.push(sim_cell("fig15_cell/llama70b/512gpu/2k_reqs", 4000, 2, || {
-        let mut cfg = SimConfig::pecsched(big.clone(), AblationFlags::full());
-        cfg.cluster = pecsched::config::ClusterSpec::with_total_gpus(512);
-        Simulation::new(cfg, &t, PolicyKind::PecSched(AblationFlags::full()))
-    }));
+    for (mode, name) in [
+        (DecodeMode::Epoch, "fig15_cell/llama70b/512gpu/2k_reqs"),
+        (
+            DecodeMode::Round,
+            "fig15_cell_round_oracle/llama70b/512gpu/2k_reqs",
+        ),
+    ] {
+        reports.push(sim_cell(name, 4000, 2, || {
+            let mut cfg = SimConfig::pecsched(big.clone(), AblationFlags::full());
+            cfg.cluster = pecsched::config::ClusterSpec::with_total_gpus(512);
+            cfg.decode_mode = mode;
+            Simulation::new(cfg, &t, PolicyKind::PecSched(AblationFlags::full()))
+        }));
+    }
 
     write_json("BENCH_sim.json", "sim", &reports).expect("write BENCH_sim.json");
     println!("wrote BENCH_sim.json ({} cells)", reports.len());

@@ -11,6 +11,32 @@ mod policy;
 pub use model::{ModelSpec, BYTES_PER_PARAM};
 pub use policy::{AblationFlags, PolicyKind};
 
+/// How the simulator advances batched decode progress.
+///
+/// The event loop's volume is dominated by decode stepping: one event per
+/// `decode_chunk` tokens per replica under [`DecodeMode::Round`], even
+/// when nothing about the batch can change for hundreds of rounds. The
+/// epoch modes instead push a single event at the next *semantic
+/// boundary* (the first completion in the batch) and fold the
+/// intermediate rounds into plain arithmetic.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum DecodeMode {
+    /// Per-round stepping — the seed behaviour, retained as the
+    /// equivalence oracle the epoch path is property-tested against.
+    Round,
+    /// Epoch fast-forward with loop-summed durations: the same f64
+    /// additions, in the same order, that per-round stepping performs, so
+    /// per-request timestamps are bit-identical to [`DecodeMode::Round`].
+    #[default]
+    Epoch,
+    /// Epoch fast-forward with closed-form durations
+    /// ([`crate::costmodel::CostModel::multi_round_decode_time`]): O(1)
+    /// per epoch instead of O(rounds), at the cost of dropping the cost
+    /// model's per-sequence floor division — an opt-in approximation for
+    /// huge sweeps.
+    EpochClosedForm,
+}
+
 
 /// Hardware characteristics of one accelerator + its interconnects.
 ///
@@ -122,8 +148,11 @@ pub struct SchedParams {
     /// Number of model replicas dedicated to short-request decode, by model
     /// name (§6.2: 4, 4, 1, 1).
     pub decode_replicas: usize,
-    /// Decode tokens simulated per event (batching decode rounds into
-    /// chunks keeps the event count tractable without changing totals).
+    /// Decode tokens simulated per round (the granularity of decode
+    /// progress and of the cost model's token growth). Under
+    /// [`DecodeMode::Epoch`] rounds between completions are coalesced into
+    /// one event, so this no longer bounds the event count — it only sets
+    /// the arithmetic step.
     pub decode_chunk: u32,
     /// PecSched preempts a long prefill only when the best ordinary
     /// replica's estimated queueing wait exceeds this (seconds). Keeps

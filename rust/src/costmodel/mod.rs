@@ -134,6 +134,106 @@ impl CostModel {
     }
 
     // ------------------------------------------------------------------
+    // Multi-round closed forms (decode epoch fast-forward)
+    // ------------------------------------------------------------------
+
+    /// Closed-form total duration of `rounds` consecutive decode rounds of
+    /// a fixed batch, starting from `start_tokens` batch context tokens and
+    /// gaining `batch · chunk` tokens per round.
+    ///
+    /// Both terms inside [`CostModel::decode_iter_time`]'s `max` are affine
+    /// in the batch token count — memory streams the weight shard plus the
+    /// KV, compute is linear weights plus linear attention — so along the
+    /// arithmetic token progression the max crosses over at most once and
+    /// the sum splits into at most two arithmetic series. The only
+    /// approximation is dropping `decode_flops`'s per-sequence floor
+    /// division (`tokens / batch` truncation), which the loop-summed epoch
+    /// path keeps; this closed form is the opt-in
+    /// [`crate::config::DecodeMode::EpochClosedForm`] mode for huge
+    /// sweeps, with the loop-summed path as default and oracle.
+    pub fn multi_round_decode_time(
+        &self,
+        batch: usize,
+        start_tokens: u64,
+        rounds: u64,
+        chunk: u64,
+    ) -> f64 {
+        if batch == 0 || rounds == 0 {
+            return 0.0;
+        }
+        let n = rounds as f64;
+        let s = (batch as u64 * chunk) as f64; // batch tokens gained per round
+        let t0 = start_tokens as f64;
+        let bwr = self.bw_rate(self.model.tp);
+        let fr = self.flops_rate(self.model.tp);
+        // mem(T) = am + bm·T ; comp(T) ≈ ac + bc·T.
+        let am = self.model.weight_bytes() / bwr;
+        let bm = self.model.kv_bytes_per_token() / bwr;
+        let ac = 2.0 * self.model.n_params * batch as f64 / fr;
+        let bc = 4.0
+            * (self.model.n_q_heads * self.model.d_head) as f64
+            * self.model.n_layers as f64
+            / fr;
+        // Σ_{k=k0}^{k1-1} (a + b·(t0 + k·s)) — an arithmetic series.
+        let series = |a: f64, b: f64, k0: f64, k1: f64| -> f64 {
+            let m = k1 - k0;
+            if m <= 0.0 {
+                return 0.0;
+            }
+            m * (a + b * t0) + b * s * (k0 + k1 - 1.0) * m / 2.0
+        };
+        let mem_first = am + bm * t0 >= ac + bc * t0;
+        let t_end = t0 + (n - 1.0) * s;
+        let mem_last = am + bm * t_end >= ac + bc * t_end;
+        let total = if mem_first == mem_last {
+            // One term dominates the whole window.
+            if mem_first {
+                series(am, bm, 0.0, n)
+            } else {
+                series(ac, bc, 0.0, n)
+            }
+        } else {
+            // Genuine crossover inside the window (implies bm != bc and
+            // s > 0, so the crossing round index is finite).
+            let k_star = ((ac - am) / (bm - bc) - t0) / s;
+            let k_split = k_star.ceil().clamp(0.0, n);
+            if mem_first {
+                series(am, bm, 0.0, k_split) + series(ac, bc, k_split, n)
+            } else {
+                series(ac, bc, 0.0, k_split) + series(am, bm, k_split, n)
+            }
+        };
+        chunk as f64 * total
+    }
+
+    /// Closed-form total duration of `rounds` consecutive long-decode
+    /// rounds, starting from `context` tokens and growing by `chunk` per
+    /// round. [`CostModel::long_decode_iter_time`] is a single affine
+    /// function of the context (no `max`), so this is one arithmetic
+    /// series and exact up to floating-point reassociation.
+    pub fn multi_round_long_decode_time(
+        &self,
+        context: u64,
+        n_replicas: usize,
+        rounds: u64,
+        chunk: u64,
+    ) -> f64 {
+        if rounds == 0 {
+            return 0.0;
+        }
+        let n = rounds as f64;
+        let s = chunk as f64; // context tokens gained per round
+        let c0 = context as f64;
+        let bwr = self.bw_rate(self.model.tp);
+        let a = self.model.weight_bytes() / bwr
+            + 2.0 * self.model.d_model as f64 * BYTES_PER_PARAM * n_replicas as f64
+                / self.hw.net_bw;
+        let b = self.model.kv_bytes_per_token() / n_replicas as f64 / bwr;
+        let total = n * (a + b * c0) + b * s * (n - 1.0) * n / 2.0;
+        chunk as f64 * total
+    }
+
+    // ------------------------------------------------------------------
     // Capacity planning
     // ------------------------------------------------------------------
 
@@ -210,6 +310,57 @@ mod tests {
         let c = cm(ModelSpec::yi_34b());
         assert!(c.decode_iter_time(8, 64_000) > c.decode_iter_time(8, 8_000));
         assert_eq!(c.decode_iter_time(0, 0), 0.0);
+    }
+
+    #[test]
+    fn multi_round_decode_matches_loop_sum() {
+        let chunk = 8u64;
+        for m in ModelSpec::catalog() {
+            let c = cm(m);
+            for &(batch, t0, rounds) in &[
+                (1usize, 1_024u64, 50u64),
+                (8, 8_000, 100),
+                (32, 64_000, 25),
+                (64, 4_000, 200),
+            ] {
+                let mut tokens = t0;
+                let mut looped = 0.0;
+                for _ in 0..rounds {
+                    looped += c.decode_iter_time(batch, tokens) * chunk as f64;
+                    tokens += batch as u64 * chunk;
+                }
+                let closed = c.multi_round_decode_time(batch, t0, rounds, chunk);
+                let rel = (closed - looped).abs() / looped;
+                // The closed form drops only the per-sequence floor
+                // division, a sub-token-per-round effect.
+                assert!(rel < 1e-2, "{}: batch={batch} rel={rel}", c.model.name);
+            }
+        }
+    }
+
+    #[test]
+    fn multi_round_long_decode_matches_loop_sum() {
+        let c = cm(ModelSpec::llama31_70b());
+        let chunk = 8u64;
+        let mut ctx = 400_000u64;
+        let mut looped = 0.0;
+        for _ in 0..60 {
+            looped += c.long_decode_iter_time(ctx, 4) * chunk as f64;
+            ctx += chunk;
+        }
+        let closed = c.multi_round_long_decode_time(400_000, 4, 60, chunk);
+        // Single affine term: exact up to floating-point reassociation.
+        assert!((closed - looped).abs() / looped < 1e-9, "closed={closed} looped={looped}");
+    }
+
+    #[test]
+    fn multi_round_decode_monotone_in_rounds() {
+        let c = cm(ModelSpec::mistral_7b());
+        let t10 = c.multi_round_decode_time(16, 10_000, 10, 8);
+        let t20 = c.multi_round_decode_time(16, 10_000, 20, 8);
+        assert!(t20 > 1.9 * t10, "t10={t10} t20={t20}");
+        assert_eq!(c.multi_round_decode_time(0, 0, 5, 8), 0.0);
+        assert_eq!(c.multi_round_decode_time(4, 100, 0, 8), 0.0);
     }
 
     #[test]

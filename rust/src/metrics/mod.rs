@@ -161,6 +161,10 @@ pub struct RunMetrics {
     pub t_shorts_done: f64,
     /// Eq. (1) idle rate over the run.
     pub gpu_idle_rate: f64,
+    /// Simulated events the engine processed — the event-volume regression
+    /// signal for the decode epoch fast-forward (events per completion is
+    /// O(1) between interruptions instead of O(output_len / decode_chunk)).
+    pub events_processed: u64,
     /// Wall-clock scheduling time per request / simulated JCT (Table 7).
     pub sched_overhead_short: Digest,
     pub sched_overhead_long: Digest,

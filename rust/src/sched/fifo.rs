@@ -2,6 +2,11 @@
 //! arrival order. A long request at the head blocks all dispatch until
 //! enough replicas are simultaneously idle — the §3.2 head-of-line
 //! blocking this paper sets out to fix.
+//!
+//! The head-long's idle wait resolves only when replicas *drain*, which is
+//! exactly the boundary decode epochs fire on — so FIFO sees the same
+//! wake sequence under epoch fast-forward as under per-round stepping,
+//! minus the no-op round wakes.
 
 use std::collections::VecDeque;
 

@@ -25,6 +25,14 @@ pub trait Policy {
 
     /// Re-examine queues after any state change (replica freed, prefill
     /// finished, long released, ...) and dispatch whatever now fits.
+    ///
+    /// Wake granularity: the engine invokes this at policy-visible
+    /// boundaries only — prefill/long completions and decode *semantic*
+    /// boundaries (a request completing, or a replica draining). Under
+    /// decode epoch fast-forward the intermediate decode rounds are folded
+    /// into arithmetic and never wake the policy; per-round mode fires the
+    /// same dispatches because round events without completions change no
+    /// policy-visible state.
     fn dispatch(&mut self, st: &mut SimState);
 
     /// Anything waiting in the policy's own queues? When false, `dispatch`

@@ -26,6 +26,13 @@
 //! simulator then also blocks long-prefill resumption on decode drain);
 //! /CoL turns rung 2 into decode preemption; /FSP plans long prefills with
 //! ring-only SP.
+//!
+//! Wake path under decode epoch fast-forward: the ladder re-runs on the
+//! same boundaries as per-round stepping — decode-pool token loads are
+//! caught up lazily before the migration-target pick, and a /CoL decode
+//! preemption folds the paused long's completed rounds before cancelling
+//! its epoch — so every rung's choice is identical to the per-round
+//! oracle's.
 
 use std::collections::VecDeque;
 

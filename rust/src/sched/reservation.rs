@@ -2,6 +2,10 @@
 //! sized to serve the largest long request (500K tokens, §6.2) is
 //! dedicated to longs; everything else serves shorts. The reserved pool
 //! idles most of the time — Table 1's observation.
+//!
+//! Both partitions' dispatch probes wake on decode *semantic* boundaries
+//! (completions/drains); decode epoch fast-forward coalesces the rounds
+//! in between without changing which probes fire.
 
 use std::collections::VecDeque;
 

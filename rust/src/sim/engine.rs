@@ -67,11 +67,29 @@ impl Simulation {
                     }
                 }
                 EventKind::MigrationDone { req, rid } => {
-                    st.on_migration_done(req, rid);
+                    if !st.on_migration_done(req, rid) {
+                        // The decode target died while the KV was in
+                        // flight: re-place the request like any other
+                        // failure displacement.
+                        let t0 = Instant::now();
+                        self.policy.on_arrival(st, req);
+                        st.reqs[req].sched_ns += t0.elapsed().as_nanos() as u64;
+                        st.recent_prefill_starts.clear();
+                    }
                 }
                 EventKind::DecodeRound { rid, gen } => {
                     let done = st.on_decode_round(rid, gen);
-                    if !done.is_empty() || st.replicas[rid].is_idle() {
+                    if done > 0 || st.replicas[rid].is_idle() {
+                        Self::timed_dispatch(&mut *self.policy, st);
+                    }
+                }
+                EventKind::DecodeEpoch { rid, gen } => {
+                    // Epoch boundaries wake the policy exactly when the
+                    // per-round oracle would: on a completion, or when the
+                    // replica drained. Intermediate rounds (folded into
+                    // the epoch) never changed policy-visible state.
+                    let done = st.on_decode_epoch(rid, gen);
+                    if done > 0 || st.replicas[rid].is_idle() {
                         Self::timed_dispatch(&mut *self.policy, st);
                     }
                 }
@@ -82,6 +100,11 @@ impl Simulation {
                 }
                 EventKind::LongDecodeRound { gid, gen } => {
                     if st.on_long_decode_round(gid, gen).is_some() {
+                        Self::timed_dispatch(&mut *self.policy, st);
+                    }
+                }
+                EventKind::LongDecodeEpoch { gid, gen } => {
+                    if st.on_long_decode_epoch(gid, gen).is_some() {
                         Self::timed_dispatch(&mut *self.policy, st);
                     }
                 }
@@ -111,10 +134,15 @@ impl Simulation {
         policy.dispatch(st);
         let ns = t0.elapsed().as_nanos() as u64;
         if !st.recent_prefill_starts.is_empty() {
-            let share = ns / st.recent_prefill_starts.len() as u64;
+            // Integer split that conserves every nanosecond: the first
+            // `ns % len` requests carry one extra, so Table 7's overhead
+            // sums are exact instead of silently dropping the remainder.
+            let len = st.recent_prefill_starts.len() as u64;
+            let share = ns / len;
+            let extra = (ns % len) as usize;
             for i in 0..st.recent_prefill_starts.len() {
                 let req = st.recent_prefill_starts[i];
-                st.reqs[req].sched_ns += share;
+                st.reqs[req].sched_ns += share + u64::from(i < extra);
             }
             st.recent_prefill_starts.clear();
         }
@@ -173,6 +201,7 @@ impl Simulation {
         }
 
         m.preemptions = st.preemptions;
+        m.events_processed = st.events_processed;
         let busy: Vec<f64> = st
             .replicas
             .iter_mut()

@@ -1,8 +1,18 @@
 //! Discrete-event machinery: a min-heap of timestamped events.
 //!
 //! Cancellation is by generation tag: work that can be preempted or
-//! re-batched (prefill completions, decode rounds) carries the generation
-//! of the entity that scheduled it; stale events are dropped when popped.
+//! re-batched (prefill completions, decode rounds, decode epochs) carries
+//! the generation of the entity that scheduled it; stale events are
+//! dropped when popped.
+//!
+//! Decode progress comes in two granularities. `DecodeRound` /
+//! `LongDecodeRound` step one batched round at a time (the seed behaviour,
+//! retained as the per-round equivalence oracle). `DecodeEpoch` /
+//! `LongDecodeEpoch` fast-forward to the next *semantic boundary* — the
+//! first request completion in the batch — with all intermediate rounds
+//! folded into plain arithmetic; external interruptions bump the same
+//! generation tag and reschedule a truncated epoch (see
+//! [`super::state`]'s epoch machinery).
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -25,12 +35,20 @@ pub enum EventKind {
     },
     /// A short request's KV handoff to its decode replica completed.
     MigrationDone { req: ReqId, rid: ReplicaId },
-    /// One batched decode round of a replica completed.
+    /// One batched decode round of a replica completed (per-round oracle
+    /// mode).
     DecodeRound { rid: ReplicaId, gen: u64 },
     /// A long-request SP prefill ran to completion (if not preempted).
     LongPrefillDone { gid: GroupId, gen: u64 },
-    /// One decode round of a long request completed.
+    /// One decode round of a long request completed (per-round oracle
+    /// mode).
     LongDecodeRound { gid: GroupId, gen: u64 },
+    /// A replica's decode batch reached its next semantic boundary — the
+    /// final round of the scheduled epoch (a completion, or the boundary a
+    /// truncation re-anchored to).
+    DecodeEpoch { rid: ReplicaId, gen: u64 },
+    /// A long request's decode reached the end of its scheduled epoch.
+    LongDecodeEpoch { gid: GroupId, gen: u64 },
 }
 
 #[derive(Debug, Clone, Copy)]

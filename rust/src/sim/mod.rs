@@ -14,5 +14,6 @@ pub use engine::{run_sim, Simulation};
 pub use events::{Event, EventKind, EventQueue, GroupId};
 pub use index::{IndexEntry, SchedIndex};
 pub use state::{
-    LongGroup, LongPhase, ReplicaRt, ReqPhase, ReqRt, SimConfig, SimState,
+    DecodeEpochRt, LongGroup, LongPhase, ReplicaRt, ReqPhase, ReqRt, SimConfig,
+    SimState,
 };

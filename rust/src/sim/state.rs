@@ -5,11 +5,24 @@
 //! from §5.2); policies in [`crate::sched`] decide *where and when* work is
 //! placed. The split mirrors the paper: the same execution substrate under
 //! FIFO / Reservation / Priority / PecSched.
+//!
+//! Decode progress defaults to **epoch fast-forward**
+//! ([`crate::config::DecodeMode::Epoch`]): instead of one event per
+//! `decode_chunk` tokens per replica, a single event is scheduled at the
+//! batch's next *semantic boundary* (the first completion), with the
+//! intermediate rounds folded into plain arithmetic via a lazy
+//! [`DecodeEpochRt`] cursor. External interruptions — a migration joining
+//! the batch, a prefill queueing on a shared replica, a /CoL decode
+//! preemption, a replica failure — catch the cursor up to the last
+//! boundary that already passed and split or cancel the epoch, exactly
+//! mirroring what per-round stepping would have done at those boundaries,
+//! so per-request timestamps are bit-identical to the retained
+//! [`crate::config::DecodeMode::Round`] oracle.
 
 use std::collections::VecDeque;
 
 use crate::cluster::{ReplicaId, Topology};
-use crate::config::{AblationFlags, ClusterSpec, ModelSpec, SchedParams};
+use crate::config::{AblationFlags, ClusterSpec, DecodeMode, ModelSpec, SchedParams};
 use crate::costmodel::{sp, CostModel, SpPlan};
 use crate::metrics::BusyTracker;
 use crate::trace::{ReqId, Request};
@@ -61,6 +74,33 @@ impl ReqRt {
     }
 }
 
+/// Lazy cursor of an in-flight decode epoch (epoch fast-forward modes).
+///
+/// An epoch is a run of decode rounds with fixed batch membership, ending
+/// at the first request completion (`rounds_total` rounds, event at
+/// `epoch_end`). Nothing per-round is materialised up front: the cursor
+/// advances on demand (`catch_up_*`) when some other event needs the
+/// replica's token count at the per-round-equivalent position, and the
+/// uniformly-deferred per-request progress (`pending_rounds` full chunks
+/// each) is folded in (`materialize_*`) before any membership change.
+/// Truncation re-anchors the epoch at the in-flight round's boundary
+/// without moving any timestamp — an epoch is only ever *split*, so the
+/// per-request completion times stay bit-identical to per-round stepping.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DecodeEpochRt {
+    /// Rounds in this epoch; the final one is handled by the epoch event.
+    pub rounds_total: u32,
+    /// Round boundaries the lazy cursor has already passed (< total).
+    pub rounds_done: u32,
+    /// Full rounds passed but not yet folded into per-request `generated`
+    /// (always 0 for long groups, which materialise eagerly).
+    pub pending_rounds: u32,
+    /// End time of the in-flight round (round index `rounds_done`).
+    pub round_end: f64,
+    /// Scheduled end of the whole epoch — the pending event's timestamp.
+    pub epoch_end: f64,
+}
+
 /// Phase of a long request's SP group.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum LongPhase {
@@ -90,6 +130,8 @@ pub struct LongGroup {
     /// Last time the prefill (re)gained the GPUs — preemption-quantum
     /// anchor.
     pub last_resume: f64,
+    /// In-flight decode epoch cursor (epoch fast-forward modes only).
+    pub decode_epoch: Option<DecodeEpochRt>,
 }
 
 /// Per-replica runtime state.
@@ -114,6 +156,9 @@ pub struct ReplicaRt {
     pub decode_waiting_tokens: u64,
     pub decode_running: bool,
     pub decode_gen: u64,
+    /// In-flight decode epoch cursor (epoch fast-forward modes only;
+    /// `Some` exactly while `decode_running` under those modes).
+    pub decode_epoch: Option<DecodeEpochRt>,
     // --- long occupancy ---
     pub long_group: Option<GroupId>,
     /// Prompt tokens of colocated shorts currently charged to this replica.
@@ -162,6 +207,9 @@ pub struct SimConfig {
     /// Reserve a dedicated short-decode pool (true for PecSched variants
     /// with disaggregation; false for all baselines).
     pub dedicated_decode_pool: bool,
+    /// Decode stepping granularity: epoch fast-forward (default) or the
+    /// per-round oracle; see [`DecodeMode`].
+    pub decode_mode: DecodeMode,
     /// Hard cap on simulated events (runaway guard).
     pub max_events: u64,
 }
@@ -174,6 +222,7 @@ impl SimConfig {
             params: SchedParams::default(),
             flags: AblationFlags::full(),
             dedicated_decode_pool: false,
+            decode_mode: DecodeMode::default(),
             max_events: 500_000_000,
         }
     }
@@ -186,6 +235,7 @@ impl SimConfig {
             params,
             flags,
             dedicated_decode_pool: flags.disaggregation,
+            decode_mode: DecodeMode::default(),
             max_events: 500_000_000,
         }
     }
@@ -199,6 +249,8 @@ pub struct SimState {
     pub topo: Topology,
     pub params: SchedParams,
     pub flags: AblationFlags,
+    /// Decode stepping granularity (see [`DecodeMode`]).
+    pub decode_mode: DecodeMode,
     pub reqs: Vec<ReqRt>,
     pub replicas: Vec<ReplicaRt>,
     pub groups: Vec<Option<LongGroup>>,
@@ -222,6 +274,12 @@ pub struct SimState {
     /// debug builds every indexed pick is cross-checked against the naive
     /// scan it replaced.
     pub index: SchedIndex,
+    /// Persistent scratch for the decode hot path: holds the batch being
+    /// advanced while keeps are pushed straight back into the replica's
+    /// (recycled) `decode_active` buffer — no per-round allocation.
+    scratch_active: Vec<ReqId>,
+    /// Persistent scratch for the requests that completed this round.
+    scratch_done: Vec<ReqId>,
 }
 
 impl SimState {
@@ -248,6 +306,7 @@ impl SimState {
                 decode_waiting_tokens: 0,
                 decode_running: false,
                 decode_gen: 0,
+                decode_epoch: None,
                 long_group: None,
                 colocated_tokens: 0,
                 dedicated_decode: false,
@@ -298,6 +357,7 @@ impl SimState {
             topo,
             params: cfg.params.clone(),
             flags: cfg.flags,
+            decode_mode: cfg.decode_mode,
             reqs,
             replicas,
             groups,
@@ -311,6 +371,8 @@ impl SimState {
             events_processed: 0,
             recent_prefill_starts: Vec::new(),
             index,
+            scratch_active: Vec::new(),
+            scratch_done: Vec::new(),
         }
     }
 
@@ -536,10 +598,13 @@ impl SimState {
 
         let r = &mut self.replicas[rid];
         r.down = true;
-        // Cancel in-flight work by bumping generations.
+        // Cancel in-flight work by bumping generations. The epoch cursor
+        // dies with the batch: its deferred progress is moot because every
+        // displaced request restarts from the prompt (`generated = 0`).
         r.prefill_gen += 1;
         r.decode_gen += 1;
         r.decode_running = false;
+        r.decode_epoch = None;
         if let Some(req) = r.running_prefill.take() {
             displaced.push(req);
         }
@@ -589,6 +654,12 @@ impl SimState {
         r.prefill_queue.push_back(req);
         r.queued_prefill_tokens += self.reqs[req].req.input_len as u64;
         self.try_start_prefill(rid);
+        // A decode batch in flight blocks the prefill until its round
+        // boundary; in epoch mode that boundary event must exist, so the
+        // epoch is split there (timing unchanged).
+        if self.replicas[rid].decode_running {
+            self.truncate_decode_epoch(rid);
+        }
         self.reindex(rid);
     }
 
@@ -681,6 +752,13 @@ impl SimState {
         // Route to decode: disaggregated (migrate to the pool) or local.
         // Falls back to local decode when the whole pool is failed.
         let decode_target = if self.flags.disaggregation {
+            // Epoch cursors lag the per-round token growth; fold the
+            // boundaries already passed so the `(load, id)` pick equals
+            // the per-round oracle's at this instant.
+            for i in 0..self.decode_pool.len() {
+                let pool_rid = self.decode_pool[i];
+                self.catch_up_decode_epoch(pool_rid, self.now);
+            }
             self.least_loaded_decode()
         } else {
             None
@@ -712,16 +790,39 @@ impl SimState {
         true
     }
 
-    /// Handle `MigrationDone`: the short joins its decode replica.
-    pub fn on_migration_done(&mut self, req: ReqId, rid: ReplicaId) {
+    /// Handle `MigrationDone`: the short joins its decode replica. Returns
+    /// false when the target failed while the KV transfer was in flight —
+    /// the caller must re-place the request (its prefill work is lost with
+    /// the destination, mirroring [`SimState::fail_replica`]'s
+    /// displacement contract).
+    pub fn on_migration_done(&mut self, req: ReqId, rid: ReplicaId) -> bool {
+        if self.replicas[rid].down {
+            let rt = &mut self.reqs[req];
+            rt.phase = ReqPhase::Queued;
+            rt.generated = 0;
+            rt.colocated_on = None;
+            return false;
+        }
+        // Fold the in-flight epoch's progress *before* membership can
+        // change, so deferred rounds are never credited to the newcomer.
+        self.materialize_decode_epoch(rid);
         self.reqs[req].phase = ReqPhase::DecodeQueued;
         let ctx = self.reqs[req].context_tokens();
         let r = &mut self.replicas[rid];
         r.decode_waiting.push_back(req);
         r.decode_waiting_tokens += ctx;
+        let admitted_before = self.replicas[rid].decode_active.len();
         self.try_admit_decode(rid);
+        if self.replicas[rid].decode_active.len() != admitted_before {
+            // The newcomer joins the in-flight round (per-round semantics:
+            // everyone in `decode_active` advances at the boundary), which
+            // invalidates the precomputed completion boundary — re-anchor
+            // the epoch at the in-flight round's end.
+            self.truncate_decode_epoch(rid);
+        }
         self.try_start_decode(rid);
         self.update_busy(rid);
+        true
     }
 
     // ------------------------------------------------------------------
@@ -766,6 +867,9 @@ impl SimState {
     }
 
     fn schedule_decode_round(&mut self, rid: ReplicaId) {
+        if self.decode_mode != DecodeMode::Round {
+            return self.schedule_decode_epoch(rid);
+        }
         let chunk = self.params.decode_chunk as u64;
         let r = &self.replicas[rid];
         let batch = r.decode_active.len();
@@ -781,34 +885,216 @@ impl SimState {
         );
     }
 
-    /// Handle a `DecodeRound` completion. Returns completed request ids.
-    pub fn on_decode_round(&mut self, rid: ReplicaId, gen: u64) -> Vec<ReqId> {
-        if self.replicas[rid].decode_gen != gen || !self.replicas[rid].decode_running {
-            return Vec::new();
-        }
-        self.replicas[rid].decode_running = false;
-        let chunk = self.params.decode_chunk;
-        let active = std::mem::take(&mut self.replicas[rid].decode_active);
-        let mut done = Vec::new();
-        let mut keep = Vec::new();
-        let mut tokens_delta: i64 = 0;
-        for req in active {
-            let rt = &mut self.reqs[req];
-            let step = chunk.min(rt.req.output_len - rt.generated);
-            rt.generated += step;
-            tokens_delta += step as i64;
-            if rt.generated >= rt.req.output_len {
-                tokens_delta -= rt.context_tokens() as i64;
-                done.push(req);
-            } else {
-                keep.push(req);
+    /// Epoch fast-forward: schedule a single event at the batch's next
+    /// semantic boundary — the end of the round in which the first request
+    /// completes. The loop below performs the *same* f64 additions, in the
+    /// same order, that per-round stepping performs (each round's duration
+    /// computed from the token count at its start, accumulated
+    /// sequentially), so the boundary timestamp is bit-identical to the
+    /// per-round oracle's.
+    fn schedule_decode_epoch(&mut self, rid: ReplicaId) {
+        let chunk_u = self.params.decode_chunk;
+        let chunk = chunk_u as u64;
+        let chunk_f = chunk as f64;
+        let r = &self.replicas[rid];
+        let batch = r.decode_active.len();
+        debug_assert!(batch > 0, "epoch over an empty batch");
+        let min_rem = r
+            .decode_active
+            .iter()
+            .map(|&q| self.reqs[q].req.output_len - self.reqs[q].generated)
+            .min()
+            .unwrap();
+        debug_assert!(min_rem >= 1, "completed request still in the batch");
+        let rounds = min_rem.div_ceil(chunk_u).max(1);
+        let mut tokens = r.decode_active_tokens;
+        let mut t = self.now;
+        let mut first_round_end = self.now;
+        if self.decode_mode == DecodeMode::EpochClosedForm && rounds > 1 {
+            let iter0 = self.cm.decode_iter_time(batch, tokens);
+            first_round_end = self.now + iter0 * chunk_f;
+            t = self.now
+                + self
+                    .cm
+                    .multi_round_decode_time(batch, tokens, rounds as u64, chunk);
+        } else {
+            for k in 0..rounds {
+                let iter = self.cm.decode_iter_time(batch, tokens);
+                t += iter * chunk_f;
+                if k == 0 {
+                    first_round_end = t;
+                }
+                tokens += batch as u64 * chunk;
             }
         }
         let r = &mut self.replicas[rid];
-        r.decode_active = keep;
-        r.decode_active_tokens = (r.decode_active_tokens as i64 + tokens_delta)
-            .max(0) as u64;
-        for &req in &done {
+        r.decode_running = true;
+        r.decode_gen += 1;
+        let gen = r.decode_gen;
+        r.decode_epoch = Some(DecodeEpochRt {
+            rounds_total: rounds,
+            rounds_done: 0,
+            pending_rounds: 0,
+            round_end: first_round_end,
+            epoch_end: t,
+        });
+        r.busy.set_busy(self.now);
+        self.queue.push(t, EventKind::DecodeEpoch { rid, gen });
+    }
+
+    /// Advance the lazy epoch cursor over every round boundary at or
+    /// before `limit` (excluding the epoch's final round, which only the
+    /// epoch event itself processes). Each passed boundary adds one full
+    /// chunk per batched request to the replica's token count — exactly
+    /// what the per-round handler would have done at that boundary — and
+    /// defers the per-request `generated` bump into `pending_rounds`.
+    fn catch_up_decode_epoch(&mut self, rid: ReplicaId, limit: f64) {
+        if !self.replicas[rid].decode_running {
+            return;
+        }
+        let Some(mut ep) = self.replicas[rid].decode_epoch else { return };
+        let chunk = self.params.decode_chunk as u64;
+        let chunk_f = chunk as f64;
+        let batch = self.replicas[rid].decode_active.len();
+        let mut tokens = self.replicas[rid].decode_active_tokens;
+        let before = ep.rounds_done;
+        while ep.rounds_done + 1 < ep.rounds_total && ep.round_end <= limit {
+            tokens += batch as u64 * chunk;
+            ep.rounds_done += 1;
+            ep.pending_rounds += 1;
+            let iter = self.cm.decode_iter_time(batch, tokens);
+            ep.round_end += iter * chunk_f;
+        }
+        let changed = ep.rounds_done != before;
+        self.replicas[rid].decode_epoch = Some(ep);
+        if changed {
+            self.replicas[rid].decode_active_tokens = tokens;
+            self.reindex(rid);
+        }
+    }
+
+    /// Fold the cursor's deferred full rounds into per-request progress.
+    /// Mid-epoch rounds never complete a request (the epoch ends at the
+    /// first completion), so every deferred round is a full chunk.
+    fn materialize_decode_epoch(&mut self, rid: ReplicaId) {
+        self.catch_up_decode_epoch(rid, self.now);
+        let Some(mut ep) = self.replicas[rid].decode_epoch else { return };
+        if ep.pending_rounds == 0 {
+            return;
+        }
+        let step = ep.pending_rounds * self.params.decode_chunk;
+        for i in 0..self.replicas[rid].decode_active.len() {
+            let req = self.replicas[rid].decode_active[i];
+            let rt = &mut self.reqs[req];
+            debug_assert!(
+                rt.generated + step < rt.req.output_len,
+                "a deferred mid-epoch round completed a request"
+            );
+            rt.generated += step;
+        }
+        ep.pending_rounds = 0;
+        self.replicas[rid].decode_epoch = Some(ep);
+    }
+
+    /// An external change (batch admission, a prefill now waiting on the
+    /// round boundary) invalidated the epoch's precomputed completion
+    /// boundary. Re-anchor: fold the rounds already passed, cancel the
+    /// pending epoch event, and reschedule just the in-flight round at its
+    /// original boundary — no timestamp moves, the epoch is merely split.
+    ///
+    /// Callers that change batch membership must call
+    /// [`SimState::materialize_decode_epoch`] *before* the change.
+    fn truncate_decode_epoch(&mut self, rid: ReplicaId) {
+        if !self.replicas[rid].decode_running {
+            return;
+        }
+        self.materialize_decode_epoch(rid);
+        let Some(ep) = self.replicas[rid].decode_epoch else { return };
+        if ep.rounds_done + 1 >= ep.rounds_total {
+            return; // already in the final round; its event is pending
+        }
+        let r = &mut self.replicas[rid];
+        r.decode_gen += 1;
+        let gen = r.decode_gen;
+        r.decode_epoch = Some(DecodeEpochRt {
+            rounds_total: ep.rounds_done + 1,
+            epoch_end: ep.round_end,
+            ..ep
+        });
+        self.queue.push(ep.round_end, EventKind::DecodeEpoch { rid, gen });
+    }
+
+    /// Handle a `DecodeRound` completion (per-round oracle mode). Returns
+    /// the number of requests that completed.
+    pub fn on_decode_round(&mut self, rid: ReplicaId, gen: u64) -> usize {
+        if self.replicas[rid].decode_gen != gen || !self.replicas[rid].decode_running {
+            return 0;
+        }
+        debug_assert!(self.replicas[rid].decode_epoch.is_none());
+        self.finish_decode_round(rid)
+    }
+
+    /// Handle a `DecodeEpoch` boundary: fold every earlier round of the
+    /// epoch, then process its final round exactly like the per-round
+    /// handler. Returns the number of requests that completed.
+    pub fn on_decode_epoch(&mut self, rid: ReplicaId, gen: u64) -> usize {
+        if self.replicas[rid].decode_gen != gen || !self.replicas[rid].decode_running {
+            return 0;
+        }
+        // Round-count-bounded (not time-bounded) catch-up: the closed-form
+        // mode's event timestamp may differ slightly from the loop-summed
+        // boundaries.
+        self.catch_up_decode_epoch(rid, f64::INFINITY);
+        self.materialize_decode_epoch(rid);
+        self.replicas[rid].decode_epoch = None;
+        self.finish_decode_round(rid)
+    }
+
+    /// Advance the batch by one round (the per-round step, shared by both
+    /// modes): each active request gains up to one chunk, completions are
+    /// retired with exact token accounting, then the replica moves on —
+    /// admit waiters, yield to queued prefills, or keep decoding.
+    fn finish_decode_round(&mut self, rid: ReplicaId) -> usize {
+        self.replicas[rid].decode_running = false;
+        let chunk = self.params.decode_chunk;
+        // Recycled buffers: `active` holds the batch being advanced while
+        // keeps go straight back into the replica's (empty) buffer.
+        let mut active = std::mem::take(&mut self.scratch_active);
+        debug_assert!(active.is_empty());
+        std::mem::swap(&mut active, &mut self.replicas[rid].decode_active);
+        self.scratch_done.clear();
+        let mut added: u64 = 0;
+        let mut removed: u64 = 0;
+        for i in 0..active.len() {
+            let req = active[i];
+            let rt = &mut self.reqs[req];
+            let step = chunk.min(rt.req.output_len - rt.generated);
+            rt.generated += step;
+            added += step as u64;
+            if rt.generated >= rt.req.output_len {
+                removed += rt.context_tokens();
+                self.scratch_done.push(req);
+            } else {
+                self.replicas[rid].decode_active.push(req);
+            }
+        }
+        active.clear();
+        self.scratch_active = active;
+        let r = &mut self.replicas[rid];
+        // Exact KV-token accounting: the batch gained `added` generated
+        // tokens and released the full context of every completion. The
+        // delta can never drive the sum negative — a completion's context
+        // is its pre-round tokens (already counted) plus this round's step
+        // (in `added`).
+        debug_assert!(
+            r.decode_active_tokens + added >= removed,
+            "decode KV-token bookkeeping drifted negative: {} + {added} < {removed}",
+            r.decode_active_tokens
+        );
+        r.decode_active_tokens = r.decode_active_tokens + added - removed;
+        let n_done = self.scratch_done.len();
+        for i in 0..n_done {
+            let req = self.scratch_done[i];
             self.complete_request(req);
         }
 
@@ -824,7 +1110,7 @@ impl SimState {
             self.maybe_resume_long(gid);
         }
         self.update_busy(rid);
-        done
+        n_done
     }
 
     // ------------------------------------------------------------------
@@ -871,6 +1157,7 @@ impl SimState {
             gen: 0,
             preemptions: 0,
             last_resume: self.now,
+            decode_epoch: None,
         }));
         for &rid in &members {
             self.reindex(rid);
@@ -954,6 +1241,18 @@ impl SimState {
 
     /// /CoL only: short prefill suspends long decode.
     pub fn pause_long_decode(&mut self, gid: GroupId) {
+        // Fold the rounds whose boundaries already passed before the pause
+        // cancels the epoch — per-round semantics: completed rounds stick,
+        // the in-flight round's partial progress is lost.
+        if matches!(
+            self.groups[gid].as_ref().map(|g| g.phase),
+            Some(LongPhase::Decode { paused: false })
+        ) {
+            self.catch_up_long_epoch(gid, self.now);
+            if let Some(g) = self.groups[gid].as_mut() {
+                g.decode_epoch = None;
+            }
+        }
         let Some(g) = self.groups[gid].as_mut() else { return };
         if let LongPhase::Decode { paused: paused @ false } = &mut g.phase {
             *paused = true;
@@ -1032,6 +1331,9 @@ impl SimState {
     }
 
     fn schedule_long_decode_round(&mut self, gid: GroupId) {
+        if self.decode_mode != DecodeMode::Round {
+            return self.schedule_long_decode_epoch(gid);
+        }
         let g = self.groups[gid].as_ref().unwrap();
         let req = &self.reqs[g.req];
         let chunk = self.params.decode_chunk as f64;
@@ -1045,8 +1347,78 @@ impl SimState {
         );
     }
 
-    /// Handle `LongDecodeRound`. Returns `Some(freed_replicas)` when the
-    /// long request completed and released its group.
+    /// Epoch fast-forward for a long request's decode: one event at the
+    /// completion (its only semantic boundary — a single sequence has no
+    /// batch churn), durations accumulated in the per-round f64 order so
+    /// the completion timestamp is bit-identical to per-round stepping.
+    fn schedule_long_decode_epoch(&mut self, gid: GroupId) {
+        let chunk_u = self.params.decode_chunk;
+        let chunk_f = chunk_u as f64;
+        let g = self.groups[gid].as_ref().unwrap();
+        let rt = &self.reqs[g.req];
+        let n_members = g.members.len();
+        debug_assert!(rt.generated < rt.req.output_len);
+        let remaining = rt.req.output_len - rt.generated;
+        let rounds = remaining.div_ceil(chunk_u).max(1);
+        let mut ctx = rt.context_tokens();
+        let mut t = self.now;
+        let mut first_round_end = self.now;
+        if self.decode_mode == DecodeMode::EpochClosedForm && rounds > 1 {
+            let iter0 = self.cm.long_decode_iter_time(ctx, n_members);
+            first_round_end = self.now + iter0 * chunk_f;
+            t = self.now
+                + self.cm.multi_round_long_decode_time(
+                    ctx,
+                    n_members,
+                    rounds as u64,
+                    chunk_u as u64,
+                );
+        } else {
+            for k in 0..rounds {
+                let iter = self.cm.long_decode_iter_time(ctx, n_members);
+                t += iter * chunk_f;
+                if k == 0 {
+                    first_round_end = t;
+                }
+                ctx += chunk_u as u64;
+            }
+        }
+        let g = self.groups[gid].as_mut().unwrap();
+        let gen = g.gen;
+        g.decode_epoch = Some(DecodeEpochRt {
+            rounds_total: rounds,
+            rounds_done: 0,
+            pending_rounds: 0,
+            round_end: first_round_end,
+            epoch_end: t,
+        });
+        self.queue.push(t, EventKind::LongDecodeEpoch { gid, gen });
+    }
+
+    /// Advance a long group's epoch cursor over boundaries at or before
+    /// `limit` (excluding the final round). Long groups materialise
+    /// eagerly — a single sequence, so each passed round is one `generated`
+    /// bump.
+    fn catch_up_long_epoch(&mut self, gid: GroupId, limit: f64) {
+        let Some(g) = self.groups[gid].as_ref() else { return };
+        let Some(mut ep) = g.decode_epoch else { return };
+        let (req, n_members) = (g.req, g.members.len());
+        let chunk_u = self.params.decode_chunk;
+        let chunk_f = chunk_u as f64;
+        while ep.rounds_done + 1 < ep.rounds_total && ep.round_end <= limit {
+            self.reqs[req].generated += chunk_u;
+            ep.rounds_done += 1;
+            let iter = self
+                .cm
+                .long_decode_iter_time(self.reqs[req].context_tokens(), n_members);
+            ep.round_end += iter * chunk_f;
+        }
+        self.groups[gid].as_mut().unwrap().decode_epoch = Some(ep);
+    }
+
+    /// Handle `LongDecodeRound` (per-round oracle mode). Returns
+    /// `Some(freed_replicas)` when the long request completed and released
+    /// its group.
     pub fn on_long_decode_round(&mut self, gid: GroupId, gen: u64) -> Option<Vec<ReplicaId>> {
         let Some(g) = self.groups[gid].as_ref() else { return None };
         if g.gen != gen {
@@ -1055,6 +1427,29 @@ impl SimState {
         if let LongPhase::Decode { paused: true } = g.phase {
             return None;
         }
+        debug_assert!(g.decode_epoch.is_none());
+        self.finish_long_decode_round(gid)
+    }
+
+    /// Handle `LongDecodeEpoch`: fold every earlier round, then process the
+    /// final (completing) round exactly like the per-round handler.
+    pub fn on_long_decode_epoch(&mut self, gid: GroupId, gen: u64) -> Option<Vec<ReplicaId>> {
+        let Some(g) = self.groups[gid].as_ref() else { return None };
+        if g.gen != gen {
+            return None;
+        }
+        if let LongPhase::Decode { paused: true } = g.phase {
+            return None;
+        }
+        self.catch_up_long_epoch(gid, f64::INFINITY);
+        self.groups[gid].as_mut().unwrap().decode_epoch = None;
+        self.finish_long_decode_round(gid)
+    }
+
+    /// One long-decode round (shared by both modes): advance up to a
+    /// chunk; on completion release the group, otherwise keep decoding.
+    fn finish_long_decode_round(&mut self, gid: GroupId) -> Option<Vec<ReplicaId>> {
+        let g = self.groups[gid].as_ref().unwrap();
         let req = g.req;
         let chunk = self.params.decode_chunk;
         let rt = &mut self.reqs[req];
@@ -1177,16 +1572,22 @@ mod tests {
                     st.on_short_prefill_done(rid, req, gen);
                 }
                 EventKind::MigrationDone { req, rid } => {
-                    st.on_migration_done(req, rid)
+                    st.on_migration_done(req, rid);
                 }
                 EventKind::DecodeRound { rid, gen } => {
                     st.on_decode_round(rid, gen);
+                }
+                EventKind::DecodeEpoch { rid, gen } => {
+                    st.on_decode_epoch(rid, gen);
                 }
                 EventKind::LongPrefillDone { gid, gen } => {
                     st.on_long_prefill_done(gid, gen);
                 }
                 EventKind::LongDecodeRound { gid, gen } => {
                     st.on_long_decode_round(gid, gen);
+                }
+                EventKind::LongDecodeEpoch { gid, gen } => {
+                    st.on_long_decode_epoch(gid, gen);
                 }
             }
         }
@@ -1326,6 +1727,9 @@ mod tests {
                 EventKind::LongDecodeRound { gid, gen } => {
                     st.on_long_decode_round(gid, gen);
                 }
+                EventKind::LongDecodeEpoch { gid, gen } => {
+                    st.on_long_decode_epoch(gid, gen);
+                }
                 _ => {}
             }
         }
@@ -1372,7 +1776,9 @@ mod tests {
         for i in 0..20 {
             st.enqueue_short_prefill(i % 4, i);
         }
-        // Interleave: after every event, the caches must equal the naive sums.
+        // Interleave: after every event, the caches must equal the naive
+        // sums plus whatever the epoch cursor has passed but deferred
+        // (`pending_rounds` full chunks per batched request).
         while let Some(ev) = st.queue.pop() {
             st.now = ev.time.max(st.now);
             match ev.kind {
@@ -1380,10 +1786,13 @@ mod tests {
                     st.on_short_prefill_done(rid, req, gen);
                 }
                 EventKind::MigrationDone { req, rid } => {
-                    st.on_migration_done(req, rid)
+                    st.on_migration_done(req, rid);
                 }
                 EventKind::DecodeRound { rid, gen } => {
                     st.on_decode_round(rid, gen);
+                }
+                EventKind::DecodeEpoch { rid, gen } => {
+                    st.on_decode_epoch(rid, gen);
                 }
                 _ => {}
             }
@@ -1398,10 +1807,104 @@ mod tests {
                     .iter()
                     .map(|&q| st.reqs[q].context_tokens())
                     .sum();
-                assert_eq!(r.decode_active_tokens, naive_a, "active cache");
+                let deferred: u64 = r
+                    .decode_epoch
+                    .map(|ep| {
+                        ep.pending_rounds as u64
+                            * st.params.decode_chunk as u64
+                            * r.decode_active.len() as u64
+                    })
+                    .unwrap_or(0);
+                assert_eq!(r.decode_active_tokens, naive_a + deferred, "active cache");
                 assert_eq!(r.decode_waiting_tokens, naive_w, "waiting cache");
             }
         }
         assert_eq!(st.shorts_done, 20);
+    }
+
+    /// A decode target that fails while the KV transfer is in flight must
+    /// bounce the migrating request back for re-placement instead of
+    /// landing (and decoding) on the dead replica.
+    #[test]
+    fn migration_to_failed_replica_is_bounced() {
+        let reqs = [short(0, 0.0, 1000, 16)];
+        let mut st = state(&reqs, AblationFlags::full(), true);
+        st.queue.pop();
+        st.enqueue_short_prefill(0, 0);
+        // Run the prefill completion, which schedules the migration.
+        let ev = st.queue.pop().unwrap();
+        st.now = ev.time.max(st.now);
+        let EventKind::ShortPrefillDone { rid, req, gen } = ev.kind else {
+            panic!("expected prefill completion");
+        };
+        st.on_short_prefill_done(rid, req, gen);
+        assert_eq!(st.reqs[0].phase, ReqPhase::Migrating);
+        // The chosen target crashes during the transfer window.
+        let ev = st.queue.pop().unwrap();
+        st.now = ev.time.max(st.now);
+        let EventKind::MigrationDone { req, rid } = ev.kind else {
+            panic!("expected migration completion");
+        };
+        st.fail_replica(rid);
+        assert!(!st.on_migration_done(req, rid), "must not land on a down replica");
+        assert_eq!(st.reqs[0].phase, ReqPhase::Queued, "returned for re-placement");
+        assert!(st.replicas[rid].decode_waiting.is_empty());
+        assert!(!st.replicas[rid].busy.is_busy());
+    }
+
+    /// The per-round oracle mode must still drive a full lifecycle — it is
+    /// the equivalence baseline the epoch path is property-tested against.
+    #[test]
+    fn per_round_oracle_mode_still_steps() {
+        let reqs = [short(0, 0.0, 1000, 40), short(1, 0.0, 800, 24)];
+        let mut cfg = SimConfig::pecsched(ModelSpec::mistral_7b(), AblationFlags::full());
+        cfg.decode_mode = DecodeMode::Round;
+        let mut st = SimState::new(&cfg, &reqs);
+        st.queue.pop();
+        st.queue.pop();
+        st.enqueue_short_prefill(0, 0);
+        st.enqueue_short_prefill(1, 1);
+        drain(&mut st);
+        assert_eq!(st.shorts_done, 2);
+        for r in &st.replicas {
+            assert!(r.decode_epoch.is_none(), "oracle mode must not build epochs");
+        }
+    }
+
+    /// A decode batch undisturbed for many rounds must reach its completion
+    /// through a single epoch event, and the epoch cursor must vanish once
+    /// the batch drains.
+    #[test]
+    fn undisturbed_epoch_completes_in_one_event() {
+        let reqs = [short(0, 0.0, 1000, 160)];
+        let mut st = state(&reqs, AblationFlags::full(), false);
+        st.queue.pop();
+        st.enqueue_short_prefill(2, 0);
+        let mut decode_events = 0u64;
+        while let Some(ev) = st.queue.pop() {
+            st.now = ev.time.max(st.now);
+            match ev.kind {
+                EventKind::ShortPrefillDone { rid, req, gen } => {
+                    st.on_short_prefill_done(rid, req, gen);
+                }
+                EventKind::MigrationDone { req, rid } => {
+                    st.on_migration_done(req, rid);
+                }
+                EventKind::DecodeRound { rid, gen } => {
+                    st.on_decode_round(rid, gen);
+                    decode_events += 1;
+                }
+                EventKind::DecodeEpoch { rid, gen } => {
+                    st.on_decode_epoch(rid, gen);
+                    decode_events += 1;
+                }
+                _ => {}
+            }
+        }
+        assert_eq!(st.shorts_done, 1);
+        // 160 output tokens at chunk=8 is 20 per-round events; the epoch
+        // path coalesces them into one.
+        assert_eq!(decode_events, 1, "expected a single epoch event");
+        assert!(st.replicas[2].decode_epoch.is_none());
     }
 }

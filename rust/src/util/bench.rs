@@ -29,15 +29,19 @@ pub struct BenchReport {
     /// (set via [`BenchReport::with_events_per_run`]); `null` in the JSON
     /// for pure micro-op cells.
     pub events_per_s: Option<f64>,
+    /// Raw event count of one iteration — the decode-epoch event-volume
+    /// regression signal, tracked in the JSON alongside the rate.
+    pub events_per_run: Option<u64>,
 }
 
 impl BenchReport {
     /// Derive events/second from the number of simulator events one
-    /// iteration processes.
+    /// iteration processes, and record the raw count.
     pub fn with_events_per_run(mut self, events: u64) -> Self {
         if self.mean_s > 0.0 {
             self.events_per_s = Some(events as f64 / self.mean_s);
         }
+        self.events_per_run = Some(events);
         self
     }
 
@@ -99,6 +103,7 @@ impl Bench {
             p99_s: samples[p99_idx],
             min_s: samples[0],
             events_per_s: None,
+            events_per_run: None,
         };
         println!("{report}");
         report
@@ -130,9 +135,14 @@ pub fn write_json(path: &str, suite: &str, reports: &[BenchReport]) -> std::io::
             .events_per_s
             .map(|e| num(e))
             .unwrap_or_else(|| "null".into());
+        let events_n = r
+            .events_per_run
+            .map(|e| e.to_string())
+            .unwrap_or_else(|| "null".into());
         out.push_str(&format!(
             "  {{\"name\": \"{}\", \"iters\": {}, \"mean_s\": {}, \"p50_s\": {}, \
-             \"p99_s\": {}, \"min_s\": {}, \"ops_per_s\": {}, \"events_per_s\": {}}}",
+             \"p99_s\": {}, \"min_s\": {}, \"ops_per_s\": {}, \"events_per_s\": {}, \
+             \"events_per_run\": {}}}",
             esc(&r.name),
             r.iters,
             num(r.mean_s),
@@ -141,6 +151,7 @@ pub fn write_json(path: &str, suite: &str, reports: &[BenchReport]) -> std::io::
             num(r.min_s),
             num(r.ops_per_s()),
             events,
+            events_n,
         ));
     }
     out.push_str("\n]}\n");

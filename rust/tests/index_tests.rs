@@ -71,9 +71,14 @@ fn placement_and_prefill_lifecycle_keep_index_current() {
             ShortPrefillDone { rid, req, gen } => {
                 st.on_short_prefill_done(rid, req, gen);
             }
-            MigrationDone { req, rid } => st.on_migration_done(req, rid),
+            MigrationDone { req, rid } => {
+                st.on_migration_done(req, rid);
+            }
             DecodeRound { rid, gen } => {
                 st.on_decode_round(rid, gen);
+            }
+            DecodeEpoch { rid, gen } => {
+                st.on_decode_epoch(rid, gen);
             }
             _ => {}
         }
@@ -113,9 +118,14 @@ fn long_group_displacement_and_release_reindex_members() {
             ShortPrefillDone { rid, req, gen } => {
                 st.on_short_prefill_done(rid, req, gen);
             }
-            MigrationDone { req, rid } => st.on_migration_done(req, rid),
+            MigrationDone { req, rid } => {
+                st.on_migration_done(req, rid);
+            }
             DecodeRound { rid, gen } => {
                 st.on_decode_round(rid, gen);
+            }
+            DecodeEpoch { rid, gen } => {
+                st.on_decode_epoch(rid, gen);
             }
             LongPrefillDone { gid, gen } => {
                 st.on_long_prefill_done(gid, gen);
@@ -123,6 +133,9 @@ fn long_group_displacement_and_release_reindex_members() {
             }
             LongDecodeRound { gid, gen } => {
                 st.on_long_decode_round(gid, gen);
+            }
+            LongDecodeEpoch { gid, gen } => {
+                st.on_long_decode_epoch(gid, gen);
             }
             _ => {}
         }
@@ -168,15 +181,23 @@ fn preemption_pause_resume_keeps_index_current() {
             ShortPrefillDone { rid, req, gen } => {
                 st.on_short_prefill_done(rid, req, gen);
             }
-            MigrationDone { req, rid } => st.on_migration_done(req, rid),
+            MigrationDone { req, rid } => {
+                st.on_migration_done(req, rid);
+            }
             DecodeRound { rid, gen } => {
                 st.on_decode_round(rid, gen);
+            }
+            DecodeEpoch { rid, gen } => {
+                st.on_decode_epoch(rid, gen);
             }
             LongPrefillDone { gid, gen } => {
                 st.on_long_prefill_done(gid, gen);
             }
             LongDecodeRound { gid, gen } => {
                 st.on_long_decode_round(gid, gen);
+            }
+            LongDecodeEpoch { gid, gen } => {
+                st.on_long_decode_epoch(gid, gen);
             }
             _ => {}
         }
@@ -206,6 +227,9 @@ fn colocation_charge_and_release_rekey_candidates() {
             LongDecodeRound { gid, gen } => {
                 st.on_long_decode_round(gid, gen);
             }
+            LongDecodeEpoch { gid, gen } => {
+                st.on_long_decode_epoch(gid, gen);
+            }
             _ => {}
         }
         check(&st, "while waiting for decode phase");
@@ -229,15 +253,23 @@ fn colocation_charge_and_release_rekey_candidates() {
             ShortPrefillDone { rid, req, gen } => {
                 st.on_short_prefill_done(rid, req, gen);
             }
-            MigrationDone { req, rid } => st.on_migration_done(req, rid),
+            MigrationDone { req, rid } => {
+                st.on_migration_done(req, rid);
+            }
             DecodeRound { rid, gen } => {
                 st.on_decode_round(rid, gen);
+            }
+            DecodeEpoch { rid, gen } => {
+                st.on_decode_epoch(rid, gen);
             }
             LongPrefillDone { gid, gen } => {
                 st.on_long_prefill_done(gid, gen);
             }
             LongDecodeRound { gid, gen } => {
                 st.on_long_decode_round(gid, gen);
+            }
+            LongDecodeEpoch { gid, gen } => {
+                st.on_long_decode_epoch(gid, gen);
             }
             _ => {}
         }

@@ -5,7 +5,7 @@
 
 use pecsched::cluster::Topology;
 use pecsched::config::{
-    AblationFlags, ClusterSpec, ModelSpec, PolicyKind,
+    AblationFlags, ClusterSpec, DecodeMode, ModelSpec, PolicyKind,
 };
 use pecsched::metrics::Digest;
 use pecsched::server::KvPool;
@@ -149,6 +149,74 @@ fn prop_indexed_placement_matches_scan_oracle() {
             trace.len(),
             "case {case}: {} lost requests",
             kind.name()
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// decode epoch fast-forward ≡ per-round stepping (the epoch oracle)
+// ---------------------------------------------------------------------
+
+/// Replay random traces twice — once with per-round decode stepping
+/// (`DecodeMode::Round`, the retained oracle) and once with epoch
+/// fast-forward (`DecodeMode::Epoch`) — under every policy. The epoch
+/// path computes each epoch's duration with the same f64 additions, in
+/// the same order, as per-round stepping, so every per-request
+/// `prefill_start` and `finish` timestamp must be *bit-identical*, while
+/// the event count must only ever shrink.
+#[test]
+fn prop_epoch_replay_matches_per_round_oracle() {
+    let mut rng = Rng::seed_from_u64(0xE90C);
+    let models = ModelSpec::catalog();
+    for case in 0..10 {
+        let model = models[rng.below(models.len())].clone();
+        let n = 60 + rng.below(200);
+        let trace = random_trace(&mut rng, n, true);
+        let kind = policies()[case % policies().len()];
+        let cfg_for = |mode: DecodeMode| {
+            let mut cfg = match kind {
+                PolicyKind::PecSched(f) => SimConfig::pecsched(model.clone(), f),
+                _ => SimConfig::baseline(model.clone()),
+            };
+            cfg.decode_mode = mode;
+            cfg
+        };
+        let mut round = Simulation::new(cfg_for(DecodeMode::Round), &trace, kind);
+        let rm = round.run();
+        let mut epoch = Simulation::new(cfg_for(DecodeMode::Epoch), &trace, kind);
+        let em = epoch.run();
+        assert_eq!(
+            rm.shorts_completed + rm.longs_completed,
+            trace.len(),
+            "case {case}: oracle lost requests"
+        );
+        for (a, b) in round.state.reqs.iter().zip(epoch.state.reqs.iter()) {
+            assert_eq!(
+                a.prefill_start.map(f64::to_bits),
+                b.prefill_start.map(f64::to_bits),
+                "case {case}: {} req {} prefill_start diverged: {:?} vs {:?}",
+                kind.name(),
+                a.req.id,
+                a.prefill_start,
+                b.prefill_start
+            );
+            assert_eq!(
+                a.finish.map(f64::to_bits),
+                b.finish.map(f64::to_bits),
+                "case {case}: {} req {} finish diverged: {:?} vs {:?}",
+                kind.name(),
+                a.req.id,
+                a.finish,
+                b.finish
+            );
+            assert_eq!(a.generated, b.generated, "case {case}: token progress");
+        }
+        assert_eq!(rm.preemptions, em.preemptions, "case {case}: preemption count");
+        assert!(
+            em.events_processed <= rm.events_processed,
+            "case {case}: epoch mode processed more events ({} > {})",
+            em.events_processed,
+            rm.events_processed
         );
     }
 }
