@@ -30,10 +30,7 @@ fn main() {
         PolicyKind::Fifo,
         PolicyKind::PecSched(AblationFlags::full()),
     ] {
-        let cfg = match kind {
-            PolicyKind::PecSched(f) => SimConfig::pecsched(model.clone(), f),
-            _ => SimConfig::baseline(model.clone()),
-        };
+        let cfg = SimConfig::for_policy(model.clone(), kind);
         let mut m = run_sim(cfg, &trace, kind);
         println!("\n--- {} ---", m.policy);
         println!(

@@ -9,7 +9,7 @@
 //! replica index (dispatch used to rescan all replicas per arrival).
 
 use pecsched::config::{AblationFlags, DecodeMode, ModelSpec, PolicyKind};
-use pecsched::exp::capacity_rps;
+use pecsched::exp::{capacity_rps, run_sweep, SweepSpec};
 use pecsched::sim::{SimConfig, Simulation};
 use pecsched::trace::TraceConfig;
 use pecsched::util::{write_json, Bench, BenchReport};
@@ -63,13 +63,7 @@ fn main() {
             &format!("fig9_cell/{}/4k_reqs", kind.name()),
             3000,
             3,
-            || {
-                let cfg = match kind {
-                    PolicyKind::PecSched(f) => SimConfig::pecsched(model.clone(), f),
-                    _ => SimConfig::baseline(model.clone()),
-                };
-                Simulation::new(cfg, &t, kind)
-            },
+            || Simulation::new(SimConfig::for_policy(model.clone(), kind), &t, kind),
         ));
     }
 
@@ -113,6 +107,36 @@ fn main() {
             cfg.decode_mode = mode;
             Simulation::new(cfg, &t, PolicyKind::PecSched(AblationFlags::full()))
         }));
+    }
+
+    // Sweep-runner scaling: the same fixed 16-cell grid on 1 thread vs
+    // all cores, so BENCH_sim.json tracks the parallel speedup across
+    // PRs. (Results are determinism-gated elsewhere — CI diffs the sweep
+    // JSON across thread counts — this cell only measures wall time.)
+    let n_cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let sweep_spec = |threads: usize| SweepSpec {
+        name: "bench".into(),
+        models: vec![ModelSpec::mistral_7b()],
+        policies: PolicyKind::comparison_set(),
+        scenarios: vec!["azure-steady".into(), "burst".into()],
+        loads: vec![0.6],
+        seeds: vec![1, 2],
+        n_requests: 800,
+        gpu_counts: vec![32],
+        threads,
+    };
+    for threads in [1usize, n_cores] {
+        reports.push(
+            Bench::new(&format!("sweep_runner/{threads}threads/16cells"))
+                .budget_ms(6000)
+                .min_iters(2)
+                .run(|| run_sweep(&sweep_spec(threads)).len()),
+        );
+        if threads == 1 && n_cores == 1 {
+            break;
+        }
     }
 
     write_json("BENCH_sim.json", "sim", &reports).expect("write BENCH_sim.json");

@@ -1,11 +1,15 @@
 //! Figs. 12–14 + Table 6 — §6.4 ablation study: PecSched vs /PE, /Dis,
 //! /CoL, /FSP on short delay, short throughput, long JCT and preemptions.
+//! A thin [`SweepSpec`] declaration over the ablation policy set.
 
-use pecsched::config::{ModelSpec, PolicyKind};
-use pecsched::exp::{banner, fmt_pcts, run_cell, trace_for, ExpParams};
+use pecsched::config::PolicyKind;
+use pecsched::exp::{banner, fmt_pcts, run_sweep, write_sweep_json, CellResult, SweepSpec};
 
 fn main() {
-    let p = ExpParams::from_env();
+    let spec = SweepSpec {
+        policies: PolicyKind::ablation_set(),
+        ..SweepSpec::from_env("ablation")
+    };
     banner("Figs 12-14 + Table 6: ablation study");
     println!(
         "(paper: /PE has 75-376% higher short p99 and 21-48% lower \
@@ -13,47 +17,54 @@ fn main() {
          preemptions: /FSP > /CoL > /Dis > PecSched)\n"
     );
 
-    for model in ModelSpec::catalog() {
-        let trace = trace_for(&model, &p);
+    let results = run_sweep(&spec);
+    for model in &spec.models {
+        let rows: Vec<&CellResult> = results
+            .iter()
+            .filter(|r| r.cell.model.name == model.name)
+            .collect();
         println!("=== {} ===", model.name);
-        let mut rows = Vec::new();
-        for kind in PolicyKind::ablation_set() {
-            rows.push(run_cell(&model, kind, &trace));
-        }
-        let base_p99 = rows[0].short_queue_delay.quantile(0.99);
-        let base_rps = rows[0].short_rps();
-        let base_jct = rows[0].long_jct.mean();
+        // Grid order puts the full system first (ablation_set()[0]).
+        let base_rps = rows[0].summary.short_rps;
+        let base_jct = rows[0].summary.long_jct_mean;
 
         println!("Fig 12 (short queueing delay):");
-        for m in &mut rows {
-            let pcts = m.short_queue_delay.paper_percentiles();
-            println!("  {}", fmt_pcts(&m.policy, pcts));
+        for r in &rows {
+            println!(
+                "  {}",
+                fmt_pcts(&r.cell.policy.name(), r.summary.short_delay_pcts)
+            );
         }
         println!("Fig 13 (short throughput):");
-        for m in &rows {
+        for r in &rows {
             println!(
                 "  {:<16} {:>8.2} RPS ({:+.0}% vs PecSched)",
-                m.policy,
-                m.short_rps(),
-                (m.short_rps() / base_rps - 1.0) * 100.0
+                r.cell.policy.name(),
+                r.summary.short_rps,
+                (r.summary.short_rps / base_rps - 1.0) * 100.0
             );
         }
         println!("Fig 14 (long avg JCT):");
-        for m in &rows {
+        for r in &rows {
             println!(
                 "  {:<16} {:>9.1}s ({:+.0}% vs PecSched)",
-                m.policy,
-                m.long_jct.mean(),
-                (m.long_jct.mean() / base_jct - 1.0) * 100.0
+                r.cell.policy.name(),
+                r.summary.long_jct_mean,
+                (r.summary.long_jct_mean / base_jct - 1.0) * 100.0
             );
         }
         println!("Table 6 (preemptions of long requests):");
-        for m in &rows {
-            if m.policy != "PecSched/PE" {
-                println!("  {:<16} {:>10}", m.policy, m.preemptions);
+        for r in &rows {
+            if r.cell.policy.name() != "PecSched/PE" {
+                println!(
+                    "  {:<16} {:>10}",
+                    r.cell.policy.name(),
+                    r.summary.preemptions
+                );
             }
         }
-        let _ = base_p99;
         println!();
     }
+    write_sweep_json("SWEEP_ablation.json", &spec, &results).expect("write SWEEP_ablation.json");
+    println!("wrote SWEEP_ablation.json ({} cells)", results.len());
 }

@@ -4,6 +4,11 @@
 //! Prints the histogram series of both distributions plus the headline
 //! statistics §3.1 quotes: ~80% of inputs below 2K tokens, outputs under
 //! 800, long tail decaying with length.
+//!
+//! Trace-layer only — no simulation, hence no [`SweepSpec`]; it drives
+//! the same Azure-shape [`pecsched::trace::LengthMix`] the `azure-*`
+//! scenarios assemble (use `pecsched trace-gen --scenario <name>` to dump
+//! any other registered scenario's trace).
 
 use pecsched::exp::{banner, ExpParams};
 use pecsched::trace::{histogram, percentile_of, LengthStats, TraceConfig};

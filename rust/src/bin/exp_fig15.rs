@@ -1,26 +1,25 @@
 //! Fig. 15 — §6.6 scalability: p99 scheduling-time / JCT ratio as the
 //! cluster grows from 32 to 8192 GPUs, arrivals at cluster capacity.
 //!
-//! The simulation-based study of the paper, reproduced directly: the
-//! scheduling search space grows with replica count, so the wall-clock
-//! decision time (and thus the ratio) grows roughly linearly in GPUs.
+//! A thin [`SweepSpec`] over the `gpus` axis: the runner scales each
+//! cell's arrival rate linearly with the cluster and its request wall by
+//! sqrt(scale), the same scaling protocol the seed binary hand-rolled.
+//! The `paper-p95` scenario keeps the seed's workload (§6.2's literal
+//! p95 rewrite, ~5% longs — `TraceConfig::default()`'s mix). One
+//! deliberate delta remains (DESIGN.md §2): rates are anchored to the
+//! *calibrated* per-model capacity (`sustainable_rps`) like every other
+//! sweep, not the analytic `capacity_rps` estimate the seed used, so
+//! absolute ratios/makespans shift while the growth trend is unchanged.
+//! The
+//! wall-clock sched/JCT ratio comes from the nondeterministic side of
+//! each [`CellResult`] (never serialized); the deterministic summaries
+//! land in `SWEEP_fig15.json`.
 
-use pecsched::config::{
-    AblationFlags, ClusterSpec, ModelSpec, PolicyKind, SchedParams,
-};
-use pecsched::exp::{banner, capacity_rps, ExpParams};
-use pecsched::sim::{run_sim, SimConfig};
-use pecsched::trace::TraceConfig;
+use pecsched::config::{AblationFlags, ModelSpec, PolicyKind};
+use pecsched::exp::{banner, run_sweep, write_sweep_json, ExpParams, SweepSpec};
 
 fn main() {
     let p = ExpParams::from_env();
-    banner("Fig 15: scheduling overhead vs cluster size (PecSched)");
-    println!(
-        "(paper: ratio grows ~linearly in GPUs, stays < 5.2% at 8192 GPUs, \
-         smaller for bigger models)\n"
-    );
-
-    let gpu_counts = [32usize, 128, 512, 2048, 8192];
     // Two ends of the model range keep the runtime sane while showing the
     // model-size trend; set PECSCHED_ALL_MODELS=1 for all four.
     let models: Vec<ModelSpec> = if std::env::var("PECSCHED_ALL_MODELS").is_ok() {
@@ -28,51 +27,43 @@ fn main() {
     } else {
         vec![ModelSpec::mistral_7b(), ModelSpec::llama31_70b()]
     };
+    let spec = SweepSpec {
+        models,
+        policies: vec![PolicyKind::PecSched(AblationFlags::full())],
+        scenarios: vec!["paper-p95".into()],
+        gpu_counts: vec![32, 128, 512, 2048, 8192],
+        // Fixed wall of requests per cell (the runner grows it by
+        // sqrt(cluster scale)).
+        n_requests: p.n_requests.min(3000).max(500),
+        ..SweepSpec::from_env("fig15")
+    };
 
+    banner("Fig 15: scheduling overhead vs cluster size (PecSched)");
+    println!(
+        "(paper: ratio grows ~linearly in GPUs, stays < 5.2% at 8192 GPUs, \
+         smaller for bigger models)\n"
+    );
     println!(
         "{:<16} {:>8} {:>10} {:>14} {:>12}",
         "model", "GPUs", "replicas", "p99 sched/JCT", "makespan"
     );
-    for model in models {
-        for &gpus in &gpu_counts {
-            let cluster = ClusterSpec::with_total_gpus(gpus);
-            // Arrival rate scales with cluster capacity.
-            let scale = gpus as f64 / 32.0;
-            let rps = capacity_rps(&model, p.load) * scale;
-            // Keep total work bounded: fixed wall of requests per cell.
-            let n = p.n_requests.min(3000).max(500);
-            let trace = TraceConfig {
-                n_requests: (n as f64 * scale.sqrt()) as usize,
-                rps,
-                seed: p.seed,
-                ..TraceConfig::default()
-            }
-            .generate();
-            let mut cfg = SimConfig::pecsched(model.clone(), AblationFlags::full());
-            cfg.cluster = cluster;
-            // Bigger clusters host more decode replicas proportionally.
-            cfg.params = SchedParams {
-                decode_replicas: (SchedParams::decode_replicas_for(&model) as f64
-                    * scale)
-                    .ceil() as usize,
-                ..SchedParams::for_model(&model)
-            };
-            let replicas = cfg.cluster.replicas_for(&model);
-            let mut m = run_sim(
-                cfg,
-                &trace,
-                PolicyKind::PecSched(AblationFlags::full()),
-            );
-            let ratio = if m.sched_overhead_short.is_empty() {
-                f64::NAN
-            } else {
-                m.sched_overhead_short.quantile(0.99) * 100.0
-            };
-            println!(
-                "{:<16} {:>8} {:>10} {:>13.4}% {:>11.1}s",
-                model.name, gpus, replicas, ratio, m.makespan
-            );
+    let results = run_sweep(&spec);
+    let mut last_model = String::new();
+    for r in &results {
+        if !last_model.is_empty() && r.cell.model.name != last_model {
+            println!();
         }
-        println!();
+        last_model = r.cell.model.name.clone();
+        println!(
+            "{:<16} {:>8} {:>10} {:>13.4}% {:>11.1}s",
+            r.cell.model.name,
+            r.cell.gpus,
+            r.replicas,
+            r.sched_p99_short * 100.0,
+            r.summary.makespan
+        );
     }
+    println!();
+    write_sweep_json("SWEEP_fig15.json", &spec, &results).expect("write SWEEP_fig15.json");
+    println!("wrote SWEEP_fig15.json ({} cells)", results.len());
 }

@@ -1,27 +1,40 @@
 //! Fig. 2 — FIFO with vs without long requests: normalized queueing delay
 //! percentiles (a) and short-request throughput (b), across all four
 //! models. Reproduces §3.2's head-of-line-blocking measurement.
+//!
+//! A thin [`SweepSpec`]: the "with" side is the `azure-steady` scenario,
+//! the "without" side the `shorts-only` scenario (rewrite disabled, so
+//! the would-be longs stay body-sized shorts — statistically the same
+//! comparison the seed made by dropping the rewritten requests).
 
-use pecsched::config::{ModelSpec, PolicyKind};
-use pecsched::exp::{banner, fmt_pcts, run_cell, trace_for, ExpParams};
+use pecsched::config::PolicyKind;
+use pecsched::exp::{banner, fmt_pcts, run_sweep, write_sweep_json, SweepSpec};
 
 fn main() {
-    let p = ExpParams::from_env();
+    let spec = SweepSpec {
+        policies: vec![PolicyKind::Fifo],
+        scenarios: vec!["azure-steady".into(), "shorts-only".into()],
+        ..SweepSpec::from_env("fig2")
+    };
     banner("Fig 2: FIFO, short requests with vs without long requests");
     println!(
         "(paper: w/ longs p99 is 2.5x/2.78x/3.84x/10.2x higher; throughput \
          drops to 0.64x/0.56x/0.39x/0.19x)\n"
     );
 
-    for model in ModelSpec::catalog() {
-        let trace = trace_for(&model, &p);
-        let without = trace.without_longs();
+    let results = run_sweep(&spec);
+    for model in &spec.models {
+        let find = |scen: &str| {
+            results
+                .iter()
+                .find(|r| r.cell.model.name == model.name && r.cell.scenario == scen)
+                .expect("cell missing")
+        };
+        let with = find("azure-steady");
+        let without = find("shorts-only");
 
-        let mut with_m = run_cell(&model, PolicyKind::Fifo, &trace);
-        let mut wo_m = run_cell(&model, PolicyKind::Fifo, &without);
-
-        let pw = with_m.short_queue_delay.paper_percentiles();
-        let po = wo_m.short_queue_delay.paper_percentiles();
+        let pw = with.summary.short_delay_pcts;
+        let po = without.summary.short_delay_pcts;
         println!("--- {} ---", model.name);
         println!("{}", fmt_pcts("w/ longs", pw));
         println!("{}", fmt_pcts("w/o longs", po));
@@ -29,10 +42,12 @@ fn main() {
         println!("p99 delay ratio (w/ / w/o): {ratio:.2}x");
         println!(
             "throughput: w/ {:.2} RPS, w/o {:.2} RPS -> {:.2}x",
-            with_m.short_rps(),
-            wo_m.short_rps(),
-            with_m.short_rps() / wo_m.short_rps()
+            with.summary.short_rps,
+            without.summary.short_rps,
+            with.summary.short_rps / without.summary.short_rps
         );
         println!();
     }
+    write_sweep_json("SWEEP_fig2.json", &spec, &results).expect("write SWEEP_fig2.json");
+    println!("wrote SWEEP_fig2.json ({} cells)", results.len());
 }

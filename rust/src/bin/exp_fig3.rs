@@ -1,30 +1,41 @@
 //! Fig. 3 — Reservation vs FIFO: short-request queueing delay percentiles
-//! (a) and throughput (b), all models.
+//! (a) and throughput (b), all models. A thin [`SweepSpec`] declaration.
 
-use pecsched::config::{ModelSpec, PolicyKind};
-use pecsched::exp::{banner, fmt_pcts, run_cell, trace_for, ExpParams};
+use pecsched::config::PolicyKind;
+use pecsched::exp::{banner, fmt_pcts, run_sweep, write_sweep_json, SweepSpec};
 
 fn main() {
-    let p = ExpParams::from_env();
+    let spec = SweepSpec {
+        policies: vec![PolicyKind::Fifo, PolicyKind::Reservation],
+        ..SweepSpec::from_env("fig3")
+    };
     banner("Fig 3: Reservation vs FIFO (short requests)");
     println!(
         "(paper: Reservation p99 is 1.2x/1.35x/1.8x/1.94x FIFO; throughput \
          0.49x/0.47x/0.46x/0.44x)\n"
     );
-    for model in ModelSpec::catalog() {
-        let trace = trace_for(&model, &p);
-        let mut fifo = run_cell(&model, PolicyKind::Fifo, &trace);
-        let mut resv = run_cell(&model, PolicyKind::Reservation, &trace);
-        let pf = fifo.short_queue_delay.paper_percentiles();
-        let pr = resv.short_queue_delay.paper_percentiles();
+    let results = run_sweep(&spec);
+    for model in &spec.models {
+        let find = |policy: &str| {
+            results
+                .iter()
+                .find(|r| r.cell.model.name == model.name && r.cell.policy.name() == policy)
+                .expect("cell missing")
+        };
+        let fifo = find("FIFO");
+        let resv = find("Reservation");
+        let pf = fifo.summary.short_delay_pcts;
+        let pr = resv.summary.short_delay_pcts;
         println!("--- {} ---", model.name);
         println!("{}", fmt_pcts("FIFO", pf));
         println!("{}", fmt_pcts("Reservation", pr));
         println!(
             "p99 ratio (resv/fifo): {:.2}x  throughput ratio: {:.2}x",
             pr[4] / pf[4].max(1e-9),
-            resv.short_rps() / fifo.short_rps()
+            resv.summary.short_rps / fifo.summary.short_rps
         );
         println!();
     }
+    write_sweep_json("SWEEP_fig3.json", &spec, &results).expect("write SWEEP_fig3.json");
+    println!("wrote SWEEP_fig3.json ({} cells)", results.len());
 }

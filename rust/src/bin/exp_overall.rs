@@ -4,12 +4,14 @@
 //! * Fig. 9 : queueing-delay percentiles of short requests
 //! * Fig. 10: throughput (RPS) of short requests
 //! * Fig. 11: average JCT of long requests (unbounded under Priority)
+//!
+//! A thin [`SweepSpec`] declaration: the grid runs on the parallel sweep
+//! runner and the cells are also written to `SWEEP_overall.json`.
 
-use pecsched::config::{ModelSpec, PolicyKind};
-use pecsched::exp::{banner, fmt_pcts, run_cell, trace_for, ExpParams};
+use pecsched::exp::{banner, fmt_pcts, run_sweep, write_sweep_json, CellResult, SweepSpec};
 
 fn main() {
-    let p = ExpParams::from_env();
+    let spec = SweepSpec::from_env("overall");
     banner("Figs 9-11: overall comparison (FIFO / Reservation / Priority / PecSched)");
     println!(
         "(paper: PecSched ~= Priority on short p99; 58-87% below FIFO and \
@@ -17,66 +19,72 @@ fn main() {
          Reservation; Priority long JCT unbounded)\n"
     );
 
-    for model in ModelSpec::catalog() {
-        let trace = trace_for(&model, &p);
+    let results = run_sweep(&spec);
+    for model in &spec.models {
+        let rows: Vec<&CellResult> = results
+            .iter()
+            .filter(|r| r.cell.model.name == model.name)
+            .collect();
         println!("=== {} ===", model.name);
-        let mut rows = Vec::new();
-        for kind in PolicyKind::comparison_set() {
-            let m = run_cell(&model, kind, &trace);
-            rows.push(m);
-        }
+
         // Fig 9: delay percentiles.
         println!("Fig 9 (queueing delay of shorts):");
         let mut fifo_p99 = 0.0;
-        for m in &mut rows {
-            let pcts = m.short_queue_delay.paper_percentiles();
-            if m.policy == "FIFO" {
+        for r in &rows {
+            let pcts = r.summary.short_delay_pcts;
+            if r.cell.policy.name() == "FIFO" {
                 fifo_p99 = pcts[4];
             }
-            println!("  {}", fmt_pcts(&m.policy, pcts));
+            println!("  {}", fmt_pcts(&r.cell.policy.name(), pcts));
         }
-        // Headline reductions.
-        for m in &mut rows {
-            if m.policy == "PecSched" {
-                let p99 = m.short_queue_delay.quantile(0.99);
+        for r in &rows {
+            if r.cell.policy.name() == "PecSched" {
                 println!(
                     "  PecSched p99 reduction vs FIFO: {:.0}%",
-                    (1.0 - p99 / fifo_p99.max(1e-12)) * 100.0
+                    (1.0 - r.summary.short_p99_delay() / fifo_p99.max(1e-12)) * 100.0
                 );
             }
         }
+
         // Fig 10: throughput.
         println!("Fig 10 (short-request throughput):");
         let mut fifo_rps = 0.0;
-        for m in &rows {
-            if m.policy == "FIFO" {
-                fifo_rps = m.short_rps();
+        for r in &rows {
+            if r.cell.policy.name() == "FIFO" {
+                fifo_rps = r.summary.short_rps;
             }
-            println!("  {:<14} {:>8.2} RPS", m.policy, m.short_rps());
+            println!("  {:<14} {:>8.2} RPS", r.cell.policy.name(), r.summary.short_rps);
         }
-        for m in &rows {
-            if m.policy == "PecSched" {
+        for r in &rows {
+            if r.cell.policy.name() == "PecSched" {
                 println!(
                     "  PecSched throughput vs FIFO: {:+.0}%",
-                    (m.short_rps() / fifo_rps.max(1e-12) - 1.0) * 100.0
+                    (r.summary.short_rps / fifo_rps.max(1e-12) - 1.0) * 100.0
                 );
             }
         }
+
         // Fig 11: long JCT.
         println!("Fig 11 (avg JCT of longs):");
-        for m in &rows {
-            let starved = if m.policy == "Priority" {
-                format!("  [{:.0}% starved -> effectively unbounded]", m.starved_frac() * 100.0)
+        for r in &rows {
+            let s = &r.summary;
+            let starved = if r.cell.policy.name() == "Priority" {
+                format!(
+                    "  [{:.0}% starved -> effectively unbounded]",
+                    s.starved_frac() * 100.0
+                )
             } else {
                 String::new()
             };
             println!(
                 "  {:<14} {:>9.1}s{}",
-                m.policy,
-                m.long_jct.mean(),
+                r.cell.policy.name(),
+                s.long_jct_mean,
                 starved
             );
         }
         println!();
     }
+    write_sweep_json("SWEEP_overall.json", &spec, &results).expect("write SWEEP_overall.json");
+    println!("wrote SWEEP_overall.json ({} cells)", results.len());
 }

@@ -2,6 +2,9 @@
 //! which (attention, MLP) combination wins per sequence length and model,
 //! and the fast-SP vs ring-only prefill-time gap the /FSP ablation rests
 //! on.
+//!
+//! Cost-model layer only — deterministic closed-form evaluation, no
+//! simulation, hence no [`pecsched::exp::SweepSpec`].
 
 use pecsched::config::ModelSpec;
 use pecsched::costmodel::{sp, CostModel};

@@ -1,23 +1,34 @@
 //! Table 1 — GPU idle rate (Eq. 1) under FIFO vs Reservation, all models.
+//! A thin [`SweepSpec`] declaration.
 
-use pecsched::config::{ModelSpec, PolicyKind};
-use pecsched::exp::{banner, run_cell, trace_for, ExpParams};
+use pecsched::config::PolicyKind;
+use pecsched::exp::{banner, run_sweep, write_sweep_json, SweepSpec};
 
 fn main() {
-    let p = ExpParams::from_env();
+    let spec = SweepSpec {
+        policies: vec![PolicyKind::Fifo, PolicyKind::Reservation],
+        ..SweepSpec::from_env("table1")
+    };
     banner("Table 1: GPU idle rate, FIFO vs Reservation");
     println!("(paper: FIFO ~1e-4; Reservation 0.16 / 0.22 / 0.25 / 0.41)\n");
-    println!(
-        "{:<16} {:>12} {:>12}",
-        "model", "FIFO", "Reservation"
-    );
-    for model in ModelSpec::catalog() {
-        let trace = trace_for(&model, &p);
-        let fifo = run_cell(&model, PolicyKind::Fifo, &trace);
-        let resv = run_cell(&model, PolicyKind::Reservation, &trace);
+    println!("{:<16} {:>12} {:>12}", "model", "FIFO", "Reservation");
+    let results = run_sweep(&spec);
+    for model in &spec.models {
+        let rate = |policy: &str| {
+            results
+                .iter()
+                .find(|r| r.cell.model.name == model.name && r.cell.policy.name() == policy)
+                .expect("cell missing")
+                .summary
+                .gpu_idle_rate
+        };
         println!(
             "{:<16} {:>12.4} {:>12.4}",
-            model.name, fifo.gpu_idle_rate, resv.gpu_idle_rate
+            model.name,
+            rate("FIFO"),
+            rate("Reservation")
         );
     }
+    write_sweep_json("SWEEP_table1.json", &spec, &results).expect("write SWEEP_table1.json");
+    println!("\nwrote SWEEP_table1.json ({} cells)", results.len());
 }

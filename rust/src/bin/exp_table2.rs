@@ -1,22 +1,28 @@
 //! Table 2 — fraction of long requests starved under the Priority policy.
+//! A thin [`SweepSpec`] declaration.
 
-use pecsched::config::{ModelSpec, PolicyKind};
-use pecsched::exp::{banner, run_cell, trace_for, ExpParams};
+use pecsched::config::PolicyKind;
+use pecsched::exp::{banner, run_sweep, write_sweep_json, SweepSpec};
 
 fn main() {
-    let p = ExpParams::from_env();
+    let spec = SweepSpec {
+        policies: vec![PolicyKind::Priority],
+        ..SweepSpec::from_env("table2")
+    };
     banner("Table 2: long requests starved under Priority");
     println!("(paper: 92% / 97% / 100% / 100%)\n");
     println!("{:<16} {:>8} {:>8} {:>10}", "model", "longs", "starved", "fraction");
-    for model in ModelSpec::catalog() {
-        let trace = trace_for(&model, &p);
-        let m = run_cell(&model, PolicyKind::Priority, &trace);
+    let results = run_sweep(&spec);
+    for r in &results {
+        let s = &r.summary;
         println!(
             "{:<16} {:>8} {:>8} {:>9.0}%",
-            model.name,
-            m.longs_total,
-            m.longs_starved,
-            m.starved_frac() * 100.0
+            r.cell.model.name,
+            s.longs_total,
+            s.longs_starved,
+            s.starved_frac() * 100.0
         );
     }
+    write_sweep_json("SWEEP_table2.json", &spec, &results).expect("write SWEEP_table2.json");
+    println!("\nwrote SWEEP_table2.json ({} cells)", results.len());
 }

@@ -1,22 +1,23 @@
 //! Table 3 — total preemptions of long-request prefill when fast SP is
 //! *not* used (the motivating measurement; equals the /FSP ablation row of
-//! Table 6). Preemption counts grow with model size.
+//! Table 6). Preemption counts grow with model size. A thin [`SweepSpec`]
+//! declaration.
 
-use pecsched::config::{AblationFlags, ModelSpec, PolicyKind};
-use pecsched::exp::{banner, run_cell, trace_for, ExpParams};
+use pecsched::config::{AblationFlags, PolicyKind};
+use pecsched::exp::{banner, run_sweep, write_sweep_json, SweepSpec};
 
 fn main() {
-    let p = ExpParams::from_env();
+    let spec = SweepSpec {
+        policies: vec![PolicyKind::PecSched(AblationFlags::no_fast_sp())],
+        ..SweepSpec::from_env("table3")
+    };
     banner("Table 3: long-request prefill preemptions without fast SP");
     println!("(paper: 167,394 / 205,947 / 278,504 / 379,305 — shape: grows with model)\n");
     println!("{:<16} {:>12}", "model", "preemptions");
-    for model in ModelSpec::catalog() {
-        let trace = trace_for(&model, &p);
-        let m = run_cell(
-            &model,
-            PolicyKind::PecSched(AblationFlags::no_fast_sp()),
-            &trace,
-        );
-        println!("{:<16} {:>12}", model.name, m.preemptions);
+    let results = run_sweep(&spec);
+    for r in &results {
+        println!("{:<16} {:>12}", r.cell.model.name, r.summary.preemptions);
     }
+    write_sweep_json("SWEEP_table3.json", &spec, &results).expect("write SWEEP_table3.json");
+    println!("\nwrote SWEEP_table3.json ({} cells)", results.len());
 }

@@ -5,35 +5,31 @@
 //! decisions (arrival handling + dispatch), exactly what the paper's
 //! overhead accounting covers; JCT is simulated time. The claim under test
 //! is the paper's: the ratio is far below 1% and falls with model size.
+//!
+//! A thin [`SweepSpec`] declaration. The overhead ratios come from the
+//! wall-clock side of each [`CellResult`] — kept out of the sweep JSON
+//! (they vary run to run); only this table prints them.
 
-use pecsched::config::{AblationFlags, ModelSpec, PolicyKind};
-use pecsched::exp::{banner, run_cell, trace_for, ExpParams};
+use pecsched::config::{AblationFlags, PolicyKind};
+use pecsched::exp::{banner, run_sweep, write_sweep_json, SweepSpec};
 
 fn main() {
-    let p = ExpParams::from_env();
+    let spec = SweepSpec {
+        policies: vec![PolicyKind::PecSched(AblationFlags::full())],
+        ..SweepSpec::from_env("table7")
+    };
     banner("Table 7: p99 scheduling-time / JCT ratio under PecSched");
     println!("(paper: shorts 0.354%/0.282%/0.196%/0.071%; longs 0.183%/0.147%/0.055%/0.019%)\n");
-    println!(
-        "{:<16} {:>14} {:>14}",
-        "model", "short p99", "long p99"
-    );
-    for model in ModelSpec::catalog() {
-        let trace = trace_for(&model, &p);
-        let mut m = run_cell(
-            &model,
-            PolicyKind::PecSched(AblationFlags::full()),
-            &trace,
+    println!("{:<16} {:>14} {:>14}", "model", "short p99", "long p99");
+    let results = run_sweep(&spec);
+    for r in &results {
+        println!(
+            "{:<16} {:>13.4}% {:>13.4}%",
+            r.cell.model.name,
+            r.sched_p99_short * 100.0,
+            r.sched_p99_long * 100.0
         );
-        let s = if m.sched_overhead_short.is_empty() {
-            f64::NAN
-        } else {
-            m.sched_overhead_short.quantile(0.99) * 100.0
-        };
-        let l = if m.sched_overhead_long.is_empty() {
-            f64::NAN
-        } else {
-            m.sched_overhead_long.quantile(0.99) * 100.0
-        };
-        println!("{:<16} {:>13.4}% {:>13.4}%", model.name, s, l);
     }
+    write_sweep_json("SWEEP_table7.json", &spec, &results).expect("write SWEEP_table7.json");
+    println!("\nwrote SWEEP_table7.json ({} cells)", results.len());
 }

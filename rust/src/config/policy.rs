@@ -101,6 +101,22 @@ impl PolicyKind {
         }
     }
 
+    /// Parse a CLI policy name: `fifo | reservation | priority | pecsched |
+    /// pecsched-no-pe | pecsched-no-dis | pecsched-no-col | pecsched-no-fsp`.
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "fifo" => Self::Fifo,
+            "reservation" => Self::Reservation,
+            "priority" => Self::Priority,
+            "pecsched" => Self::PecSched(AblationFlags::full()),
+            "pecsched-no-pe" => Self::PecSched(AblationFlags::no_preemption()),
+            "pecsched-no-dis" => Self::PecSched(AblationFlags::no_disaggregation()),
+            "pecsched-no-col" => Self::PecSched(AblationFlags::no_colocation()),
+            "pecsched-no-fsp" => Self::PecSched(AblationFlags::no_fast_sp()),
+            _ => return None,
+        })
+    }
+
     /// Everything §6.3 compares.
     pub fn comparison_set() -> Vec<Self> {
         vec![
@@ -148,5 +164,22 @@ mod tests {
     #[test]
     fn ablation_set_has_five_variants() {
         assert_eq!(PolicyKind::ablation_set().len(), 5);
+    }
+
+    #[test]
+    fn parse_roundtrips_cli_names() {
+        for (name, kind) in [
+            ("fifo", PolicyKind::Fifo),
+            ("reservation", PolicyKind::Reservation),
+            ("priority", PolicyKind::Priority),
+            ("pecsched", PolicyKind::PecSched(AblationFlags::full())),
+            ("pecsched-no-pe", PolicyKind::PecSched(AblationFlags::no_preemption())),
+            ("pecsched-no-dis", PolicyKind::PecSched(AblationFlags::no_disaggregation())),
+            ("pecsched-no-col", PolicyKind::PecSched(AblationFlags::no_colocation())),
+            ("pecsched-no-fsp", PolicyKind::PecSched(AblationFlags::no_fast_sp())),
+        ] {
+            assert_eq!(PolicyKind::parse(name), Some(kind));
+        }
+        assert_eq!(PolicyKind::parse("vllm"), None);
     }
 }

@@ -1,16 +1,25 @@
-//! Shared experiment harness: runs (model × policy) grids over generated
-//! traces and formats the tables/series the paper reports.
+//! Shared experiment harness: capacity calibration, single-cell runs,
+//! table formatting, and the declarative parallel sweep runner
+//! ([`sweep`]) the `exp_*` binaries are built on.
 //!
-//! Every `exp_*` binary in `rust/src/bin/` is a thin wrapper over these
-//! helpers; DESIGN.md §5 maps each binary to its table/figure.
+//! Every `exp_*` binary in `rust/src/bin/` is a thin [`SweepSpec`]
+//! declaration; DESIGN.md §2 maps each binary to its spec and
+//! table/figure.
+
+pub mod sweep;
 
 use std::collections::HashMap;
-use std::sync::{Mutex, OnceLock};
+use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::config::{ModelSpec, PolicyKind};
 use crate::metrics::RunMetrics;
 use crate::sim::{run_sim, SimConfig};
 use crate::trace::{Trace, TraceConfig};
+
+pub use sweep::{
+    aggregate, run_sweep, sweep_json, write_sweep_json, AggregateRow, CellResult,
+    SweepCell, SweepSpec,
+};
 
 /// Common CLI knobs of the experiment binaries.
 #[derive(Debug, Clone)]
@@ -85,11 +94,28 @@ pub fn capacity_rps(model: &ModelSpec, load: f64) -> f64 {
 /// arrival rates against, and the anchor every experiment's `load`
 /// multiplies.
 pub fn sustainable_rps(model: &ModelSpec) -> f64 {
-    static CACHE: OnceLock<Mutex<HashMap<String, f64>>> = OnceLock::new();
-    let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
-    if let Some(&v) = cache.lock().unwrap().get(&model.name) {
-        return v;
-    }
+    // Per-model in-flight entries: the outer map lock is held only to
+    // fetch/create a model's slot, and `OnceLock::get_or_init` blocks
+    // concurrent callers of the *same* model until the one running the
+    // bisection publishes it. Without this, every sweep thread that
+    // missed the cache ran the full calibration redundantly (and two
+    // models could not calibrate concurrently if we simply held the map
+    // lock across the bisection).
+    static CACHE: OnceLock<Mutex<HashMap<String, Arc<OnceLock<f64>>>>> = OnceLock::new();
+    let slot = {
+        let mut map = CACHE
+            .get_or_init(|| Mutex::new(HashMap::new()))
+            .lock()
+            .unwrap();
+        map.entry(model.name.clone()).or_default().clone()
+    };
+    *slot.get_or_init(|| calibrate_rps(model))
+}
+
+/// The shorts-only FIFO bisection behind [`sustainable_rps`] — fully
+/// deterministic (fixed probe seed), so it does not matter which sweep
+/// thread ends up running it.
+fn calibrate_rps(model: &ModelSpec) -> f64 {
     let stable = |rps: f64| -> bool {
         let trace = TraceConfig {
             n_requests: 4000,
@@ -123,7 +149,6 @@ pub fn sustainable_rps(model: &ModelSpec) -> f64 {
             hi = mid;
         }
     }
-    cache.lock().unwrap().insert(model.name.clone(), lo);
     lo
 }
 
@@ -142,11 +167,7 @@ pub fn trace_for(model: &ModelSpec, p: &ExpParams) -> Trace {
 
 /// Run one (model, policy) cell on a prepared trace.
 pub fn run_cell(model: &ModelSpec, policy: PolicyKind, trace: &Trace) -> RunMetrics {
-    let cfg = match policy {
-        PolicyKind::PecSched(flags) => SimConfig::pecsched(model.clone(), flags),
-        _ => SimConfig::baseline(model.clone()),
-    };
-    run_sim(cfg, trace, policy)
+    run_sim(SimConfig::for_policy(model.clone(), policy), trace, policy)
 }
 
 /// Format the five paper percentiles as a table row.
@@ -186,5 +207,21 @@ mod tests {
     fn normalize_by_zero_is_identity() {
         let p = [1.0, 2.0, 3.0, 4.0, 5.0];
         assert_eq!(normalize(p, 0.0), p);
+    }
+
+    #[test]
+    fn sustainable_rps_concurrent_callers_agree() {
+        // Regression test for the duplicated-calibration race: concurrent
+        // callers must all observe the single calibrated value (the
+        // per-model OnceLock blocks them until the first bisection
+        // publishes).
+        let model = ModelSpec::mistral_7b();
+        let vals: Vec<f64> = std::thread::scope(|s| {
+            let handles: Vec<_> =
+                (0..4).map(|_| s.spawn(|| sustainable_rps(&model))).collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        assert!(vals.windows(2).all(|w| w[0] == w[1]), "values diverged: {vals:?}");
+        assert!(vals[0] > 0.0);
     }
 }

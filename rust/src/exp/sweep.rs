@@ -1,0 +1,538 @@
+//! Deterministic parallel sweep runner: a [`SweepSpec`] declares a
+//! (models × policies × scenarios × loads × seeds × cluster sizes) grid
+//! and [`run_sweep`] executes it over `std::thread::scope`.
+//!
+//! ## Determinism contract
+//!
+//! Every cell is self-contained: its trace is regenerated from
+//! `(scenario, model, load, seed)` with a per-cell RNG, the simulation is
+//! pure given that trace, and results land in a slot indexed by the
+//! cell's grid position — never by completion order. The JSON written by
+//! [`write_sweep_json`] therefore contains only simulated-time
+//! quantities ([`RunSummary`]; wall-clock scheduling-overhead digests
+//! are kept in memory for the tables but never serialized) and is
+//! **byte-identical for any `--threads` value** on a given build — CI
+//! runs the smoke grid at 1 and 4 threads and `diff`s the outputs.
+//! (Across *different* platforms/libm builds, transcendental f64 results
+//! may differ by a ULP, so cross-host byte equality is expected in
+//! practice but not contractual.)
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::config::{ClusterSpec, ModelSpec, PolicyKind, SchedParams};
+use crate::metrics::{aggregate_seeds, RunSummary, SeedAggregate};
+use crate::scenario;
+use crate::sim::SimConfig;
+use crate::util::Json;
+
+use super::{sustainable_rps, ExpParams};
+
+/// A declarative experiment grid. Every `exp_*` binary is one of these
+/// plus a formatting pass; `pecsched sweep` builds one from flags.
+#[derive(Debug, Clone)]
+pub struct SweepSpec {
+    /// Name of the sweep; the default JSON path is `SWEEP_<name>.json`.
+    pub name: String,
+    pub models: Vec<ModelSpec>,
+    pub policies: Vec<PolicyKind>,
+    /// Scenario names, resolved against [`crate::scenario::by_name`].
+    pub scenarios: Vec<String>,
+    /// Load levels, as fractions of each model's calibrated capacity.
+    pub loads: Vec<f64>,
+    pub seeds: Vec<u64>,
+    pub n_requests: usize,
+    /// Cluster sizes (total GPUs). For sizes other than the default
+    /// testbed the arrival rate scales linearly and the request count by
+    /// sqrt(scale), matching §6.6's "arrivals at cluster capacity".
+    pub gpu_counts: Vec<usize>,
+    /// Worker threads. Affects wall-clock only — never results (the
+    /// determinism contract above) — and is excluded from the JSON.
+    pub threads: usize,
+}
+
+impl SweepSpec {
+    /// A single-point spec (the §6.2 operating point) to build on.
+    pub fn new(name: &str) -> Self {
+        Self {
+            name: name.to_string(),
+            models: ModelSpec::catalog(),
+            policies: PolicyKind::comparison_set(),
+            scenarios: vec!["azure-steady".to_string()],
+            loads: vec![ExpParams::default().load],
+            seeds: vec![ExpParams::default().seed],
+            n_requests: ExpParams::default().n_requests,
+            gpu_counts: vec![ClusterSpec::default().total_gpus()],
+            threads: default_threads(),
+        }
+    }
+
+    /// Like [`SweepSpec::new`], seeded from the `PECSCHED_*` environment
+    /// knobs the experiment binaries have always honoured.
+    pub fn from_env(name: &str) -> Self {
+        let p = ExpParams::from_env();
+        Self {
+            loads: vec![p.load],
+            seeds: vec![p.seed],
+            n_requests: p.n_requests,
+            ..Self::new(name)
+        }
+    }
+
+    /// The grid, flattened in canonical order: model, cluster size,
+    /// scenario, load, seed, policy (policy innermost so per-model tables
+    /// read off consecutive runs of cells).
+    pub fn cells(&self) -> Vec<SweepCell> {
+        let mut out = Vec::new();
+        for model in &self.models {
+            for &gpus in &self.gpu_counts {
+                for scen in &self.scenarios {
+                    for &load in &self.loads {
+                        for &seed in &self.seeds {
+                            for &policy in &self.policies {
+                                out.push(SweepCell {
+                                    model: model.clone(),
+                                    policy,
+                                    scenario: scen.clone(),
+                                    load,
+                                    seed,
+                                    gpus,
+                                });
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Panic early (before any thread spawns) on unknown scenario names
+    /// or axis values a worker would only trip over mid-sweep.
+    fn validate(&self) {
+        for s in &self.scenarios {
+            assert!(
+                scenario::by_name(s).is_some(),
+                "unknown scenario '{s}' (see `pecsched list-scenarios`)"
+            );
+        }
+        assert!(!self.models.is_empty(), "sweep with no models");
+        assert!(!self.policies.is_empty(), "sweep with no policies");
+        assert!(!self.scenarios.is_empty(), "sweep with no scenarios");
+        assert!(!self.loads.is_empty(), "sweep with no loads");
+        assert!(!self.seeds.is_empty(), "sweep with no seeds");
+        assert!(!self.gpu_counts.is_empty(), "sweep with no cluster sizes");
+        assert!(self.n_requests > 0, "sweep with zero requests per cell");
+        for &g in &self.gpu_counts {
+            // Mirrors ClusterSpec::with_total_gpus (8-GPU nodes).
+            assert!(
+                g > 0 && g % 8 == 0,
+                "cluster size {g} invalid: must be a positive multiple of 8 GPUs"
+            );
+        }
+        for &l in &self.loads {
+            assert!(l > 0.0, "non-positive load {l}");
+        }
+        for &s in &self.seeds {
+            // The sweep JSON stores numbers as f64; refuse seeds that
+            // would not round-trip exactly rather than mislabel cells.
+            assert!(
+                s < (1u64 << 53),
+                "seed {s} exceeds 2^53 and cannot be recorded exactly in sweep JSON"
+            );
+        }
+    }
+}
+
+/// One coordinate of the grid.
+#[derive(Debug, Clone)]
+pub struct SweepCell {
+    pub model: ModelSpec,
+    pub policy: PolicyKind,
+    pub scenario: String,
+    pub load: f64,
+    pub seed: u64,
+    pub gpus: usize,
+}
+
+/// One executed cell: the coordinate, the deterministic run summary, and
+/// the wall-clock overhead ratios (kept for Table 7 / Fig. 15 style
+/// output; never serialized — they vary run to run).
+#[derive(Debug, Clone)]
+pub struct CellResult {
+    pub cell: SweepCell,
+    /// Replica count of the (possibly scaled) cluster this cell ran on.
+    pub replicas: usize,
+    pub summary: RunSummary,
+    /// p99 wall-clock scheduling-time / JCT ratio of shorts (NaN when the
+    /// run measured none). Nondeterministic; excluded from sweep JSON.
+    pub sched_p99_short: f64,
+    /// Same for longs.
+    pub sched_p99_long: f64,
+}
+
+fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Execute one cell. Pure given the cell coordinate and `n_requests`
+/// (modulo the wall-clock overhead fields).
+fn run_one(spec: &SweepSpec, cell: &SweepCell) -> CellResult {
+    let sc = scenario::by_name(&cell.scenario)
+        .unwrap_or_else(|| panic!("unknown scenario '{}'", cell.scenario));
+    let base_gpus = ClusterSpec::default().total_gpus();
+    let scale = cell.gpus as f64 / base_gpus as f64;
+    let rps = cell.load * sustainable_rps(&cell.model) * scale;
+    let n_requests = if cell.gpus == base_gpus {
+        spec.n_requests
+    } else {
+        // Bigger clusters serve proportionally more arrivals; growing the
+        // request wall by sqrt(scale) keeps per-cell work bounded (§6.6).
+        ((spec.n_requests as f64 * scale.sqrt()) as usize).max(1)
+    };
+    let trace = sc.build_trace(n_requests, rps, cell.seed);
+
+    let mut cfg = SimConfig::for_policy(cell.model.clone(), cell.policy);
+    if cell.gpus != base_gpus {
+        cfg.cluster = ClusterSpec::with_total_gpus(cell.gpus);
+        cfg.params.decode_replicas = (SchedParams::decode_replicas_for(&cell.model) as f64
+            * scale)
+            .ceil() as usize;
+    }
+    let replicas = cfg.cluster.replicas_for(&cell.model);
+
+    let mut m = sc.run(cfg, &trace, cell.policy);
+    let pct99 = |d: &mut crate::metrics::Digest| {
+        if d.is_empty() {
+            f64::NAN
+        } else {
+            d.quantile(0.99)
+        }
+    };
+    let sched_p99_short = pct99(&mut m.sched_overhead_short);
+    let sched_p99_long = pct99(&mut m.sched_overhead_long);
+    CellResult {
+        cell: cell.clone(),
+        replicas,
+        summary: m.summary(),
+        sched_p99_short,
+        sched_p99_long,
+    }
+}
+
+/// Run the whole grid over `spec.threads` scoped worker threads (work
+/// stealing off a shared atomic cursor). Results come back in grid
+/// order, independent of thread count and scheduling interleaving.
+pub fn run_sweep(spec: &SweepSpec) -> Vec<CellResult> {
+    spec.validate();
+    let cells = spec.cells();
+    if cells.is_empty() {
+        return Vec::new();
+    }
+    // Calibrate capacities up front on one thread: deterministic either
+    // way (the per-model OnceLock guarantees a single bisection), but
+    // warming the cache here keeps worker wall-times comparable.
+    for model in &spec.models {
+        sustainable_rps(model);
+    }
+    let n_threads = spec.threads.clamp(1, cells.len());
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<CellResult>>> =
+        cells.iter().map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|s| {
+        for _ in 0..n_threads {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= cells.len() {
+                    break;
+                }
+                let r = run_one(spec, &cells[i]);
+                *slots[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("cell never ran"))
+        .collect()
+}
+
+/// One cross-seed aggregate row: a (model, policy, scenario, load, gpus)
+/// group reduced over its seeds.
+#[derive(Debug, Clone)]
+pub struct AggregateRow {
+    pub model: String,
+    pub policy: String,
+    pub scenario: String,
+    pub load: f64,
+    pub gpus: usize,
+    pub agg: SeedAggregate,
+}
+
+/// Group results by everything except the seed (first-seen order — which
+/// is grid order, hence deterministic) and aggregate each group. A
+/// `HashMap` index beside the first-seen `Vec` keeps the grouping O(cells)
+/// on huge grids without touching the deterministic output order.
+pub fn aggregate(results: &[CellResult]) -> Vec<AggregateRow> {
+    type Key = (String, String, String, u64, usize);
+    let mut index: HashMap<Key, usize> = HashMap::new();
+    let mut keys: Vec<Key> = Vec::new();
+    let mut groups: Vec<Vec<RunSummary>> = Vec::new();
+    for r in results {
+        let key = (
+            r.cell.model.name.clone(),
+            r.cell.policy.name(),
+            r.cell.scenario.clone(),
+            r.cell.load.to_bits(),
+            r.cell.gpus,
+        );
+        match index.get(&key) {
+            Some(&i) => groups[i].push(r.summary.clone()),
+            None => {
+                index.insert(key.clone(), keys.len());
+                keys.push(key);
+                groups.push(vec![r.summary.clone()]);
+            }
+        }
+    }
+    keys.into_iter()
+        .zip(groups)
+        .map(|((model, policy, scenario, load_bits, gpus), g)| AggregateRow {
+            model,
+            policy,
+            scenario,
+            load: f64::from_bits(load_bits),
+            gpus,
+            agg: aggregate_seeds(&g),
+        })
+        .collect()
+}
+
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(
+        pairs
+            .into_iter()
+            .map(|(k, v)| (k.to_string(), v))
+            .collect::<BTreeMap<_, _>>(),
+    )
+}
+
+fn num(x: f64) -> Json {
+    Json::Num(x)
+}
+
+fn str_arr<S: AsRef<str>>(items: &[S]) -> Json {
+    Json::Arr(
+        items
+            .iter()
+            .map(|s| Json::Str(s.as_ref().to_string()))
+            .collect(),
+    )
+}
+
+/// The sweep document: axes, per-cell summaries, cross-seed aggregates.
+/// Contains only deterministic simulated-time quantities; rendering via
+/// [`Json::render`] makes the bytes reproducible too.
+pub fn sweep_json(spec: &SweepSpec, results: &[CellResult]) -> Json {
+    let axes = obj(vec![
+        (
+            "models",
+            str_arr(&spec.models.iter().map(|m| m.name.clone()).collect::<Vec<_>>()),
+        ),
+        (
+            "policies",
+            str_arr(&spec.policies.iter().map(|p| p.name()).collect::<Vec<_>>()),
+        ),
+        ("scenarios", str_arr(&spec.scenarios)),
+        (
+            "loads",
+            Json::Arr(spec.loads.iter().map(|&l| num(l)).collect()),
+        ),
+        (
+            "seeds",
+            Json::Arr(spec.seeds.iter().map(|&s| num(s as f64)).collect()),
+        ),
+        (
+            "gpus",
+            Json::Arr(spec.gpu_counts.iter().map(|&g| num(g as f64)).collect()),
+        ),
+    ]);
+
+    let cells = Json::Arr(
+        results
+            .iter()
+            .map(|r| {
+                let s = &r.summary;
+                obj(vec![
+                    ("model", Json::Str(r.cell.model.name.clone())),
+                    ("policy", Json::Str(r.cell.policy.name())),
+                    ("scenario", Json::Str(r.cell.scenario.clone())),
+                    ("load", num(r.cell.load)),
+                    ("seed", num(r.cell.seed as f64)),
+                    ("gpus", num(r.cell.gpus as f64)),
+                    ("replicas", num(r.replicas as f64)),
+                    ("shorts_completed", num(s.shorts_completed as f64)),
+                    ("longs_completed", num(s.longs_completed as f64)),
+                    ("longs_total", num(s.longs_total as f64)),
+                    ("longs_starved", num(s.longs_starved as f64)),
+                    ("preemptions", num(s.preemptions as f64)),
+                    ("events_processed", num(s.events_processed as f64)),
+                    ("makespan_s", num(s.makespan)),
+                    ("gpu_idle_rate", num(s.gpu_idle_rate)),
+                    ("short_rps", num(s.short_rps)),
+                    ("short_delay_p1", num(s.short_delay_pcts[0])),
+                    ("short_delay_p25", num(s.short_delay_pcts[1])),
+                    ("short_delay_p50", num(s.short_delay_pcts[2])),
+                    ("short_delay_p75", num(s.short_delay_pcts[3])),
+                    ("short_delay_p99", num(s.short_delay_pcts[4])),
+                    ("long_jct_mean_s", num(s.long_jct_mean)),
+                ])
+            })
+            .collect(),
+    );
+
+    let aggs = Json::Arr(
+        aggregate(results)
+            .into_iter()
+            .map(|row| {
+                obj(vec![
+                    ("model", Json::Str(row.model)),
+                    ("policy", Json::Str(row.policy)),
+                    ("scenario", Json::Str(row.scenario)),
+                    ("load", num(row.load)),
+                    ("gpus", num(row.gpus as f64)),
+                    ("seeds", num(row.agg.seeds as f64)),
+                    ("short_p99_delay_mean", num(row.agg.short_p99_delay_mean)),
+                    ("short_p99_delay_min", num(row.agg.short_p99_delay_min)),
+                    ("short_p99_delay_max", num(row.agg.short_p99_delay_max)),
+                    ("short_rps_mean", num(row.agg.short_rps_mean)),
+                    ("long_jct_mean_s", num(row.agg.long_jct_mean)),
+                    ("preemptions_mean", num(row.agg.preemptions_mean)),
+                    ("gpu_idle_rate_mean", num(row.agg.gpu_idle_rate_mean)),
+                ])
+            })
+            .collect(),
+    );
+
+    obj(vec![
+        ("sweep", Json::Str(spec.name.clone())),
+        ("n_requests", num(spec.n_requests as f64)),
+        ("axes", axes),
+        ("cells", cells),
+        ("aggregates", aggs),
+    ])
+}
+
+/// Serialize the sweep to `path`. Byte-identical across thread counts
+/// on a given build (the determinism contract in the module docs).
+pub fn write_sweep_json(
+    path: &str,
+    spec: &SweepSpec,
+    results: &[CellResult],
+) -> std::io::Result<()> {
+    std::fs::write(path, sweep_json(spec, results).render())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::AblationFlags;
+
+    fn tiny_spec(threads: usize) -> SweepSpec {
+        SweepSpec {
+            name: "test".into(),
+            models: vec![ModelSpec::mistral_7b()],
+            policies: vec![
+                PolicyKind::Fifo,
+                PolicyKind::PecSched(AblationFlags::full()),
+            ],
+            scenarios: vec!["azure-steady".into(), "burst".into()],
+            loads: vec![0.5],
+            seeds: vec![1, 2],
+            n_requests: 250,
+            gpu_counts: vec![32],
+            threads,
+        }
+    }
+
+    #[test]
+    fn sweep_json_is_byte_identical_across_thread_counts() {
+        let r1 = run_sweep(&tiny_spec(1));
+        let r4 = run_sweep(&tiny_spec(4));
+        assert_eq!(r1.len(), 8);
+        let j1 = sweep_json(&tiny_spec(1), &r1).render();
+        let j4 = sweep_json(&tiny_spec(4), &r4).render();
+        assert_eq!(j1, j4, "sweep output depends on thread count");
+    }
+
+    #[test]
+    fn cells_enumerate_full_grid_in_canonical_order() {
+        let spec = tiny_spec(1);
+        let cells = spec.cells();
+        assert_eq!(
+            cells.len(),
+            spec.models.len()
+                * spec.policies.len()
+                * spec.scenarios.len()
+                * spec.loads.len()
+                * spec.seeds.len()
+                * spec.gpu_counts.len()
+        );
+        // Policy is the innermost axis.
+        assert_eq!(cells[0].policy, PolicyKind::Fifo);
+        assert_eq!(cells[1].policy, PolicyKind::PecSched(AblationFlags::full()));
+        assert_eq!(cells[0].seed, cells[1].seed);
+        // Scenario changes slower than seed.
+        assert_eq!(cells[0].scenario, "azure-steady");
+        assert_eq!(cells[4].scenario, "burst");
+    }
+
+    #[test]
+    fn aggregate_groups_across_seeds_only() {
+        let spec = tiny_spec(2);
+        let results = run_sweep(&spec);
+        let rows = aggregate(&results);
+        // 2 policies × 2 scenarios, each aggregating 2 seeds.
+        assert_eq!(rows.len(), 4);
+        for row in &rows {
+            assert_eq!(row.agg.seeds, 2);
+            assert!(row.agg.short_p99_delay_min <= row.agg.short_p99_delay_max);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown scenario")]
+    fn unknown_scenario_rejected_before_running() {
+        let spec = SweepSpec {
+            scenarios: vec!["no-such".into()],
+            ..tiny_spec(1)
+        };
+        run_sweep(&spec);
+    }
+
+    #[test]
+    fn failure_scenario_conserves_requests() {
+        let spec = SweepSpec {
+            name: "failures".into(),
+            models: vec![ModelSpec::mistral_7b()],
+            policies: vec![PolicyKind::Fifo],
+            scenarios: vec!["failures".into()],
+            loads: vec![0.5],
+            seeds: vec![3],
+            n_requests: 250,
+            gpu_counts: vec![32],
+            threads: 1,
+        };
+        let r = run_sweep(&spec);
+        assert_eq!(r.len(), 1);
+        let s = &r[0].summary;
+        assert_eq!(
+            s.shorts_completed + s.longs_completed,
+            250,
+            "requests lost under injected failures"
+        );
+    }
+}

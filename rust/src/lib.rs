@@ -27,6 +27,7 @@ pub mod costmodel;
 pub mod exp;
 pub mod metrics;
 pub mod runtime;
+pub mod scenario;
 pub mod sched;
 pub mod server;
 pub mod sim;

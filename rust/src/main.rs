@@ -1,20 +1,27 @@
 //! `pecsched` — leader entrypoint & CLI.
 //!
 //! Subcommands:
-//! * `simulate`  — run the cluster simulator for one (model, policy) pair;
-//! * `trace-gen` — emit an Azure-shape trace as CSV on stdout;
-//! * `serve`     — run the real PJRT serving engine on a synthetic workload;
-//! * `plan-sp`   — show the fast-SP strategy selection for a long request.
+//! * `simulate`       — run the cluster simulator for one (model, policy,
+//!                      scenario) triple;
+//! * `sweep`          — run a (models × policies × scenarios × loads ×
+//!                      seeds) grid in parallel and write `SWEEP_*.json`;
+//! * `list-scenarios` — show the scenario registry;
+//! * `trace-gen`      — emit a scenario-shaped trace as CSV on stdout;
+//! * `serve`          — run the real PJRT serving engine on a synthetic
+//!                      workload;
+//! * `plan-sp`        — show the fast-SP strategy selection for a long
+//!                      request.
 //!
 //! Run `pecsched help` for flags.
 
 use anyhow::{bail, Result};
 
-use pecsched::config::{AblationFlags, ModelSpec, PolicyKind};
+use pecsched::config::{ModelSpec, PolicyKind};
 use pecsched::costmodel::{sp, CostModel};
-use pecsched::exp::{self, ExpParams};
+use pecsched::exp::{self, ExpParams, SweepSpec};
+use pecsched::scenario;
 use pecsched::server::{EngineConfig, EngineMode, ServeRequest, ServerHandle};
-use pecsched::sim::{run_sim, SimConfig};
+use pecsched::sim::SimConfig;
 use pecsched::trace::TraceConfig;
 use pecsched::util::Args;
 
@@ -24,31 +31,30 @@ pecsched — preemptive and efficient cluster scheduling for LLM inference
 USAGE: pecsched <command> [flags]
 
 COMMANDS
-  simulate   --model <name> --policy <p> [--requests N] [--seed S] [--load F]
-             policies: fifo | reservation | priority | pecsched |
-                       pecsched-no-pe | pecsched-no-dis | pecsched-no-col |
-                       pecsched-no-fsp
-             models:   mistral-7b | phi-3-14b | yi-34b | llama-3.1-70b
-  trace-gen  [--requests N] [--rps F] [--seed S]
-  serve      [--artifacts DIR] [--requests N] [--mode fifo|pecsched]
-  plan-sp    [--model <name>] [--input-len N]
+  simulate        --model <name> --policy <p> [--scenario <s>]
+                  [--requests N] [--seed S] [--load F]
+                  policies: fifo | reservation | priority | pecsched |
+                            pecsched-no-pe | pecsched-no-dis |
+                            pecsched-no-col | pecsched-no-fsp
+                  models:   mistral-7b | phi-3-14b | yi-34b | llama-3.1-70b
+  sweep           [--name NAME] [--models a,b|all] [--policies p,q|all|ablation]
+                  [--scenarios s,t] [--loads 0.5,0.8] [--seeds 1,2,3]
+                  [--gpus 32,512] [--requests N] [--threads T] [--out FILE]
+                  runs the grid in parallel; the JSON is byte-identical
+                  for any --threads value
+  list-scenarios  show the scenario registry (names, shapes, failures)
+  trace-gen       [--scenario <s>] [--requests N] [--rps F] [--seed S]
+  serve           [--artifacts DIR] [--requests N] [--mode fifo|pecsched]
+  plan-sp         [--model <name>] [--input-len N]
   help
 ";
 
 fn parse_policy(s: &str) -> Result<PolicyKind> {
-    Ok(match s {
-        "fifo" => PolicyKind::Fifo,
-        "reservation" => PolicyKind::Reservation,
-        "priority" => PolicyKind::Priority,
-        "pecsched" => PolicyKind::PecSched(AblationFlags::full()),
-        "pecsched-no-pe" => PolicyKind::PecSched(AblationFlags::no_preemption()),
-        "pecsched-no-dis" => {
-            PolicyKind::PecSched(AblationFlags::no_disaggregation())
-        }
-        "pecsched-no-col" => PolicyKind::PecSched(AblationFlags::no_colocation()),
-        "pecsched-no-fsp" => PolicyKind::PecSched(AblationFlags::no_fast_sp()),
-        other => bail!("unknown policy {other}"),
-    })
+    PolicyKind::parse(s).ok_or_else(|| anyhow::anyhow!("unknown policy {s}"))
+}
+
+fn parse_model(s: &str) -> Result<ModelSpec> {
+    ModelSpec::by_name(s).ok_or_else(|| anyhow::anyhow!("unknown model {s}"))
 }
 
 fn main() -> Result<()> {
@@ -61,6 +67,8 @@ fn main() -> Result<()> {
 
     match cmd {
         "simulate" => cmd_simulate(&args),
+        "sweep" => cmd_sweep(&args),
+        "list-scenarios" => cmd_list_scenarios(),
         "trace-gen" => cmd_trace_gen(&args),
         "serve" => cmd_serve(&args),
         "plan-sp" => cmd_plan_sp(&args),
@@ -72,23 +80,23 @@ fn main() -> Result<()> {
 }
 
 fn cmd_simulate(args: &Args) -> Result<()> {
-    let model_name = args.str_or("model", "mistral-7b");
-    let model = ModelSpec::by_name(&model_name)
-        .ok_or_else(|| anyhow::anyhow!("unknown model {model_name}"))?;
+    let model = parse_model(&args.str_or("model", "mistral-7b"))?;
     let kind = parse_policy(&args.str_or("policy", "pecsched"))?;
+    let scen_name = args.str_or("scenario", "azure-steady");
+    let sc = scenario::by_name(&scen_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown scenario {scen_name} (see `pecsched list-scenarios`)"))?;
     let p = ExpParams {
         n_requests: args.parse_or("requests", 4000usize)?,
         seed: args.parse_or("seed", 42u64)?,
         load: args.parse_or("load", 0.7f64)?,
     };
-    let trace = exp::trace_for(&model, &p);
-    let cfg = match kind {
-        PolicyKind::PecSched(f) => SimConfig::pecsched(model.clone(), f),
-        _ => SimConfig::baseline(model.clone()),
-    };
-    let mut m = run_sim(cfg, &trace, kind);
+    let rps = p.load * exp::sustainable_rps(&model);
+    let trace = sc.build_trace(p.n_requests, rps, p.seed);
+    let cfg = SimConfig::for_policy(model.clone(), kind);
+    let mut m = sc.run(cfg, &trace, kind);
     println!("policy           {}", m.policy);
     println!("model            {}", m.model);
+    println!("scenario         {}", sc.name);
     println!(
         "shorts completed {}/{}",
         m.shorts_completed,
@@ -108,14 +116,155 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_trace_gen(args: &Args) -> Result<()> {
-    let t = TraceConfig {
-        n_requests: args.parse_or("requests", 10_000usize)?,
-        rps: args.parse_or("rps", 10.0f64)?,
-        seed: args.parse_or("seed", 42u64)?,
-        ..TraceConfig::default()
+fn split_list(s: &str) -> Vec<String> {
+    s.split(',')
+        .map(|x| x.trim().to_string())
+        .filter(|x| !x.is_empty())
+        .collect()
+}
+
+fn parse_num_list<T: std::str::FromStr>(s: &str, flag: &str) -> Result<Vec<T>> {
+    split_list(s)
+        .iter()
+        .map(|x| {
+            x.parse::<T>()
+                .map_err(|_| anyhow::anyhow!("invalid value in --{flag}: {x}"))
+        })
+        .collect()
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let name = args.str_or("name", "cli");
+    let mut spec = SweepSpec::from_env(&name);
+    if let Some(m) = args.get("models") {
+        if m != "all" {
+            spec.models = split_list(m)
+                .iter()
+                .map(|x| parse_model(x))
+                .collect::<Result<_>>()?;
+        }
     }
-    .generate();
+    if let Some(p) = args.get("policies") {
+        spec.policies = match p {
+            "all" | "comparison" => PolicyKind::comparison_set(),
+            "ablation" => PolicyKind::ablation_set(),
+            list => split_list(list)
+                .iter()
+                .map(|x| parse_policy(x))
+                .collect::<Result<_>>()?,
+        };
+    }
+    if let Some(s) = args.get("scenarios") {
+        spec.scenarios = split_list(s);
+    }
+    for s in &spec.scenarios {
+        if scenario::by_name(s).is_none() {
+            bail!("unknown scenario {s} (see `pecsched list-scenarios`)");
+        }
+    }
+    if let Some(l) = args.get("loads") {
+        spec.loads = parse_num_list::<f64>(l, "loads")?;
+    }
+    if let Some(s) = args.get("seeds") {
+        spec.seeds = parse_num_list::<u64>(s, "seeds")?;
+    }
+    if let Some(g) = args.get("gpus") {
+        spec.gpu_counts = parse_num_list::<usize>(g, "gpus")?;
+    }
+    spec.n_requests = args.parse_or("requests", spec.n_requests)?;
+    spec.threads = args.parse_or("threads", spec.threads)?;
+    let out = args.str_or("out", &format!("SWEEP_{}.json", spec.name));
+
+    let n_cells = spec.cells().len();
+    println!(
+        "sweep '{}': {} cells ({} models x {} policies x {} scenarios x {} loads x {} seeds x {} cluster sizes), {} threads",
+        spec.name,
+        n_cells,
+        spec.models.len(),
+        spec.policies.len(),
+        spec.scenarios.len(),
+        spec.loads.len(),
+        spec.seeds.len(),
+        spec.gpu_counts.len(),
+        spec.threads,
+    );
+    let t0 = std::time::Instant::now();
+    let results = exp::run_sweep(&spec);
+    let wall = t0.elapsed().as_secs_f64();
+
+    println!(
+        "\n{:<16} {:<14} {:<13} {:>5} {:>6} {:>12} {:>10} {:>12} {:>9}",
+        "model", "policy", "scenario", "load", "seeds", "p99 delay", "+/-", "short RPS", "long JCT"
+    );
+    for row in exp::aggregate(&results) {
+        println!(
+            "{:<16} {:<14} {:<13} {:>5.2} {:>6} {:>11.3}s {:>10} {:>12.2} {:>8.1}s",
+            row.model,
+            row.policy,
+            row.scenario,
+            row.load,
+            row.agg.seeds,
+            row.agg.short_p99_delay_mean,
+            format!(
+                "[{:.2},{:.2}]",
+                row.agg.short_p99_delay_min, row.agg.short_p99_delay_max
+            ),
+            row.agg.short_rps_mean,
+            row.agg.long_jct_mean,
+        );
+    }
+    exp::write_sweep_json(&out, &spec, &results)?;
+    println!(
+        "\nwrote {out} ({} cells, {:.1}s wall on {} threads)",
+        results.len(),
+        wall,
+        spec.threads
+    );
+    Ok(())
+}
+
+fn cmd_list_scenarios() -> Result<()> {
+    println!(
+        "{:<14} {:<15} {:<12} {:>9} {:>10}  description",
+        "name", "arrival", "length mix", "failures", "overrides"
+    );
+    for s in scenario::all() {
+        let overrides = if s.overrides == Default::default() {
+            "-".to_string()
+        } else {
+            "sim-cfg".to_string()
+        };
+        println!(
+            "{:<14} {:<15} {:<12} {:>9} {:>10}  {}",
+            s.name,
+            s.arrival.label(),
+            s.mix.label(),
+            s.failures.len(),
+            overrides,
+            s.description
+        );
+    }
+    Ok(())
+}
+
+fn cmd_trace_gen(args: &Args) -> Result<()> {
+    let n = args.parse_or("requests", 10_000usize)?;
+    let rps = args.parse_or("rps", 10.0f64)?;
+    let seed = args.parse_or("seed", 42u64)?;
+    let t = match args.get("scenario") {
+        // Default keeps the historical behaviour: the §3.1-shape trace
+        // with the p95 rewrite, not the experiment-standard frequency.
+        None => TraceConfig {
+            n_requests: n,
+            rps,
+            seed,
+            ..TraceConfig::default()
+        }
+        .generate(),
+        Some(name) => scenario::by_name(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown scenario {name}"))?
+            .build_trace(n, rps, seed),
+    };
     print!("{}", t.to_csv());
     Ok(())
 }
@@ -167,9 +316,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
 }
 
 fn cmd_plan_sp(args: &Args) -> Result<()> {
-    let model_name = args.str_or("model", "llama-3.1-70b");
-    let model = ModelSpec::by_name(&model_name)
-        .ok_or_else(|| anyhow::anyhow!("unknown model {model_name}"))?;
+    let model = parse_model(&args.str_or("model", "llama-3.1-70b"))?;
     let input_len: u32 = args.parse_or("input-len", 300_000u32)?;
     let cm = CostModel::new(model, Default::default());
     let n = cm.replicas_for_long(input_len, 131_072);

@@ -193,6 +193,98 @@ impl RunMetrics {
         }
         self.longs_starved as f64 / self.longs_total as f64
     }
+
+    /// Deterministic scalar digest of this run: only simulated-time
+    /// quantities — the wall-clock scheduling-overhead digests are
+    /// deliberately excluded — so sweep output built from summaries is
+    /// byte-identical across thread counts and machine load (and across
+    /// hosts in practice, modulo per-platform libm ULP differences).
+    pub fn summary(&mut self) -> RunSummary {
+        RunSummary {
+            short_delay_pcts: if self.short_queue_delay.is_empty() {
+                [0.0; 5]
+            } else {
+                self.short_queue_delay.paper_percentiles()
+            },
+            short_rps: self.short_rps(),
+            long_jct_mean: self.long_jct.mean(),
+            shorts_completed: self.shorts_completed,
+            longs_completed: self.longs_completed,
+            longs_total: self.longs_total,
+            longs_starved: self.longs_starved,
+            preemptions: self.preemptions,
+            gpu_idle_rate: self.gpu_idle_rate,
+            makespan: self.makespan,
+            events_processed: self.events_processed,
+        }
+    }
+}
+
+/// The deterministic per-run digest [`RunMetrics::summary`] produces —
+/// the unit of cross-seed aggregation and the sweep JSON.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RunSummary {
+    /// Short-request queueing-delay percentiles (p1, p25, p50, p75, p99);
+    /// zeros when the run served no shorts.
+    pub short_delay_pcts: [f64; 5],
+    pub short_rps: f64,
+    pub long_jct_mean: f64,
+    pub shorts_completed: usize,
+    pub longs_completed: usize,
+    pub longs_total: usize,
+    pub longs_starved: usize,
+    pub preemptions: u64,
+    pub gpu_idle_rate: f64,
+    pub makespan: f64,
+    pub events_processed: u64,
+}
+
+impl RunSummary {
+    pub fn short_p99_delay(&self) -> f64 {
+        self.short_delay_pcts[4]
+    }
+
+    /// Mirror of [`RunMetrics::starved_frac`] on the summary type.
+    pub fn starved_frac(&self) -> f64 {
+        if self.longs_total == 0 {
+            return 0.0;
+        }
+        self.longs_starved as f64 / self.longs_total as f64
+    }
+}
+
+/// Cross-seed aggregate of one sweep group: per-metric means plus the
+/// min/max spread of the p99 short queueing delay across seeds — the
+/// "does the headline tail survive a different arrival draw" signal.
+#[derive(Debug, Clone, Default)]
+pub struct SeedAggregate {
+    pub seeds: usize,
+    pub short_p99_delay_mean: f64,
+    pub short_p99_delay_min: f64,
+    pub short_p99_delay_max: f64,
+    pub short_rps_mean: f64,
+    pub long_jct_mean: f64,
+    pub preemptions_mean: f64,
+    pub gpu_idle_rate_mean: f64,
+}
+
+/// Aggregate one group of per-seed summaries (all from the same
+/// model × policy × scenario × load cell).
+pub fn aggregate_seeds(runs: &[RunSummary]) -> SeedAggregate {
+    assert!(!runs.is_empty(), "aggregate of zero runs");
+    let n = runs.len() as f64;
+    let mean = |f: &dyn Fn(&RunSummary) -> f64| runs.iter().map(|r| f(r)).sum::<f64>() / n;
+    let p99s: Vec<f64> = runs.iter().map(|r| r.short_p99_delay()).collect();
+    SeedAggregate {
+        seeds: runs.len(),
+        short_p99_delay_mean: mean(&|r| r.short_p99_delay()),
+        short_p99_delay_min: p99s.iter().copied().fold(f64::INFINITY, f64::min),
+        short_p99_delay_max: p99s.iter().copied().fold(f64::NEG_INFINITY, f64::max),
+        short_rps_mean: mean(&|r| r.short_rps),
+        long_jct_mean: mean(&|r| r.long_jct_mean),
+        preemptions_mean: mean(&|r| r.preemptions as f64),
+        gpu_idle_rate_mean: mean(&|r| r.gpu_idle_rate),
+    }
 }
 
 #[cfg(test)]
@@ -265,6 +357,50 @@ mod tests {
         };
         assert!((m.short_rps() - 5.0).abs() < 1e-12);
         assert!((m.starved_frac() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_is_deterministic_and_skips_wall_clock() {
+        let mut m = RunMetrics {
+            shorts_completed: 10,
+            makespan: 5.0,
+            longs_total: 2,
+            longs_completed: 2,
+            preemptions: 3,
+            gpu_idle_rate: 0.25,
+            events_processed: 99,
+            ..Default::default()
+        };
+        m.short_queue_delay.add(1.0);
+        m.short_queue_delay.add(3.0);
+        m.long_jct.add(10.0);
+        // Wall-clock overhead present but absent from the summary type.
+        m.sched_overhead_short.add(0.123);
+        let s = m.summary();
+        assert_eq!(s, m.summary());
+        assert_eq!(s.short_p99_delay(), m.short_queue_delay.quantile(0.99));
+        assert_eq!(s.preemptions, 3);
+        assert_eq!(s.events_processed, 99);
+        assert!((s.long_jct_mean - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn aggregate_seeds_mean_and_spread() {
+        let mk = |p99: f64, rps: f64| RunSummary {
+            short_delay_pcts: [0.0, 0.0, 0.0, 0.0, p99],
+            short_rps: rps,
+            long_jct_mean: 100.0,
+            preemptions: 4,
+            gpu_idle_rate: 0.5,
+            ..Default::default()
+        };
+        let a = aggregate_seeds(&[mk(1.0, 10.0), mk(3.0, 20.0)]);
+        assert_eq!(a.seeds, 2);
+        assert!((a.short_p99_delay_mean - 2.0).abs() < 1e-12);
+        assert_eq!(a.short_p99_delay_min, 1.0);
+        assert_eq!(a.short_p99_delay_max, 3.0);
+        assert!((a.short_rps_mean - 15.0).abs() < 1e-12);
+        assert!((a.preemptions_mean - 4.0).abs() < 1e-12);
     }
 
     #[test]

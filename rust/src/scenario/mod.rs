@@ -1,0 +1,261 @@
+//! Named workload scenarios: an arrival process + a length mix + a
+//! failure schedule + [`SimConfig`] overrides, registered by name.
+//!
+//! Length-aware schedulers are judged on how they behave across load and
+//! length regimes, not one operating point, so the evaluation stack runs
+//! every experiment cell through a [`Scenario`] instead of hardcoding the
+//! paper's steady Poisson mix. `azure-steady` reproduces the pre-refactor
+//! generator bit-for-bit; the rest reshape arrivals (`burst`, `diurnal`),
+//! the length mix (`long-heavy`, `shorts-only`), inject failures
+//! (`failures`), or override the simulator (`huge-sweep`). The registry
+//! ([`registry::all`]) is the single source `pecsched list-scenarios`,
+//! `pecsched sweep` and the sweep runner ([`crate::exp::sweep`]) draw
+//! from; see ROADMAP.md for the determinism contract and how to add one.
+
+mod registry;
+
+pub use registry::{all, by_name, names};
+
+use crate::config::{DecodeMode, PolicyKind};
+use crate::metrics::RunMetrics;
+use crate::sched::Policy;
+use crate::sim::{run_sim, SimConfig, SimState, Simulation};
+use crate::trace::{generate_trace, ArrivalProcess, LengthMix, Trace};
+
+/// One injected replica failure, timed as a fraction of the trace's
+/// arrival span (so the schedule scales with any load or request count).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FailurePoint {
+    /// Crash when simulated time passes `at_frac * trace.span()`.
+    pub at_frac: f64,
+    /// Replica to fail, taken modulo the cluster's replica count so one
+    /// schedule is valid for every model's TP degree.
+    pub replica: usize,
+    /// Recover after this additional span fraction; `None` stays down.
+    pub recover_frac: Option<f64>,
+}
+
+/// [`SimConfig`] tweaks a scenario carries on top of the policy defaults.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SimOverrides {
+    /// Override the decode stepping mode (e.g. the approximate
+    /// closed-form fast-forward for massive grids).
+    pub decode_mode: Option<DecodeMode>,
+}
+
+/// Arrival shape, parameterised at build time by the cell's mean rate so
+/// one scenario scales to every (model, load) operating point.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArrivalShape {
+    /// Steady Poisson at the cell's rate.
+    Steady,
+    /// On/off modulated Poisson; see [`ArrivalProcess::Burst`].
+    Burst {
+        on_mult: f64,
+        off_mult: f64,
+        on_s: f64,
+        off_s: f64,
+    },
+    /// Sinusoidally modulated Poisson; see [`ArrivalProcess::Diurnal`].
+    Diurnal { amplitude: f64, period_s: f64 },
+}
+
+impl ArrivalShape {
+    pub fn process(&self, rps: f64) -> ArrivalProcess {
+        match *self {
+            Self::Steady => ArrivalProcess::Poisson { rps },
+            Self::Burst {
+                on_mult,
+                off_mult,
+                on_s,
+                off_s,
+            } => ArrivalProcess::Burst {
+                rps,
+                on_mult,
+                off_mult,
+                on_s,
+                off_s,
+            },
+            Self::Diurnal {
+                amplitude,
+                period_s,
+            } => ArrivalProcess::Diurnal {
+                rps,
+                amplitude,
+                period_s,
+            },
+        }
+    }
+
+    /// Short label for tables (`list-scenarios`, DESIGN.md).
+    pub fn label(&self) -> &'static str {
+        match self {
+            Self::Steady => "steady Poisson",
+            Self::Burst { .. } => "on/off burst",
+            Self::Diurnal { .. } => "sinusoidal",
+        }
+    }
+}
+
+/// Length-mix shape the scenario draws request sizes from.
+#[derive(Debug, Clone, PartialEq)]
+pub enum MixShape {
+    /// Azure body with the experiment-standard rewrite frequency
+    /// ([`crate::exp::EXP_LONG_QUANTILE`]).
+    AzureStandard,
+    /// Azure body with a heavier long tail (lower rewrite quantile).
+    LongHeavy { long_quantile: f64 },
+    /// Azure body with the rewrite disabled — no long requests.
+    ShortsOnly,
+}
+
+impl MixShape {
+    pub fn mix(&self) -> LengthMix {
+        match *self {
+            Self::AzureStandard => LengthMix::azure_body(crate::exp::EXP_LONG_QUANTILE),
+            Self::LongHeavy { long_quantile } => LengthMix::azure_body(long_quantile),
+            Self::ShortsOnly => LengthMix::shorts_only(),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Self::AzureStandard => "azure body",
+            Self::LongHeavy { .. } => "long-heavy",
+            Self::ShortsOnly => "shorts-only",
+        }
+    }
+}
+
+/// A named workload: everything one experiment cell needs beyond the
+/// (model, policy, load, seed) coordinates.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Scenario {
+    pub name: &'static str,
+    pub description: &'static str,
+    pub arrival: ArrivalShape,
+    pub mix: MixShape,
+    pub failures: Vec<FailurePoint>,
+    pub overrides: SimOverrides,
+}
+
+impl Scenario {
+    /// Build the scenario's trace at a mean rate of `rps` — deterministic
+    /// given `(n_requests, rps, seed)`.
+    pub fn build_trace(&self, n_requests: usize, rps: f64, seed: u64) -> Trace {
+        generate_trace(n_requests, seed, &self.arrival.process(rps), &self.mix.mix())
+    }
+
+    /// Apply the scenario's [`SimConfig`] overrides.
+    pub fn apply_overrides(&self, cfg: &mut SimConfig) {
+        if let Some(mode) = self.overrides.decode_mode {
+            cfg.decode_mode = mode;
+        }
+    }
+
+    /// Run one simulation under this scenario: overrides applied, the
+    /// failure schedule injected via the engine's per-event hook, and
+    /// displaced requests re-placed through the policy (the same recovery
+    /// path `rust/tests/failure_tests.rs` exercises).
+    pub fn run(&self, mut cfg: SimConfig, trace: &Trace, kind: PolicyKind) -> RunMetrics {
+        self.apply_overrides(&mut cfg);
+        if self.failures.is_empty() {
+            return run_sim(cfg, trace, kind);
+        }
+        let span = trace.span();
+        let mut sim = Simulation::new(cfg, trace, kind);
+        // (fail time, replica, recover time) with fired flags, resolved
+        // against simulated time only — thread-count independent.
+        let mut failed = vec![false; self.failures.len()];
+        let mut recovered = vec![false; self.failures.len()];
+        sim.run_with_hook(|st: &mut SimState, policy: &mut dyn Policy| {
+            for (i, f) in self.failures.iter().enumerate() {
+                let rid = f.replica % st.replicas.len();
+                if !failed[i] && st.now >= span * f.at_frac {
+                    failed[i] = true;
+                    if !st.replicas[rid].down {
+                        for req in st.fail_replica(rid) {
+                            policy.on_arrival(st, req);
+                        }
+                    }
+                }
+                if let Some(rec) = f.recover_frac {
+                    if failed[i] && !recovered[i] && st.now >= span * (f.at_frac + rec) {
+                        recovered[i] = true;
+                        if st.replicas[rid].down {
+                            st.recover_replica(rid);
+                        }
+                    }
+                }
+            }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_contains_the_required_scenarios() {
+        let names = names();
+        for required in [
+            "azure-steady",
+            "burst",
+            "diurnal",
+            "long-heavy",
+            "shorts-only",
+            "failures",
+        ] {
+            assert!(names.contains(&required), "missing scenario {required}");
+        }
+    }
+
+    #[test]
+    fn by_name_roundtrips_and_rejects_unknown() {
+        for s in all() {
+            assert_eq!(by_name(s.name).unwrap().name, s.name);
+        }
+        assert!(by_name("no-such-scenario").is_none());
+    }
+
+    #[test]
+    fn scenario_names_are_unique() {
+        let mut names = names();
+        let n = names.len();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), n, "duplicate scenario names");
+    }
+
+    #[test]
+    fn traces_are_deterministic_per_scenario() {
+        for s in all() {
+            let a = s.build_trace(300, 8.0, 17);
+            let b = s.build_trace(300, 8.0, 17);
+            assert_eq!(a.requests, b.requests, "{} not deterministic", s.name);
+        }
+    }
+
+    #[test]
+    fn shorts_only_has_no_longs_and_long_heavy_has_more() {
+        let shorts = by_name("shorts-only").unwrap().build_trace(20_000, 10.0, 3);
+        assert_eq!(shorts.longs().count(), 0);
+        let steady = by_name("azure-steady").unwrap().build_trace(20_000, 10.0, 3);
+        let heavy = by_name("long-heavy").unwrap().build_trace(20_000, 10.0, 3);
+        assert!(
+            heavy.longs().count() > steady.longs().count(),
+            "long-heavy ({}) should exceed azure-steady ({})",
+            heavy.longs().count(),
+            steady.longs().count()
+        );
+    }
+
+    #[test]
+    fn overrides_apply_to_simconfig() {
+        let s = by_name("huge-sweep").unwrap();
+        let mut cfg = SimConfig::baseline(crate::config::ModelSpec::mistral_7b());
+        s.apply_overrides(&mut cfg);
+        assert_eq!(cfg.decode_mode, DecodeMode::EpochClosedForm);
+    }
+}

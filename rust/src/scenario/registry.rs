@@ -1,0 +1,132 @@
+//! The scenario registry — the full catalogue of named workloads.
+//!
+//! Adding a scenario is one entry here (plus a ROADMAP table row): pick
+//! an [`ArrivalShape`], a [`MixShape`], an optional failure schedule and
+//! optional [`SimOverrides`]. Everything downstream — `pecsched sweep`,
+//! `pecsched list-scenarios`, the `exp_*` binaries and the CI smoke grid
+//! — discovers it automatically.
+
+use crate::config::DecodeMode;
+
+use super::{ArrivalShape, FailurePoint, MixShape, Scenario, SimOverrides};
+
+/// Every registered scenario, in presentation order.
+pub fn all() -> Vec<Scenario> {
+    vec![
+        Scenario {
+            name: "azure-steady",
+            description: "Paper §6.2 operating point: steady Poisson arrivals, \
+                          Azure-shape body, standard long rewrite (bit-for-bit \
+                          the pre-scenario generator)",
+            arrival: ArrivalShape::Steady,
+            mix: MixShape::AzureStandard,
+            failures: vec![],
+            overrides: SimOverrides::default(),
+        },
+        Scenario {
+            name: "burst",
+            description: "On/off modulated Poisson: 20 s at 3x the mean rate, \
+                          60 s at 1/3x (long-run mean unchanged) — the arrival \
+                          regime where tail behaviour actually shows up",
+            arrival: ArrivalShape::Burst {
+                on_mult: 3.0,
+                off_mult: 1.0 / 3.0,
+                on_s: 20.0,
+                off_s: 60.0,
+            },
+            mix: MixShape::AzureStandard,
+            failures: vec![],
+            overrides: SimOverrides::default(),
+        },
+        Scenario {
+            name: "diurnal",
+            description: "Sinusoidal arrival rate, +/-60% around the mean over \
+                          a 600 s period — a compressed day/night cycle",
+            arrival: ArrivalShape::Diurnal {
+                amplitude: 0.6,
+                period_s: 600.0,
+            },
+            mix: MixShape::AzureStandard,
+            failures: vec![],
+            overrides: SimOverrides::default(),
+        },
+        Scenario {
+            name: "long-heavy",
+            description: "Steady arrivals with the long rewrite at the p99.9 \
+                          body quantile — ~5x the standard long frequency, \
+                          stressing preemption and SP-group churn",
+            arrival: ArrivalShape::Steady,
+            mix: MixShape::LongHeavy {
+                long_quantile: 0.999,
+            },
+            failures: vec![],
+            overrides: SimOverrides::default(),
+        },
+        Scenario {
+            name: "paper-p95",
+            description: "Steady arrivals with §6.2's literal p95 long rewrite \
+                          (~5% longs) — the heaviest long mix; the Fig. 15 \
+                          scalability stress workload",
+            arrival: ArrivalShape::Steady,
+            mix: MixShape::LongHeavy {
+                long_quantile: 0.95,
+            },
+            failures: vec![],
+            overrides: SimOverrides::default(),
+        },
+        Scenario {
+            name: "shorts-only",
+            description: "Steady arrivals, rewrite disabled: the interactive \
+                          baseline every capacity calibration and Fig. 2 \
+                          'w/o longs' comparison rests on",
+            arrival: ArrivalShape::Steady,
+            mix: MixShape::ShortsOnly,
+            failures: vec![],
+            overrides: SimOverrides::default(),
+        },
+        Scenario {
+            name: "failures",
+            description: "azure-steady plus two injected replica crashes (at \
+                          25% and 55% of the arrival span, each recovering \
+                          after another 20%), displaced work re-placed through \
+                          the policy",
+            arrival: ArrivalShape::Steady,
+            mix: MixShape::AzureStandard,
+            failures: vec![
+                FailurePoint {
+                    at_frac: 0.25,
+                    replica: 1,
+                    recover_frac: Some(0.20),
+                },
+                FailurePoint {
+                    at_frac: 0.55,
+                    replica: 2,
+                    recover_frac: Some(0.20),
+                },
+            ],
+            overrides: SimOverrides::default(),
+        },
+        Scenario {
+            name: "huge-sweep",
+            description: "azure-steady under the approximate closed-form \
+                          decode fast-forward (DecodeMode::EpochClosedForm) — \
+                          the cheap mode for massive grids",
+            arrival: ArrivalShape::Steady,
+            mix: MixShape::AzureStandard,
+            failures: vec![],
+            overrides: SimOverrides {
+                decode_mode: Some(DecodeMode::EpochClosedForm),
+            },
+        },
+    ]
+}
+
+/// Look up a scenario by its registered name.
+pub fn by_name(name: &str) -> Option<Scenario> {
+    all().into_iter().find(|s| s.name == name)
+}
+
+/// The registered names, in presentation order.
+pub fn names() -> Vec<&'static str> {
+    all().iter().map(|s| s.name).collect()
+}

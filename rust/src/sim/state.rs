@@ -22,7 +22,9 @@
 use std::collections::VecDeque;
 
 use crate::cluster::{ReplicaId, Topology};
-use crate::config::{AblationFlags, ClusterSpec, DecodeMode, ModelSpec, SchedParams};
+use crate::config::{
+    AblationFlags, ClusterSpec, DecodeMode, ModelSpec, PolicyKind, SchedParams,
+};
 use crate::costmodel::{sp, CostModel, SpPlan};
 use crate::metrics::BusyTracker;
 use crate::trace::{ReqId, Request};
@@ -237,6 +239,18 @@ impl SimConfig {
             dedicated_decode_pool: flags.disaggregation,
             decode_mode: DecodeMode::default(),
             max_events: 500_000_000,
+        }
+    }
+
+    /// The configuration a policy runs under by default: PecSched variants
+    /// get their tuned [`SchedParams`] and dedicated decode pool, every
+    /// baseline the plain cluster. The single home of the policy→config
+    /// mapping (the CLI, the experiment harness, the sweep runner and the
+    /// tests all route through here).
+    pub fn for_policy(model: ModelSpec, kind: PolicyKind) -> Self {
+        match kind {
+            PolicyKind::PecSched(flags) => Self::pecsched(model, flags),
+            _ => Self::baseline(model),
         }
     }
 }

@@ -1,8 +1,266 @@
-//! Deterministic Azure-shape trace generation.
+//! Deterministic trace generation: composable arrival processes and
+//! length mixes, assembled by [`generate_trace`].
+//!
+//! [`TraceConfig::generate`] is a thin wrapper that pairs a homogeneous
+//! Poisson [`ArrivalProcess`] with the Azure-shape [`LengthMix`]; its
+//! output is bit-for-bit identical to the pre-refactor monolithic
+//! generator for any fixed seed (regression-tested below). Scenarios
+//! (`crate::scenario`) assemble the same components into burst, diurnal,
+//! long-heavy and shorts-only workloads.
 
 use crate::util::Rng;
 
 use super::{Request, Trace};
+
+/// When the next request arrives.
+///
+/// All processes are parameterised by a *mean* rate `rps` so callers can
+/// scale a scenario to a model's calibrated capacity without knowing its
+/// shape; the modulated variants reshape arrivals around that mean.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArrivalProcess {
+    /// Homogeneous Poisson process at `rps` requests/second.
+    Poisson { rps: f64 },
+    /// On/off modulated Poisson (a two-state MMPP): `on_s` seconds at
+    /// `rps * on_mult`, then `off_s` seconds at `rps * off_mult`,
+    /// repeating from t = 0. Pick multipliers so that
+    /// `(on_s*on_mult + off_s*off_mult) / (on_s+off_s) = 1` and the
+    /// long-run mean stays `rps`.
+    Burst {
+        rps: f64,
+        on_mult: f64,
+        off_mult: f64,
+        on_s: f64,
+        off_s: f64,
+    },
+    /// Sinusoidally modulated Poisson:
+    /// `rate(t) = rps * (1 + amplitude * sin(2π t / period_s))`.
+    /// `amplitude` must sit in [0, 1) so the rate stays positive.
+    Diurnal {
+        rps: f64,
+        amplitude: f64,
+        period_s: f64,
+    },
+}
+
+impl ArrivalProcess {
+    /// The long-run mean arrival rate the process was parameterised with.
+    pub fn mean_rps(&self) -> f64 {
+        match self {
+            Self::Poisson { rps }
+            | Self::Burst { rps, .. }
+            | Self::Diurnal { rps, .. } => *rps,
+        }
+    }
+
+    /// Instantaneous rate at time `t`.
+    pub fn rate_at(&self, t: f64) -> f64 {
+        match self {
+            Self::Poisson { rps } => *rps,
+            Self::Burst {
+                rps,
+                on_mult,
+                off_mult,
+                on_s,
+                off_s,
+            } => {
+                let phase = t.rem_euclid(on_s + off_s);
+                if phase < *on_s {
+                    rps * on_mult
+                } else {
+                    rps * off_mult
+                }
+            }
+            Self::Diurnal {
+                rps,
+                amplitude,
+                period_s,
+            } => rps * (1.0 + amplitude * (2.0 * std::f64::consts::PI * t / period_s).sin()),
+        }
+    }
+
+    /// Draw the gap to the next arrival after time `t`.
+    ///
+    /// Modulated processes use the stepwise-constant approximation (the
+    /// gap is drawn at the rate in force at `t`), which is exact in the
+    /// limit of gaps short against the modulation period — the regime
+    /// every scenario in the registry operates in. The Poisson arm is the
+    /// exact draw the pre-refactor generator made.
+    pub fn next_gap(&self, t: f64, rng: &mut Rng) -> f64 {
+        match self {
+            Self::Poisson { rps } => rng.exponential(*rps),
+            _ => rng.exponential(self.rate_at(t)),
+        }
+    }
+
+    fn validate(&self) {
+        assert!(self.mean_rps() > 0.0, "non-positive arrival rate");
+        match self {
+            Self::Poisson { .. } => {}
+            Self::Burst {
+                on_mult,
+                off_mult,
+                on_s,
+                off_s,
+                ..
+            } => {
+                assert!(*on_mult > 0.0 && *off_mult > 0.0, "burst rate multipliers must be positive");
+                assert!(*on_s > 0.0 && *off_s >= 0.0, "burst phase durations invalid");
+            }
+            Self::Diurnal {
+                amplitude,
+                period_s,
+                ..
+            } => {
+                assert!((0.0..1.0).contains(amplitude), "diurnal amplitude outside [0,1)");
+                assert!(*period_s > 0.0, "non-positive diurnal period");
+            }
+        }
+    }
+}
+
+/// §6.2's long-input rewrite: body samples at or above `quantile` are
+/// replaced by U(min, max) draws and flagged long.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LongRewrite {
+    pub quantile: f64,
+    pub min: u32,
+    pub max: u32,
+}
+
+/// How request lengths are drawn: the Azure-shape lognormal body for
+/// inputs and outputs, with an optional long rewrite of the input tail.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LengthMix {
+    /// Median input length of the lognormal body, tokens.
+    pub input_median: f64,
+    /// Lognormal sigma of the input body.
+    pub input_sigma: f64,
+    /// Clip for the input body (trace max ≈ 9K).
+    pub input_max: u32,
+    /// Median output length, tokens.
+    pub output_median: f64,
+    /// Lognormal sigma of the output body.
+    pub output_sigma: f64,
+    /// Clip for outputs (Fig. 1: < 800).
+    pub output_max: u32,
+    /// The §6.2 rewrite; `None` disables it (the tail is clamped to
+    /// `input_max` instead, so the draw count per request is unchanged).
+    pub rewrite: Option<LongRewrite>,
+}
+
+impl LengthMix {
+    /// The paper's Azure-shape body with the given rewrite quantile.
+    pub fn azure_body(long_quantile: f64) -> Self {
+        Self {
+            rewrite: Some(LongRewrite {
+                quantile: long_quantile,
+                min: 100_000,
+                max: 500_000,
+            }),
+            ..Self::shorts_only()
+        }
+    }
+
+    /// Azure-shape body with the rewrite disabled: no request is long.
+    pub fn shorts_only() -> Self {
+        Self {
+            input_median: 700.0,
+            input_sigma: 1.05,
+            input_max: 9_000,
+            output_median: 150.0,
+            output_sigma: 0.85,
+            output_max: 800,
+            rewrite: None,
+        }
+    }
+
+    /// Precompute the per-sample constants (ln-medians, rewrite
+    /// threshold) exactly as the monolithic generator hoisted them.
+    pub fn sampler(&self) -> LengthSampler {
+        let threshold = match &self.rewrite {
+            // q_p = median * exp(sigma * z_p), computed analytically from
+            // the lognormal.
+            Some(rw) => {
+                let z = normal_quantile(rw.quantile);
+                self.input_median * (self.input_sigma * z).exp()
+            }
+            None => f64::INFINITY,
+        };
+        LengthSampler {
+            ln_in: self.input_median.ln(),
+            ln_out: self.output_median.ln(),
+            input_sigma: self.input_sigma,
+            output_sigma: self.output_sigma,
+            input_max: self.input_max,
+            output_max: self.output_max,
+            threshold,
+            rewrite: self.rewrite.clone(),
+        }
+    }
+}
+
+/// A [`LengthMix`] with its derived constants, ready to draw from.
+#[derive(Debug, Clone)]
+pub struct LengthSampler {
+    ln_in: f64,
+    ln_out: f64,
+    input_sigma: f64,
+    output_sigma: f64,
+    input_max: u32,
+    output_max: u32,
+    threshold: f64,
+    rewrite: Option<LongRewrite>,
+}
+
+impl LengthSampler {
+    /// Draw one request's `(input_len, output_len, is_long)`.
+    ///
+    /// The RNG call sequence is exactly the monolithic generator's: body
+    /// lognormal, then (long path only) the uniform rewrite, then the
+    /// output lognormal.
+    pub fn sample(&self, rng: &mut Rng) -> (u32, u32, bool) {
+        let body = rng.lognormal(self.ln_in, self.input_sigma);
+        let (input_len, is_long) = if body >= self.threshold {
+            let rw = self.rewrite.as_ref().expect("finite threshold without rewrite");
+            (rng.u32_inclusive(rw.min, rw.max), true)
+        } else {
+            (body.clamp(16.0, self.input_max as f64) as u32, false)
+        };
+        let output_len = rng
+            .lognormal(self.ln_out, self.output_sigma)
+            .clamp(1.0, self.output_max as f64) as u32;
+        (input_len, output_len, is_long)
+    }
+}
+
+/// Assemble a trace from an arrival process and a length mix —
+/// deterministic given `seed`, regardless of the components' shapes.
+pub fn generate_trace(
+    n_requests: usize,
+    seed: u64,
+    arrival: &ArrivalProcess,
+    mix: &LengthMix,
+) -> Trace {
+    assert!(n_requests > 0, "empty trace requested");
+    arrival.validate();
+    let sampler = mix.sampler();
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut t = 0.0;
+    let mut reqs = Vec::with_capacity(n_requests);
+    for _ in 0..n_requests {
+        t += arrival.next_gap(t, &mut rng);
+        let (input_len, output_len, is_long) = sampler.sample(&mut rng);
+        reqs.push(Request {
+            id: 0,
+            arrival: t,
+            input_len,
+            output_len,
+            is_long,
+        });
+    }
+    Trace::new(reqs)
+}
 
 /// Parameters of the synthetic Azure-shape workload.
 ///
@@ -66,6 +324,28 @@ impl TraceConfig {
         }
     }
 
+    /// The arrival component this config describes (steady Poisson).
+    pub fn arrival(&self) -> ArrivalProcess {
+        ArrivalProcess::Poisson { rps: self.rps }
+    }
+
+    /// The length-mix component this config describes.
+    pub fn length_mix(&self) -> LengthMix {
+        LengthMix {
+            input_median: self.input_median,
+            input_sigma: self.input_sigma,
+            input_max: self.input_max,
+            output_median: self.output_median,
+            output_sigma: self.output_sigma,
+            output_max: self.output_max,
+            rewrite: Some(LongRewrite {
+                quantile: self.long_quantile,
+                min: self.long_min,
+                max: self.long_max,
+            }),
+        }
+    }
+
     /// Draw the full trace.
     ///
     /// Following §6.2 exactly: lengths are drawn from the body
@@ -75,39 +355,7 @@ impl TraceConfig {
     /// classes ("we directly mimic the output length distribution ...
     /// without modification").
     pub fn generate(&self) -> Trace {
-        assert!(self.n_requests > 0, "empty trace requested");
-        assert!(self.rps > 0.0, "non-positive arrival rate");
-        let mut rng = Rng::seed_from_u64(self.seed);
-
-        // The rewrite threshold is the body quantile, computed analytically
-        // from the lognormal: q_p = median * exp(sigma * z_p).
-        let z = normal_quantile(self.long_quantile);
-        let threshold = self.input_median * (self.input_sigma * z).exp();
-        let ln_in = self.input_median.ln();
-        let ln_out = self.output_median.ln();
-
-        let mut t = 0.0;
-        let mut reqs = Vec::with_capacity(self.n_requests);
-        for _ in 0..self.n_requests {
-            t += rng.exponential(self.rps);
-            let body = rng.lognormal(ln_in, self.input_sigma);
-            let (input_len, is_long) = if body >= threshold {
-                (rng.u32_inclusive(self.long_min, self.long_max), true)
-            } else {
-                (body.clamp(16.0, self.input_max as f64) as u32, false)
-            };
-            let output_len = rng
-                .lognormal(ln_out, self.output_sigma)
-                .clamp(1.0, self.output_max as f64) as u32;
-            reqs.push(Request {
-                id: 0,
-                arrival: t,
-                input_len,
-                output_len,
-                is_long,
-            });
-        }
-        Trace::new(reqs)
+        generate_trace(self.n_requests, self.seed, &self.arrival(), &self.length_mix())
     }
 }
 
@@ -162,6 +410,68 @@ pub fn normal_quantile(p: f64) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// Verbatim copy of the pre-refactor monolithic generator — the
+    /// bit-for-bit oracle for [`TraceConfig::generate`].
+    fn generate_oracle(cfg: &TraceConfig) -> Trace {
+        assert!(cfg.n_requests > 0, "empty trace requested");
+        assert!(cfg.rps > 0.0, "non-positive arrival rate");
+        let mut rng = Rng::seed_from_u64(cfg.seed);
+        let z = normal_quantile(cfg.long_quantile);
+        let threshold = cfg.input_median * (cfg.input_sigma * z).exp();
+        let ln_in = cfg.input_median.ln();
+        let ln_out = cfg.output_median.ln();
+        let mut t = 0.0;
+        let mut reqs = Vec::with_capacity(cfg.n_requests);
+        for _ in 0..cfg.n_requests {
+            t += rng.exponential(cfg.rps);
+            let body = rng.lognormal(ln_in, cfg.input_sigma);
+            let (input_len, is_long) = if body >= threshold {
+                (rng.u32_inclusive(cfg.long_min, cfg.long_max), true)
+            } else {
+                (body.clamp(16.0, cfg.input_max as f64) as u32, false)
+            };
+            let output_len = rng
+                .lognormal(ln_out, cfg.output_sigma)
+                .clamp(1.0, cfg.output_max as f64) as u32;
+            reqs.push(Request {
+                id: 0,
+                arrival: t,
+                input_len,
+                output_len,
+                is_long,
+            });
+        }
+        Trace::new(reqs)
+    }
+
+    #[test]
+    fn refactored_generate_matches_monolithic_oracle_bit_for_bit() {
+        for (n, rps, seed, lq) in [
+            (2_000usize, 10.0, 42u64, 0.95),
+            (500, 3.0, 7, 0.9998),
+            (1_000, 25.0, 123, 0.90),
+        ] {
+            let cfg = TraceConfig {
+                n_requests: n,
+                rps,
+                seed,
+                long_quantile: lq,
+                ..TraceConfig::default()
+            };
+            let new = cfg.generate();
+            let old = generate_oracle(&cfg);
+            assert_eq!(new.requests.len(), old.requests.len());
+            for (a, b) in new.requests.iter().zip(&old.requests) {
+                assert_eq!(a, b, "request diverged (seed {seed})");
+                assert_eq!(
+                    a.arrival.to_bits(),
+                    b.arrival.to_bits(),
+                    "arrival timestamp not bit-identical (seed {seed})"
+                );
+            }
+        }
+    }
 
     #[test]
     fn deterministic_given_seed() {
@@ -227,6 +537,81 @@ mod tests {
         let t = c.generate();
         let rate = t.len() as f64 / t.span();
         assert!((rate - 20.0).abs() < 1.5, "rate {rate}");
+    }
+
+    #[test]
+    fn shorts_only_mix_never_rewrites() {
+        let t = generate_trace(
+            5_000,
+            11,
+            &ArrivalProcess::Poisson { rps: 10.0 },
+            &LengthMix::shorts_only(),
+        );
+        assert_eq!(t.longs().count(), 0);
+        assert!(t.requests.iter().all(|r| r.input_len <= 9_000));
+    }
+
+    #[test]
+    fn burst_process_modulates_but_keeps_mean_rate() {
+        let arr = ArrivalProcess::Burst {
+            rps: 20.0,
+            on_mult: 3.0,
+            off_mult: 1.0 / 3.0,
+            on_s: 20.0,
+            off_s: 60.0,
+        };
+        let t = generate_trace(40_000, 5, &arr, &LengthMix::shorts_only());
+        let rate = t.len() as f64 / t.span();
+        assert!((rate / 20.0 - 1.0).abs() < 0.15, "mean rate {rate}");
+        // The on-phase really is denser than the off-phase.
+        let period = 80.0;
+        let (mut on, mut off) = (0usize, 0usize);
+        for r in &t.requests {
+            if r.arrival.rem_euclid(period) < 20.0 {
+                on += 1;
+            } else {
+                off += 1;
+            }
+        }
+        // on-phase covers 1/4 of the time but ~3x the rate.
+        assert!(
+            on as f64 > off as f64 * 1.5,
+            "burst not visible: on={on} off={off}"
+        );
+    }
+
+    #[test]
+    fn diurnal_process_modulates_rate() {
+        let arr = ArrivalProcess::Diurnal {
+            rps: 20.0,
+            amplitude: 0.6,
+            period_s: 600.0,
+        };
+        let t = generate_trace(40_000, 6, &arr, &LengthMix::shorts_only());
+        let rate = t.len() as f64 / t.span();
+        assert!((rate / 20.0 - 1.0).abs() < 0.15, "mean rate {rate}");
+        // Peak half-period (sin > 0) denser than trough half-period.
+        let (mut peak, mut trough) = (0usize, 0usize);
+        for r in &t.requests {
+            if r.arrival.rem_euclid(600.0) < 300.0 {
+                peak += 1;
+            } else {
+                trough += 1;
+            }
+        }
+        assert!(peak > trough, "diurnal not visible: peak={peak} trough={trough}");
+    }
+
+    #[test]
+    fn modulated_processes_deterministic() {
+        let arr = ArrivalProcess::Diurnal {
+            rps: 8.0,
+            amplitude: 0.5,
+            period_s: 300.0,
+        };
+        let a = generate_trace(500, 9, &arr, &LengthMix::azure_body(0.95));
+        let b = generate_trace(500, 9, &arr, &LengthMix::azure_body(0.95));
+        assert_eq!(a.requests, b.requests);
     }
 
     #[test]

@@ -19,7 +19,10 @@ mod gen;
 mod stats;
 
 pub use azure::{load_azure_trace, parse_azure_csv, parse_timestamp, AzureRewrite};
-pub use gen::TraceConfig;
+pub use gen::{
+    generate_trace, normal_quantile, ArrivalProcess, LengthMix, LengthSampler,
+    LongRewrite, TraceConfig,
+};
 pub use stats::{histogram, percentile_of, LengthStats};
 
 
@@ -90,11 +93,15 @@ impl Trace {
     }
 
     /// Serialize as CSV (`arrival,input_len,output_len,is_long`).
+    ///
+    /// Arrivals use Rust's shortest round-trip float formatting, so
+    /// [`Trace::from_csv`] reproduces every request *exactly* (property
+    /// tested in `rust/tests/prop_tests.rs`).
     pub fn to_csv(&self) -> String {
         let mut out = String::from("arrival,input_len,output_len,is_long\n");
         for r in &self.requests {
             out.push_str(&format!(
-                "{:.6},{},{},{}\n",
+                "{},{},{},{}\n",
                 r.arrival, r.input_len, r.output_len, r.is_long as u8
             ));
         }

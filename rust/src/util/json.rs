@@ -83,6 +83,98 @@ impl Json {
         }
         Ok(f as i64)
     }
+
+    /// Deterministic pretty serializer (2-space indent, keys in
+    /// `BTreeMap` order, fixed number formatting): the same value always
+    /// renders to the same bytes, on any host — the property the sweep
+    /// determinism gate (`SWEEP_*.json` diffed across thread counts)
+    /// rests on. Round-trips through [`Json::parse`].
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.write_value(&mut out, 0);
+        out.push('\n');
+        out
+    }
+
+    fn write_value(&self, out: &mut String, indent: usize) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(x) => out.push_str(&render_num(*x)),
+            Json::Str(s) => write_escaped(out, s),
+            Json::Arr(v) => {
+                if v.is_empty() {
+                    out.push_str("[]");
+                    return;
+                }
+                out.push('[');
+                for (i, item) in v.iter().enumerate() {
+                    out.push_str(if i == 0 { "\n" } else { ",\n" });
+                    push_indent(out, indent + 1);
+                    item.write_value(out, indent + 1);
+                }
+                out.push('\n');
+                push_indent(out, indent);
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                if m.is_empty() {
+                    out.push_str("{}");
+                    return;
+                }
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    out.push_str(if i == 0 { "\n" } else { ",\n" });
+                    push_indent(out, indent + 1);
+                    write_escaped(out, k);
+                    out.push_str(": ");
+                    v.write_value(out, indent + 1);
+                }
+                out.push('\n');
+                push_indent(out, indent);
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn push_indent(out: &mut String, n: usize) {
+    for _ in 0..n {
+        out.push_str("  ");
+    }
+}
+
+fn write_escaped(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+/// Integral values print as integers, everything else in `{:e}` form —
+/// both are exact, deterministic renderings of the underlying f64.
+fn render_num(x: f64) -> String {
+    if !x.is_finite() {
+        // JSON has no NaN/Inf; the writers upstream avoid them, but render
+        // defensively rather than emit invalid output.
+        return "null".into();
+    }
+    if x.fract() == 0.0 && x.abs() < 9.0e15 {
+        format!("{}", x as i64)
+    } else {
+        format!("{x:e}")
+    }
 }
 
 struct Parser<'a> {
@@ -306,6 +398,28 @@ mod tests {
         assert!(Json::parse("1.5").unwrap().as_usize().is_err());
         assert!(Json::parse("-2").unwrap().as_usize().is_err());
         assert_eq!(Json::parse("7").unwrap().as_usize().unwrap(), 7);
+    }
+
+    #[test]
+    fn render_roundtrips_and_is_deterministic() {
+        let doc = r#"{"b": [1, 2.5, true, null], "a": {"x": "q\"uote", "y": []}, "n": -1.5e-3}"#;
+        let j = Json::parse(doc).unwrap();
+        let r1 = j.render();
+        let r2 = j.render();
+        assert_eq!(r1, r2);
+        let back = Json::parse(&r1).unwrap();
+        assert_eq!(back, j);
+        // BTreeMap ordering: "a" renders before "b".
+        assert!(r1.find("\"a\"").unwrap() < r1.find("\"b\"").unwrap());
+    }
+
+    #[test]
+    fn render_numbers_integers_vs_floats() {
+        assert_eq!(Json::Num(7.0).render(), "7\n");
+        assert_eq!(Json::Num(-3.0).render(), "-3\n");
+        let f = Json::Num(0.6).render();
+        assert_eq!(Json::parse(&f).unwrap().as_f64().unwrap(), 0.6);
+        assert_eq!(Json::Num(f64::NAN).render(), "null\n");
     }
 
     #[test]

@@ -60,10 +60,7 @@ fn all_policies() -> Vec<PolicyKind> {
 
 fn cfg_for(kind: PolicyKind, mode: DecodeMode) -> SimConfig {
     let model = ModelSpec::mistral_7b();
-    let mut cfg = match kind {
-        PolicyKind::PecSched(f) => SimConfig::pecsched(model, f),
-        _ => SimConfig::baseline(model),
-    };
+    let mut cfg = SimConfig::for_policy(model, kind);
     cfg.decode_mode = mode;
     cfg
 }

@@ -29,10 +29,7 @@ fn run_with_failure(
     fail_rid: usize,
     recover: bool,
 ) -> pecsched::metrics::RunMetrics {
-    let cfg = match kind {
-        PolicyKind::PecSched(f) => SimConfig::pecsched(model, f),
-        _ => SimConfig::baseline(model),
-    };
+    let cfg = SimConfig::for_policy(model, kind);
     let mut sim = Simulation::new(cfg, trace, kind);
     let span = trace.span();
     sim.run_with_hook(|st: &mut SimState, policy: &mut dyn Policy| {

@@ -4,13 +4,11 @@
 //! from a deterministic RNG, so failures are reproducible.
 
 use pecsched::cluster::Topology;
-use pecsched::config::{
-    AblationFlags, ClusterSpec, DecodeMode, ModelSpec, PolicyKind,
-};
+use pecsched::config::{ClusterSpec, DecodeMode, ModelSpec, PolicyKind};
 use pecsched::metrics::Digest;
 use pecsched::server::KvPool;
 use pecsched::sim::{run_sim, SimConfig, Simulation};
-use pecsched::trace::{Request, Trace};
+use pecsched::trace::{Request, Trace, TraceConfig};
 use pecsched::util::{Json, Rng};
 
 // ---------------------------------------------------------------------
@@ -54,10 +52,7 @@ fn prop_all_requests_complete_under_any_policy_and_seed() {
         let n = 50 + rng.below(250);
         let trace = random_trace(&mut rng, n, true);
         let kind = policies()[rng.below(policies().len())];
-        let cfg = match kind {
-            PolicyKind::PecSched(f) => SimConfig::pecsched(model.clone(), f),
-            _ => SimConfig::baseline(model.clone()),
-        };
+        let cfg = SimConfig::for_policy(model.clone(), kind);
         let m = run_sim(cfg, &trace, kind);
         assert_eq!(
             m.shorts_completed + m.longs_completed,
@@ -76,10 +71,7 @@ fn prop_delays_nonnegative_and_jct_exceeds_delay() {
         let model = ModelSpec::mistral_7b();
         let trace = random_trace(&mut rng, 200, true);
         let kind = policies()[rng.below(policies().len())];
-        let cfg = match kind {
-            PolicyKind::PecSched(f) => SimConfig::pecsched(model.clone(), f),
-            _ => SimConfig::baseline(model.clone()),
-        };
+        let cfg = SimConfig::for_policy(model.clone(), kind);
         let mut m = run_sim(cfg, &trace, kind);
         if !m.short_queue_delay.is_empty() && !m.short_jct.is_empty() {
             assert!(m.short_queue_delay.quantile(0.0) >= -1e-9);
@@ -96,10 +88,7 @@ fn prop_no_longs_means_no_preemptions() {
         let trace = random_trace(&mut rng, 150, false);
         let kind = policies()[rng.below(policies().len())];
         let model = ModelSpec::phi3_14b();
-        let cfg = match kind {
-            PolicyKind::PecSched(f) => SimConfig::pecsched(model.clone(), f),
-            _ => SimConfig::baseline(model.clone()),
-        };
+        let cfg = SimConfig::for_policy(model.clone(), kind);
         let m = run_sim(cfg, &trace, kind);
         assert_eq!(m.preemptions, 0, "{}", kind.name());
     }
@@ -132,10 +121,7 @@ fn prop_indexed_placement_matches_scan_oracle() {
         let n = 60 + rng.below(200);
         let trace = random_trace(&mut rng, n, true);
         let kind = policies()[case % policies().len()];
-        let cfg = match kind {
-            PolicyKind::PecSched(f) => SimConfig::pecsched(model.clone(), f),
-            _ => SimConfig::baseline(model.clone()),
-        };
+        let cfg = SimConfig::for_policy(model.clone(), kind);
         let mut sim = Simulation::new(cfg, &trace, kind);
         let m = sim.run_with_hook(|st, _policy| {
             st.index
@@ -174,10 +160,7 @@ fn prop_epoch_replay_matches_per_round_oracle() {
         let trace = random_trace(&mut rng, n, true);
         let kind = policies()[case % policies().len()];
         let cfg_for = |mode: DecodeMode| {
-            let mut cfg = match kind {
-                PolicyKind::PecSched(f) => SimConfig::pecsched(model.clone(), f),
-                _ => SimConfig::baseline(model.clone()),
-            };
+            let mut cfg = SimConfig::for_policy(model.clone(), kind);
             cfg.decode_mode = mode;
             cfg
         };
@@ -380,6 +363,67 @@ fn prop_kv_pool_conserves_blocks() {
 }
 
 // ---------------------------------------------------------------------
+// trace CSV round-trip
+// ---------------------------------------------------------------------
+
+/// `Trace::from_csv(t.to_csv())` reproduces every request — including
+/// §6.2 long rewrites — *exactly*: same ids, bit-identical arrival
+/// timestamps (`to_csv` uses shortest-roundtrip float formatting), same
+/// lengths and flags. Exercises generated traces across arrival shapes
+/// and long frequencies, plus raw random traces.
+#[test]
+fn prop_trace_csv_roundtrip_exact() {
+    let mut rng = Rng::seed_from_u64(0xC5F);
+    for case in 0..30 {
+        let trace = if case % 2 == 0 {
+            TraceConfig {
+                n_requests: 1 + rng.below(400),
+                rps: 0.5 + rng.f64() * 30.0,
+                seed: rng.next_u64(),
+                long_quantile: [0.90, 0.95, 0.999, 0.9998][rng.below(4)],
+                ..TraceConfig::default()
+            }
+            .generate()
+        } else {
+            random_trace(&mut rng, 1 + rng.below(400), true)
+        };
+        let back = Trace::from_csv(&trace.to_csv()).unwrap_or_else(|e| {
+            panic!("case {case}: reparse failed: {e}");
+        });
+        assert_eq!(back.len(), trace.len(), "case {case}: length changed");
+        for (a, b) in trace.requests.iter().zip(&back.requests) {
+            assert_eq!(a.id, b.id, "case {case}");
+            assert_eq!(
+                a.arrival.to_bits(),
+                b.arrival.to_bits(),
+                "case {case}: arrival not bit-identical ({} vs {})",
+                a.arrival,
+                b.arrival
+            );
+            assert_eq!(
+                (a.input_len, a.output_len, a.is_long),
+                (b.input_len, b.output_len, b.is_long),
+                "case {case}"
+            );
+        }
+    }
+}
+
+#[test]
+fn trace_csv_malformed_inputs_are_errors() {
+    // Wrong field counts.
+    assert!(Trace::from_csv("arrival,input_len\n1,2\n").is_err());
+    assert!(Trace::from_csv("1.0,100,10,0,extra\n").is_err());
+    // Non-numeric fields.
+    assert!(Trace::from_csv("abc,100,10,0\n").is_err());
+    assert!(Trace::from_csv("1.0,banana,10,0\n").is_err());
+    assert!(Trace::from_csv("1.0,100,1e99banana,0\n").is_err());
+    // Header + blank lines alone parse to an empty trace, not an error.
+    let t = Trace::from_csv("arrival,input_len,output_len,is_long\n\n").unwrap();
+    assert!(t.is_empty());
+}
+
+// ---------------------------------------------------------------------
 // JSON parser round-trip on random documents
 // ---------------------------------------------------------------------
 
@@ -464,5 +508,13 @@ fn prop_json_roundtrip() {
             panic!("failed to reparse {text:?}: {e}");
         });
         assert_eq!(back, doc, "roundtrip mismatch for {text:?}");
+        // The deterministic renderer round-trips too (the sweep JSON
+        // writer rests on this).
+        let rendered = doc.render();
+        let back2 = Json::parse(&rendered).unwrap_or_else(|e| {
+            panic!("failed to reparse rendered {rendered:?}: {e}");
+        });
+        assert_eq!(back2, doc, "render roundtrip mismatch");
+        assert_eq!(doc.render(), rendered, "render not deterministic");
     }
 }

@@ -1,0 +1,110 @@
+//! Scenario-subsystem integration tests: the `azure-steady` regression
+//! gate (bit-for-bit equality with the experiment-standard generator),
+//! end-to-end runs of every registered scenario, and the sweep runner's
+//! cluster-size axis.
+
+use pecsched::config::{AblationFlags, ModelSpec, PolicyKind};
+use pecsched::exp::{self, run_sweep, SweepSpec};
+use pecsched::scenario;
+use pecsched::sim::SimConfig;
+use pecsched::trace::TraceConfig;
+
+/// The acceptance gate: the `azure-steady` scenario must reproduce the
+/// experiment-standard trace (what `exp::trace_for` builds through the
+/// refactored `TraceConfig::generate`) bit-for-bit for fixed seeds.
+#[test]
+fn azure_steady_reproduces_the_exp_trace_bit_for_bit() {
+    let sc = scenario::by_name("azure-steady").unwrap();
+    for (n, rps, seed) in [(2_000usize, 12.5, 42u64), (500, 3.0, 7), (1_000, 30.0, 999)] {
+        let a = sc.build_trace(n, rps, seed);
+        let b = TraceConfig {
+            n_requests: n,
+            rps,
+            seed,
+            long_quantile: exp::EXP_LONG_QUANTILE,
+            ..TraceConfig::default()
+        }
+        .generate();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.requests.iter().zip(&b.requests) {
+            assert_eq!(x, y, "seed {seed}: request diverged");
+            assert_eq!(
+                x.arrival.to_bits(),
+                y.arrival.to_bits(),
+                "seed {seed}: arrival not bit-identical"
+            );
+        }
+    }
+}
+
+/// Every registered scenario must run end-to-end under both a baseline
+/// and the full system without losing requests — including the
+/// failure-injection schedule and the closed-form decode override.
+#[test]
+fn every_scenario_runs_and_conserves_requests() {
+    let model = ModelSpec::mistral_7b();
+    let rps = exp::capacity_rps(&model, 0.5);
+    for sc in scenario::all() {
+        for kind in [
+            PolicyKind::Fifo,
+            PolicyKind::PecSched(AblationFlags::full()),
+        ] {
+            let trace = sc.build_trace(200, rps, 11);
+            let cfg = SimConfig::for_policy(model.clone(), kind);
+            let m = sc.run(cfg, &trace, kind);
+            assert_eq!(
+                m.shorts_completed + m.longs_completed,
+                trace.len(),
+                "scenario {} lost requests under {}",
+                sc.name,
+                kind.name()
+            );
+        }
+    }
+}
+
+/// Scenario runs are deterministic: identical metrics summaries for
+/// identical inputs (the property the whole sweep contract rests on).
+#[test]
+fn scenario_runs_are_deterministic() {
+    let model = ModelSpec::mistral_7b();
+    let rps = exp::capacity_rps(&model, 0.5);
+    for name in ["burst", "diurnal", "long-heavy", "failures"] {
+        let sc = scenario::by_name(name).unwrap();
+        let trace = sc.build_trace(150, rps, 23);
+        let kind = PolicyKind::PecSched(AblationFlags::full());
+        let mut a = sc.run(SimConfig::for_policy(model.clone(), kind), &trace, kind);
+        let mut b = sc.run(SimConfig::for_policy(model.clone(), kind), &trace, kind);
+        assert_eq!(a.summary(), b.summary(), "scenario {name} not deterministic");
+    }
+}
+
+/// The sweep runner's cluster-size axis scales replicas and workload the
+/// way the §6.6 protocol requires.
+#[test]
+fn sweep_cluster_axis_scales_replicas_and_workload() {
+    let spec = SweepSpec {
+        name: "gpus-test".into(),
+        models: vec![ModelSpec::mistral_7b()],
+        policies: vec![PolicyKind::PecSched(AblationFlags::full())],
+        scenarios: vec!["azure-steady".into()],
+        loads: vec![0.5],
+        seeds: vec![1],
+        n_requests: 200,
+        gpu_counts: vec![32, 64],
+        threads: 2,
+    };
+    let r = run_sweep(&spec);
+    assert_eq!(r.len(), 2);
+    assert_eq!(r[0].cell.gpus, 32);
+    assert_eq!(r[1].cell.gpus, 64);
+    assert_eq!(
+        r[1].replicas,
+        r[0].replicas * 2,
+        "replicas should scale linearly with the cluster"
+    );
+    let served = |i: usize| r[i].summary.shorts_completed + r[i].summary.longs_completed;
+    assert_eq!(served(0), 200);
+    // sqrt(2) request-wall growth on the scaled cluster.
+    assert_eq!(served(1), (200.0f64 * 2.0f64.sqrt()) as usize);
+}

@@ -18,10 +18,7 @@ fn small_trace(n: usize, rps: f64, seed: u64) -> Trace {
 }
 
 fn run(model: ModelSpec, kind: PolicyKind, trace: &Trace) -> pecsched::metrics::RunMetrics {
-    let cfg = match kind {
-        PolicyKind::PecSched(f) => SimConfig::pecsched(model, f),
-        _ => SimConfig::baseline(model),
-    };
+    let cfg = SimConfig::for_policy(model, kind);
     run_sim(cfg, trace, kind)
 }
 
