@@ -26,8 +26,12 @@ fn main() {
         trace.span()
     );
 
+    // The full lineup is registered in `PolicyKind::all()` (see
+    // `pecsched list-policies`); SJF rides along here as the policy
+    // written purely against the ClusterView/ClusterOps API.
     for kind in [
         PolicyKind::Fifo,
+        PolicyKind::Sjf,
         PolicyKind::PecSched(AblationFlags::full()),
     ] {
         let cfg = SimConfig::for_policy(model.clone(), kind);

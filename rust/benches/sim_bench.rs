@@ -40,7 +40,7 @@ fn sim_cell(
         .run(|| {
             let mut sim = make();
             let m = sim.run();
-            events_per_run = sim.state.events_processed;
+            events_per_run = sim.state.events_processed();
             m.shorts_completed
         });
     r.with_events_per_run(events_per_run)

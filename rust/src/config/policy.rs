@@ -21,6 +21,13 @@ pub struct AblationFlags {
 
 impl Default for AblationFlags {
     fn default() -> Self {
+        Self::full()
+    }
+}
+
+impl AblationFlags {
+    /// Every mechanism on — the paper's full system.
+    pub const fn full() -> Self {
         Self {
             preemption: true,
             disaggregation: true,
@@ -28,56 +35,94 @@ impl Default for AblationFlags {
             fast_sp: true,
         }
     }
-}
-
-impl AblationFlags {
-    pub fn full() -> Self {
-        Self::default()
+    /// §6.4 /PE: preemption off.
+    pub const fn no_preemption() -> Self {
+        let mut f = Self::full();
+        f.preemption = false;
+        f
     }
-    pub fn no_preemption() -> Self {
-        Self {
-            preemption: false,
-            ..Self::default()
-        }
+    /// §6.4 /Dis: disaggregation off.
+    pub const fn no_disaggregation() -> Self {
+        let mut f = Self::full();
+        f.disaggregation = false;
+        f
     }
-    pub fn no_disaggregation() -> Self {
-        Self {
-            disaggregation: false,
-            ..Self::default()
-        }
+    /// §6.4 /CoL: colocation off.
+    pub const fn no_colocation() -> Self {
+        let mut f = Self::full();
+        f.colocation = false;
+        f
     }
-    pub fn no_colocation() -> Self {
-        Self {
-            colocation: false,
-            ..Self::default()
-        }
-    }
-    pub fn no_fast_sp() -> Self {
-        Self {
-            fast_sp: false,
-            ..Self::default()
-        }
+    /// §6.4 /FSP: ring-only SP.
+    pub const fn no_fast_sp() -> Self {
+        let mut f = Self::full();
+        f.fast_sp = false;
+        f
     }
 
-    /// Paper notation for the variant ("/PE", "/Dis", ...).
+    /// Paper notation for the variant ("/PE", "/Dis", ...), looked up in
+    /// the single `PECSCHED_VARIANTS` table.
     pub fn label(&self) -> &'static str {
-        match (
-            self.preemption,
-            self.disaggregation,
-            self.colocation,
-            self.fast_sp,
-        ) {
-            (true, true, true, true) => "PecSched",
-            (false, true, true, true) => "PecSched/PE",
-            (true, false, true, true) => "PecSched/Dis",
-            (true, true, false, true) => "PecSched/CoL",
-            (true, true, true, false) => "PecSched/FSP",
-            _ => "PecSched/custom",
-        }
+        PECSCHED_VARIANTS
+            .iter()
+            .find(|v| v.flags == *self)
+            .map(|v| v.label)
+            .unwrap_or("PecSched/custom")
     }
 }
 
-/// The four cluster-level scheduling strategies of §6.2.
+/// One registered PecSched variant: the single row type behind
+/// [`AblationFlags::label`], [`PolicyKind::cli_name`],
+/// [`PolicyKind::description`], [`PolicyKind::all`] and
+/// [`PolicyKind::ablation_set`] — add a variant here once and every
+/// surface (CLI parsing, `list-policies`, sweeps, labels) picks it up.
+struct PecSchedVariant {
+    flags: AblationFlags,
+    /// Paper notation ("PecSched", "PecSched/PE", ...).
+    label: &'static str,
+    /// CLI spelling ("pecsched", "pecsched-no-pe", ...).
+    cli: &'static str,
+    /// One-liner for `pecsched list-policies`.
+    desc: &'static str,
+}
+
+/// The registered PecSched variants, full system first (the §6.4 order).
+const PECSCHED_VARIANTS: [PecSchedVariant; 5] = [
+    PecSchedVariant {
+        flags: AblationFlags::full(),
+        label: "PecSched",
+        cli: "pecsched",
+        desc: "the paper's system: preemption + colocation + disaggregation + fast SP",
+    },
+    PecSchedVariant {
+        flags: AblationFlags::no_preemption(),
+        label: "PecSched/PE",
+        cli: "pecsched-no-pe",
+        desc: "PecSched ablation: preemption off (§6.4)",
+    },
+    PecSchedVariant {
+        flags: AblationFlags::no_disaggregation(),
+        label: "PecSched/Dis",
+        cli: "pecsched-no-dis",
+        desc: "PecSched ablation: disaggregation off (§6.4)",
+    },
+    PecSchedVariant {
+        flags: AblationFlags::no_colocation(),
+        label: "PecSched/CoL",
+        cli: "pecsched-no-col",
+        desc: "PecSched ablation: colocation off (§6.4)",
+    },
+    PecSchedVariant {
+        flags: AblationFlags::no_fast_sp(),
+        label: "PecSched/FSP",
+        cli: "pecsched-no-fsp",
+        desc: "PecSched ablation: ring-only SP (§6.4)",
+    },
+];
+
+/// The registered cluster-level scheduling strategies: the four §6.2
+/// baselines/system plus policies added against the `ClusterView` /
+/// `ClusterOps` API (currently ELIS-style SJF).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum PolicyKind {
     /// vLLM-style strict global FIFO.
@@ -87,34 +132,84 @@ pub enum PolicyKind {
     Reservation,
     /// Past-Future-style: shorts always first, longs on leftovers.
     Priority,
+    /// ELIS-style shortest-predicted-output-first (arXiv 2505.09142),
+    /// written purely against the policy API boundary.
+    Sjf,
     /// The paper's system.
     PecSched(AblationFlags),
 }
 
 impl PolicyKind {
+    /// Display name used in tables and JSON (`"FIFO"`, `"PecSched/PE"`, ...).
     pub fn name(&self) -> String {
         match self {
             PolicyKind::Fifo => "FIFO".into(),
             PolicyKind::Reservation => "Reservation".into(),
             PolicyKind::Priority => "Priority".into(),
+            PolicyKind::Sjf => "SJF".into(),
             PolicyKind::PecSched(f) => f.label().into(),
         }
     }
 
-    /// Parse a CLI policy name: `fifo | reservation | priority | pecsched |
-    /// pecsched-no-pe | pecsched-no-dis | pecsched-no-col | pecsched-no-fsp`.
+    /// The CLI spelling (`pecsched sweep --policies <cli_name>,...`);
+    /// the inverse of [`PolicyKind::parse`] for every *registered* kind
+    /// (an unregistered custom flag combination reports
+    /// `"pecsched-custom"`, which does not parse back). PecSched
+    /// variants resolve through the single `PECSCHED_VARIANTS` table,
+    /// so names cannot drift from labels or the registry.
+    pub fn cli_name(&self) -> &'static str {
+        match self {
+            PolicyKind::Fifo => "fifo",
+            PolicyKind::Reservation => "reservation",
+            PolicyKind::Priority => "priority",
+            PolicyKind::Sjf => "sjf",
+            PolicyKind::PecSched(f) => PECSCHED_VARIANTS
+                .iter()
+                .find(|v| v.flags == *f)
+                .map(|v| v.cli)
+                .unwrap_or("pecsched-custom"),
+        }
+    }
+
+    /// One-line description for `pecsched list-policies`.
+    pub fn description(&self) -> &'static str {
+        match self {
+            PolicyKind::Fifo => {
+                "vLLM-style strict global FIFO (head-of-line blocking baseline)"
+            }
+            PolicyKind::Reservation => {
+                "Llumnix-style static split: a 500K-sized pool reserved for longs"
+            }
+            PolicyKind::Priority => {
+                "Past-Future-style: shorts always first, longs on leftover idle"
+            }
+            PolicyKind::Sjf => {
+                "ELIS-style shortest-predicted-output-first with a proxy predictor"
+            }
+            PolicyKind::PecSched(f) => PECSCHED_VARIANTS
+                .iter()
+                .find(|v| v.flags == *f)
+                .map(|v| v.desc)
+                .unwrap_or("PecSched with a custom mechanism combination"),
+        }
+    }
+
+    /// The full policy registry: every kind the CLI, the sweep runner and
+    /// `pecsched list-policies` know about. Adding a policy here (plus
+    /// its [`crate::sched::build_policy`] arm) — or a row in
+    /// `PECSCHED_VARIANTS` — is all the registration a new
+    /// implementation needs.
+    pub fn all() -> Vec<Self> {
+        let mut v = vec![Self::Fifo, Self::Reservation, Self::Priority, Self::Sjf];
+        v.extend(PECSCHED_VARIANTS.iter().map(|p| Self::PecSched(p.flags)));
+        v
+    }
+
+    /// Parse a CLI policy name against the [`PolicyKind::all`] registry
+    /// (`fifo | reservation | priority | sjf | pecsched | pecsched-no-pe |
+    /// pecsched-no-dis | pecsched-no-col | pecsched-no-fsp`).
     pub fn parse(s: &str) -> Option<Self> {
-        Some(match s {
-            "fifo" => Self::Fifo,
-            "reservation" => Self::Reservation,
-            "priority" => Self::Priority,
-            "pecsched" => Self::PecSched(AblationFlags::full()),
-            "pecsched-no-pe" => Self::PecSched(AblationFlags::no_preemption()),
-            "pecsched-no-dis" => Self::PecSched(AblationFlags::no_disaggregation()),
-            "pecsched-no-col" => Self::PecSched(AblationFlags::no_colocation()),
-            "pecsched-no-fsp" => Self::PecSched(AblationFlags::no_fast_sp()),
-            _ => return None,
-        })
+        Self::all().into_iter().find(|k| k.cli_name() == s)
     }
 
     /// Everything §6.3 compares.
@@ -127,15 +222,13 @@ impl PolicyKind {
         ]
     }
 
-    /// Everything §6.4 compares.
+    /// Everything §6.4 compares — the `PECSCHED_VARIANTS` table in
+    /// registry order (full system first).
     pub fn ablation_set() -> Vec<Self> {
-        vec![
-            Self::PecSched(AblationFlags::full()),
-            Self::PecSched(AblationFlags::no_preemption()),
-            Self::PecSched(AblationFlags::no_disaggregation()),
-            Self::PecSched(AblationFlags::no_colocation()),
-            Self::PecSched(AblationFlags::no_fast_sp()),
-        ]
+        PECSCHED_VARIANTS
+            .iter()
+            .map(|p| Self::PecSched(p.flags))
+            .collect()
     }
 }
 
@@ -172,6 +265,7 @@ mod tests {
             ("fifo", PolicyKind::Fifo),
             ("reservation", PolicyKind::Reservation),
             ("priority", PolicyKind::Priority),
+            ("sjf", PolicyKind::Sjf),
             ("pecsched", PolicyKind::PecSched(AblationFlags::full())),
             ("pecsched-no-pe", PolicyKind::PecSched(AblationFlags::no_preemption())),
             ("pecsched-no-dis", PolicyKind::PecSched(AblationFlags::no_disaggregation())),
@@ -181,5 +275,29 @@ mod tests {
             assert_eq!(PolicyKind::parse(name), Some(kind));
         }
         assert_eq!(PolicyKind::parse("vllm"), None);
+    }
+
+    #[test]
+    fn registry_covers_sets_and_roundtrips() {
+        let all = PolicyKind::all();
+        // Every kind the comparison/ablation sets use is registered.
+        for k in PolicyKind::comparison_set()
+            .into_iter()
+            .chain(PolicyKind::ablation_set())
+        {
+            assert!(all.contains(&k), "{} missing from registry", k.name());
+        }
+        // CLI names are unique and parse back to the same kind.
+        let mut names: Vec<_> = all.iter().map(|k| k.cli_name()).collect();
+        let n = names.len();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), n, "duplicate CLI names in registry");
+        for k in &all {
+            assert_eq!(PolicyKind::parse(k.cli_name()), Some(*k));
+            assert!(!k.description().is_empty());
+        }
+        // The new-policy slot is registered and sweepable by name.
+        assert!(all.contains(&PolicyKind::Sjf));
     }
 }

@@ -6,6 +6,7 @@
 //! * `sweep`          — run a (models × policies × scenarios × loads ×
 //!                      seeds) grid in parallel and write `SWEEP_*.json`;
 //! * `list-scenarios` — show the scenario registry;
+//! * `list-policies`  — show the policy registry (`PolicyKind::all`);
 //! * `trace-gen`      — emit a scenario-shaped trace as CSV on stdout;
 //! * `serve`          — run the real PJRT serving engine on a synthetic
 //!                      workload;
@@ -33,16 +34,18 @@ USAGE: pecsched <command> [flags]
 COMMANDS
   simulate        --model <name> --policy <p> [--scenario <s>]
                   [--requests N] [--seed S] [--load F]
-                  policies: fifo | reservation | priority | pecsched |
-                            pecsched-no-pe | pecsched-no-dis |
-                            pecsched-no-col | pecsched-no-fsp
+                  policies: see `pecsched list-policies`
                   models:   mistral-7b | phi-3-14b | yi-34b | llama-3.1-70b
-  sweep           [--name NAME] [--models a,b|all] [--policies p,q|all|ablation]
+  sweep           [--name NAME] [--models a,b|all]
+                  [--policies p,q|all|comparison|ablation]
                   [--scenarios s,t] [--loads 0.5,0.8] [--seeds 1,2,3]
                   [--gpus 32,512] [--requests N] [--threads T] [--out FILE]
                   runs the grid in parallel; the JSON is byte-identical
-                  for any --threads value
+                  for any --threads value; policy names from the registry
+                  (`all` = the whole registry as shown by `list-policies`,
+                  `comparison` = the §6.3 lineup, `ablation` = §6.4)
   list-scenarios  show the scenario registry (names, shapes, failures)
+  list-policies   show the policy registry (CLI name, display name, role)
   trace-gen       [--scenario <s>] [--requests N] [--rps F] [--seed S]
   serve           [--artifacts DIR] [--requests N] [--mode fifo|pecsched]
   plan-sp         [--model <name>] [--input-len N]
@@ -69,6 +72,7 @@ fn main() -> Result<()> {
         "simulate" => cmd_simulate(&args),
         "sweep" => cmd_sweep(&args),
         "list-scenarios" => cmd_list_scenarios(),
+        "list-policies" => cmd_list_policies(),
         "trace-gen" => cmd_trace_gen(&args),
         "serve" => cmd_serve(&args),
         "plan-sp" => cmd_plan_sp(&args),
@@ -146,7 +150,11 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     }
     if let Some(p) = args.get("policies") {
         spec.policies = match p {
-            "all" | "comparison" => PolicyKind::comparison_set(),
+            // "all" means the full registry — exactly what
+            // `pecsched list-policies` prints; "comparison" stays the
+            // §6.3 lineup and "ablation" the §6.4 variants.
+            "all" => PolicyKind::all(),
+            "comparison" => PolicyKind::comparison_set(),
             "ablation" => PolicyKind::ablation_set(),
             list => split_list(list)
                 .iter()
@@ -243,6 +251,14 @@ fn cmd_list_scenarios() -> Result<()> {
             overrides,
             s.description
         );
+    }
+    Ok(())
+}
+
+fn cmd_list_policies() -> Result<()> {
+    println!("{:<16} {:<14}  description", "name", "table label");
+    for k in PolicyKind::all() {
+        println!("{:<16} {:<14}  {}", k.cli_name(), k.name(), k.description());
     }
     Ok(())
 }

@@ -19,7 +19,7 @@ pub use registry::{all, by_name, names};
 use crate::config::{DecodeMode, PolicyKind};
 use crate::metrics::RunMetrics;
 use crate::sched::Policy;
-use crate::sim::{run_sim, SimConfig, SimState, Simulation};
+use crate::sim::{run_sim, ClusterOps, SimConfig, SimState, Simulation};
 use crate::trace::{generate_trace, ArrivalProcess, LengthMix, Trace};
 
 /// One injected replica failure, timed as a fraction of the trace's
@@ -170,19 +170,20 @@ impl Scenario {
         let mut recovered = vec![false; self.failures.len()];
         sim.run_with_hook(|st: &mut SimState, policy: &mut dyn Policy| {
             for (i, f) in self.failures.iter().enumerate() {
-                let rid = f.replica % st.replicas.len();
-                if !failed[i] && st.now >= span * f.at_frac {
+                let rid = f.replica % st.replica_count();
+                if !failed[i] && st.now() >= span * f.at_frac {
                     failed[i] = true;
-                    if !st.replicas[rid].down {
+                    if !st.replica(rid).is_down() {
                         for req in st.fail_replica(rid) {
-                            policy.on_arrival(st, req);
+                            policy.on_arrival(&mut ClusterOps::new(st), req);
                         }
                     }
                 }
                 if let Some(rec) = f.recover_frac {
-                    if failed[i] && !recovered[i] && st.now >= span * (f.at_frac + rec) {
+                    if failed[i] && !recovered[i] && st.now() >= span * (f.at_frac + rec)
+                    {
                         recovered[i] = true;
-                        if st.replicas[rid].down {
+                        if st.replica(rid).is_down() {
                             st.recover_replica(rid);
                         }
                     }

@@ -10,52 +10,61 @@
 
 use std::collections::VecDeque;
 
-use super::{try_start_long, Policy};
-use crate::sim::SimState;
+use super::Policy;
+use crate::sim::{ClusterOps, LongEligibility, LongStartOutcome};
 use crate::trace::ReqId;
 
+/// Strict global FIFO over one queue (the vLLM-style baseline).
 #[derive(Debug, Default)]
 pub struct Fifo {
     global: VecDeque<ReqId>,
 }
 
 impl Fifo {
+    /// An empty FIFO queue.
     pub fn new() -> Self {
         Self::default()
     }
 }
 
 impl Policy for Fifo {
-    fn on_arrival(&mut self, st: &mut SimState, req: ReqId) {
+    fn on_arrival(&mut self, ops: &mut ClusterOps<'_>, req: ReqId) {
         self.global.push_back(req);
-        self.dispatch(st);
+        self.dispatch(ops);
     }
 
-    fn dispatch(&mut self, st: &mut SimState) {
+    fn dispatch(&mut self, ops: &mut ClusterOps<'_>) {
         while let Some(&head) = self.global.front() {
-            if st.reqs[head].req.is_long {
+            if ops.view().request(head).req.is_long {
                 // Strict FIFO: the long request must start before anything
                 // behind it. It needs its full replica set idle; nothing
-                // else is dispatched while it waits. The index's idle
+                // else is dispatched while it waits. The idle-eligibility
                 // count lets the wait bail out in O(1).
-                let avail = st.index.idle_count();
-                let placed = try_start_long(st, head, usize::MAX, avail, &|r| {
-                    r.is_idle() && !r.dedicated_decode
-                });
-                match placed {
-                    Some(displaced) => {
+                match ops.start_long_group(head, LongEligibility::Idle, usize::MAX) {
+                    LongStartOutcome::Started { displaced } => {
                         debug_assert!(displaced.is_empty(), "idle replicas had queues");
                         self.global.pop_front();
                     }
-                    None => break,
+                    LongStartOutcome::NoCapacity => break,
+                    LongStartOutcome::Rejected(v) => {
+                        // Unreachable for a correctly routed queue; a
+                        // rejected head is already in service (stale
+                        // entry) — drop it rather than wedge the queue.
+                        debug_assert!(false, "long head rejected: {v:?}");
+                        self.global.pop_front();
+                    }
                 }
             } else {
                 // Join the shortest local queue (token count, [36]) among
                 // replicas not owned by a long request — O(log R) via the
                 // replica index.
-                match st.pick_least_loaded_ordinary() {
+                match ops.view().pick_least_loaded_ordinary() {
                     Some(rid) => {
-                        st.enqueue_short_prefill(rid, head);
+                        let placed = ops.start_prefill(rid, head);
+                        debug_assert!(placed.placed(), "indexed pick was placeable");
+                        if !placed.settled() {
+                            break; // still needs placing; retry next wake
+                        }
                         self.global.pop_front();
                     }
                     None => break, // every replica long-occupied

@@ -1,27 +1,44 @@
 //! Cluster-level scheduling policies (§2.1, §6.2): FIFO, Reservation,
-//! Priority and PecSched itself (with §6.4's ablation switches).
+//! Priority, ELIS-style SJF, and PecSched itself (with §6.4's ablation
+//! switches).
 //!
 //! Policies decide placement; the execution mechanics (preemption,
-//! colocation budgets, decode batching) live in [`crate::sim::SimState`].
+//! colocation budgets, decode batching) live in [`crate::sim`]. The
+//! boundary is typed and enforced by module visibility: a policy receives
+//! a [`ClusterOps`] capability — mutating verbs with outcome enums, each
+//! of which restores every simulator invariant before returning — and
+//! reads the cluster through its [`crate::sim::ClusterView`]. Nothing in
+//! this module can name a `SimState`/`ReplicaRt`/`LongGroup` field, so a
+//! policy cannot corrupt the replica index or the decode-epoch cursors
+//! even on purpose. DESIGN.md §3 ("Writing a policy") documents the
+//! contract; `rust/tests/golden_tests.rs` proves the ported policies
+//! bit-identical to their retained pre-redesign implementations.
 
 mod fifo;
 mod pecsched;
 mod priority;
 mod reservation;
+mod sjf;
 
 pub use fifo::Fifo;
 pub use pecsched::PecSched;
 pub use priority::Priority;
 pub use reservation::Reservation;
+pub use sjf::{LenPredictor, Sjf};
 
 use crate::config::PolicyKind;
-use crate::sim::SimState;
+use crate::sim::ClusterOps;
 use crate::trace::ReqId;
 
 /// A cluster-level scheduling strategy.
+///
+/// Implementations hold their own queues of undispatched requests and
+/// act on the cluster exclusively through the [`ClusterOps`] verbs (and
+/// the [`crate::sim::ClusterView`] obtained from it). See DESIGN.md §3
+/// for the contract and [`Sjf`] for a minimal out-of-tree-style example.
 pub trait Policy {
     /// A request reached the cluster-wide global queue (step ① of Fig. 6).
-    fn on_arrival(&mut self, st: &mut SimState, req: ReqId);
+    fn on_arrival(&mut self, ops: &mut ClusterOps<'_>, req: ReqId);
 
     /// Re-examine queues after any state change (replica freed, prefill
     /// finished, long released, ...) and dispatch whatever now fits.
@@ -33,60 +50,27 @@ pub trait Policy {
     /// into arithmetic and never wake the policy; per-round mode fires the
     /// same dispatches because round events without completions change no
     /// policy-visible state.
-    fn dispatch(&mut self, st: &mut SimState);
+    fn dispatch(&mut self, ops: &mut ClusterOps<'_>);
 
     /// Anything waiting in the policy's own queues? When false, `dispatch`
     /// is a no-op and the engine skips the call (and its wall-clock
     /// attribution timers) entirely.
-    fn has_pending(&self) -> bool {
-        true
-    }
+    ///
+    /// Required (no default) on purpose: a policy that forgot to report
+    /// its backlog would silently disable the engine's dispatch-skip
+    /// gating — or worse, never be woken for work it is holding.
+    fn has_pending(&self) -> bool;
 }
 
-/// Instantiate the policy for a [`PolicyKind`]. Takes the state mutably so
-/// partition-based policies (Reservation) can tag their static split into
-/// the replica index.
-pub fn build_policy(kind: PolicyKind, st: &mut SimState) -> Box<dyn Policy> {
+/// Instantiate the policy for a [`PolicyKind`]. Takes the ops capability
+/// so partition-based policies (Reservation) can tag their static split
+/// into the replica index at construction.
+pub fn build_policy(kind: PolicyKind, ops: &mut ClusterOps<'_>) -> Box<dyn Policy> {
     match kind {
         PolicyKind::Fifo => Box::new(Fifo::new()),
-        PolicyKind::Reservation => Box::new(Reservation::new(st)),
+        PolicyKind::Reservation => Box::new(Reservation::new(ops)),
         PolicyKind::Priority => Box::new(Priority::new()),
+        PolicyKind::Sjf => Box::new(Sjf::new()),
         PolicyKind::PecSched(flags) => Box::new(PecSched::new(flags)),
     }
-}
-
-/// Start a long request on the cheapest eligible replica set.
-/// Returns displaced shorts (which the caller must re-place) or `None`
-/// when fewer than the needed replicas are eligible. `cap` bounds the SP
-/// degree (Reservation can only hand out its pool; others pass MAX and the
-/// degree is memory/speed-driven). `avail` is the caller's index-derived
-/// count of eligible replicas: when it cannot cover the SP degree the
-/// attempt bails out in O(1) instead of building the O(R) eligibility
-/// mask — the common case while a long waits at the head of a queue.
-pub(crate) fn try_start_long(
-    st: &mut SimState,
-    req: ReqId,
-    cap: usize,
-    avail: usize,
-    eligible: &dyn Fn(&crate::sim::ReplicaRt) -> bool,
-) -> Option<Vec<ReqId>> {
-    let len = st.reqs[req].req.input_len;
-    let n = st.replicas_needed(len).min(cap).max(1);
-    debug_assert_eq!(
-        avail,
-        st.replicas.iter().filter(|r| !r.down && eligible(r)).count(),
-        "index availability count diverged from the eligibility mask"
-    );
-    if avail < n {
-        return None;
-    }
-    let mask: Vec<bool> = st.replicas.iter().map(|r| !r.down && eligible(r)).collect();
-    let loads: Vec<u64> = st
-        .replicas
-        .iter()
-        .map(|r| r.prefill_load_tokens(&st.reqs))
-        .collect();
-    let group = st.topo.choose_group(n, &mask, &loads)?;
-    let plan = st.plan_for_long(len, n);
-    Some(st.start_long_group(req, group, plan))
 }

@@ -7,7 +7,7 @@
 //!      token budget (§5.2);
 //!   3. a *bounded wait* on the lightest ordinary queue when that wait is
 //!      below `preempt_wait_threshold` (preemption is reserved for
-//!      genuine blocking — DESIGN.md §9);
+//!      genuine blocking — DESIGN.md §3);
 //!   4. preemption of a long request's prefill (§5.1) — the replica in a
 //!      long group with the lightest prefill load, which balances the
 //!      preempting batch across the group's GPUs, gated by the group's
@@ -27,21 +27,21 @@
 //! /CoL turns rung 2 into decode preemption; /FSP plans long prefills with
 //! ring-only SP.
 //!
-//! Wake path under decode epoch fast-forward: the ladder re-runs on the
-//! same boundaries as per-round stepping — decode-pool token loads are
-//! caught up lazily before the migration-target pick, and a /CoL decode
-//! preemption folds the paused long's completed rounds before cancelling
-//! its epoch — so every rung's choice is identical to the per-round
-//! oracle's.
+//! Every rung is a [`ClusterView`] query (O(log R) via the replica index,
+//! scan-checked in debug builds) followed by a [`ClusterOps`] verb; the
+//! verbs perform the reindex / epoch catch-up that keeps each rung's
+//! choice identical to the per-round oracle's.
 
 use std::collections::VecDeque;
 
-use super::{try_start_long, Policy};
+use super::Policy;
 use crate::cluster::ReplicaId;
 use crate::config::AblationFlags;
-use crate::sim::{LongPhase, SimState};
+use crate::sim::{ClusterOps, ClusterView, LongEligibility, LongOccupancy, LongStartOutcome};
 use crate::trace::ReqId;
 
+/// The paper's scheduler: the §5 placement ladder over preemption,
+/// colocation, disaggregation and fast SP.
 #[derive(Debug)]
 pub struct PecSched {
     flags: AblationFlags,
@@ -50,6 +50,7 @@ pub struct PecSched {
 }
 
 impl PecSched {
+    /// A PecSched instance with the given §6.4 mechanism switches.
     pub fn new(flags: AblationFlags) -> Self {
         Self {
             flags,
@@ -68,51 +69,49 @@ impl PecSched {
     /// * a *suspended* prefill's members all accept shorts, spreading the
     ///   preempting batch evenly across the group's GPUs (§5.2), and the
     ///   long resumes as soon as that batch drains.
-    fn preemptable(&self, st: &SimState, rid: ReplicaId) -> bool {
-        let Some(gid) = st.replicas[rid].long_group else {
-            return false;
-        };
-        let Some(g) = st.groups[gid].as_ref() else { return false };
-        match g.phase {
-            LongPhase::Prefill { running: true, .. } => {
-                st.now - g.last_resume >= st.params.preempt_min_quantum
-            }
-            LongPhase::Prefill { running: false, .. } => true,
+    fn preemptable(&self, view: &ClusterView<'_>, rid: ReplicaId) -> bool {
+        let quantum = view.params().preempt_min_quantum;
+        match view.long_occupancy(rid) {
+            LongOccupancy::PrefillRunning { since_resume } => since_resume >= quantum,
+            LongOccupancy::PrefillPaused => true,
             // Colocation protects long decode; without it (/CoL) short
             // prefill preempts the decode too.
-            LongPhase::Decode { paused: false } => {
-                !self.flags.colocation
-                    && st.now - g.last_resume >= st.params.preempt_min_quantum
+            LongOccupancy::Decoding { since_resume } => {
+                !self.flags.colocation && since_resume >= quantum
             }
-            LongPhase::Decode { paused: true } => !self.flags.colocation,
-            LongPhase::Waiting => false,
+            LongOccupancy::DecodePaused => !self.flags.colocation,
+            LongOccupancy::Waiting | LongOccupancy::Free => false,
         }
     }
 
-    /// The placement ladder, every rung an O(log R) index lookup (each
-    /// cross-checked against the naive scan it replaced in debug builds).
-    /// Returns false only when no replica can even hold the request in a
-    /// queue (all ordinary replicas long-occupied and preemption is off in
-    /// a phase that forbids queueing... which reduces to: park it in the
-    /// global pending queue).
-    fn try_place_short(&self, st: &mut SimState, req: ReqId) -> bool {
-        let len = st.reqs[req].req.input_len;
+    /// The placement ladder, every rung a [`ClusterView`] pick followed by
+    /// a [`ClusterOps`] verb. Returns false only when no replica can even
+    /// hold the request in a queue (all ordinary replicas long-occupied
+    /// and preemption is off in a phase that forbids queueing... which
+    /// reduces to: park it in the global pending queue).
+    fn try_place_short(&self, ops: &mut ClusterOps<'_>, req: ReqId) -> bool {
+        let len = ops.view().request(req).req.input_len;
 
         // ② idle replica, no long occupancy.
-        if let Some(rid) = st.pick_idle_ordinary() {
-            st.enqueue_short_prefill(rid, req);
-            return true;
+        if let Some(rid) = ops.view().pick_idle_ordinary() {
+            let placed = ops.start_prefill(rid, req);
+            debug_assert!(placed.placed(), "idle pick was placeable");
+            if placed.settled() {
+                return true;
+            }
         }
 
         // ③④ colocate with a long request's decode, within budget: the
         // lightest-budget candidate; the budget cap is uniform, so if it
         // does not fit nothing does.
         if self.flags.colocation {
-            let budget = st.params.colocate_max_tokens as u64;
-            if let Some(rid) = st.pick_coloc_candidate(len, budget) {
-                st.charge_colocation(rid, req);
-                st.enqueue_short_prefill(rid, req);
-                return true;
+            let budget = ops.view().params().colocate_max_tokens as u64;
+            if let Some(rid) = ops.view().pick_coloc_candidate(len, budget) {
+                let placed = ops.colocate(rid, req);
+                debug_assert!(placed.placed(), "coloc pick was placeable");
+                if placed.settled() {
+                    return true;
+                }
             }
         }
 
@@ -120,12 +119,18 @@ impl PecSched {
         // bounded wait, queue there instead of suspending a long request —
         // preemption is for genuine blocking (§5: reduce the duration and
         // frequency of preemptions).
-        let per_token = st.cm.short_prefill_time(1100) / 1100.0;
-        if let Some(rid) = st.pick_least_loaded_ordinary() {
-            let wait =
-                st.replicas[rid].prefill_load_tokens(&st.reqs) as f64 * per_token;
-            if wait <= st.params.preempt_wait_threshold {
-                st.enqueue_short_prefill(rid, req);
+        let bounded = {
+            let view = ops.view();
+            let per_token = view.cost_model().short_prefill_time(1100) / 1100.0;
+            view.pick_least_loaded_ordinary().filter(|&rid| {
+                view.prefill_load_tokens(rid) as f64 * per_token
+                    <= view.params().preempt_wait_threshold
+            })
+        };
+        if let Some(rid) = bounded {
+            let placed = ops.start_prefill(rid, req);
+            debug_assert!(placed.placed(), "bounded-wait pick was placeable");
+            if placed.settled() {
                 return true;
             }
         }
@@ -135,73 +140,84 @@ impl PecSched {
         // index walks members in load order; the time-gated quantum check
         // stays a query-time predicate.
         if self.flags.preemption {
-            if let Some(rid) =
-                st.pick_preemptable(|st, rid| self.preemptable(st, rid))
-            {
-                st.enqueue_short_prefill(rid, req);
-                return true;
+            let target = ops
+                .view()
+                .pick_preemptable(|view, rid| self.preemptable(view, rid));
+            if let Some(rid) = target {
+                let placed = ops.preempt_long(rid, req);
+                debug_assert!(placed.placed(), "preemption pick was placeable");
+                if placed.settled() {
+                    return true;
+                }
             }
         }
 
         // Fallback: lightest ordinary local queue (busy but long-free).
-        if let Some(rid) = st.pick_least_loaded_ordinary() {
-            st.enqueue_short_prefill(rid, req);
-            return true;
+        if let Some(rid) = ops.view().pick_least_loaded_ordinary() {
+            let placed = ops.start_prefill(rid, req);
+            debug_assert!(placed.placed(), "fallback pick was placeable");
+            if placed.settled() {
+                return true;
+            }
         }
 
         // /PE world with every replica long-occupied: queue on the
         // lightest long-occupied replica; the prefill waits for the long
         // to finish (no preemption).
         if !self.flags.preemption {
-            if let Some(rid) = st.pick_any_ordinary_least_loaded() {
-                st.enqueue_short_prefill(rid, req);
-                return true;
+            if let Some(rid) = ops.view().pick_any_ordinary_least_loaded() {
+                let placed = ops.start_prefill(rid, req);
+                debug_assert!(placed.placed(), "/PE fallback pick was placeable");
+                if placed.settled() {
+                    return true;
+                }
             }
         }
 
         false
     }
 
-    fn dispatch_longs(&mut self, st: &mut SimState) {
+    fn dispatch_longs(&mut self, ops: &mut ClusterOps<'_>) {
         while let Some(&head) = self.pending_longs.front() {
-            let avail = st.index.long_free_count();
-            let placed = try_start_long(st, head, usize::MAX, avail, &|r| {
-                !r.dedicated_decode && r.long_group.is_none()
-            });
-            match placed {
-                Some(displaced) => {
+            match ops.start_long_group(head, LongEligibility::LongFree, usize::MAX) {
+                LongStartOutcome::Started { displaced } => {
                     self.pending_longs.pop_front();
                     for d in displaced {
-                        if !self.try_place_short(st, d) {
+                        if !self.try_place_short(ops, d) {
                             self.pending_shorts.push_back(d);
                         }
                     }
                 }
-                None => break,
+                LongStartOutcome::NoCapacity => break,
+                LongStartOutcome::Rejected(v) => {
+                    // Stale entry (already in service); drop, don't wedge.
+                    debug_assert!(false, "long head rejected: {v:?}");
+                    self.pending_longs.pop_front();
+                }
             }
         }
     }
 }
 
 impl Policy for PecSched {
-    fn on_arrival(&mut self, st: &mut SimState, req: ReqId) {
-        if st.reqs[req].req.is_long {
+    fn on_arrival(&mut self, ops: &mut ClusterOps<'_>, req: ReqId) {
+        if ops.view().request(req).req.is_long {
             self.pending_longs.push_back(req);
-            self.dispatch_longs(st);
-        } else if !self.try_place_short(st, req) {
+            self.dispatch_longs(ops);
+        } else if !self.try_place_short(ops, req) {
             self.pending_shorts.push_back(req);
         }
     }
 
-    fn dispatch(&mut self, st: &mut SimState) {
+    fn dispatch(&mut self, ops: &mut ClusterOps<'_>) {
         for _ in 0..self.pending_shorts.len() {
             let Some(req) = self.pending_shorts.pop_front() else { break };
-            if !self.try_place_short(st, req) {
+            if !self.try_place_short(ops, req) {
                 self.pending_shorts.push_back(req);
                 break;
             }
         }
-        self.dispatch_longs(st);
+        self.dispatch_longs(ops);
     }
 
     fn has_pending(&self) -> bool {

@@ -5,10 +5,11 @@
 
 use std::collections::VecDeque;
 
-use super::{try_start_long, Policy};
-use crate::sim::SimState;
+use super::Policy;
+use crate::sim::{ClusterOps, LongEligibility, LongStartOutcome};
 use crate::trace::ReqId;
 
+/// Shorts-first two-queue policy (the Past-Future-style baseline).
 #[derive(Debug, Default)]
 pub struct Priority {
     shorts: VecDeque<ReqId>,
@@ -16,28 +17,33 @@ pub struct Priority {
 }
 
 impl Priority {
+    /// Empty queues.
     pub fn new() -> Self {
         Self::default()
     }
 }
 
 impl Policy for Priority {
-    fn on_arrival(&mut self, st: &mut SimState, req: ReqId) {
-        if st.reqs[req].req.is_long {
+    fn on_arrival(&mut self, ops: &mut ClusterOps<'_>, req: ReqId) {
+        if ops.view().request(req).req.is_long {
             self.longs.push_back(req);
         } else {
             self.shorts.push_back(req);
         }
-        self.dispatch(st);
+        self.dispatch(ops);
     }
 
-    fn dispatch(&mut self, st: &mut SimState) {
+    fn dispatch(&mut self, ops: &mut ClusterOps<'_>) {
         // High priority: shorts go straight to the lightest local queue
         // (O(log R) via the replica index).
         while let Some(&head) = self.shorts.front() {
-            match st.pick_least_loaded_ordinary() {
+            match ops.view().pick_least_loaded_ordinary() {
                 Some(rid) => {
-                    st.enqueue_short_prefill(rid, head);
+                    let placed = ops.start_prefill(rid, head);
+                    debug_assert!(placed.placed(), "indexed pick was placeable");
+                    if !placed.settled() {
+                        break; // still needs placing; retry next wake
+                    }
                     self.shorts.pop_front();
                 }
                 None => break,
@@ -50,16 +56,17 @@ impl Policy for Priority {
         // so this probe fires far less often under epoch fast-forward
         // without missing a start opportunity.
         while let Some(&head) = self.longs.front() {
-            let avail = st.index.idle_count();
-            let placed = try_start_long(st, head, usize::MAX, avail, &|r| {
-                r.is_idle() && !r.dedicated_decode
-            });
-            match placed {
-                Some(displaced) => {
+            match ops.start_long_group(head, LongEligibility::Idle, usize::MAX) {
+                LongStartOutcome::Started { displaced } => {
                     debug_assert!(displaced.is_empty());
                     self.longs.pop_front();
                 }
-                None => break,
+                LongStartOutcome::NoCapacity => break,
+                LongStartOutcome::Rejected(v) => {
+                    // Stale entry (already in service); drop, don't wedge.
+                    debug_assert!(false, "long head rejected: {v:?}");
+                    self.longs.pop_front();
+                }
             }
         }
     }

@@ -9,116 +9,111 @@
 
 use std::collections::VecDeque;
 
-use super::{try_start_long, Policy};
+use super::Policy;
 use crate::cluster::ReplicaId;
-use crate::sim::SimState;
+use crate::sim::{ClusterOps, LongEligibility, LongStartOutcome};
 use crate::trace::ReqId;
 
 /// §6.2: the reservation is provisioned for the longest rewritten input.
 pub const RESERVE_FOR_TOKENS: u32 = 500_000;
 
+/// The index partition tag of the reserved long pool (shorts stay in the
+/// default partition 0).
+const LONG_PARTITION: u8 = 1;
+
+/// Static short/long cluster split (the Llumnix-style baseline).
 #[derive(Debug)]
 pub struct Reservation {
     long_pool: Vec<ReplicaId>,
-    /// O(1) pool membership (replaces `Vec::contains` in the dispatch
-    /// closures).
-    in_pool: Vec<bool>,
     shorts: VecDeque<ReqId>,
     longs: VecDeque<ReqId>,
 }
 
 impl Reservation {
-    pub fn new(st: &mut SimState) -> Self {
-        let n_total = st.topo.n_replicas();
+    /// Size the reserved pool for the largest rewritten long request and
+    /// tag it into the replica index as partition 1, so each partition
+    /// answers its own least-loaded / idle queries in O(log R).
+    pub fn new(ops: &mut ClusterOps<'_>) -> Self {
+        let n_total = ops.view().n_replicas();
         // Llumnix-style provisioning: enough capacity that a 500K-token
         // request never waits on another long request already in flight —
         // two full 500K replica-sets — capped at half the cluster so the
         // short partition survives (§6.2, Table 1's idle-rate regime).
-        let need = (2 * st.replicas_needed(RESERVE_FOR_TOKENS))
+        let need = (2 * ops.view().replicas_needed(RESERVE_FOR_TOKENS))
             .min(n_total / 2)
             .max(1);
         // Reserve the first `need` replicas (placement is immaterial in a
         // static partition; these stay together node-wise by construction).
         let long_pool: Vec<ReplicaId> = (0..need).collect();
-        // Tag the split into the replica index so each partition answers
-        // its own least-loaded / idle queries in O(log R).
-        st.index.set_partition(&long_pool);
-        let in_pool: Vec<bool> = (0..n_total).map(|id| id < need).collect();
+        ops.set_partition(&long_pool);
         Self {
             long_pool,
-            in_pool,
             shorts: VecDeque::new(),
             longs: VecDeque::new(),
         }
     }
 
+    /// Which replicas sit in the reserved pool.
     pub fn long_pool(&self) -> &[ReplicaId] {
         &self.long_pool
     }
 
-    fn in_long_pool(&self, rid: ReplicaId) -> bool {
-        self.in_pool[rid]
+    /// Exposed for tests/benches: size of the reserved pool.
+    pub fn pool_size(&self) -> usize {
+        self.long_pool.len()
     }
 }
 
 impl Policy for Reservation {
-    fn on_arrival(&mut self, st: &mut SimState, req: ReqId) {
-        if st.reqs[req].req.is_long {
+    fn on_arrival(&mut self, ops: &mut ClusterOps<'_>, req: ReqId) {
+        if ops.view().request(req).req.is_long {
             self.longs.push_back(req);
         } else {
             self.shorts.push_back(req);
         }
-        self.dispatch(st);
+        self.dispatch(ops);
     }
 
-    fn dispatch(&mut self, st: &mut SimState) {
+    fn dispatch(&mut self, ops: &mut ClusterOps<'_>) {
         // Shorts: immediate dispatch within the short partition (index
         // partition 0 — the pool was tagged as partition 1 at setup).
         while let Some(&head) = self.shorts.front() {
-            match st.pick_least_loaded_ordinary_in(0) {
+            match ops.view().pick_least_loaded_ordinary_in(0) {
                 Some(rid) => {
-                    st.enqueue_short_prefill(rid, head);
+                    let placed = ops.start_prefill(rid, head);
+                    debug_assert!(placed.placed(), "indexed pick was placeable");
+                    if !placed.settled() {
+                        break; // still needs placing; retry next wake
+                    }
                     self.shorts.pop_front();
                 }
                 None => break,
             }
         }
-        // Longs: FIFO within the reserved partition. The pool is borrowed
-        // (no per-dispatch clone) and membership is an O(1) lookup; the
-        // partition's idle count bails the attempt out in O(1).
+        // Longs: FIFO within the reserved partition; the SP degree is
+        // capped at the pool size and the partition's idle count bails
+        // the attempt out in O(1).
         while let Some(&head) = self.longs.front() {
-            let in_pool = &self.in_pool;
-            let avail = st.index.idle_count_in(1);
-            let placed = try_start_long(
-                st,
+            match ops.start_long_group(
                 head,
+                LongEligibility::IdleInPartition(LONG_PARTITION),
                 self.long_pool.len(),
-                avail,
-                &|r| r.is_idle() && in_pool[r.id],
-            );
-            match placed {
-                Some(displaced) => {
+            ) {
+                LongStartOutcome::Started { displaced } => {
                     debug_assert!(displaced.is_empty());
                     self.longs.pop_front();
                 }
-                None => break,
+                LongStartOutcome::NoCapacity => break,
+                LongStartOutcome::Rejected(v) => {
+                    // Stale entry (already in service); drop, don't wedge.
+                    debug_assert!(false, "long head rejected: {v:?}");
+                    self.longs.pop_front();
+                }
             }
         }
     }
 
     fn has_pending(&self) -> bool {
         !self.shorts.is_empty() || !self.longs.is_empty()
-    }
-}
-
-impl Reservation {
-    /// Exposed for tests/benches: which replicas sit in the reserved pool.
-    pub fn pool_size(&self) -> usize {
-        self.long_pool.len()
-    }
-
-    #[allow(dead_code)]
-    fn debug_in_pool(&self, rid: ReplicaId) -> bool {
-        self.in_long_pool(rid)
     }
 }

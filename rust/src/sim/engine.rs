@@ -9,19 +9,38 @@ use crate::sched::{build_policy, Policy};
 use crate::trace::Trace;
 
 use super::events::EventKind;
+use super::ops::ClusterOps;
 use super::state::{SimConfig, SimState};
 
 /// One simulation run = one (trace, model, policy) triple.
 pub struct Simulation {
+    /// The simulated cluster (public for post-run inspection: per-request
+    /// timestamps, replica states, counters — all via read accessors).
     pub state: SimState,
     policy: Box<dyn Policy>,
     policy_kind: PolicyKind,
 }
 
 impl Simulation {
+    /// Build the initial state for `trace` and instantiate `kind`'s
+    /// policy against the [`ClusterOps`] boundary.
     pub fn new(cfg: SimConfig, trace: &Trace, kind: PolicyKind) -> Self {
         let mut state = SimState::new(&cfg, &trace.requests);
-        let policy = build_policy(kind, &mut state);
+        let policy = build_policy(kind, &mut ClusterOps::new(&mut state));
+        Self {
+            state,
+            policy,
+            policy_kind: kind,
+        }
+    }
+
+    /// Assemble a simulation from an already-built state and policy (the
+    /// oracle path; see [`super::oracle_simulation`]).
+    pub(crate) fn from_parts(
+        state: SimState,
+        policy: Box<dyn Policy>,
+        kind: PolicyKind,
+    ) -> Self {
         Self {
             state,
             policy,
@@ -55,7 +74,7 @@ impl Simulation {
             match ev.kind {
                 EventKind::Arrival(req) => {
                     let t0 = Instant::now();
-                    self.policy.on_arrival(st, req);
+                    self.policy.on_arrival(&mut ClusterOps::new(st), req);
                     st.reqs[req].sched_ns += t0.elapsed().as_nanos() as u64;
                     // Starts triggered by this arrival are already billed
                     // to it; drop them from the attribution log.
@@ -72,7 +91,7 @@ impl Simulation {
                         // flight: re-place the request like any other
                         // failure displacement.
                         let t0 = Instant::now();
-                        self.policy.on_arrival(st, req);
+                        self.policy.on_arrival(&mut ClusterOps::new(st), req);
                         st.reqs[req].sched_ns += t0.elapsed().as_nanos() as u64;
                         st.recent_prefill_starts.clear();
                     }
@@ -131,7 +150,7 @@ impl Simulation {
         }
         st.recent_prefill_starts.clear();
         let t0 = Instant::now();
-        policy.dispatch(st);
+        policy.dispatch(&mut ClusterOps::new(st));
         let ns = t0.elapsed().as_nanos() as u64;
         if !st.recent_prefill_starts.is_empty() {
             // Integer split that conserves every nanosecond: the first

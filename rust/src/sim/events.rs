@@ -23,38 +23,76 @@ use crate::trace::ReqId;
 /// Identifier of a long-request SP group.
 pub type GroupId = usize;
 
+/// Everything that can happen in the simulated cluster.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum EventKind {
     /// A request enters the cluster's global queue.
     Arrival(ReqId),
     /// A short-request prefill finished on `rid`.
     ShortPrefillDone {
+        /// Replica the prefill ran on.
         rid: ReplicaId,
+        /// The request whose prefill finished.
         req: ReqId,
+        /// Prefill generation tag (stale events are dropped).
         gen: u64,
     },
     /// A short request's KV handoff to its decode replica completed.
-    MigrationDone { req: ReqId, rid: ReplicaId },
+    MigrationDone {
+        /// The migrating request.
+        req: ReqId,
+        /// Destination decode replica.
+        rid: ReplicaId,
+    },
     /// One batched decode round of a replica completed (per-round oracle
     /// mode).
-    DecodeRound { rid: ReplicaId, gen: u64 },
+    DecodeRound {
+        /// Replica whose batch advanced.
+        rid: ReplicaId,
+        /// Decode generation tag (stale events are dropped).
+        gen: u64,
+    },
     /// A long-request SP prefill ran to completion (if not preempted).
-    LongPrefillDone { gid: GroupId, gen: u64 },
+    LongPrefillDone {
+        /// The long group whose prefill finished.
+        gid: GroupId,
+        /// Group generation tag (stale events are dropped).
+        gen: u64,
+    },
     /// One decode round of a long request completed (per-round oracle
     /// mode).
-    LongDecodeRound { gid: GroupId, gen: u64 },
+    LongDecodeRound {
+        /// The long group whose decode advanced.
+        gid: GroupId,
+        /// Group generation tag (stale events are dropped).
+        gen: u64,
+    },
     /// A replica's decode batch reached its next semantic boundary — the
     /// final round of the scheduled epoch (a completion, or the boundary a
     /// truncation re-anchored to).
-    DecodeEpoch { rid: ReplicaId, gen: u64 },
+    DecodeEpoch {
+        /// Replica whose epoch ended.
+        rid: ReplicaId,
+        /// Decode generation tag (stale events are dropped).
+        gen: u64,
+    },
     /// A long request's decode reached the end of its scheduled epoch.
-    LongDecodeEpoch { gid: GroupId, gen: u64 },
+    LongDecodeEpoch {
+        /// The long group whose epoch ended.
+        gid: GroupId,
+        /// Group generation tag (stale events are dropped).
+        gen: u64,
+    },
 }
 
+/// A timestamped occurrence in the queue.
 #[derive(Debug, Clone, Copy)]
 pub struct Event {
+    /// Simulated time the event fires, seconds.
     pub time: f64,
+    /// Push sequence number — the FIFO tie-break for equal timestamps.
     pub seq: u64,
+    /// What happened.
     pub kind: EventKind,
 }
 
@@ -88,10 +126,12 @@ pub struct EventQueue {
 }
 
 impl EventQueue {
+    /// An empty queue.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Schedule `kind` at `time` (FIFO among equal timestamps).
     pub fn push(&mut self, time: f64, kind: EventKind) {
         debug_assert!(time.is_finite(), "non-finite event time");
         let seq = self.next_seq;
@@ -99,14 +139,17 @@ impl EventQueue {
         self.heap.push(Event { time, seq, kind });
     }
 
+    /// Pop the earliest pending event.
     pub fn pop(&mut self) -> Option<Event> {
         self.heap.pop()
     }
 
+    /// Number of pending events.
     pub fn len(&self) -> usize {
         self.heap.len()
     }
 
+    /// No pending events?
     pub fn is_empty(&self) -> bool {
         self.heap.is_empty()
     }

@@ -112,6 +112,7 @@ pub struct SchedIndex {
 }
 
 impl SchedIndex {
+    /// An empty index sized for `n_replicas`, all in partition 0.
     pub fn new(n_replicas: usize) -> Self {
         Self {
             entries: vec![IndexEntry::default(); n_replicas],
@@ -147,6 +148,7 @@ impl SchedIndex {
         }
     }
 
+    /// The static partition tag of `rid` (0 unless a policy re-tagged).
     pub fn partition_of(&self, rid: ReplicaId) -> u8 {
         self.partition[rid]
     }
@@ -207,10 +209,12 @@ impl SchedIndex {
         self.idle_ordinary[part as usize].first().copied()
     }
 
+    /// Idle ordinary replicas across all partitions — O(1).
     pub fn idle_count(&self) -> usize {
         self.idle_ordinary.iter().map(|s| s.len()).sum()
     }
 
+    /// Idle ordinary replicas inside one partition — O(1).
     pub fn idle_count_in(&self, part: u8) -> usize {
         self.idle_ordinary[part as usize].len()
     }
@@ -225,10 +229,12 @@ impl SchedIndex {
             .map(|(_, rid)| rid)
     }
 
+    /// Least-loaded ordinary (long-free) replica in one partition.
     pub fn first_long_free_in(&self, part: u8) -> Option<ReplicaId> {
         self.long_free[part as usize].first().map(|&(_, rid)| rid)
     }
 
+    /// Ordinary (long-free, live) replicas across all partitions — O(1).
     pub fn long_free_count(&self) -> usize {
         self.long_free.iter().map(|s| s.len()).sum()
     }

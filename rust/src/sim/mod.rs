@@ -4,16 +4,34 @@
 //! (queue → prefill → decode), preemption with §5.1's layer-granularity
 //! checkpointing cost, §5.2's disaggregation/colocation mechanics, and
 //! §5.3's SP plans, all over the [`crate::costmodel`] roofline.
+//!
+//! Policies in [`crate::sched`] never touch this module's internals:
+//! they act through the typed capability pair [`ClusterView`] (read-only
+//! queries over state + the incremental replica index) and [`ClusterOps`]
+//! (mutating verbs with outcome enums, each of which restores every
+//! internal invariant — index lockstep, epoch-cursor catch-up, token
+//! caches — before returning). The pre-redesign direct-field policies are
+//! retained in [`oracle_simulation`]'s module as the golden-equivalence
+//! oracle; DESIGN.md §3 documents the contract for writing a new policy.
 
 mod engine;
 mod events;
 mod index;
+mod ops;
+mod oracle;
 mod state;
+mod view;
 
 pub use engine::{run_sim, Simulation};
 pub use events::{Event, EventKind, EventQueue, GroupId};
 pub use index::{IndexEntry, SchedIndex};
+pub use ops::{
+    AdmitOutcome, ClusterOps, LongEligibility, LongStartOutcome, MigrateOutcome,
+    PreemptOutcome, PrefillOutcome, RequeueOutcome, Veto,
+};
+pub use oracle::oracle_simulation;
 pub use state::{
     DecodeEpochRt, LongGroup, LongPhase, ReplicaRt, ReqPhase, ReqRt, SimConfig,
     SimState,
 };
+pub use view::{ClusterView, LongOccupancy};

@@ -1,0 +1,419 @@
+//! The mutating half of the policy-facing API boundary: typed verbs with
+//! outcome enums.
+//!
+//! A [`ClusterOps`] wraps a mutable borrow of [`SimState`] and exposes
+//! the complete set of actions a scheduling policy may take. Every verb
+//! validates its preconditions up front (returning a typed rejection
+//! instead of mutating) and internally performs the bookkeeping that used
+//! to be upheld only by convention — replica-index reindexing on every
+//! key change, lazy decode-epoch catch-up before load-ordered picks,
+//! colocation-budget accounting — so the PR-2/PR-3 invariants are
+//! unbypassable from policy code. Policies never see `SimState` fields;
+//! read queries live on the sibling [`ClusterView`].
+
+use crate::cluster::ReplicaId;
+use crate::trace::ReqId;
+
+use super::state::{LongPhase, ReqPhase, SimState};
+use super::view::ClusterView;
+
+/// Why a verb refused to act. Returned inside each verb's outcome enum;
+/// a rejection is a no-op — the state was not touched.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Veto {
+    /// The target replica is failed/unavailable.
+    ReplicaDown,
+    /// The target replica belongs to the dedicated short-decode pool,
+    /// which never takes policy-placed prefill work.
+    DedicatedDecode,
+    /// The request's class does not fit the verb (short verb on a long
+    /// request or vice versa).
+    WrongClass,
+    /// The request is not in a dispatchable phase (`Queued`) — it is
+    /// already running, migrating, decoding, or done.
+    NotDispatchable,
+    /// The replica hosts no live long group ([`ClusterOps::preempt_long`]
+    /// needs one).
+    NoLongOccupant,
+    /// The replica's long occupant is not in its decode phase, so there
+    /// is nothing to colocate with.
+    HostNotDecoding,
+    /// The colocation charge would exceed the per-replica token budget.
+    OverBudget,
+    /// The request is not waiting where the verb expects it (no queued
+    /// prefill to withdraw / no decode-waiting entry to migrate).
+    NotWaiting,
+}
+
+/// Outcome of [`ClusterOps::start_prefill`] and
+/// [`ClusterOps::colocate`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PrefillOutcome {
+    /// The prefill began executing immediately.
+    Started,
+    /// The request joined the replica's local prefill queue and will run
+    /// when the replica is admissible.
+    Queued,
+    /// Preconditions failed; nothing changed.
+    Rejected(Veto),
+}
+
+impl PrefillOutcome {
+    /// Did the request land on the replica (running or queued)?
+    pub fn placed(&self) -> bool {
+        !matches!(self, PrefillOutcome::Rejected(_))
+    }
+
+    /// Is the policy's queue entry for this request consumed? True when
+    /// the request landed — and also for `Rejected(NotDispatchable)`,
+    /// which means the request is already in service elsewhere and the
+    /// queue entry was stale. False only for vetoes where the request
+    /// still needs placing (the policy should keep it queued and retry).
+    pub fn settled(&self) -> bool {
+        !matches!(
+            self,
+            PrefillOutcome::Rejected(v) if *v != Veto::NotDispatchable
+        )
+    }
+}
+
+/// Outcome of [`ClusterOps::start_long_group`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum LongStartOutcome {
+    /// The group was formed and the §5 lifecycle began. `displaced` are
+    /// the queued shorts evicted from member queues — the policy must
+    /// re-place them.
+    Started {
+        /// Shorts displaced from the members' local prefill queues.
+        displaced: Vec<ReqId>,
+    },
+    /// Not enough eligible replicas right now; nothing changed.
+    NoCapacity,
+    /// Preconditions failed; nothing changed.
+    Rejected(Veto),
+}
+
+/// Outcome of [`ClusterOps::preempt_long`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PreemptOutcome {
+    /// The long occupant's work was paused (§5.1) and the short's prefill
+    /// took (or queued for) the GPUs.
+    Preempted,
+    /// The short was queued on the member without pausing anything new —
+    /// the occupant was already paused, still waiting, or the /PE world
+    /// where shorts wait behind longs.
+    QueuedBehind,
+    /// Preconditions failed; nothing changed.
+    Rejected(Veto),
+}
+
+impl PreemptOutcome {
+    /// Did the request land on the replica (running or queued)?
+    pub fn placed(&self) -> bool {
+        !matches!(self, PreemptOutcome::Rejected(_))
+    }
+
+    /// Is the policy's queue entry for this request consumed? See
+    /// [`PrefillOutcome::settled`].
+    pub fn settled(&self) -> bool {
+        !matches!(
+            self,
+            PreemptOutcome::Rejected(v) if *v != Veto::NotDispatchable
+        )
+    }
+}
+
+/// Outcome of [`ClusterOps::admit_decode`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmitOutcome {
+    /// `n` waiting requests joined the decode batch.
+    Admitted(usize),
+    /// Nothing was waiting, or nothing fit under the KV cap.
+    NothingAdmitted,
+    /// Preconditions failed; nothing changed.
+    Rejected(Veto),
+}
+
+/// Outcome of [`ClusterOps::migrate`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MigrateOutcome {
+    /// The KV handoff is in flight; the request joins the target's decode
+    /// queue when the transfer completes.
+    InFlight,
+    /// Preconditions failed; nothing changed.
+    Rejected(Veto),
+}
+
+/// Outcome of [`ClusterOps::requeue`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RequeueOutcome {
+    /// The request left its replica's local queue and is back in the
+    /// policy's custody.
+    Requeued,
+    /// Preconditions failed; nothing changed.
+    Rejected(Veto),
+}
+
+/// Which replicas a long group may be formed from — the typed
+/// counterpart of the eligibility closures policies used to pass over
+/// raw replica state. Each variant pairs an eligibility predicate with
+/// the O(1) index count that lets an infeasible attempt bail out before
+/// building the O(R) mask.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LongEligibility {
+    /// Any live ordinary replica without a long occupant (PecSched: its
+    /// shorts are displaced and re-placed through the ladder).
+    LongFree,
+    /// Only completely idle ordinary replicas (FIFO / Priority / SJF).
+    Idle,
+    /// Only completely idle replicas inside one static partition
+    /// (Reservation's pool; see [`ClusterOps::set_partition`]).
+    IdleInPartition(u8),
+}
+
+/// Mutating capability over the cluster state: the verbs.
+///
+/// Construct with [`ClusterOps::new`] around a `&mut SimState` (the
+/// engine does this at every policy boundary). Verbs validate first and
+/// reject without side effects; successful verbs leave every internal
+/// invariant (index lockstep, epoch-cursor catch-up, token caches)
+/// restored before returning.
+pub struct ClusterOps<'a> {
+    pub(super) st: &'a mut SimState,
+}
+
+impl<'a> ClusterOps<'a> {
+    /// Wrap a state borrow in the verb capability.
+    pub fn new(st: &'a mut SimState) -> Self {
+        Self { st }
+    }
+
+    /// The read-only view over the same state (cheap, copyable).
+    pub fn view(&self) -> ClusterView<'_> {
+        ClusterView { st: &*self.st }
+    }
+
+    /// Escape hatch for the in-tree oracle policies (golden-equivalence
+    /// testing only); deliberately not visible outside `sim`.
+    pub(super) fn raw(&mut self) -> &mut SimState {
+        self.st
+    }
+
+    fn short_place_veto(&self, rid: ReplicaId, req: ReqId) -> Option<Veto> {
+        if self.st.reqs[req].req.is_long {
+            return Some(Veto::WrongClass);
+        }
+        // O(1) checks only — this guards every placement on the hot path.
+        // (A request parked in some local queue is also `Queued`; placing
+        // it twice is a policy bug the debug-build index oracle catches.)
+        if self.st.reqs[req].phase != ReqPhase::Queued {
+            return Some(Veto::NotDispatchable);
+        }
+        if self.st.replicas[rid].down {
+            return Some(Veto::ReplicaDown);
+        }
+        if self.st.replicas[rid].dedicated_decode {
+            return Some(Veto::DedicatedDecode);
+        }
+        None
+    }
+
+    fn placement_outcome(&self, rid: ReplicaId, req: ReqId) -> PrefillOutcome {
+        if self.st.replicas[rid].running_prefill == Some(req) {
+            PrefillOutcome::Started
+        } else {
+            PrefillOutcome::Queued
+        }
+    }
+
+    /// Place a short request on `rid`'s local prefill queue (ladder rungs
+    /// ②, bounded-wait and fallback; also the /PE wait-behind-a-long
+    /// path). Starts immediately when the replica is admissible; any §5.1
+    /// preemption the start implies is performed by the mechanics.
+    pub fn start_prefill(&mut self, rid: ReplicaId, req: ReqId) -> PrefillOutcome {
+        if let Some(v) = self.short_place_veto(rid, req) {
+            return PrefillOutcome::Rejected(v);
+        }
+        self.st.enqueue_short_prefill(rid, req);
+        self.placement_outcome(rid, req)
+    }
+
+    /// Rung ③④: charge a short against `rid`'s colocation budget (§5.2)
+    /// and queue its prefill beside the long occupant's decode. Rejects
+    /// when the occupant is not decoding or the budget cannot absorb the
+    /// prompt.
+    pub fn colocate(&mut self, rid: ReplicaId, req: ReqId) -> PrefillOutcome {
+        if let Some(v) = self.short_place_veto(rid, req) {
+            return PrefillOutcome::Rejected(v);
+        }
+        let decoding = self.st.replicas[rid]
+            .long_group
+            .and_then(|gid| self.st.groups[gid].as_ref())
+            .map(|g| matches!(g.phase, LongPhase::Decode { .. }))
+            .unwrap_or(false);
+        if !decoding {
+            return PrefillOutcome::Rejected(Veto::HostNotDecoding);
+        }
+        let len = self.st.reqs[req].req.input_len as u64;
+        let budget = self.st.params.colocate_max_tokens as u64;
+        if self.st.replicas[rid].colocated_tokens + len > budget {
+            return PrefillOutcome::Rejected(Veto::OverBudget);
+        }
+        self.st.charge_colocation(rid, req);
+        self.st.enqueue_short_prefill(rid, req);
+        self.placement_outcome(rid, req)
+    }
+
+    /// Rung ⑤: queue a short on a long-group member, preempting the
+    /// occupant's work per the §5.1 duty-cycle mechanics. Pick the member
+    /// with [`ClusterView::pick_preemptable`]; the quantum gating is the
+    /// policy's call, the pause itself is the simulator's.
+    pub fn preempt_long(&mut self, rid: ReplicaId, req: ReqId) -> PreemptOutcome {
+        if let Some(v) = self.short_place_veto(rid, req) {
+            return PreemptOutcome::Rejected(v);
+        }
+        let live_group = self.st.replicas[rid]
+            .long_group
+            .is_some_and(|gid| self.st.groups[gid].is_some());
+        if !live_group {
+            return PreemptOutcome::Rejected(Veto::NoLongOccupant);
+        }
+        let before = self.st.preemptions;
+        self.st.enqueue_short_prefill(rid, req);
+        if self.st.preemptions > before {
+            PreemptOutcome::Preempted
+        } else {
+            PreemptOutcome::QueuedBehind
+        }
+    }
+
+    /// Form a long request's SP group on the cheapest eligible replica
+    /// combination and begin the §5 lifecycle. `cap` bounds the SP degree
+    /// (Reservation hands out at most its pool; others pass
+    /// `usize::MAX` and the degree is memory/speed-driven). Bails out
+    /// O(1) when the eligibility class's index count cannot cover the
+    /// needed degree.
+    pub fn start_long_group(
+        &mut self,
+        req: ReqId,
+        eligibility: LongEligibility,
+        cap: usize,
+    ) -> LongStartOutcome {
+        let st = &mut *self.st;
+        if !st.reqs[req].req.is_long {
+            return LongStartOutcome::Rejected(Veto::WrongClass);
+        }
+        if st.reqs[req].phase != ReqPhase::Queued {
+            return LongStartOutcome::Rejected(Veto::NotDispatchable);
+        }
+        let avail = match eligibility {
+            LongEligibility::LongFree => st.index.long_free_count(),
+            LongEligibility::Idle => st.index.idle_count(),
+            LongEligibility::IdleInPartition(p) => st.index.idle_count_in(p),
+        };
+        let index = &st.index;
+        let eligible = |r: &super::state::ReplicaRt| -> bool {
+            match eligibility {
+                LongEligibility::LongFree => !r.dedicated_decode && r.long_group.is_none(),
+                LongEligibility::Idle => r.is_idle() && !r.dedicated_decode,
+                LongEligibility::IdleInPartition(p) => {
+                    r.is_idle() && !r.dedicated_decode && index.partition_of(r.id) == p
+                }
+            }
+        };
+        let len = st.reqs[req].req.input_len;
+        let n = st.replicas_needed(len).min(cap).max(1);
+        debug_assert_eq!(
+            avail,
+            st.replicas.iter().filter(|r| !r.down && eligible(r)).count(),
+            "index availability count diverged from the eligibility mask"
+        );
+        if avail < n {
+            return LongStartOutcome::NoCapacity;
+        }
+        let mask: Vec<bool> = st.replicas.iter().map(|r| !r.down && eligible(r)).collect();
+        let loads: Vec<u64> = st
+            .replicas
+            .iter()
+            .map(|r| r.prefill_load_tokens(&st.reqs))
+            .collect();
+        let Some(group) = st.topo.choose_group(n, &mask, &loads) else {
+            return LongStartOutcome::NoCapacity;
+        };
+        let plan = st.plan_for_long(len, n);
+        LongStartOutcome::Started {
+            displaced: st.start_long_group(req, group, plan),
+        }
+    }
+
+    /// Pull waiting requests into `rid`'s decode batch right now instead
+    /// of at the next round boundary. Epoch-safe: deferred progress is
+    /// materialised before membership changes and the in-flight epoch is
+    /// re-anchored. Not used by the built-in policies (admission is
+    /// mechanical on round boundaries); offered for policies that manage
+    /// decode queues explicitly.
+    pub fn admit_decode(&mut self, rid: ReplicaId) -> AdmitOutcome {
+        if self.st.replicas[rid].down {
+            return AdmitOutcome::Rejected(Veto::ReplicaDown);
+        }
+        match self.st.admit_waiting_decode(rid) {
+            0 => AdmitOutcome::NothingAdmitted,
+            n => AdmitOutcome::Admitted(n),
+        }
+    }
+
+    /// Rebalance a decode-waiting short onto replica `to` via a KV
+    /// handoff (it lands through the same `MigrationDone` path
+    /// disaggregated prefills use). Not used by the built-in policies;
+    /// offered for load-rebalancing policies.
+    pub fn migrate(&mut self, req: ReqId, to: ReplicaId) -> MigrateOutcome {
+        if self.st.replicas[to].down {
+            return MigrateOutcome::Rejected(Veto::ReplicaDown);
+        }
+        if self.st.reqs[req].req.is_long {
+            return MigrateOutcome::Rejected(Veto::WrongClass);
+        }
+        if self.st.start_migration(req, to) {
+            MigrateOutcome::InFlight
+        } else {
+            MigrateOutcome::Rejected(Veto::NotWaiting)
+        }
+    }
+
+    /// Withdraw a queued (not yet running) short from its replica's local
+    /// prefill queue back into the policy's custody, releasing any
+    /// colocation budget it held. The inverse of
+    /// [`ClusterOps::start_prefill`]; lets a policy re-place work it now
+    /// regrets.
+    pub fn requeue(&mut self, req: ReqId) -> RequeueOutcome {
+        if self.st.reqs[req].req.is_long {
+            return RequeueOutcome::Rejected(Veto::WrongClass);
+        }
+        if self.st.withdraw_queued_prefill(req) {
+            RequeueOutcome::Requeued
+        } else {
+            RequeueOutcome::Rejected(Veto::NotWaiting)
+        }
+    }
+
+    /// Context tokens held by `rid`'s decode batch (active + waiting),
+    /// *epoch-exact*: the lazy fast-forward cursor is caught up to the
+    /// current instant first, so the answer equals what per-round
+    /// stepping would report — a decision made on it is identical under
+    /// both exact [`crate::config::DecodeMode`]s. (This query needs
+    /// `&mut` for the catch-up, which is why it lives on the ops side
+    /// rather than [`ClusterView`].)
+    pub fn decode_load_tokens(&mut self, rid: ReplicaId) -> u64 {
+        self.st.catch_up_decode_tokens(rid);
+        self.st.replicas[rid].decode_load_tokens(&self.st.reqs)
+    }
+
+    /// Tag `pool` as static partition 1 in the replica index (everything
+    /// else returns to partition 0), so partitioned queries
+    /// ([`ClusterView::pick_least_loaded_ordinary_in`],
+    /// [`ClusterView::idle_count_in`]) answer per slice. One-time policy
+    /// setup (Reservation); not meant for per-event use.
+    pub fn set_partition(&mut self, pool: &[ReplicaId]) {
+        self.st.index.set_partition(pool);
+    }
+}

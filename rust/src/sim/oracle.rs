@@ -1,0 +1,410 @@
+//! Retained pre-redesign policy implementations — the golden-equivalence
+//! oracle for the `ClusterView` / `ClusterOps` boundary.
+//!
+//! These are the four policies exactly as they were written *before* the
+//! typed verb layer existed: direct field access into [`SimState`],
+//! hand-rolled eligibility closures, raw index queries. They live inside
+//! `sim` (the only module that can still name those fields) and are
+//! driven through the ordinary engine via a thin adapter, so a run under
+//! an oracle policy exercises the identical event loop as a run under the
+//! verb-based policy — any timestamp divergence is attributable to the
+//! boundary itself. `rust/tests/golden_tests.rs` replays random traces
+//! through both and asserts bit-identical per-request
+//! `prefill_start`/`finish` under all four policies and both exact
+//! [`crate::config::DecodeMode`]s.
+//!
+//! Do not extend these with new policies: new policies are written
+//! against the verb API only (that is the point of the boundary).
+
+use std::collections::VecDeque;
+
+use crate::cluster::ReplicaId;
+use crate::config::{AblationFlags, PolicyKind};
+use crate::sched::Policy;
+use crate::trace::{ReqId, Trace};
+
+use super::engine::Simulation;
+use super::ops::ClusterOps;
+use super::state::{LongPhase, SimConfig, SimState};
+
+/// The pre-redesign policy contract: direct mutable access to the state.
+trait DirectPolicy {
+    fn on_arrival(&mut self, st: &mut SimState, req: ReqId);
+    fn dispatch(&mut self, st: &mut SimState);
+    fn has_pending(&self) -> bool;
+}
+
+/// Verbatim pre-redesign `sched::try_start_long`.
+fn try_start_long(
+    st: &mut SimState,
+    req: ReqId,
+    cap: usize,
+    avail: usize,
+    eligible: &dyn Fn(&super::state::ReplicaRt) -> bool,
+) -> Option<Vec<ReqId>> {
+    let len = st.reqs[req].req.input_len;
+    let n = st.replicas_needed(len).min(cap).max(1);
+    debug_assert_eq!(
+        avail,
+        st.replicas.iter().filter(|r| !r.down && eligible(r)).count(),
+        "index availability count diverged from the eligibility mask"
+    );
+    if avail < n {
+        return None;
+    }
+    let mask: Vec<bool> = st.replicas.iter().map(|r| !r.down && eligible(r)).collect();
+    let loads: Vec<u64> = st
+        .replicas
+        .iter()
+        .map(|r| r.prefill_load_tokens(&st.reqs))
+        .collect();
+    let group = st.topo.choose_group(n, &mask, &loads)?;
+    let plan = st.plan_for_long(len, n);
+    Some(st.start_long_group(req, group, plan))
+}
+
+// ---------------------------------------------------------------------
+// verbatim pre-redesign policies
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Default)]
+struct OracleFifo {
+    global: VecDeque<ReqId>,
+}
+
+impl DirectPolicy for OracleFifo {
+    fn on_arrival(&mut self, st: &mut SimState, req: ReqId) {
+        self.global.push_back(req);
+        self.dispatch(st);
+    }
+
+    fn dispatch(&mut self, st: &mut SimState) {
+        while let Some(&head) = self.global.front() {
+            if st.reqs[head].req.is_long {
+                let avail = st.index.idle_count();
+                let placed = try_start_long(st, head, usize::MAX, avail, &|r| {
+                    r.is_idle() && !r.dedicated_decode
+                });
+                match placed {
+                    Some(displaced) => {
+                        debug_assert!(displaced.is_empty(), "idle replicas had queues");
+                        self.global.pop_front();
+                    }
+                    None => break,
+                }
+            } else {
+                match st.pick_least_loaded_ordinary() {
+                    Some(rid) => {
+                        st.enqueue_short_prefill(rid, head);
+                        self.global.pop_front();
+                    }
+                    None => break,
+                }
+            }
+        }
+    }
+
+    fn has_pending(&self) -> bool {
+        !self.global.is_empty()
+    }
+}
+
+#[derive(Debug, Default)]
+struct OraclePriority {
+    shorts: VecDeque<ReqId>,
+    longs: VecDeque<ReqId>,
+}
+
+impl DirectPolicy for OraclePriority {
+    fn on_arrival(&mut self, st: &mut SimState, req: ReqId) {
+        if st.reqs[req].req.is_long {
+            self.longs.push_back(req);
+        } else {
+            self.shorts.push_back(req);
+        }
+        self.dispatch(st);
+    }
+
+    fn dispatch(&mut self, st: &mut SimState) {
+        while let Some(&head) = self.shorts.front() {
+            match st.pick_least_loaded_ordinary() {
+                Some(rid) => {
+                    st.enqueue_short_prefill(rid, head);
+                    self.shorts.pop_front();
+                }
+                None => break,
+            }
+        }
+        while let Some(&head) = self.longs.front() {
+            let avail = st.index.idle_count();
+            let placed = try_start_long(st, head, usize::MAX, avail, &|r| {
+                r.is_idle() && !r.dedicated_decode
+            });
+            match placed {
+                Some(displaced) => {
+                    debug_assert!(displaced.is_empty());
+                    self.longs.pop_front();
+                }
+                None => break,
+            }
+        }
+    }
+
+    fn has_pending(&self) -> bool {
+        !self.shorts.is_empty() || !self.longs.is_empty()
+    }
+}
+
+/// §6.2: the reservation is provisioned for the longest rewritten input.
+const RESERVE_FOR_TOKENS: u32 = 500_000;
+
+#[derive(Debug)]
+struct OracleReservation {
+    long_pool: Vec<ReplicaId>,
+    in_pool: Vec<bool>,
+    shorts: VecDeque<ReqId>,
+    longs: VecDeque<ReqId>,
+}
+
+impl OracleReservation {
+    fn new(st: &mut SimState) -> Self {
+        let n_total = st.topo.n_replicas();
+        let need = (2 * st.replicas_needed(RESERVE_FOR_TOKENS))
+            .min(n_total / 2)
+            .max(1);
+        let long_pool: Vec<ReplicaId> = (0..need).collect();
+        st.index.set_partition(&long_pool);
+        let in_pool: Vec<bool> = (0..n_total).map(|id| id < need).collect();
+        Self {
+            long_pool,
+            in_pool,
+            shorts: VecDeque::new(),
+            longs: VecDeque::new(),
+        }
+    }
+}
+
+impl DirectPolicy for OracleReservation {
+    fn on_arrival(&mut self, st: &mut SimState, req: ReqId) {
+        if st.reqs[req].req.is_long {
+            self.longs.push_back(req);
+        } else {
+            self.shorts.push_back(req);
+        }
+        self.dispatch(st);
+    }
+
+    fn dispatch(&mut self, st: &mut SimState) {
+        while let Some(&head) = self.shorts.front() {
+            match st.pick_least_loaded_ordinary_in(0) {
+                Some(rid) => {
+                    st.enqueue_short_prefill(rid, head);
+                    self.shorts.pop_front();
+                }
+                None => break,
+            }
+        }
+        while let Some(&head) = self.longs.front() {
+            let in_pool = &self.in_pool;
+            let avail = st.index.idle_count_in(1);
+            let placed = try_start_long(
+                st,
+                head,
+                self.long_pool.len(),
+                avail,
+                &|r| r.is_idle() && in_pool[r.id],
+            );
+            match placed {
+                Some(displaced) => {
+                    debug_assert!(displaced.is_empty());
+                    self.longs.pop_front();
+                }
+                None => break,
+            }
+        }
+    }
+
+    fn has_pending(&self) -> bool {
+        !self.shorts.is_empty() || !self.longs.is_empty()
+    }
+}
+
+#[derive(Debug)]
+struct OraclePecSched {
+    flags: AblationFlags,
+    pending_shorts: VecDeque<ReqId>,
+    pending_longs: VecDeque<ReqId>,
+}
+
+impl OraclePecSched {
+    fn new(flags: AblationFlags) -> Self {
+        Self {
+            flags,
+            pending_shorts: VecDeque::new(),
+            pending_longs: VecDeque::new(),
+        }
+    }
+
+    fn preemptable(&self, st: &SimState, rid: ReplicaId) -> bool {
+        let Some(gid) = st.replicas[rid].long_group else {
+            return false;
+        };
+        let Some(g) = st.groups[gid].as_ref() else { return false };
+        match g.phase {
+            LongPhase::Prefill { running: true, .. } => {
+                st.now - g.last_resume >= st.params.preempt_min_quantum
+            }
+            LongPhase::Prefill { running: false, .. } => true,
+            LongPhase::Decode { paused: false } => {
+                !self.flags.colocation
+                    && st.now - g.last_resume >= st.params.preempt_min_quantum
+            }
+            LongPhase::Decode { paused: true } => !self.flags.colocation,
+            LongPhase::Waiting => false,
+        }
+    }
+
+    fn try_place_short(&self, st: &mut SimState, req: ReqId) -> bool {
+        let len = st.reqs[req].req.input_len;
+
+        if let Some(rid) = st.pick_idle_ordinary() {
+            st.enqueue_short_prefill(rid, req);
+            return true;
+        }
+
+        if self.flags.colocation {
+            let budget = st.params.colocate_max_tokens as u64;
+            if let Some(rid) = st.pick_coloc_candidate(len, budget) {
+                st.charge_colocation(rid, req);
+                st.enqueue_short_prefill(rid, req);
+                return true;
+            }
+        }
+
+        let per_token = st.cm.short_prefill_time(1100) / 1100.0;
+        if let Some(rid) = st.pick_least_loaded_ordinary() {
+            let wait =
+                st.replicas[rid].prefill_load_tokens(&st.reqs) as f64 * per_token;
+            if wait <= st.params.preempt_wait_threshold {
+                st.enqueue_short_prefill(rid, req);
+                return true;
+            }
+        }
+
+        if self.flags.preemption {
+            if let Some(rid) =
+                st.pick_preemptable(|st, rid| self.preemptable(st, rid))
+            {
+                st.enqueue_short_prefill(rid, req);
+                return true;
+            }
+        }
+
+        if let Some(rid) = st.pick_least_loaded_ordinary() {
+            st.enqueue_short_prefill(rid, req);
+            return true;
+        }
+
+        if !self.flags.preemption {
+            if let Some(rid) = st.pick_any_ordinary_least_loaded() {
+                st.enqueue_short_prefill(rid, req);
+                return true;
+            }
+        }
+
+        false
+    }
+
+    fn dispatch_longs(&mut self, st: &mut SimState) {
+        while let Some(&head) = self.pending_longs.front() {
+            let avail = st.index.long_free_count();
+            let placed = try_start_long(st, head, usize::MAX, avail, &|r| {
+                !r.dedicated_decode && r.long_group.is_none()
+            });
+            match placed {
+                Some(displaced) => {
+                    self.pending_longs.pop_front();
+                    for d in displaced {
+                        if !self.try_place_short(st, d) {
+                            self.pending_shorts.push_back(d);
+                        }
+                    }
+                }
+                None => break,
+            }
+        }
+    }
+}
+
+impl DirectPolicy for OraclePecSched {
+    fn on_arrival(&mut self, st: &mut SimState, req: ReqId) {
+        if st.reqs[req].req.is_long {
+            self.pending_longs.push_back(req);
+            self.dispatch_longs(st);
+        } else if !self.try_place_short(st, req) {
+            self.pending_shorts.push_back(req);
+        }
+    }
+
+    fn dispatch(&mut self, st: &mut SimState) {
+        for _ in 0..self.pending_shorts.len() {
+            let Some(req) = self.pending_shorts.pop_front() else { break };
+            if !self.try_place_short(st, req) {
+                self.pending_shorts.push_back(req);
+                break;
+            }
+        }
+        self.dispatch_longs(st);
+    }
+
+    fn has_pending(&self) -> bool {
+        !self.pending_shorts.is_empty() || !self.pending_longs.is_empty()
+    }
+}
+
+// ---------------------------------------------------------------------
+// adapter into the ordinary engine
+// ---------------------------------------------------------------------
+
+/// Bridges a [`DirectPolicy`] onto the verb-based [`Policy`] trait by
+/// unwrapping the ops capability back to the raw state — the one place in
+/// the crate allowed to do so.
+struct Adapter<P: DirectPolicy>(P);
+
+impl<P: DirectPolicy> Policy for Adapter<P> {
+    fn on_arrival(&mut self, ops: &mut ClusterOps<'_>, req: ReqId) {
+        self.0.on_arrival(ops.raw(), req);
+    }
+
+    fn dispatch(&mut self, ops: &mut ClusterOps<'_>) {
+        self.0.dispatch(ops.raw());
+    }
+
+    fn has_pending(&self) -> bool {
+        self.0.has_pending()
+    }
+}
+
+/// Build a [`Simulation`] that runs `kind` through its retained
+/// pre-redesign implementation (direct field access) on the ordinary
+/// engine.
+///
+/// # Panics
+/// For policies that postdate the boundary (e.g. SJF) — they have no
+/// pre-redesign oracle by construction.
+pub fn oracle_simulation(cfg: SimConfig, trace: &Trace, kind: PolicyKind) -> Simulation {
+    let mut state = SimState::new(&cfg, &trace.requests);
+    let policy: Box<dyn Policy> = match kind {
+        PolicyKind::Fifo => Box::new(Adapter(OracleFifo::default())),
+        PolicyKind::Priority => Box::new(Adapter(OraclePriority::default())),
+        PolicyKind::Reservation => {
+            Box::new(Adapter(OracleReservation::new(&mut state)))
+        }
+        PolicyKind::PecSched(flags) => Box::new(Adapter(OraclePecSched::new(flags))),
+        other => panic!(
+            "no pre-redesign oracle for {:?}: it was written against the verb API",
+            other
+        ),
+    };
+    Simulation::from_parts(state, policy, kind)
+}

@@ -29,7 +29,7 @@ use crate::costmodel::{sp, CostModel, SpPlan};
 use crate::metrics::BusyTracker;
 use crate::trace::{ReqId, Request};
 
-use super::events::{EventKind, EventQueue, GroupId};
+use super::events::{Event, EventKind, EventQueue, GroupId};
 use super::index::{IndexEntry, SchedIndex};
 
 /// Lifecycle of a request inside the simulator.
@@ -45,16 +45,24 @@ pub enum ReqPhase {
     DecodeQueued,
     /// Generating tokens.
     Decoding,
+    /// Finished: `finish` is set and the request left every queue.
     Done,
 }
 
 /// Per-request runtime bookkeeping.
+///
+/// Read-only to policies (via [`super::ClusterView::request`]) and to
+/// external drivers (via [`SimState::requests`]); only the simulator's
+/// mechanics mutate it.
 #[derive(Debug, Clone)]
 pub struct ReqRt {
+    /// The immutable trace request this runtime entry tracks.
     pub req: Request,
+    /// Current lifecycle phase.
     pub phase: ReqPhase,
     /// First time prefill compute actually started (queueing-delay end).
     pub prefill_start: Option<f64>,
+    /// Completion time, once the last output token was generated.
     pub finish: Option<f64>,
     /// Tokens generated so far.
     pub generated: u32,
@@ -65,12 +73,15 @@ pub struct ReqRt {
 }
 
 impl ReqRt {
+    /// Prompt plus generated tokens — the KV footprint while decoding.
     pub fn context_tokens(&self) -> u64 {
         self.req.input_len as u64 + self.generated as u64
     }
+    /// Arrival → first prefill compute, once prefill has started.
     pub fn queueing_delay(&self) -> Option<f64> {
         self.prefill_start.map(|s| s - self.req.arrival)
     }
+    /// Arrival → completion (job completion time), once finished.
     pub fn jct(&self) -> Option<f64> {
         self.finish.map(|f| f - self.req.arrival)
     }
@@ -111,64 +122,100 @@ pub enum LongPhase {
     /// Prefill with `remaining` seconds of work; `running` is false while
     /// preempted (§5.1).
     Prefill {
+        /// Seconds of prefill compute left (checkpointed on pause).
         remaining: f64,
+        /// Actively computing (false while preempted).
         running: bool,
+        /// When the current running stint began.
         started_at: f64,
     },
     /// Decode; `paused` only ever true under the /CoL ablation.
-    Decode { paused: bool },
+    Decode {
+        /// Suspended by a short prefill (/CoL only).
+        paused: bool,
+    },
 }
 
 /// A long request bound to its replica set.
+///
+/// Fields are private to the simulator core (the verb layer upholds the
+/// group's invariants); outside `sim` use the read accessors below.
 #[derive(Debug, Clone)]
 pub struct LongGroup {
-    pub req: ReqId,
-    pub members: Vec<ReplicaId>,
-    pub plan: SpPlan,
-    pub phase: LongPhase,
+    pub(super) req: ReqId,
+    pub(super) members: Vec<ReplicaId>,
+    pub(super) plan: SpPlan,
+    pub(super) phase: LongPhase,
     /// Generation counter: bumping it cancels in-flight completion events.
-    pub gen: u64,
-    pub preemptions: u64,
+    pub(super) gen: u64,
+    pub(super) preemptions: u64,
     /// Last time the prefill (re)gained the GPUs — preemption-quantum
     /// anchor.
-    pub last_resume: f64,
+    pub(super) last_resume: f64,
     /// In-flight decode epoch cursor (epoch fast-forward modes only).
-    pub decode_epoch: Option<DecodeEpochRt>,
+    pub(super) decode_epoch: Option<DecodeEpochRt>,
+}
+
+impl LongGroup {
+    /// The long request this group serves.
+    pub fn req(&self) -> ReqId {
+        self.req
+    }
+
+    /// Member replicas, in the order the group was formed.
+    pub fn members(&self) -> &[ReplicaId] {
+        &self.members
+    }
+
+    /// Current phase of the §5 lifecycle.
+    pub fn phase(&self) -> LongPhase {
+        self.phase
+    }
+
+    /// How many times this group's work has been preempted.
+    pub fn preemptions(&self) -> u64 {
+        self.preemptions
+    }
 }
 
 /// Per-replica runtime state.
+///
+/// Fields are private to the simulator core: every mutation must go
+/// through [`SimState`]'s mechanics (which keep the replica index and the
+/// epoch cursors in lockstep), so policies and external drivers read
+/// replicas only through the accessors below.
 #[derive(Debug, Clone)]
 pub struct ReplicaRt {
-    pub id: ReplicaId,
-    pub node: usize,
-    pub gpus: usize,
-    pub busy: BusyTracker,
+    pub(super) id: ReplicaId,
+    pub(super) node: usize,
+    pub(super) gpus: usize,
+    pub(super) busy: BusyTracker,
     // --- short prefill ---
-    pub prefill_queue: VecDeque<ReqId>,
-    pub queued_prefill_tokens: u64,
-    pub running_prefill: Option<ReqId>,
-    pub prefill_gen: u64,
+    pub(super) prefill_queue: VecDeque<ReqId>,
+    pub(super) queued_prefill_tokens: u64,
+    pub(super) running_prefill: Option<ReqId>,
+    pub(super) prefill_gen: u64,
     // --- short decode (local on baselines, dedicated under PecSched) ---
-    pub decode_active: Vec<ReqId>,
-    pub decode_waiting: VecDeque<ReqId>,
+    pub(super) decode_active: Vec<ReqId>,
+    pub(super) decode_waiting: VecDeque<ReqId>,
     /// Incremental sum of `context_tokens` over `decode_active` (kept in
     /// lockstep so per-round admission is O(1), not O(batch²)).
-    pub decode_active_tokens: u64,
+    pub(super) decode_active_tokens: u64,
     /// Incremental sum of `context_tokens` over `decode_waiting`.
-    pub decode_waiting_tokens: u64,
-    pub decode_running: bool,
-    pub decode_gen: u64,
+    pub(super) decode_waiting_tokens: u64,
+    pub(super) decode_running: bool,
+    pub(super) decode_gen: u64,
     /// In-flight decode epoch cursor (epoch fast-forward modes only;
     /// `Some` exactly while `decode_running` under those modes).
-    pub decode_epoch: Option<DecodeEpochRt>,
+    pub(super) decode_epoch: Option<DecodeEpochRt>,
     // --- long occupancy ---
-    pub long_group: Option<GroupId>,
+    pub(super) long_group: Option<GroupId>,
     /// Prompt tokens of colocated shorts currently charged to this replica.
-    pub colocated_tokens: u64,
+    pub(super) colocated_tokens: u64,
     /// Member of the dedicated short-decode pool (§5.2/§6.2).
-    pub dedicated_decode: bool,
+    pub(super) dedicated_decode: bool,
     /// Replica is failed/unavailable (failure injection).
-    pub down: bool,
+    pub(super) down: bool,
 }
 
 impl ReplicaRt {
@@ -196,13 +243,56 @@ impl ReplicaRt {
             && self.decode_waiting.is_empty()
             && self.long_group.is_none()
     }
+
+    /// Failed / unavailable (failure injection)?
+    pub fn is_down(&self) -> bool {
+        self.down
+    }
+
+    /// Member of the dedicated short-decode pool (§5.2/§6.2)?
+    pub fn is_dedicated_decode(&self) -> bool {
+        self.dedicated_decode
+    }
+
+    /// The short prefill currently executing, if any.
+    pub fn running_prefill(&self) -> Option<ReqId> {
+        self.running_prefill
+    }
+
+    /// Prompt tokens queued (not running) in the local prefill queue.
+    pub fn queued_prefill_tokens(&self) -> u64 {
+        self.queued_prefill_tokens
+    }
+
+    /// The long group occupying this replica, if any.
+    pub fn long_group(&self) -> Option<GroupId> {
+        self.long_group
+    }
+
+    /// Prompt tokens of colocated shorts currently charged here (§5.2).
+    pub fn colocated_tokens(&self) -> u64 {
+        self.colocated_tokens
+    }
+
+    /// Requests currently in the decode batch.
+    pub fn decode_active(&self) -> &[ReqId] {
+        &self.decode_active
+    }
+
+    /// Requests waiting for a decode-batch slot on this replica.
+    pub fn decode_waiting_len(&self) -> usize {
+        self.decode_waiting.len()
+    }
 }
 
 /// Static configuration of one simulation run.
 #[derive(Debug, Clone)]
 pub struct SimConfig {
+    /// Cluster shape and hardware characteristics.
     pub cluster: ClusterSpec,
+    /// Served model (sets TP degree, hence replica count).
     pub model: ModelSpec,
+    /// Scheduler tunables (§5/§6.2 defaults).
     pub params: SchedParams,
     /// Mechanism switches (§6.4); policies other than PecSched ignore most.
     pub flags: AblationFlags,
@@ -217,6 +307,8 @@ pub struct SimConfig {
 }
 
 impl SimConfig {
+    /// The plain cluster every baseline policy runs on: default testbed,
+    /// default params, all mechanisms available, no dedicated decode pool.
     pub fn baseline(model: ModelSpec) -> Self {
         Self {
             cluster: ClusterSpec::default(),
@@ -229,6 +321,8 @@ impl SimConfig {
         }
     }
 
+    /// PecSched's configuration: per-model tuned [`SchedParams`] and a
+    /// dedicated decode pool when disaggregation is on.
     pub fn pecsched(model: ModelSpec, flags: AblationFlags) -> Self {
         let params = SchedParams::for_model(&model);
         Self {
@@ -255,39 +349,44 @@ impl SimConfig {
     }
 }
 
-/// Everything the event loop and the policies mutate.
+/// Everything the event loop and the simulator mechanics mutate.
+///
+/// Fields are private to `sim`: policies act through the typed
+/// [`super::ClusterView`] / [`super::ClusterOps`] boundary, and external
+/// drivers (tests, failure hooks, benches) use the read accessors plus
+/// the public invariant-preserving mechanics below.
 pub struct SimState {
-    pub now: f64,
-    pub queue: EventQueue,
-    pub cm: CostModel,
-    pub topo: Topology,
-    pub params: SchedParams,
-    pub flags: AblationFlags,
+    pub(super) now: f64,
+    pub(super) queue: EventQueue,
+    pub(super) cm: CostModel,
+    pub(super) topo: Topology,
+    pub(super) params: SchedParams,
+    pub(super) flags: AblationFlags,
     /// Decode stepping granularity (see [`DecodeMode`]).
-    pub decode_mode: DecodeMode,
-    pub reqs: Vec<ReqRt>,
-    pub replicas: Vec<ReplicaRt>,
-    pub groups: Vec<Option<LongGroup>>,
+    pub(super) decode_mode: DecodeMode,
+    pub(super) reqs: Vec<ReqRt>,
+    pub(super) replicas: Vec<ReplicaRt>,
+    pub(super) groups: Vec<Option<LongGroup>>,
     /// KV token capacity of one replica (cached).
-    pub kv_capacity: u64,
+    pub(super) kv_capacity: u64,
     /// ids of dedicated decode replicas (empty for baselines).
-    pub decode_pool: Vec<ReplicaId>,
+    pub(super) decode_pool: Vec<ReplicaId>,
     /// Totals.
-    pub preemptions: u64,
-    pub shorts_done: usize,
-    pub shorts_total: usize,
-    pub longs_done: usize,
+    pub(super) preemptions: u64,
+    pub(super) shorts_done: usize,
+    pub(super) shorts_total: usize,
+    pub(super) longs_done: usize,
     /// Time all shorts finished (starvation reference point).
-    pub t_shorts_done: Option<f64>,
-    pub events_processed: u64,
+    pub(super) t_shorts_done: Option<f64>,
+    pub(super) events_processed: u64,
     /// Requests whose prefill started since the engine last drained this
     /// (overhead attribution for Table 7 — avoids rescanning all requests).
-    pub recent_prefill_starts: Vec<ReqId>,
+    pub(super) recent_prefill_starts: Vec<ReqId>,
     /// Incremental replica index: the ordered sets behind the O(log R)
     /// placement queries. Kept in lockstep by [`SimState::reindex`]; in
     /// debug builds every indexed pick is cross-checked against the naive
     /// scan it replaced.
-    pub index: SchedIndex,
+    pub(super) index: SchedIndex,
     /// Persistent scratch for the decode hot path: holds the batch being
     /// advanced while keeps are pushed straight back into the replica's
     /// (recycled) `decode_active` buffer — no per-round allocation.
@@ -297,6 +396,9 @@ pub struct SimState {
 }
 
 impl SimState {
+    /// Build the initial state for `requests`: replicas laid out per the
+    /// topology, every arrival queued as an event, the replica index
+    /// seeded from the fresh entries.
     pub fn new(cfg: &SimConfig, requests: &[Request]) -> Self {
         let topo = Topology::build(&cfg.cluster, &cfg.model);
         let cm = CostModel::new(cfg.model.clone(), cfg.cluster.hw.clone());
@@ -393,9 +495,107 @@ impl SimState {
     /// Recompute `rid`'s index entry from current state and apply it.
     /// Called after every mutation that can move a replica between the
     /// index's ordered sets or change its key; a no-change refresh is O(1).
-    pub fn reindex(&mut self, rid: ReplicaId) {
+    pub(super) fn reindex(&mut self, rid: ReplicaId) {
         let e = IndexEntry::compute(&self.replicas[rid], &self.groups, &self.reqs);
         self.index.apply(rid, e);
+    }
+
+    // ------------------------------------------------------------------
+    // read accessors (the public inspection surface; fields are private)
+    // ------------------------------------------------------------------
+
+    /// Current simulated time, seconds.
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Per-request runtime entries, indexed by [`ReqId`].
+    pub fn requests(&self) -> &[ReqRt] {
+        &self.reqs
+    }
+
+    /// One request's runtime entry.
+    pub fn request(&self, req: ReqId) -> &ReqRt {
+        &self.reqs[req]
+    }
+
+    /// Number of replicas in the cluster (including failed ones).
+    pub fn replica_count(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// One replica's runtime state (read-only).
+    pub fn replica(&self, rid: ReplicaId) -> &ReplicaRt {
+        &self.replicas[rid]
+    }
+
+    /// A long group, if `gid` is still live.
+    pub fn group(&self, gid: GroupId) -> Option<&LongGroup> {
+        self.groups.get(gid).and_then(|g| g.as_ref())
+    }
+
+    /// Replicas dedicated to short decode (empty for baselines).
+    pub fn decode_pool(&self) -> &[ReplicaId] {
+        &self.decode_pool
+    }
+
+    /// The scheduler tunables this run executes under.
+    pub fn params(&self) -> &SchedParams {
+        &self.params
+    }
+
+    /// The mechanism switches (§6.4) this run executes under.
+    pub fn flags(&self) -> AblationFlags {
+        self.flags
+    }
+
+    /// The analytical cost model timing every phase.
+    pub fn cost_model(&self) -> &CostModel {
+        &self.cm
+    }
+
+    /// Preemptions performed so far (§5.1 pauses plus /CoL decode pauses).
+    pub fn preemptions(&self) -> u64 {
+        self.preemptions
+    }
+
+    /// Short requests completed so far.
+    pub fn shorts_done(&self) -> usize {
+        self.shorts_done
+    }
+
+    /// Long requests completed so far.
+    pub fn longs_done(&self) -> usize {
+        self.longs_done
+    }
+
+    /// Events popped off the queue so far (engine-maintained).
+    pub fn events_processed(&self) -> u64 {
+        self.events_processed
+    }
+
+    /// Pop the next event and advance the clock to it. The manual-drive
+    /// entry point for tests and custom drivers; the engine's event loop
+    /// adds metric accounting on top.
+    pub fn next_event(&mut self) -> Option<Event> {
+        let ev = self.queue.pop()?;
+        self.now = ev.time.max(self.now);
+        Some(ev)
+    }
+
+    /// Revalidate the whole replica index against a from-scratch rebuild
+    /// (the consistency oracle the property tests run per event).
+    pub fn validate_index(&self) -> Result<(), String> {
+        self.index.validate(&self.replicas, &self.groups, &self.reqs)
+    }
+
+    /// Catch `rid`'s lazy decode-epoch cursor up to the current instant
+    /// so its decode token count reads exactly what per-round stepping
+    /// would report now — the same pre-pick fold the core performs
+    /// before its own load-ordered decode picks. Exposed for the ops
+    /// layer's epoch-exact load query.
+    pub(super) fn catch_up_decode_tokens(&mut self, rid: ReplicaId) {
+        self.catch_up_decode_epoch(rid, self.now);
     }
 
     // ------------------------------------------------------------------
@@ -574,6 +774,7 @@ impl SimState {
         got
     }
 
+    /// All completely idle ordinary (non-dedicated, live) replicas.
     pub fn idle_replicas(&self) -> Vec<ReplicaId> {
         self.replicas
             .iter()
@@ -878,6 +1079,98 @@ impl SimState {
         // only in the non-disaggregated world where they share the engine;
         // dedicated decode replicas never host longs.
         self.schedule_decode_round(rid);
+    }
+
+    /// Admit waiting requests into `rid`'s decode batch right now (the
+    /// [`super::ClusterOps::admit_decode`] verb). Performs the same
+    /// epoch-safety sequence as a migration landing: deferred progress is
+    /// materialised *before* membership changes, the in-flight epoch is
+    /// re-anchored if the batch grew, and decode is (re)started. Returns
+    /// how many requests were admitted.
+    pub fn admit_waiting_decode(&mut self, rid: ReplicaId) -> usize {
+        debug_assert!(!self.replicas[rid].down);
+        self.materialize_decode_epoch(rid);
+        let before = self.replicas[rid].decode_active.len();
+        self.try_admit_decode(rid);
+        let admitted = self.replicas[rid].decode_active.len() - before;
+        if admitted > 0 {
+            self.truncate_decode_epoch(rid);
+        }
+        self.try_start_decode(rid);
+        self.update_busy(rid);
+        admitted
+    }
+
+    /// Begin a KV handoff of a decode-waiting short to replica `to` (the
+    /// [`super::ClusterOps::migrate`] verb). The request is pulled out of
+    /// its current replica's waiting queue (token caches and index updated)
+    /// and lands on `to` after the migration's exposed transfer time,
+    /// through the same `MigrationDone` path disaggregated prefills use.
+    /// Returns false — without mutating anything — when the request is not
+    /// currently waiting for a decode slot or `to` is down.
+    pub fn start_migration(&mut self, req: ReqId, to: ReplicaId) -> bool {
+        if self.replicas[to].down || self.reqs[req].phase != ReqPhase::DecodeQueued {
+            return false;
+        }
+        // Decode-waiting membership is not back-referenced from the
+        // request (the hot paths never need it), so locate it by scan —
+        // this verb is an explicit rebalancing action, not a hot path.
+        let Some(from) = (0..self.replicas.len()).find(|&rid| {
+            self.replicas[rid].decode_waiting.contains(&req)
+        }) else {
+            return false;
+        };
+        let ctx = self.reqs[req].context_tokens();
+        let r = &mut self.replicas[from];
+        r.decode_waiting.retain(|&q| q != req);
+        r.decode_waiting_tokens -= ctx;
+        self.reqs[req].phase = ReqPhase::Migrating;
+        let dur = self
+            .cm
+            .kv_migration_exposed_time(self.reqs[req].req.input_len);
+        self.queue
+            .push(self.now + dur, EventKind::MigrationDone { req, rid: to });
+        self.update_busy(from);
+        true
+    }
+
+    /// Pull a queued (not yet running) short back out of its replica's
+    /// local prefill queue (the [`super::ClusterOps::requeue`] verb),
+    /// releasing any colocation budget it held. The request returns to
+    /// the policy's custody in `Queued` phase. Returns false — without
+    /// mutating anything — when the request is not sitting in a local
+    /// prefill queue.
+    pub fn withdraw_queued_prefill(&mut self, req: ReqId) -> bool {
+        if self.reqs[req].phase != ReqPhase::Queued {
+            return false;
+        }
+        let Some(rid) = (0..self.replicas.len()).find(|&rid| {
+            self.replicas[rid].prefill_queue.contains(&req)
+        }) else {
+            return false;
+        };
+        let len = self.reqs[req].req.input_len as u64;
+        let r = &mut self.replicas[rid];
+        r.prefill_queue.retain(|&q| q != req);
+        r.queued_prefill_tokens -= len;
+        if let Some(crid) = self.reqs[req].colocated_on.take() {
+            let c = &mut self.replicas[crid].colocated_tokens;
+            *c = c.saturating_sub(len);
+            self.reindex(crid);
+        }
+        // Work the withdrawn entry was blocking may now proceed: a decode
+        // batch parks itself while prompts wait in the queue
+        // (`finish_decode_round` yields to prefill), and a paused long
+        // resumes only once the queue drains — re-kick the replica exactly
+        // like the other queue-draining paths do (decode admission via the
+        // epoch-safe sequence).
+        self.try_start_prefill(rid);
+        self.admit_waiting_decode(rid);
+        if let Some(gid) = self.replicas[rid].long_group {
+            self.maybe_resume_long(gid);
+        }
+        self.update_busy(rid);
+        true
     }
 
     fn schedule_decode_round(&mut self, rid: ReplicaId) {

@@ -1,0 +1,194 @@
+//! The read-only half of the policy-facing API boundary.
+//!
+//! A [`ClusterView`] is a borrowed, query-only capability over
+//! [`SimState`]: clock, request metadata, replica load/idle/colocation
+//! lookups (all O(log R) via the PR-2 incremental index), and a typed
+//! summary of long-group occupancy for preemption reasoning. Policies
+//! receive it through [`super::ClusterOps::view`] and can decide *where*
+//! work should go, but cannot mutate anything — every mutation is a
+//! [`super::ClusterOps`] verb.
+
+use crate::cluster::ReplicaId;
+use crate::config::{AblationFlags, SchedParams};
+use crate::costmodel::CostModel;
+use crate::trace::ReqId;
+
+use super::state::{LongPhase, ReqRt, SimState};
+
+/// Where a replica stands with respect to long-request occupancy — the
+/// typed digest PecSched's preemption rung reasons over, carrying exactly
+/// what the §5 duty-cycle rules need and nothing else.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LongOccupancy {
+    /// No long group on this replica.
+    Free,
+    /// A long group holds the replica but is still waiting for members to
+    /// drain; §5 forbids interrupting a group that never started.
+    Waiting,
+    /// The long prefill is actively computing; `since_resume` is how long
+    /// it has run uninterrupted (the preemption-quantum gate's input).
+    PrefillRunning {
+        /// Seconds since the prefill last (re)gained the GPUs.
+        since_resume: f64,
+    },
+    /// The long prefill is suspended (§5.1): all members accept shorts,
+    /// spreading the preempting batch across the group's GPUs.
+    PrefillPaused,
+    /// The long request is decoding; `since_resume` gates /CoL decode
+    /// preemption the same way the prefill quantum does.
+    Decoding {
+        /// Seconds since the decode last (re)gained the GPUs.
+        since_resume: f64,
+    },
+    /// The long decode is suspended (only reachable under /CoL).
+    DecodePaused,
+}
+
+/// Read-only capability over the cluster state.
+///
+/// Cheap to copy (a shared borrow); obtain one from
+/// [`super::ClusterOps::view`]. Every query either reads request/replica
+/// metadata or answers a placement question through the incremental
+/// replica index — identical, decision for decision, to the naive scans
+/// retained as `debug_assert!` oracles inside [`SimState`].
+#[derive(Clone, Copy)]
+pub struct ClusterView<'a> {
+    pub(super) st: &'a SimState,
+}
+
+impl<'a> ClusterView<'a> {
+    /// Current simulated time, seconds.
+    pub fn now(&self) -> f64 {
+        self.st.now
+    }
+
+    /// A request's runtime entry: trace metadata, phase, progress.
+    ///
+    /// Staleness caveat: under the epoch fast-forward decode modes,
+    /// `generated` for a request inside another replica's *mid-epoch*
+    /// batch reflects the last materialised round boundary, not the
+    /// current instant (the deferred rounds are folded in before any
+    /// decision the core makes about that batch). Timestamps and phases
+    /// are always current. Use [`super::ClusterOps::decode_load_tokens`]
+    /// for epoch-exact decode loads.
+    pub fn request(&self, req: ReqId) -> &'a ReqRt {
+        &self.st.reqs[req]
+    }
+
+    /// Number of replicas in the cluster (including failed ones).
+    pub fn n_replicas(&self) -> usize {
+        self.st.replicas.len()
+    }
+
+    /// SP degree a long prompt of `input_len` tokens needs (§5).
+    pub fn replicas_needed(&self, input_len: u32) -> usize {
+        self.st.replicas_needed(input_len)
+    }
+
+    /// The scheduler tunables this run executes under.
+    pub fn params(&self) -> &'a SchedParams {
+        &self.st.params
+    }
+
+    /// The mechanism switches (§6.4) the simulator honours.
+    pub fn flags(&self) -> AblationFlags {
+        self.st.flags
+    }
+
+    /// The analytical cost model (for wait estimates and the like).
+    pub fn cost_model(&self) -> &'a CostModel {
+        &self.st.cm
+    }
+
+    /// Idle ordinary replicas across all partitions — O(1).
+    pub fn idle_count(&self) -> usize {
+        self.st.index.idle_count()
+    }
+
+    /// Idle ordinary replicas inside one static partition — O(1).
+    pub fn idle_count_in(&self, part: u8) -> usize {
+        self.st.index.idle_count_in(part)
+    }
+
+    /// Ordinary (long-free, live) replicas across all partitions — O(1).
+    pub fn long_free_count(&self) -> usize {
+        self.st.index.long_free_count()
+    }
+
+    /// Rung ②: the idle ordinary replica the `(load, id)` min would pick.
+    pub fn pick_idle_ordinary(&self) -> Option<ReplicaId> {
+        self.st.pick_idle_ordinary()
+    }
+
+    /// Least-loaded ordinary (long-free) replica — the bounded-wait rung,
+    /// the fallback rung, and the FIFO/Priority/SJF short dispatch.
+    pub fn pick_least_loaded_ordinary(&self) -> Option<ReplicaId> {
+        self.st.pick_least_loaded_ordinary()
+    }
+
+    /// Least-loaded ordinary replica within one static partition (set up
+    /// via [`super::ClusterOps::set_partition`]).
+    pub fn pick_least_loaded_ordinary_in(&self, part: u8) -> Option<ReplicaId> {
+        self.st.pick_least_loaded_ordinary_in(part)
+    }
+
+    /// Least-loaded non-dedicated replica regardless of long occupancy —
+    /// the /PE "every replica long-occupied" fallback.
+    pub fn pick_any_ordinary_least_loaded(&self) -> Option<ReplicaId> {
+        self.st.pick_any_ordinary_least_loaded()
+    }
+
+    /// Rung ③④: lightest-budget colocation host able to absorb a prompt
+    /// of `len` tokens under the per-replica `budget` cap.
+    pub fn pick_coloc_candidate(&self, len: u32, budget: u64) -> Option<ReplicaId> {
+        self.st.pick_coloc_candidate(len, budget)
+    }
+
+    /// Rung ⑤: walk long-group members in `(prefill load, id)` order and
+    /// return the first accepted by `ok` — equal to the naive filtered
+    /// min over the caller's predicate.
+    pub fn pick_preemptable<F>(&self, ok: F) -> Option<ReplicaId>
+    where
+        F: Fn(&ClusterView<'_>, ReplicaId) -> bool,
+    {
+        self.st
+            .pick_preemptable(|st, rid| ok(&ClusterView { st }, rid))
+    }
+
+    /// Prefill tokens queued or running on `rid` (the §5 "local queue
+    /// length", measured in tokens).
+    pub fn prefill_load_tokens(&self, rid: ReplicaId) -> u64 {
+        self.st.replicas[rid].prefill_load_tokens(&self.st.reqs)
+    }
+
+    /// Is `rid` completely idle (and so immediately schedulable)?
+    pub fn is_idle(&self, rid: ReplicaId) -> bool {
+        self.st.replicas[rid].is_idle()
+    }
+
+    /// Is `rid` failed / unavailable?
+    pub fn is_down(&self, rid: ReplicaId) -> bool {
+        self.st.replicas[rid].down
+    }
+
+    /// Typed long-occupancy digest of `rid` (see [`LongOccupancy`]).
+    pub fn long_occupancy(&self, rid: ReplicaId) -> LongOccupancy {
+        let Some(gid) = self.st.replicas[rid].long_group else {
+            return LongOccupancy::Free;
+        };
+        let Some(g) = self.st.groups[gid].as_ref() else {
+            return LongOccupancy::Free;
+        };
+        match g.phase {
+            LongPhase::Waiting => LongOccupancy::Waiting,
+            LongPhase::Prefill { running: true, .. } => LongOccupancy::PrefillRunning {
+                since_resume: self.st.now - g.last_resume,
+            },
+            LongPhase::Prefill { running: false, .. } => LongOccupancy::PrefillPaused,
+            LongPhase::Decode { paused: false } => LongOccupancy::Decoding {
+                since_resume: self.st.now - g.last_resume,
+            },
+            LongPhase::Decode { paused: true } => LongOccupancy::DecodePaused,
+        }
+    }
+}

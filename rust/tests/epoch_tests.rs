@@ -86,7 +86,7 @@ fn epoch_path_cuts_event_volume_4x_with_identical_timestamps() {
             "{}: epoch path lost requests",
             kind.name()
         );
-        for (a, b) in round.state.reqs.iter().zip(epoch.state.reqs.iter()) {
+        for (a, b) in round.state.requests().iter().zip(epoch.state.requests().iter()) {
             assert_eq!(
                 a.finish.map(f64::to_bits),
                 b.finish.map(f64::to_bits),
@@ -121,7 +121,7 @@ fn events_processed_is_reported_in_metrics() {
     let mut sim = Simulation::new(cfg_for(kind, DecodeMode::Epoch), &trace, kind);
     let m = sim.run();
     assert!(m.events_processed > 0);
-    assert_eq!(m.events_processed, sim.state.events_processed);
+    assert_eq!(m.events_processed, sim.state.events_processed());
 }
 
 #[test]

@@ -4,8 +4,8 @@
 
 use pecsched::config::{AblationFlags, ModelSpec, PolicyKind};
 use pecsched::exp;
-use pecsched::sched::{build_policy, Policy};
-use pecsched::sim::{ReqPhase, SimConfig, SimState, Simulation};
+use pecsched::sched::Policy;
+use pecsched::sim::{ClusterOps, ReqPhase, SimConfig, SimState, Simulation};
 use pecsched::trace::{Request, Trace, TraceConfig};
 
 fn shorts_trace(n: usize, rps: f64, seed: u64) -> Trace {
@@ -34,13 +34,15 @@ fn run_with_failure(
     let span = trace.span();
     sim.run_with_hook(|st: &mut SimState, policy: &mut dyn Policy| {
         // One-shot crash around the chosen point of the arrival window.
-        if st.now >= span * fail_at_frac && !st.replicas[fail_rid].down {
+        if st.now() >= span * fail_at_frac && !st.replica(fail_rid).is_down() {
             let displaced = st.fail_replica(fail_rid);
             for req in displaced {
-                policy.on_arrival(st, req);
+                policy.on_arrival(&mut ClusterOps::new(st), req);
             }
         }
-        if recover && st.replicas[fail_rid].down && st.now >= span * (fail_at_frac + 0.2)
+        if recover
+            && st.replica(fail_rid).is_down()
+            && st.now() >= span * (fail_at_frac + 0.2)
         {
             st.recover_replica(fail_rid);
         }
@@ -137,16 +139,16 @@ fn fail_replica_unit_semantics() {
         },
     ];
     let mut st = SimState::new(&cfg, &reqs);
-    st.queue.pop();
-    st.queue.pop();
+    st.next_event();
+    st.next_event();
     st.enqueue_short_prefill(0, 0); // running
     st.enqueue_short_prefill(0, 1); // queued behind it
     let displaced = st.fail_replica(0);
     assert_eq!(displaced.len(), 2);
-    assert!(st.replicas[0].down);
-    assert!(st.replicas[0].running_prefill.is_none());
-    assert_eq!(st.replicas[0].queued_prefill_tokens, 0);
-    assert_eq!(st.reqs[0].phase, ReqPhase::Queued);
+    assert!(st.replica(0).is_down());
+    assert!(st.replica(0).running_prefill().is_none());
+    assert_eq!(st.replica(0).queued_prefill_tokens(), 0);
+    assert_eq!(st.request(0).phase, ReqPhase::Queued);
     // Down replicas are invisible to placement helpers.
     assert!(!st.idle_replicas().contains(&0));
     assert_ne!(

@@ -2,7 +2,9 @@
 //! track every `SimState` mutation — placement, preemption, long-group
 //! displacement, colocation charge/release, decode migration, and the
 //! replica-down/recovery paths — and the indexed picks must equal the
-//! naive scans they replaced.
+//! naive scans they replaced. Drives the state through its public
+//! mechanics (`next_event` + the `on_*` handlers); `validate_index`
+//! rebuilds the whole index from scratch and diffs it.
 
 use pecsched::config::{AblationFlags, ModelSpec, PolicyKind, SchedParams};
 use pecsched::sim::{LongPhase, ReqPhase, SimConfig, SimState, Simulation};
@@ -35,9 +37,37 @@ fn state(reqs: &[Request], flags: AblationFlags, pool: bool) -> SimState {
 }
 
 fn check(st: &SimState, at: &str) {
-    st.index
-        .validate(&st.replicas, &st.groups, &st.reqs)
+    st.validate_index()
         .unwrap_or_else(|e| panic!("index diverged {at}: {e}"));
+}
+
+/// Step one popped event through the matching mechanical handler.
+fn handle(st: &mut SimState, kind: pecsched::sim::EventKind) {
+    use pecsched::sim::EventKind::*;
+    match kind {
+        Arrival(_) => {}
+        ShortPrefillDone { rid, req, gen } => {
+            st.on_short_prefill_done(rid, req, gen);
+        }
+        MigrationDone { req, rid } => {
+            st.on_migration_done(req, rid);
+        }
+        DecodeRound { rid, gen } => {
+            st.on_decode_round(rid, gen);
+        }
+        DecodeEpoch { rid, gen } => {
+            st.on_decode_epoch(rid, gen);
+        }
+        LongPrefillDone { gid, gen } => {
+            st.on_long_prefill_done(gid, gen);
+        }
+        LongDecodeRound { gid, gen } => {
+            st.on_long_decode_round(gid, gen);
+        }
+        LongDecodeEpoch { gid, gen } => {
+            st.on_long_decode_epoch(gid, gen);
+        }
+    }
 }
 
 #[test]
@@ -55,7 +85,7 @@ fn placement_and_prefill_lifecycle_keep_index_current() {
     let reqs: Vec<Request> = (0..6).map(|i| short(i, 0.0, 800 + 10 * i as u32, 8)).collect();
     let mut st = state(&reqs, AblationFlags::full(), true);
     for _ in 0..6 {
-        st.queue.pop();
+        st.next_event();
     }
     for i in 0..6 {
         st.enqueue_short_prefill(i % 3, i);
@@ -64,27 +94,11 @@ fn placement_and_prefill_lifecycle_keep_index_current() {
     // Replicas 0-2 hold work; the idle pick skips them.
     assert_eq!(st.pick_idle_ordinary(), Some(3));
     // Drain everything; the index must stay consistent at each event.
-    while let Some(ev) = st.queue.pop() {
-        st.now = ev.time.max(st.now);
-        use pecsched::sim::EventKind::*;
-        match ev.kind {
-            ShortPrefillDone { rid, req, gen } => {
-                st.on_short_prefill_done(rid, req, gen);
-            }
-            MigrationDone { req, rid } => {
-                st.on_migration_done(req, rid);
-            }
-            DecodeRound { rid, gen } => {
-                st.on_decode_round(rid, gen);
-            }
-            DecodeEpoch { rid, gen } => {
-                st.on_decode_epoch(rid, gen);
-            }
-            _ => {}
-        }
+    while let Some(ev) = st.next_event() {
+        handle(&mut st, ev.kind);
         check(&st, "mid-drain");
     }
-    assert_eq!(st.shorts_done, 6);
+    assert_eq!(st.shorts_done(), 6);
     assert_eq!(st.pick_idle_ordinary(), Some(0), "all idle again");
 }
 
@@ -97,7 +111,7 @@ fn long_group_displacement_and_release_reindex_members() {
     ];
     let mut st = state(&reqs, AblationFlags::full(), true);
     for _ in 0..3 {
-        st.queue.pop();
+        st.next_event();
     }
     st.enqueue_short_prefill(0, 0);
     st.enqueue_short_prefill(0, 1);
@@ -111,37 +125,11 @@ fn long_group_displacement_and_release_reindex_members() {
         assert!(rid >= n, "member {rid} still indexed as long-free");
     }
     // Drain to completion; release must return members to the index.
-    while let Some(ev) = st.queue.pop() {
-        st.now = ev.time.max(st.now);
-        use pecsched::sim::EventKind::*;
-        match ev.kind {
-            ShortPrefillDone { rid, req, gen } => {
-                st.on_short_prefill_done(rid, req, gen);
-            }
-            MigrationDone { req, rid } => {
-                st.on_migration_done(req, rid);
-            }
-            DecodeRound { rid, gen } => {
-                st.on_decode_round(rid, gen);
-            }
-            DecodeEpoch { rid, gen } => {
-                st.on_decode_epoch(rid, gen);
-            }
-            LongPrefillDone { gid, gen } => {
-                st.on_long_prefill_done(gid, gen);
-                check(&st, "after long prefill done (members → coloc)");
-            }
-            LongDecodeRound { gid, gen } => {
-                st.on_long_decode_round(gid, gen);
-            }
-            LongDecodeEpoch { gid, gen } => {
-                st.on_long_decode_epoch(gid, gen);
-            }
-            _ => {}
-        }
+    while let Some(ev) = st.next_event() {
+        handle(&mut st, ev.kind);
         check(&st, "mid-drain");
     }
-    assert_eq!(st.longs_done, 1);
+    assert_eq!(st.longs_done(), 1);
     assert_eq!(st.pick_idle_ordinary(), Some(0), "members released");
 }
 
@@ -149,89 +137,51 @@ fn long_group_displacement_and_release_reindex_members() {
 fn preemption_pause_resume_keeps_index_current() {
     let reqs = [long(0, 0.0, 200_000, 8), short(1, 0.0, 1500, 8)];
     let mut st = state(&reqs, AblationFlags::full(), true);
-    st.queue.pop();
-    st.queue.pop();
+    st.next_event();
+    st.next_event();
     let n = st.replicas_needed(200_000);
     let plan = st.plan_for_long(200_000, n);
     st.start_long_group(0, (0..n).collect(), plan);
     check(&st, "after group start");
     // The short preempts member 0 (§5.1).
     st.enqueue_short_prefill(0, 1);
-    assert_eq!(st.preemptions, 1);
+    assert_eq!(st.preemptions(), 1);
     check(&st, "after preemption pause");
     // Member 0 now has prefill load; the preemption walk must see it.
     let got = st.pick_preemptable(|st, rid| {
         // Suspended prefill members all accept shorts.
-        st.replicas[rid].long_group.is_some()
-            && matches!(
-                st.groups[st.replicas[rid].long_group.unwrap()]
-                    .as_ref()
-                    .unwrap()
-                    .phase,
-                LongPhase::Prefill { running: false, .. }
-            )
+        st.replica(rid)
+            .long_group()
+            .and_then(|gid| st.group(gid))
+            .map(|g| matches!(g.phase(), LongPhase::Prefill { running: false, .. }))
+            .unwrap_or(false)
     });
     assert!(got.is_some());
     assert_ne!(got, Some(0), "member 0 carries the preempting load");
     // Drain; resume and completion keep the index in lockstep.
-    while let Some(ev) = st.queue.pop() {
-        st.now = ev.time.max(st.now);
-        use pecsched::sim::EventKind::*;
-        match ev.kind {
-            ShortPrefillDone { rid, req, gen } => {
-                st.on_short_prefill_done(rid, req, gen);
-            }
-            MigrationDone { req, rid } => {
-                st.on_migration_done(req, rid);
-            }
-            DecodeRound { rid, gen } => {
-                st.on_decode_round(rid, gen);
-            }
-            DecodeEpoch { rid, gen } => {
-                st.on_decode_epoch(rid, gen);
-            }
-            LongPrefillDone { gid, gen } => {
-                st.on_long_prefill_done(gid, gen);
-            }
-            LongDecodeRound { gid, gen } => {
-                st.on_long_decode_round(gid, gen);
-            }
-            LongDecodeEpoch { gid, gen } => {
-                st.on_long_decode_epoch(gid, gen);
-            }
-            _ => {}
-        }
+    while let Some(ev) = st.next_event() {
+        handle(&mut st, ev.kind);
         check(&st, "mid-drain");
     }
-    assert_eq!(st.shorts_done + st.longs_done, 2);
+    assert_eq!(st.shorts_done() + st.longs_done(), 2);
 }
 
 #[test]
 fn colocation_charge_and_release_rekey_candidates() {
     let reqs = [long(0, 0.0, 150_000, 400), short(1, 2.0, 1000, 4)];
     let mut st = state(&reqs, AblationFlags::full(), true);
-    st.queue.pop();
-    st.queue.pop();
+    st.next_event();
+    st.next_event();
     let n = st.replicas_needed(150_000);
     let plan = st.plan_for_long(150_000, n);
     st.start_long_group(0, (0..n).collect(), plan);
     // Run until the long decodes: members become colocation candidates.
-    while st.pick_coloc_candidate(1000, st.params.colocate_max_tokens as u64).is_none() {
-        let ev = st.queue.pop().expect("long must reach decode");
-        st.now = ev.time.max(st.now);
-        use pecsched::sim::EventKind::*;
-        match ev.kind {
-            LongPrefillDone { gid, gen } => {
-                st.on_long_prefill_done(gid, gen);
-            }
-            LongDecodeRound { gid, gen } => {
-                st.on_long_decode_round(gid, gen);
-            }
-            LongDecodeEpoch { gid, gen } => {
-                st.on_long_decode_epoch(gid, gen);
-            }
-            _ => {}
-        }
+    while st
+        .pick_coloc_candidate(1000, st.params().colocate_max_tokens as u64)
+        .is_none()
+    {
+        let ev = st.next_event().expect("long must reach decode");
+        handle(&mut st, ev.kind);
         check(&st, "while waiting for decode phase");
     }
     // Lightest budget = smallest id among members.
@@ -245,34 +195,9 @@ fn colocation_charge_and_release_rekey_candidates() {
     st.enqueue_short_prefill(0, 1);
     check(&st, "after colocated enqueue");
     // Finishing the short's prefill releases the budget and rekeys.
-    while st.replicas[0].colocated_tokens > 0 {
-        let ev = st.queue.pop().expect("short prefill must finish");
-        st.now = ev.time.max(st.now);
-        use pecsched::sim::EventKind::*;
-        match ev.kind {
-            ShortPrefillDone { rid, req, gen } => {
-                st.on_short_prefill_done(rid, req, gen);
-            }
-            MigrationDone { req, rid } => {
-                st.on_migration_done(req, rid);
-            }
-            DecodeRound { rid, gen } => {
-                st.on_decode_round(rid, gen);
-            }
-            DecodeEpoch { rid, gen } => {
-                st.on_decode_epoch(rid, gen);
-            }
-            LongPrefillDone { gid, gen } => {
-                st.on_long_prefill_done(gid, gen);
-            }
-            LongDecodeRound { gid, gen } => {
-                st.on_long_decode_round(gid, gen);
-            }
-            LongDecodeEpoch { gid, gen } => {
-                st.on_long_decode_epoch(gid, gen);
-            }
-            _ => {}
-        }
+    while st.replica(0).colocated_tokens() > 0 {
+        let ev = st.next_event().expect("short prefill must finish");
+        handle(&mut st, ev.kind);
         check(&st, "while draining colocated short");
     }
     assert_eq!(st.pick_coloc_candidate(1000, 2048), Some(0), "budget released");
@@ -282,8 +207,8 @@ fn colocation_charge_and_release_rekey_candidates() {
 fn replica_down_and_recovery_reindex() {
     let reqs = [short(0, 0.0, 1000, 8), short(1, 0.0, 900, 8)];
     let mut st = state(&reqs, AblationFlags::full(), true);
-    st.queue.pop();
-    st.queue.pop();
+    st.next_event();
+    st.next_event();
     st.enqueue_short_prefill(0, 0);
     st.enqueue_short_prefill(0, 1);
     let displaced = st.fail_replica(0);
@@ -296,15 +221,15 @@ fn replica_down_and_recovery_reindex() {
     st.recover_replica(0);
     check(&st, "after recovery");
     assert_eq!(st.pick_idle_ordinary(), Some(0), "recovered replica indexed");
-    assert_eq!(st.reqs[0].phase, ReqPhase::Queued);
+    assert_eq!(st.request(0).phase, ReqPhase::Queued);
 }
 
 #[test]
 fn decode_pool_failure_reroutes_and_reindexes() {
     let reqs = [short(0, 0.0, 1000, 16)];
     let mut st = state(&reqs, AblationFlags::full(), true);
-    st.queue.pop();
-    let pool = st.decode_pool.clone();
+    st.next_event();
+    let pool = st.decode_pool().to_vec();
     assert!(!pool.is_empty());
     let first = st.least_loaded_decode().unwrap();
     st.fail_replica(first);
@@ -313,7 +238,7 @@ fn decode_pool_failure_reroutes_and_reindexes() {
     // Fail the whole pool: the indexed pick must go empty (local decode
     // fallback), exactly like the naive scan.
     for rid in pool {
-        if !st.replicas[rid].down {
+        if !st.replica(rid).is_down() {
             st.fail_replica(rid);
         }
     }
@@ -337,9 +262,8 @@ fn reservation_partition_survives_a_full_run() {
     let cfg = SimConfig::baseline(ModelSpec::mistral_7b());
     let mut sim = Simulation::new(cfg, &trace, PolicyKind::Reservation);
     let m = sim.run_with_hook(|st, _| {
-        st.index
-            .validate(&st.replicas, &st.groups, &st.reqs)
-            .unwrap_or_else(|e| panic!("index diverged at t={}: {e}", st.now));
+        st.validate_index()
+            .unwrap_or_else(|e| panic!("index diverged at t={}: {e}", st.now()));
     });
     assert_eq!(m.shorts_completed + m.longs_completed, trace.len());
 }

@@ -124,11 +124,9 @@ fn prop_indexed_placement_matches_scan_oracle() {
         let cfg = SimConfig::for_policy(model.clone(), kind);
         let mut sim = Simulation::new(cfg, &trace, kind);
         let m = sim.run_with_hook(|st, _policy| {
-            st.index
-                .validate(&st.replicas, &st.groups, &st.reqs)
-                .unwrap_or_else(|e| {
-                    panic!("case {case}: index diverged at t={}: {e}", st.now)
-                });
+            st.validate_index().unwrap_or_else(|e| {
+                panic!("case {case}: index diverged at t={}: {e}", st.now())
+            });
         });
         assert_eq!(
             m.shorts_completed + m.longs_completed,
@@ -173,7 +171,7 @@ fn prop_epoch_replay_matches_per_round_oracle() {
             trace.len(),
             "case {case}: oracle lost requests"
         );
-        for (a, b) in round.state.reqs.iter().zip(epoch.state.reqs.iter()) {
+        for (a, b) in round.state.requests().iter().zip(epoch.state.requests().iter()) {
             assert_eq!(
                 a.prefill_start.map(f64::to_bits),
                 b.prefill_start.map(f64::to_bits),
@@ -220,8 +218,10 @@ fn prop_choose_group_fast_matches_scan() {
         let mut model = ModelSpec::mistral_7b();
         model.tp = tp;
         let nodes = 1 + rng.below(12);
-        let mut cluster = ClusterSpec::default();
-        cluster.nodes = nodes;
+        let cluster = ClusterSpec {
+            nodes,
+            ..ClusterSpec::default()
+        };
         let topo = Topology::build(&cluster, &model);
         let nr = topo.n_replicas();
         let density = [0.0, 0.2, 0.6, 1.0][rng.below(4)];

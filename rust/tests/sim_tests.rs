@@ -25,6 +25,9 @@ fn run(model: ModelSpec, kind: PolicyKind, trace: &Trace) -> pecsched::metrics::
 fn all_policies() -> Vec<PolicyKind> {
     let mut v = PolicyKind::comparison_set();
     v.extend(PolicyKind::ablation_set().into_iter().skip(1));
+    // The verb-API-only policy rides every conservation/sanity property
+    // too — it must behave like a first-class registry citizen.
+    v.push(PolicyKind::Sjf);
     v
 }
 
