@@ -1,0 +1,84 @@
+//! `pallas-lint` — the repo-invariant static-analysis pass (DESIGN.md §5).
+//!
+//! Scans `rust/src/**` and enforces the determinism / boundary /
+//! exhaustiveness / panic-freedom rule table in [`pecsched::lint`].
+//! Prints one `file:line:rule` diagnostic per unjustified finding and
+//! exits nonzero when any exist, so CI (`invariant-lint` job) and local
+//! `cargo run --bin pallas-lint` agree byte-for-byte.
+//!
+//! Usage: `pallas-lint [--root <dir>] [--out <report-path>]`
+//!   --root   source tree to scan (default: `rust/src`, resolved against
+//!            the crate root so it works from any cwd)
+//!   --out    also write the full report (unjustified findings + the
+//!            justified allowlist) to this path (default: LINT_report.txt)
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use pecsched::lint;
+
+fn main() -> ExitCode {
+    let mut root: Option<PathBuf> = None;
+    let mut out_path = PathBuf::from("LINT_report.txt");
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--root" => match args.next() {
+                Some(v) => root = Some(PathBuf::from(v)),
+                None => return usage("--root needs a directory"),
+            },
+            "--out" => match args.next() {
+                Some(v) => out_path = PathBuf::from(v),
+                None => return usage("--out needs a path"),
+            },
+            "--help" | "-h" => {
+                println!("usage: pallas-lint [--root <dir>] [--out <report-path>]");
+                return ExitCode::SUCCESS;
+            }
+            other => return usage(&format!("unknown argument `{other}`")),
+        }
+    }
+    let root = root.unwrap_or_else(default_root);
+    if !root.is_dir() {
+        eprintln!("pallas-lint: source root {} is not a directory", root.display());
+        return ExitCode::from(2);
+    }
+
+    let findings = match lint::lint_tree(&root) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("pallas-lint: scan failed under {}: {e}", root.display());
+            return ExitCode::from(2);
+        }
+    };
+    let report = lint::render_report(&findings);
+    print!("{report}");
+    if let Err(e) = std::fs::write(&out_path, &report) {
+        eprintln!("pallas-lint: cannot write {}: {e}", out_path.display());
+        return ExitCode::from(2);
+    }
+
+    if lint::unjustified(&findings).is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}
+
+/// `rust/src` next to this crate's `Cargo.toml`, falling back to the
+/// relative path when the build-time location no longer exists (e.g. a
+/// binary copied to another machine, run from the repo root).
+fn default_root() -> PathBuf {
+    let baked = PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/rust/src"));
+    if baked.is_dir() {
+        baked
+    } else {
+        PathBuf::from("rust/src")
+    }
+}
+
+fn usage(err: &str) -> ExitCode {
+    eprintln!("pallas-lint: {err}");
+    eprintln!("usage: pallas-lint [--root <dir>] [--out <report-path>]");
+    ExitCode::from(2)
+}

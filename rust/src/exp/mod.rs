@@ -8,7 +8,7 @@
 
 pub mod sweep;
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::config::{ModelSpec, PolicyKind};
@@ -101,10 +101,13 @@ pub fn sustainable_rps(model: &ModelSpec) -> f64 {
     // missed the cache ran the full calibration redundantly (and two
     // models could not calibrate concurrently if we simply held the map
     // lock across the bisection).
-    static CACHE: OnceLock<Mutex<HashMap<String, Arc<OnceLock<f64>>>>> = OnceLock::new();
+    // (BTreeMap, not HashMap-by-habit: the cache is lookup-only so order
+    // never leaks, but the D1 lint keeps sim-time modules uniformly free
+    // of order-nondeterministic maps.)
+    static CACHE: OnceLock<Mutex<BTreeMap<String, Arc<OnceLock<f64>>>>> = OnceLock::new();
     let slot = {
         let mut map = CACHE
-            .get_or_init(|| Mutex::new(HashMap::new()))
+            .get_or_init(|| Mutex::new(BTreeMap::new()))
             .lock()
             .unwrap();
         map.entry(model.name.clone()).or_default().clone()

@@ -17,7 +17,7 @@
 //! may differ by a ULP, so cross-host byte equality is expected in
 //! practice but not contractual.)
 
-use std::collections::{BTreeMap, HashMap};
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
@@ -274,11 +274,13 @@ pub struct AggregateRow {
 
 /// Group results by everything except the seed (first-seen order — which
 /// is grid order, hence deterministic) and aggregate each group. A
-/// `HashMap` index beside the first-seen `Vec` keeps the grouping O(cells)
-/// on huge grids without touching the deterministic output order.
+/// `BTreeMap` index beside the first-seen `Vec` keeps the grouping
+/// O(cells · log cells) on huge grids; the index is lookup-only, so the
+/// deterministic output order comes from the first-seen `Vec` alone (and
+/// the D1 lint keeps order-nondeterministic maps out of this path).
 pub fn aggregate(results: &[CellResult]) -> Vec<AggregateRow> {
     type Key = (String, String, String, u64, usize);
-    let mut index: HashMap<Key, usize> = HashMap::new();
+    let mut index: BTreeMap<Key, usize> = BTreeMap::new();
     let mut keys: Vec<Key> = Vec::new();
     let mut groups: Vec<Vec<RunSummary>> = Vec::new();
     for r in results {

@@ -34,11 +34,21 @@
     clippy::collapsible_if,
     clippy::collapsible_else_if
 )]
+// Crate hardening (PR 6): the simulator is pure safe Rust — any future
+// `unsafe` must arrive as a deliberate, reviewed exception to this line —
+// and every public type is debuggable (test failures and policy traces
+// print states, not opaque handles).
+#![forbid(unsafe_code)]
+#![warn(missing_debug_implementations)]
 
 pub mod cluster;
 pub mod config;
 pub mod costmodel;
 pub mod exp;
+// The static-analysis pass behind the `pallas-lint` binary and the CI
+// `invariant-lint` job (DESIGN.md §5).
+#[warn(missing_docs)]
+pub mod lint;
 pub mod metrics;
 pub mod runtime;
 pub mod scenario;

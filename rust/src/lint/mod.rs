@@ -1,0 +1,884 @@
+//! `pallas-lint`: the repo-invariant static-analysis pass (DESIGN.md §5).
+//!
+//! The simulator's two hard-won contracts — byte-identical `SWEEP_*.json`
+//! across thread counts, and the [`crate::sim::ClusterView`] /
+//! [`crate::sim::ClusterOps`] capability boundary — are behavioural: a
+//! single `HashMap` iteration, wall-clock read, or `sched/`-side import of
+//! simulator internals silently reintroduces nondeterminism or boundary
+//! leakage, and only shows up as a flaky CI sweep-diff PRs later. This
+//! module makes those contracts *lexical*: a comment/string-stripping
+//! scanner ([`scan`]) feeds a declarative rule table, and the
+//! `pallas-lint` binary (plus `rust/tests/lint_tests.rs` and the CI
+//! `invariant-lint` job) fails on any unjustified finding.
+//!
+//! The rules:
+//!
+//! * [`Rule::DetCollections`] / [`Rule::DetWallclock`] /
+//!   [`Rule::DetEntropy`] — **determinism (D1)**: no `HashMap`/`HashSet`,
+//!   no `Instant::now`/`SystemTime`, no OS-entropy inside the
+//!   simulated-time modules (`sim/`, `sched/`, `scenario/`, `trace/`,
+//!   `exp/`, `metrics/`, `util/`).
+//! * [`Rule::BoundaryImport`] / [`Rule::BoundaryPubField`] — **boundary
+//!   (D2)**: `sched/` may name only the view/ops surface of `sim`, and the
+//!   simulator core types carry no plain-`pub` fields.
+//! * [`Rule::MatchWildcard`] — **exhaustiveness (D3)**: no `_ =>` arms in
+//!   matches over the event/policy/verb-outcome enums, so adding a
+//!   variant forces every dispatch site to be revisited.
+//! * [`Rule::HotPathPanic`] — **panic-freedom (D4)**: no
+//!   `.unwrap()`/`.expect()`/`panic!` in non-test `sim/` code.
+//! * [`Rule::BadAllow`] — the escape hatch polices itself: a malformed or
+//!   unused `// pallas-lint: allow(…) -- reason` comment is a finding.
+//!
+//! Escape hatch: `// pallas-lint: allow(<rule>) -- <reason>` on the
+//! offending line (or the line above it) downgrades the finding to
+//! *justified*; the reason is mandatory and is carried into the report.
+
+pub mod scan;
+
+use std::fmt;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+use scan::{has_token, parse_allows, CleanSource};
+
+/// Top-level modules whose code runs (or feeds) simulated time — the D1
+/// determinism rules apply here. `util/` is included because its RNG and
+/// JSON rendering sit on the deterministic path; its bench timer is the
+/// one legitimate wall-clock user and carries justified allows.
+const SIM_TIME_MODULES: &[&str] = &[
+    "sim", "sched", "scenario", "trace", "exp", "metrics", "util",
+];
+
+/// The `sim` items `sched/` is allowed to name: the typed view/ops
+/// surface (queries, verbs, outcome enums) — nothing that reaches the
+/// simulator's internals. Keep in sync with DESIGN.md §3/§5.
+const ALLOWED_SIM_IMPORTS: &[&str] = &[
+    "ClusterOps",
+    "ClusterView",
+    "LongEligibility",
+    "LongOccupancy",
+    "Veto",
+    "PrefillOutcome",
+    "LongStartOutcome",
+    "PreemptOutcome",
+    "AdmitOutcome",
+    "MigrateOutcome",
+    "RequeueOutcome",
+];
+
+/// Structs that must expose no plain-`pub` field (the boundary is module
+/// visibility: `pub(super)` keeps them invisible to `sched/`).
+const PROTECTED_STRUCTS: &[&str] = &["SimState", "ReplicaRt", "LongGroup"];
+
+/// Enums whose `match` sites must stay exhaustive (no `_ =>`): the event
+/// vocabulary, the policy registry, and the verb-outcome enums.
+const TRACKED_ENUMS: &[&str] = &[
+    "EventKind",
+    "PolicyKind",
+    "Veto",
+    "PrefillOutcome",
+    "LongStartOutcome",
+    "PreemptOutcome",
+    "AdmitOutcome",
+    "MigrateOutcome",
+    "RequeueOutcome",
+];
+
+/// One invariant the lint enforces. `id()` is the name used in
+/// diagnostics and in `allow(…)` comments.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Rule {
+    /// `HashMap`/`HashSet` named in a simulated-time module.
+    DetCollections,
+    /// `Instant::now`/`SystemTime` read in a simulated-time module.
+    DetWallclock,
+    /// OS-entropy source named in a simulated-time module.
+    DetEntropy,
+    /// `sched/` naming a `sim` item outside the view/ops surface.
+    BoundaryImport,
+    /// Plain-`pub` field on a protected simulator-core struct.
+    BoundaryPubField,
+    /// `_ =>` arm in a match over a tracked enum.
+    MatchWildcard,
+    /// `.unwrap()`/`.expect()`/`panic!`-family in non-test `sim/` code.
+    HotPathPanic,
+    /// Malformed or unused `pallas-lint: allow` directive.
+    BadAllow,
+}
+
+impl Rule {
+    /// The diagnostic / `allow(…)` name.
+    pub fn id(self) -> &'static str {
+        match self {
+            Rule::DetCollections => "det-collections",
+            Rule::DetWallclock => "det-wallclock",
+            Rule::DetEntropy => "det-entropy",
+            Rule::BoundaryImport => "boundary-import",
+            Rule::BoundaryPubField => "boundary-pub-field",
+            Rule::MatchWildcard => "match-wildcard",
+            Rule::HotPathPanic => "hot-path-panic",
+            Rule::BadAllow => "bad-allow",
+        }
+    }
+
+    /// Parse an `allow(…)` rule name.
+    pub fn from_id(s: &str) -> Option<Rule> {
+        Rule::all().into_iter().find(|r| r.id() == s)
+    }
+
+    /// Every rule, in report order.
+    pub fn all() -> [Rule; 8] {
+        [
+            Rule::DetCollections,
+            Rule::DetWallclock,
+            Rule::DetEntropy,
+            Rule::BoundaryImport,
+            Rule::BoundaryPubField,
+            Rule::MatchWildcard,
+            Rule::HotPathPanic,
+            Rule::BadAllow,
+        ]
+    }
+}
+
+impl fmt::Display for Rule {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.id())
+    }
+}
+
+/// One diagnostic: where, which rule, why — and the justification when an
+/// allow directive covers it.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    /// Path as given to [`lint_source`] (repo-relative from [`lint_tree`]).
+    pub file: String,
+    /// 1-based line.
+    pub line: usize,
+    /// The rule that fired.
+    pub rule: Rule,
+    /// Human-readable description of the violation.
+    pub message: String,
+    /// The allow-comment reason, when one covers this finding.
+    pub justification: Option<String>,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:{}:{}: {}",
+            self.file,
+            self.line,
+            self.rule.id(),
+            self.message
+        )?;
+        if let Some(r) = &self.justification {
+            write!(f, " [allowed: {r}]")?;
+        }
+        Ok(())
+    }
+}
+
+/// The findings that make the lint fail (no justification attached).
+pub fn unjustified(findings: &[Finding]) -> Vec<&Finding> {
+    findings
+        .iter()
+        .filter(|f| f.justification.is_none())
+        .collect()
+}
+
+/// Lint one file's source text. `relpath` is the path relative to
+/// `rust/src` (it selects which module-scoped rules apply) and is copied
+/// verbatim into the findings.
+pub fn lint_source(relpath: &str, src: &str) -> Vec<Finding> {
+    let scanned = CleanSource::new(src);
+    let module = module_of(relpath);
+    let mut findings = Vec::new();
+
+    if SIM_TIME_MODULES.contains(&module) {
+        determinism_rules(relpath, &scanned, &mut findings);
+    }
+    if module == "sim" {
+        hot_path_rule(relpath, &scanned, &mut findings);
+        pub_field_rule(relpath, &scanned, &mut findings);
+    }
+    if module == "sched" {
+        boundary_import_rule(relpath, &scanned, &mut findings);
+    }
+    match_wildcard_rule(relpath, &scanned, &mut findings);
+
+    apply_allows(relpath, &scanned, &mut findings);
+    findings.sort_by_key(|f| (f.line, f.rule));
+    findings
+}
+
+/// Lint every `.rs` file under `root` (normally `rust/src`). Findings
+/// carry paths relative to `root`, in sorted order.
+pub fn lint_tree(root: &Path) -> io::Result<Vec<Finding>> {
+    let mut files = Vec::new();
+    collect_rs_files(root, &mut files)?;
+    files.sort();
+    let mut findings = Vec::new();
+    for path in files {
+        let src = fs::read_to_string(&path)?;
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(&path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        findings.extend(lint_source(&rel, &src));
+    }
+    Ok(findings)
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    for entry in fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs_files(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Render the machine-readable report: every unjustified finding as
+/// `file:line:rule`, then the justified allowlist, then a summary line.
+pub fn render_report(findings: &[Finding]) -> String {
+    let mut out = String::new();
+    let bad = unjustified(findings);
+    for f in &bad {
+        out.push_str(&f.to_string());
+        out.push('\n');
+    }
+    let allowed: Vec<&Finding> = findings
+        .iter()
+        .filter(|f| f.justification.is_some())
+        .collect();
+    if !allowed.is_empty() {
+        out.push_str("# justified allows:\n");
+        for f in allowed {
+            out.push_str(&format!("#   {f}\n"));
+        }
+    }
+    out.push_str(&format!(
+        "# pallas-lint: {} unjustified finding(s), {} justified\n",
+        bad.len(),
+        findings.len() - bad.len()
+    ));
+    out
+}
+
+/// First path segment of `relpath` when it is a directory (the top-level
+/// module), `""` for root files like `main.rs` / `lib.rs`.
+fn module_of(relpath: &str) -> &str {
+    match relpath.find('/') {
+        Some(i) => &relpath[..i],
+        None => "",
+    }
+}
+
+fn push(
+    findings: &mut Vec<Finding>,
+    file: &str,
+    line: usize,
+    rule: Rule,
+    message: String,
+) {
+    findings.push(Finding {
+        file: file.to_string(),
+        line,
+        rule,
+        message,
+        justification: None,
+    });
+}
+
+/// D1: nondeterministic collections, wall-clock reads, OS entropy.
+fn determinism_rules(file: &str, s: &CleanSource, findings: &mut Vec<Finding>) {
+    for (i, code) in s.code.iter().enumerate() {
+        if s.test_scope[i] {
+            continue;
+        }
+        for t in ["HashMap", "HashSet"] {
+            if has_token(code, t) {
+                push(
+                    findings,
+                    file,
+                    i + 1,
+                    Rule::DetCollections,
+                    format!("`{t}` in a simulated-time module (iteration order is nondeterministic; use BTreeMap/BTreeSet)"),
+                );
+            }
+        }
+        for t in ["Instant::now", "SystemTime"] {
+            if has_token(code, t) {
+                push(
+                    findings,
+                    file,
+                    i + 1,
+                    Rule::DetWallclock,
+                    format!("`{t}` in a simulated-time module (wall clock must never feed simulated time)"),
+                );
+            }
+        }
+        for t in ["thread_rng", "OsRng", "RandomState", "from_entropy", "getrandom"] {
+            if has_token(code, t) {
+                push(
+                    findings,
+                    file,
+                    i + 1,
+                    Rule::DetEntropy,
+                    format!("`{t}` in a simulated-time module (OS entropy breaks replayability; use util::Rng with a fixed seed)"),
+                );
+            }
+        }
+    }
+}
+
+/// D4: panicking constructs in non-test `sim/` code.
+fn hot_path_rule(file: &str, s: &CleanSource, findings: &mut Vec<Finding>) {
+    const PANICS: &[&str] = &[
+        ".unwrap()",
+        ".expect(",
+        "panic!",
+        "unreachable!",
+        "todo!",
+        "unimplemented!",
+    ];
+    for (i, code) in s.code.iter().enumerate() {
+        if s.test_scope[i] {
+            continue;
+        }
+        for t in PANICS {
+            if code.contains(t) {
+                push(
+                    findings,
+                    file,
+                    i + 1,
+                    Rule::HotPathPanic,
+                    format!("`{t}` on the simulator hot path (restructure with let-else/Option, or justify)"),
+                );
+            }
+        }
+    }
+}
+
+/// D2a: `sched/` may only name the view/ops surface of `sim`.
+fn boundary_import_rule(file: &str, s: &CleanSource, findings: &mut Vec<Finding>) {
+    let (full, line_starts) = join_code(s);
+    for prefix in ["crate::sim::", "pecsched::sim::"] {
+        let mut from = 0;
+        while let Some(p) = full[from..].find(prefix) {
+            let at = from + p;
+            from = at + prefix.len();
+            let rest = &full[at + prefix.len()..];
+            if rest.starts_with('{') {
+                // A `use` group: check each entry's leading identifier
+                // (`as` renames and nested paths resolve by first word).
+                let mut depth = 0i64;
+                let mut ident = String::new();
+                let mut ident_pos = at + prefix.len();
+                let mut frozen = false;
+                for (off, c) in rest.char_indices() {
+                    match c {
+                        '{' => {
+                            depth += 1;
+                            frozen = false;
+                        }
+                        '}' | ',' => {
+                            check_sim_ident(
+                                file,
+                                &ident,
+                                line_of(&line_starts, ident_pos),
+                                findings,
+                            );
+                            ident.clear();
+                            frozen = false;
+                            if c == '}' {
+                                depth -= 1;
+                                if depth == 0 {
+                                    break;
+                                }
+                            }
+                        }
+                        c if scan::is_ident_char(c) || c == ':' || c == '*' => {
+                            if !frozen {
+                                if ident.is_empty() {
+                                    ident_pos = at + prefix.len() + off;
+                                }
+                                ident.push(c);
+                            }
+                        }
+                        c if c.is_whitespace() => {
+                            if !ident.is_empty() {
+                                frozen = true;
+                            }
+                        }
+                        _ => {}
+                    }
+                }
+            } else if rest.starts_with('*') {
+                push(
+                    findings,
+                    file,
+                    line_of(&line_starts, at),
+                    Rule::BoundaryImport,
+                    "`sched/` glob-imports `sim::*` — import the view/ops surface explicitly".to_string(),
+                );
+            } else {
+                let ident: String = rest
+                    .chars()
+                    .take_while(|&c| scan::is_ident_char(c))
+                    .collect();
+                check_sim_ident(file, &ident, line_of(&line_starts, at), findings);
+            }
+        }
+    }
+}
+
+fn check_sim_ident(
+    file: &str,
+    raw: &str,
+    line: usize,
+    findings: &mut Vec<Finding>,
+) {
+    // `ops::Veto`-style entries resolve by their first segment.
+    let ident = raw.split(':').next().unwrap_or("").trim();
+    if ident.is_empty() || ident == "self" {
+        return;
+    }
+    if !ALLOWED_SIM_IMPORTS.contains(&ident) {
+        push(
+            findings,
+            file,
+            line,
+            Rule::BoundaryImport,
+            format!("`sched/` names `sim::{ident}` — only the view/ops surface ({}) may cross the policy boundary", ALLOWED_SIM_IMPORTS.join(", ")),
+        );
+    }
+}
+
+/// D2b: protected structs expose no plain-`pub` field.
+fn pub_field_rule(file: &str, s: &CleanSource, findings: &mut Vec<Finding>) {
+    let (full, line_starts) = join_code(s);
+    for name in PROTECTED_STRUCTS {
+        let needle = format!("struct {name}");
+        let mut from = 0;
+        while let Some(p) = full[from..].find(&needle) {
+            let at = from + p;
+            from = at + needle.len();
+            // Token check: `struct SimState` must not match a longer name.
+            let after = at + needle.len();
+            if full[after..]
+                .chars()
+                .next()
+                .is_some_and(scan::is_ident_char)
+            {
+                continue;
+            }
+            let Some(open_off) = full[after..].find('{') else { continue };
+            // A `;` before the brace means this was a tuple/unit struct
+            // or an unrelated use of the word.
+            if full[after..after + open_off].contains(';') {
+                continue;
+            }
+            let body_start = after + open_off + 1;
+            let mut depth = 1i64;
+            let mut line_begin = body_start;
+            let mut line_depth = depth;
+            for (off, c) in full[body_start..].char_indices() {
+                let pos = body_start + off;
+                match c {
+                    '{' | '(' | '[' => depth += 1,
+                    '}' | ')' | ']' => {
+                        depth -= 1;
+                        if depth == 0 {
+                            break;
+                        }
+                    }
+                    '\n' => {
+                        flag_pub_field(
+                            file,
+                            name,
+                            &full[line_begin..pos],
+                            line_depth,
+                            line_of(&line_starts, line_begin),
+                            findings,
+                        );
+                        line_begin = pos + 1;
+                        line_depth = depth;
+                    }
+                    _ => {}
+                }
+            }
+        }
+    }
+}
+
+fn flag_pub_field(
+    file: &str,
+    struct_name: &str,
+    line_code: &str,
+    depth_at_line_start: i64,
+    line: usize,
+    findings: &mut Vec<Finding>,
+) {
+    let t = line_code.trim_start();
+    if depth_at_line_start == 1 && t.starts_with("pub ") {
+        push(
+            findings,
+            file,
+            line,
+            Rule::BoundaryPubField,
+            format!("plain-`pub` field on `{struct_name}` (use `pub(super)`: module visibility is what keeps the policy boundary unbypassable)"),
+        );
+    }
+}
+
+/// D3: `_ =>` arms in matches whose patterns name a tracked enum.
+fn match_wildcard_rule(file: &str, s: &CleanSource, findings: &mut Vec<Finding>) {
+    let (full, line_starts) = join_code(s);
+    let bytes = full.as_bytes();
+    let mut from = 0;
+    while let Some(p) = full[from..].find("match") {
+        let at = from + p;
+        from = at + 5;
+        // Word boundaries: reject `matches!`, `rematch`, etc.
+        let before_ok = at == 0 || !scan::is_ident_char(bytes[at - 1] as char);
+        let after_ok = at + 5 >= full.len() || !scan::is_ident_char(bytes[at + 5] as char);
+        if !before_ok || !after_ok {
+            continue;
+        }
+        if s.test_scope[line_of(&line_starts, at) - 1] {
+            continue;
+        }
+        // Find the body `{`: first brace outside any ()/[] nesting.
+        let mut depth = 0i64;
+        let mut body_start = None;
+        for (off, c) in full[at + 5..].char_indices() {
+            match c {
+                '(' | '[' => depth += 1,
+                ')' | ']' => depth -= 1,
+                '{' if depth == 0 => {
+                    body_start = Some(at + 5 + off + 1);
+                    break;
+                }
+                '{' => depth += 1,
+                '}' => depth -= 1,
+                ';' if depth == 0 => break, // not a match expression after all
+                _ => {}
+            }
+        }
+        let Some(body_start) = body_start else { continue };
+        let (tracked, wildcards) = scan_match_body(&full[body_start..], body_start);
+        if !tracked.is_empty() {
+            for w in wildcards {
+                push(
+                    findings,
+                    file,
+                    line_of(&line_starts, w),
+                    Rule::MatchWildcard,
+                    format!(
+                        "wildcard `_ =>` in a match over {} (enumerate the variants: a new variant must force this site to be revisited)",
+                        tracked.join("/")
+                    ),
+                );
+            }
+        }
+    }
+}
+
+/// Walk a match body (`body` starts just after its `{`; `body_start` is
+/// its byte offset in the joined code, for diagnostics). Returns the
+/// tracked enums named in arm *patterns* and the byte positions of bare
+/// `_` arms.
+fn scan_match_body(body: &str, body_start: usize) -> (Vec<&'static str>, Vec<usize>) {
+    let chars: Vec<char> = body.chars().collect();
+    let mut level = 1i64;
+    let mut i = 0usize;
+    let mut arm_start = 0usize;
+    let mut tracked: Vec<&'static str> = Vec::new();
+    let mut wildcards: Vec<usize> = Vec::new();
+    while i < chars.len() && level > 0 {
+        let c = chars[i];
+        match c {
+            '{' | '(' | '[' => {
+                level += 1;
+                i += 1;
+            }
+            '}' | ')' | ']' => {
+                level -= 1;
+                i += 1;
+            }
+            '=' if level == 1 && chars.get(i + 1) == Some(&'>') => {
+                let pattern: String = chars[arm_start..i].iter().collect();
+                inspect_pattern(
+                    &pattern,
+                    body_start + char_pos_to_byte(&chars, arm_start),
+                    &mut tracked,
+                    &mut wildcards,
+                );
+                i += 2;
+                // Skip the arm body: a `{ … }` block, or up to a `,` at
+                // this level (or the body's closing brace).
+                while i < chars.len() && chars[i].is_whitespace() {
+                    i += 1;
+                }
+                if chars.get(i) == Some(&'{') {
+                    let mut d = 0i64;
+                    while i < chars.len() {
+                        match chars[i] {
+                            '{' | '(' | '[' => d += 1,
+                            '}' | ')' | ']' => {
+                                d -= 1;
+                                if d == 0 {
+                                    i += 1;
+                                    break;
+                                }
+                            }
+                            _ => {}
+                        }
+                        i += 1;
+                    }
+                    if chars.get(i) == Some(&',') {
+                        i += 1;
+                    }
+                } else {
+                    let mut d = 0i64;
+                    while i < chars.len() {
+                        match chars[i] {
+                            '{' | '(' | '[' => d += 1,
+                            '}' | ')' | ']' => {
+                                if d == 0 {
+                                    break; // the body's closing brace
+                                }
+                                d -= 1;
+                            }
+                            ',' if d == 0 => {
+                                i += 1;
+                                break;
+                            }
+                            _ => {}
+                        }
+                        i += 1;
+                    }
+                }
+                arm_start = i;
+            }
+            _ => {
+                i += 1;
+            }
+        }
+    }
+    (tracked, wildcards)
+}
+
+/// Record tracked-enum mentions and bare-`_` shape of one arm pattern.
+fn inspect_pattern(
+    pattern: &str,
+    pattern_pos: usize,
+    tracked: &mut Vec<&'static str>,
+    wildcards: &mut Vec<usize>,
+) {
+    for &e in TRACKED_ENUMS {
+        if has_token(pattern, e) && !tracked.contains(&e) {
+            tracked.push(e);
+        }
+    }
+    let t = pattern.trim();
+    let bare = t == "_"
+        || (t.starts_with('_')
+            && t[1..]
+                .chars()
+                .next()
+                .is_some_and(|c| !scan::is_ident_char(c))
+            && t[1..].trim_start().starts_with("if "));
+    if bare {
+        // Position of the `_` itself: offset of the trimmed start.
+        let lead = pattern.len() - pattern.trim_start().len();
+        wildcards.push(pattern_pos + lead);
+    }
+}
+
+fn char_pos_to_byte(chars: &[char], upto: usize) -> usize {
+    chars[..upto].iter().map(|c| c.len_utf8()).sum()
+}
+
+/// Concatenate the code channel with `\n`, returning byte offsets of each
+/// line start (for position→line mapping).
+fn join_code(s: &CleanSource) -> (String, Vec<usize>) {
+    let mut full = String::new();
+    let mut starts = Vec::with_capacity(s.code.len());
+    for line in &s.code {
+        starts.push(full.len());
+        full.push_str(line);
+        full.push('\n');
+    }
+    (full, starts)
+}
+
+/// 1-based line containing byte offset `pos`.
+fn line_of(line_starts: &[usize], pos: usize) -> usize {
+    match line_starts.binary_search(&pos) {
+        Ok(i) => i + 1,
+        Err(i) => i, // i is the insertion point; the line is i - 1 (0-based)
+    }
+}
+
+/// Attach allow-directive justifications to findings and emit
+/// [`Rule::BadAllow`] for malformed or unused directives.
+fn apply_allows(file: &str, s: &CleanSource, findings: &mut Vec<Finding>) {
+    let directives = parse_allows(s);
+    let mut used = vec![false; directives.len()];
+    for f in findings.iter_mut() {
+        for (di, d) in directives.iter().enumerate() {
+            if d.target == Some(f.line)
+                && d.well_formed
+                && d.reason.is_some()
+                && Rule::from_id(&d.rule_name) == Some(f.rule)
+            {
+                f.justification.clone_from(&d.reason);
+                used[di] = true;
+            }
+        }
+    }
+    for (di, d) in directives.iter().enumerate() {
+        if !d.well_formed {
+            push(
+                findings,
+                file,
+                d.line,
+                Rule::BadAllow,
+                "malformed allow comment: expected `pallas-lint: allow(<rule>) -- <reason>`".to_string(),
+            );
+        } else if Rule::from_id(&d.rule_name).is_none() {
+            push(
+                findings,
+                file,
+                d.line,
+                Rule::BadAllow,
+                format!("allow names unknown rule `{}`", d.rule_name),
+            );
+        } else if d.reason.is_none() {
+            push(
+                findings,
+                file,
+                d.line,
+                Rule::BadAllow,
+                format!("allow({}) has no `-- <reason>`: the justification is mandatory", d.rule_name),
+            );
+        } else if !used[di] {
+            push(
+                findings,
+                file,
+                d.line,
+                Rule::BadAllow,
+                format!("unused allow({}): nothing on its target line fires that rule", d.rule_name),
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn unj_rules(findings: &[Finding]) -> Vec<Rule> {
+        unjustified(findings).iter().map(|f| f.rule).collect()
+    }
+
+    #[test]
+    fn hashmap_flagged_in_sim_scope_only() {
+        let src = "use std::collections::HashMap;\n";
+        assert_eq!(unj_rules(&lint_source("sim/x.rs", src)), vec![Rule::DetCollections]);
+        assert!(unj_rules(&lint_source("server/x.rs", src)).is_empty());
+    }
+
+    #[test]
+    fn comment_mentions_are_not_findings() {
+        let src = "// a HashMap would be wrong here\nlet x = 1;\n";
+        assert!(unj_rules(&lint_source("sim/x.rs", src)).is_empty());
+    }
+
+    #[test]
+    fn justified_allow_downgrades() {
+        let src = "// pallas-lint: allow(det-wallclock) -- host-side digest only\nlet t0 = Instant::now();\n";
+        let f = lint_source("sim/x.rs", src);
+        assert!(unjustified(&f).is_empty());
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].justification.as_deref(), Some("host-side digest only"));
+    }
+
+    #[test]
+    fn allow_without_reason_stays_a_failure() {
+        let src = "// pallas-lint: allow(det-wallclock)\nlet t0 = Instant::now();\n";
+        let f = lint_source("sim/x.rs", src);
+        let r = unj_rules(&f);
+        assert!(r.contains(&Rule::DetWallclock));
+        assert!(r.contains(&Rule::BadAllow));
+    }
+
+    #[test]
+    fn unused_allow_is_flagged() {
+        let src = "// pallas-lint: allow(det-wallclock) -- stale\nlet x = 1;\n";
+        assert_eq!(unj_rules(&lint_source("sim/x.rs", src)), vec![Rule::BadAllow]);
+    }
+
+    #[test]
+    fn wildcard_over_tracked_enum_flagged() {
+        let src = "fn f(k: EventKind) -> u32 {\n    match k {\n        EventKind::Arrival(_) => 1,\n        _ => 0,\n    }\n}\n";
+        let f = lint_source("metrics/x.rs", src);
+        assert_eq!(unj_rules(&f), vec![Rule::MatchWildcard]);
+        assert_eq!(unjustified(&f)[0].line, 4);
+    }
+
+    #[test]
+    fn wildcard_over_untracked_enum_ignored() {
+        let src = "fn f(k: Option<u32>) -> u32 {\n    match k {\n        Some(x) => x,\n        _ => 0,\n    }\n}\n";
+        assert!(unj_rules(&lint_source("metrics/x.rs", src)).is_empty());
+    }
+
+    #[test]
+    fn binding_catchall_is_not_a_wildcard() {
+        let src = "fn f(k: PolicyKind) -> u32 {\n    match k {\n        PolicyKind::Fifo => 1,\n        other => g(other),\n    }\n}\n";
+        assert!(unj_rules(&lint_source("config/x.rs", src)).is_empty());
+    }
+
+    #[test]
+    fn unwrap_flagged_only_in_sim_nontest() {
+        let src = "fn f(x: Option<u32>) -> u32 { x.unwrap() }\n";
+        assert_eq!(unj_rules(&lint_source("sim/x.rs", src)), vec![Rule::HotPathPanic]);
+        assert!(unj_rules(&lint_source("exp/x.rs", src)).is_empty());
+        let test_src = "#[cfg(test)]\nmod tests {\n    fn f(x: Option<u32>) -> u32 { x.unwrap() }\n}\n";
+        assert!(unj_rules(&lint_source("sim/x.rs", test_src)).is_empty());
+    }
+
+    #[test]
+    fn boundary_import_group_checked() {
+        let src = "use crate::sim::{ClusterOps, SimState};\n";
+        let f = lint_source("sched/x.rs", src);
+        assert_eq!(unj_rules(&f), vec![Rule::BoundaryImport]);
+        assert!(unjustified(&f)[0].message.contains("SimState"));
+        let ok = "use crate::sim::{ClusterOps, ClusterView, Veto};\n";
+        assert!(unj_rules(&lint_source("sched/x.rs", ok)).is_empty());
+    }
+
+    #[test]
+    fn pub_field_on_protected_struct_flagged() {
+        let src = "pub struct ReplicaRt {\n    pub down: bool,\n    pub(super) id: usize,\n}\n";
+        let f = lint_source("sim/x.rs", src);
+        assert_eq!(unj_rules(&f), vec![Rule::BoundaryPubField]);
+        assert_eq!(unjustified(&f)[0].line, 2);
+    }
+
+    #[test]
+    fn unprotected_struct_pub_fields_fine() {
+        let src = "pub struct ReqRt {\n    pub phase: u32,\n}\n";
+        assert!(unj_rules(&lint_source("sim/x.rs", src)).is_empty());
+    }
+}

@@ -1,0 +1,423 @@
+//! The scanner behind the lint rules: comment/string stripping, test-scope
+//! detection, and allow-directive parsing.
+//!
+//! [`CleanSource`] reduces a `.rs` file to per-line *code text* — the
+//! source with every comment and every literal's contents blanked — so the
+//! rule matchers in [`crate::lint`] can pattern-match on identifiers without
+//! tripping over a doc comment that merely *mentions* `HashMap`, plus the
+//! per-line *comment text* the allow-directive parser reads. Line numbers
+//! are preserved exactly (diagnostics are `file:line:rule`).
+//!
+//! This is a lexer, not a parser: it understands line comments, nested
+//! block comments, string/char/byte literals, raw strings up to
+//! `r###"…"###`, and the char-literal-versus-lifetime ambiguity — enough
+//! to be exact on this crate, and honest about its limits (see DESIGN.md
+//! §5 on the heuristics rules D2/D3 layer on top).
+
+/// A source file split into parallel per-line channels.
+#[derive(Debug, Clone)]
+pub struct CleanSource {
+    /// Per line: the code with comments removed and literal contents
+    /// blanked (quotes are kept so token boundaries survive).
+    pub code: Vec<String>,
+    /// Per line: the concatenated comment text (line + block comments).
+    pub comments: Vec<String>,
+    /// Per line: true when the line sits inside a `#[cfg(test)]` item —
+    /// test-only code the hot-path rules skip.
+    pub test_scope: Vec<bool>,
+}
+
+impl CleanSource {
+    /// Lex `src` into code/comment channels and mark test-only regions.
+    pub fn new(src: &str) -> Self {
+        let (code, comments) = strip(src);
+        let test_scope = mark_test_scope(&code);
+        Self {
+            code,
+            comments,
+            test_scope,
+        }
+    }
+
+    /// Number of lines.
+    pub fn len(&self) -> usize {
+        self.code.len()
+    }
+
+    /// True when the file has no lines.
+    pub fn is_empty(&self) -> bool {
+        self.code.is_empty()
+    }
+}
+
+/// Split `src` into per-line (code, comment) channels.
+fn strip(src: &str) -> (Vec<String>, Vec<String>) {
+    let chars: Vec<char> = src.chars().collect();
+    let mut code = vec![String::new()];
+    let mut com = vec![String::new()];
+    let newline = |code: &mut Vec<String>, com: &mut Vec<String>| {
+        code.push(String::new());
+        com.push(String::new());
+    };
+    let mut i = 0;
+    while i < chars.len() {
+        let c = chars[i];
+        let next = chars.get(i + 1).copied();
+        if c == '\n' {
+            newline(&mut code, &mut com);
+            i += 1;
+        } else if c == '/' && next == Some('/') {
+            // Line comment: capture to the comment channel up to EOL.
+            i += 2;
+            while i < chars.len() && chars[i] != '\n' {
+                push_last(&mut com, chars[i]);
+                i += 1;
+            }
+        } else if c == '/' && next == Some('*') {
+            // Block comment, nesting-aware.
+            i += 2;
+            let mut depth = 1usize;
+            while i < chars.len() && depth > 0 {
+                if chars[i] == '/' && chars.get(i + 1) == Some(&'*') {
+                    depth += 1;
+                    i += 2;
+                } else if chars[i] == '*' && chars.get(i + 1) == Some(&'/') {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    if chars[i] == '\n' {
+                        newline(&mut code, &mut com);
+                    } else {
+                        push_last(&mut com, chars[i]);
+                    }
+                    i += 1;
+                }
+            }
+        } else if let Some(hashes) = raw_string_start(&chars, i) {
+            // Raw string r"…", r#"…"#, br"…" — skip to the matching close.
+            push_last(&mut code, '"');
+            // Advance past the prefix (r / br + hashes + quote).
+            while i < chars.len() && chars[i] != '"' {
+                i += 1;
+            }
+            i += 1; // the opening quote
+            'raw: while i < chars.len() {
+                if chars[i] == '\n' {
+                    newline(&mut code, &mut com);
+                    i += 1;
+                    continue;
+                }
+                if chars[i] == '"' {
+                    let mut ok = true;
+                    for k in 0..hashes {
+                        if chars.get(i + 1 + k) != Some(&'#') {
+                            ok = false;
+                            break;
+                        }
+                    }
+                    if ok {
+                        i += 1 + hashes;
+                        push_last(&mut code, '"');
+                        break 'raw;
+                    }
+                }
+                i += 1;
+            }
+        } else if c == '"' {
+            // Ordinary (or byte) string: blank the contents.
+            push_last(&mut code, '"');
+            i += 1;
+            while i < chars.len() {
+                if chars[i] == '\\' {
+                    // A `\<newline>` continuation still ends a source
+                    // line — line numbers must stay exact.
+                    if chars.get(i + 1) == Some(&'\n') {
+                        newline(&mut code, &mut com);
+                    }
+                    i += 2;
+                } else if chars[i] == '"' {
+                    push_last(&mut code, '"');
+                    i += 1;
+                    break;
+                } else {
+                    if chars[i] == '\n' {
+                        newline(&mut code, &mut com);
+                    }
+                    i += 1;
+                }
+            }
+        } else if c == '\'' {
+            // Char literal or lifetime. A literal closes with an unescaped
+            // quote within a short window; a lifetime never closes.
+            if let Some(end) = char_literal_end(&chars, i) {
+                push_last(&mut code, '\'');
+                push_last(&mut code, '\'');
+                i = end + 1;
+            } else {
+                push_last(&mut code, '\'');
+                i += 1;
+            }
+        } else {
+            push_last(&mut code, c);
+            i += 1;
+        }
+    }
+    (code, com)
+}
+
+fn push_last(lines: &mut [String], c: char) {
+    if let Some(last) = lines.last_mut() {
+        last.push(c);
+    }
+}
+
+/// Does a raw string literal start at `i`? Returns its hash count.
+/// Recognises `r"`, `r#…#"`, `br"` and `br#…#"`.
+fn raw_string_start(chars: &[char], i: usize) -> Option<usize> {
+    let mut j = i;
+    if chars.get(j) == Some(&'b') {
+        j += 1;
+    }
+    if chars.get(j) != Some(&'r') {
+        return None;
+    }
+    // Only treat as a raw-string prefix when `r`/`br` is not the tail of a
+    // longer identifier (e.g. `var"` is not a raw string).
+    if i > 0 && is_ident_char(chars[i - 1]) {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0usize;
+    while chars.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if chars.get(j) == Some(&'"') {
+        Some(hashes)
+    } else {
+        None
+    }
+}
+
+/// If a char literal starts at `i` (which holds `'`), return the index of
+/// its closing quote; `None` means `i` starts a lifetime.
+///
+/// Only two shapes are literals: `'x'` (any single char, closing quote at
+/// `i + 2`) and `'\…'` (an escape; scan a bounded window for the close).
+/// Everything else — `'a` in `<'a, 'b>`, `&'static` — is a lifetime.
+fn char_literal_end(chars: &[char], i: usize) -> Option<usize> {
+    match chars.get(i + 1) {
+        Some('\\') => {
+            // Longest legal escape is '\u{10FFFF}' — bounded scan.
+            let mut j = i + 2;
+            let limit = (i + 14).min(chars.len());
+            while j < limit {
+                match chars[j] {
+                    '\'' => return Some(j),
+                    '\n' => return None,
+                    _ => j += 1,
+                }
+            }
+            None
+        }
+        Some('\n') | None => None,
+        Some(_) => {
+            if chars.get(i + 2) == Some(&'\'') {
+                Some(i + 2)
+            } else {
+                None
+            }
+        }
+    }
+}
+
+/// Is `c` part of an identifier?
+pub fn is_ident_char(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Mark every line belonging to a `#[cfg(test)]` item (attribute line
+/// through the close of the item's brace block). An attribute with no
+/// following block conservatively marks the rest of the file.
+fn mark_test_scope(code: &[String]) -> Vec<bool> {
+    let n = code.len();
+    let mut test = vec![false; n];
+    let mut i = 0;
+    while i < n {
+        if !code[i].contains("#[cfg(test)]") {
+            i += 1;
+            continue;
+        }
+        let mut depth = 0i64;
+        let mut seen_open = false;
+        let mut j = i;
+        while j < n {
+            test[j] = true;
+            for ch in code[j].chars() {
+                match ch {
+                    '{' => {
+                        depth += 1;
+                        seen_open = true;
+                    }
+                    '}' => depth -= 1,
+                    _ => {}
+                }
+            }
+            if seen_open && depth <= 0 {
+                break;
+            }
+            j += 1;
+        }
+        i = j + 1;
+    }
+    test
+}
+
+/// One parsed `// pallas-lint: allow(<rule>) -- <reason>` directive.
+#[derive(Debug, Clone)]
+pub struct AllowDirective {
+    /// 1-based line the comment sits on.
+    pub line: usize,
+    /// The rule name inside `allow(…)`, verbatim.
+    pub rule_name: String,
+    /// The justification after `--`; `None` when missing or empty
+    /// (which makes the directive malformed — the reason is mandatory).
+    pub reason: Option<String>,
+    /// 1-based line the directive applies to: its own line when that line
+    /// carries code (trailing comment), otherwise the next line that does.
+    pub target: Option<usize>,
+    /// Syntactically complete? (`allow(<rule>)` present and closed.)
+    pub well_formed: bool,
+}
+
+/// Extract every allow directive from a scanned file.
+///
+/// A directive is a *plain* comment whose entire text is the directive:
+/// `// pallas-lint: allow(<rule>) -- <reason>`. Doc comments (`///`,
+/// `//!`) that merely cite the grammar are not directives — their
+/// comment text begins with `/` or `!`, not `pallas-lint:`.
+pub fn parse_allows(scan: &CleanSource) -> Vec<AllowDirective> {
+    let mut out = Vec::new();
+    for (idx, text) in scan.comments.iter().enumerate() {
+        let Some(tail) = text.trim_start().strip_prefix("pallas-lint:") else {
+            continue;
+        };
+        let rest = tail.trim_start();
+        let mut d = AllowDirective {
+            line: idx + 1,
+            rule_name: String::new(),
+            reason: None,
+            target: None,
+            well_formed: false,
+        };
+        if let Some(inner) = rest.strip_prefix("allow(") {
+            if let Some(close) = inner.find(')') {
+                d.rule_name = inner[..close].trim().to_string();
+                d.well_formed = !d.rule_name.is_empty();
+                let after = inner[close + 1..].trim_start();
+                if let Some(r) = after.strip_prefix("--") {
+                    let r = r.trim();
+                    if !r.is_empty() {
+                        d.reason = Some(r.to_string());
+                    }
+                }
+            }
+        }
+        // Attach: same line if it has code, else the next line with code.
+        if !scan.code[idx].trim().is_empty() {
+            d.target = Some(idx + 1);
+        } else {
+            for (j, line) in scan.code.iter().enumerate().skip(idx + 1) {
+                if !line.trim().is_empty() {
+                    d.target = Some(j + 1);
+                    break;
+                }
+            }
+        }
+        out.push(d);
+    }
+    out
+}
+
+/// Does `code` contain `token` delimited by non-identifier characters?
+pub fn has_token(code: &str, token: &str) -> bool {
+    let mut start = 0;
+    while let Some(p) = code[start..].find(token) {
+        let at = start + p;
+        let before_ok = at == 0
+            || !is_ident_char(code[..at].chars().next_back().unwrap_or(' '));
+        let after = at + token.len();
+        let after_ok = after >= code.len()
+            || !is_ident_char(code[after..].chars().next().unwrap_or(' '));
+        if before_ok && after_ok {
+            return true;
+        }
+        start = at + token.len();
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strips_comments_and_strings() {
+        let s = CleanSource::new(
+            "let x = \"HashMap\"; // HashMap here\nlet y = 1; /* multi\nline */ let z = 'a';\n",
+        );
+        assert!(!s.code[0].contains("HashMap"));
+        assert!(s.comments[0].contains("HashMap"));
+        assert!(s.code[1].contains("let y = 1;"));
+        assert!(s.code[2].contains("let z = ''"));
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let s = CleanSource::new("fn f<'a>(x: &'a str) -> &'static str { x }\n");
+        assert!(s.code[0].contains("&'static str"));
+    }
+
+    #[test]
+    fn raw_strings_blanked() {
+        let s = CleanSource::new("let p = r#\"Instant::now\"#;\nlet q = 2;\n");
+        assert!(!s.code[0].contains("Instant::now"));
+        assert!(s.code[1].contains("let q = 2;"));
+    }
+
+    #[test]
+    fn cfg_test_scope_marked() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn t() {}\n}\nfn live2() {}\n";
+        let s = CleanSource::new(src);
+        assert_eq!(s.test_scope, vec![false, true, true, true, true, false]);
+    }
+
+    #[test]
+    fn allow_directive_parses() {
+        let s = CleanSource::new(
+            "// pallas-lint: allow(det-wallclock) -- digest only\nlet t = now();\n",
+        );
+        let d = parse_allows(&s);
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].rule_name, "det-wallclock");
+        assert_eq!(d[0].reason.as_deref(), Some("digest only"));
+        assert_eq!(d[0].target, Some(2));
+        assert!(d[0].well_formed);
+    }
+
+    #[test]
+    fn allow_without_reason_is_flagged_malformed() {
+        let s = CleanSource::new("// pallas-lint: allow(det-wallclock)\nlet t = 1;\n");
+        let d = parse_allows(&s);
+        assert!(d[0].well_formed);
+        assert!(d[0].reason.is_none());
+    }
+
+    #[test]
+    fn token_boundaries_respected() {
+        assert!(has_token("use std::collections::HashMap;", "HashMap"));
+        assert!(!has_token("let my_hash_map = 1;", "HashMap"));
+        assert!(!has_token("RandomStateful", "RandomState"));
+        assert!(has_token("Instant::now()", "Instant::now"));
+    }
+}

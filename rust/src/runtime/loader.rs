@@ -156,6 +156,16 @@ pub struct Artifacts {
     decode_exe: xla::PjRtLoadedExecutable,
 }
 
+impl std::fmt::Debug for Artifacts {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Artifacts")
+            .field("manifest", &self.manifest)
+            .field("dir", &self.dir)
+            .field("prefill_buckets", &self.prefill_exes.len())
+            .finish_non_exhaustive()
+    }
+}
+
 /// Output of one prefill call.
 pub struct PrefillOut {
     /// Last-position logits, length = vocab.
@@ -165,11 +175,27 @@ pub struct PrefillOut {
     pub v_cache: xla::Literal,
 }
 
+impl std::fmt::Debug for PrefillOut {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PrefillOut")
+            .field("logits", &self.logits.len())
+            .finish_non_exhaustive()
+    }
+}
+
 /// Output of one decode step.
 pub struct DecodeOut {
     pub logits: Vec<f32>,
     pub k_cache: xla::Literal,
     pub v_cache: xla::Literal,
+}
+
+impl std::fmt::Debug for DecodeOut {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("DecodeOut")
+            .field("logits", &self.logits.len())
+            .finish_non_exhaustive()
+    }
 }
 
 impl Artifacts {

@@ -117,6 +117,14 @@ pub struct ServerHandle {
     join: Option<std::thread::JoinHandle<Result<EngineStats>>>,
 }
 
+impl std::fmt::Debug for ServerHandle {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ServerHandle")
+            .field("running", &self.join.is_some())
+            .finish_non_exhaustive()
+    }
+}
+
 /// Counters the engine reports on shutdown.
 #[derive(Debug, Clone, Default)]
 pub struct EngineStats {

@@ -21,6 +21,15 @@ pub struct Simulation {
     policy_kind: PolicyKind,
 }
 
+impl std::fmt::Debug for Simulation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Simulation")
+            .field("policy_kind", &self.policy_kind)
+            .field("state", &self.state)
+            .finish_non_exhaustive()
+    }
+}
+
 impl Simulation {
     /// Build the initial state for `trace` and instantiate `kind`'s
     /// policy against the [`ClusterOps`] boundary.
@@ -68,11 +77,13 @@ impl Simulation {
             st.now = ev.time.max(st.now);
             st.events_processed += 1;
             if st.events_processed > max_events {
+                // pallas-lint: allow(hot-path-panic) -- livelock backstop: aborting beats an unbounded silent loop
                 panic!("event budget exhausted: likely a scheduling livelock");
             }
 
             match ev.kind {
                 EventKind::Arrival(req) => {
+                    // pallas-lint: allow(det-wallclock) -- Table 7 overhead digest; never feeds simulated time
                     let t0 = Instant::now();
                     self.policy.on_arrival(&mut ClusterOps::new(st), req);
                     st.reqs[req].sched_ns += t0.elapsed().as_nanos() as u64;
@@ -90,6 +101,7 @@ impl Simulation {
                         // The decode target died while the KV was in
                         // flight: re-place the request like any other
                         // failure displacement.
+                        // pallas-lint: allow(det-wallclock) -- Table 7 overhead digest; never feeds simulated time
                         let t0 = Instant::now();
                         self.policy.on_arrival(&mut ClusterOps::new(st), req);
                         st.reqs[req].sched_ns += t0.elapsed().as_nanos() as u64;
@@ -149,6 +161,7 @@ impl Simulation {
             return;
         }
         st.recent_prefill_starts.clear();
+        // pallas-lint: allow(det-wallclock) -- Table 7 overhead digest; never feeds simulated time
         let t0 = Instant::now();
         policy.dispatch(&mut ClusterOps::new(st));
         let ns = t0.elapsed().as_nanos() as u64;

@@ -182,6 +182,14 @@ pub struct ClusterOps<'a> {
     pub(super) st: &'a mut SimState,
 }
 
+impl std::fmt::Debug for ClusterOps<'_> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ClusterOps")
+            .field("state", &self.st)
+            .finish()
+    }
+}
+
 impl<'a> ClusterOps<'a> {
     /// Wrap a state borrow in the verb capability.
     pub fn new(st: &'a mut SimState) -> Self {

@@ -401,6 +401,7 @@ pub fn oracle_simulation(cfg: SimConfig, trace: &Trace, kind: PolicyKind) -> Sim
             Box::new(Adapter(OracleReservation::new(&mut state)))
         }
         PolicyKind::PecSched(flags) => Box::new(Adapter(OraclePecSched::new(flags))),
+        // pallas-lint: allow(hot-path-panic) -- test-harness constructor; the documented contract is to panic
         other => panic!(
             "no pre-redesign oracle for {:?}: it was written against the verb API",
             other

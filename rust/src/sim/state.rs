@@ -344,7 +344,10 @@ impl SimConfig {
     pub fn for_policy(model: ModelSpec, kind: PolicyKind) -> Self {
         match kind {
             PolicyKind::PecSched(flags) => Self::pecsched(model, flags),
-            _ => Self::baseline(model),
+            PolicyKind::Fifo
+            | PolicyKind::Reservation
+            | PolicyKind::Priority
+            | PolicyKind::Sjf => Self::baseline(model),
         }
     }
 }
@@ -393,6 +396,20 @@ pub struct SimState {
     scratch_active: Vec<ReqId>,
     /// Persistent scratch for the requests that completed this round.
     scratch_done: Vec<ReqId>,
+}
+
+impl std::fmt::Debug for SimState {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SimState")
+            .field("now", &self.now)
+            .field("events_processed", &self.events_processed)
+            .field("replicas", &self.replicas.len())
+            .field("reqs", &self.reqs.len())
+            .field("shorts_done", &self.shorts_done)
+            .field("longs_done", &self.longs_done)
+            .field("preemptions", &self.preemptions)
+            .finish_non_exhaustive()
+    }
 }
 
 impl SimState {
@@ -928,7 +945,9 @@ impl SimState {
         }
 
         let r = &mut self.replicas[rid];
-        let req = r.prefill_queue.pop_front().unwrap();
+        let Some(req) = r.prefill_queue.pop_front() else {
+            return;
+        };
         let len = self.reqs[req].req.input_len;
         r.queued_prefill_tokens -= len as u64;
         r.running_prefill = Some(req);
@@ -1206,12 +1225,14 @@ impl SimState {
         let r = &self.replicas[rid];
         let batch = r.decode_active.len();
         debug_assert!(batch > 0, "epoch over an empty batch");
-        let min_rem = r
+        let Some(min_rem) = r
             .decode_active
             .iter()
             .map(|&q| self.reqs[q].req.output_len - self.reqs[q].generated)
             .min()
-            .unwrap();
+        else {
+            return;
+        };
         debug_assert!(min_rem >= 1, "completed request still in the batch");
         let rounds = min_rem.div_ceil(chunk_u).max(1);
         let mut tokens = r.decode_active_tokens;
@@ -1480,7 +1501,9 @@ impl SimState {
     /// (/PE) queued shorts are *waiters*: the long runs first and they
     /// wait behind it, so only a running prefill gates the long.
     fn members_clear(&self, gid: GroupId) -> bool {
-        let g = self.groups[gid].as_ref().unwrap();
+        let Some(g) = self.groups[gid].as_ref() else {
+            return false;
+        };
         g.members.iter().all(|&rid| {
             let r = &self.replicas[rid];
             let prefill_clear = r.running_prefill.is_none()
@@ -1504,7 +1527,9 @@ impl SimState {
         let dur = g.plan.total_time(&self.cm, input_len);
         let req = g.req;
         let members = g.members.clone();
-        let g = self.groups[gid].as_mut().unwrap();
+        let Some(g) = self.groups[gid].as_mut() else {
+            return;
+        };
         g.phase = LongPhase::Prefill {
             remaining: dur,
             running: true,
@@ -1575,7 +1600,9 @@ impl SimState {
             return;
         }
         let now = self.now;
-        let phase = self.groups[gid].as_ref().unwrap().phase;
+        let Some(phase) = self.groups[gid].as_ref().map(|g| g.phase) else {
+            return;
+        };
         match phase {
             LongPhase::Waiting => self.maybe_start_long(gid),
             LongPhase::Prefill {
@@ -1583,7 +1610,9 @@ impl SimState {
                 running: false,
                 ..
             } => {
-                let g = self.groups[gid].as_mut().unwrap();
+                let Some(g) = self.groups[gid].as_mut() else {
+                    return;
+                };
                 g.phase = LongPhase::Prefill {
                     remaining,
                     running: true,
@@ -1592,19 +1621,21 @@ impl SimState {
                 g.gen += 1;
                 g.last_resume = now;
                 let gen = g.gen;
+                let members = g.members.clone();
                 self.queue
                     .push(now + remaining, EventKind::LongPrefillDone { gid, gen });
-                let members = self.groups[gid].as_ref().unwrap().members.clone();
                 for rid in members {
                     self.update_busy(rid);
                 }
             }
             LongPhase::Decode { paused: true } => {
-                let g = self.groups[gid].as_mut().unwrap();
+                let Some(g) = self.groups[gid].as_mut() else {
+                    return;
+                };
                 g.phase = LongPhase::Decode { paused: false };
                 g.gen += 1;
+                let members = g.members.clone();
                 self.schedule_long_decode_round(gid);
-                let members = self.groups[gid].as_ref().unwrap().members.clone();
                 for rid in members {
                     self.update_busy(rid);
                 }
@@ -1623,7 +1654,9 @@ impl SimState {
             LongPhase::Prefill { running: true, .. } => {}
             _ => return false,
         }
-        let g = self.groups[gid].as_mut().unwrap();
+        let Some(g) = self.groups[gid].as_mut() else {
+            return false;
+        };
         g.phase = LongPhase::Decode { paused: false };
         g.gen += 1;
         let members = g.members.clone();
@@ -1641,7 +1674,9 @@ impl SimState {
         if self.decode_mode != DecodeMode::Round {
             return self.schedule_long_decode_epoch(gid);
         }
-        let g = self.groups[gid].as_ref().unwrap();
+        let Some(g) = self.groups[gid].as_ref() else {
+            return;
+        };
         let req = &self.reqs[g.req];
         let chunk = self.params.decode_chunk as f64;
         let iter = self
@@ -1661,7 +1696,9 @@ impl SimState {
     fn schedule_long_decode_epoch(&mut self, gid: GroupId) {
         let chunk_u = self.params.decode_chunk;
         let chunk_f = chunk_u as f64;
-        let g = self.groups[gid].as_ref().unwrap();
+        let Some(g) = self.groups[gid].as_ref() else {
+            return;
+        };
         let rt = &self.reqs[g.req];
         let n_members = g.members.len();
         debug_assert!(rt.generated < rt.req.output_len);
@@ -1690,7 +1727,9 @@ impl SimState {
                 ctx += chunk_u as u64;
             }
         }
-        let g = self.groups[gid].as_mut().unwrap();
+        let Some(g) = self.groups[gid].as_mut() else {
+            return;
+        };
         let gen = g.gen;
         g.decode_epoch = Some(DecodeEpochRt {
             rounds_total: rounds,
@@ -1720,7 +1759,9 @@ impl SimState {
                 .long_decode_iter_time(self.reqs[req].context_tokens(), n_members);
             ep.round_end += iter * chunk_f;
         }
-        self.groups[gid].as_mut().unwrap().decode_epoch = Some(ep);
+        if let Some(g) = self.groups[gid].as_mut() {
+            g.decode_epoch = Some(ep);
+        }
     }
 
     /// Handle `LongDecodeRound` (per-round oracle mode). Returns
@@ -1749,14 +1790,16 @@ impl SimState {
             return None;
         }
         self.catch_up_long_epoch(gid, f64::INFINITY);
-        self.groups[gid].as_mut().unwrap().decode_epoch = None;
+        if let Some(g) = self.groups[gid].as_mut() {
+            g.decode_epoch = None;
+        }
         self.finish_long_decode_round(gid)
     }
 
     /// One long-decode round (shared by both modes): advance up to a
     /// chunk; on completion release the group, otherwise keep decoding.
     fn finish_long_decode_round(&mut self, gid: GroupId) -> Option<Vec<ReplicaId>> {
-        let g = self.groups[gid].as_ref().unwrap();
+        let Some(g) = self.groups[gid].as_ref() else { return None };
         let req = g.req;
         let chunk = self.params.decode_chunk;
         let rt = &mut self.reqs[req];
@@ -1764,7 +1807,10 @@ impl SimState {
         rt.generated += step;
         rt.phase = ReqPhase::Decoding;
         if rt.generated >= rt.req.output_len {
-            let members = self.groups[gid].as_ref().unwrap().members.clone();
+            let Some(members) = self.groups[gid].as_ref().map(|g| g.members.clone())
+            else {
+                return None;
+            };
             self.preemptions_commit(gid);
             self.complete_request(req);
             for &rid in &members {

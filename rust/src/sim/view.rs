@@ -56,6 +56,14 @@ pub struct ClusterView<'a> {
     pub(super) st: &'a SimState,
 }
 
+impl std::fmt::Debug for ClusterView<'_> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ClusterView")
+            .field("state", &self.st)
+            .finish()
+    }
+}
+
 impl<'a> ClusterView<'a> {
     /// Current simulated time, seconds.
     pub fn now(&self) -> f64 {

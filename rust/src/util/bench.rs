@@ -10,6 +10,7 @@
 
 use std::time::{Duration, Instant};
 
+#[derive(Debug)]
 pub struct Bench {
     name: String,
     warmup: Duration,
@@ -78,13 +79,16 @@ impl Bench {
     /// Time `f` repeatedly; `f` returns a value that is black-boxed.
     pub fn run<T, F: FnMut() -> T>(&self, mut f: F) -> BenchReport {
         // Warmup.
+        // pallas-lint: allow(det-wallclock) -- bench timer measures host wall time by design
         let w0 = Instant::now();
         while w0.elapsed() < self.warmup {
             std::hint::black_box(f());
         }
         let mut samples = Vec::new();
+        // pallas-lint: allow(det-wallclock) -- bench timer measures host wall time by design
         let b0 = Instant::now();
         while b0.elapsed() < self.budget || samples.len() < self.min_iters {
+            // pallas-lint: allow(det-wallclock) -- bench timer measures host wall time by design
             let t0 = Instant::now();
             std::hint::black_box(f());
             samples.push(t0.elapsed().as_secs_f64());

@@ -1,0 +1,5 @@
+// BAD: an allow with no `-- <reason>` — the justification is mandatory.
+// pallas-lint: allow(det-wallclock)
+pub fn noop() -> u64 {
+    7
+}

@@ -1,0 +1,8 @@
+// GOOD: a well-formed, justified allow on the offending line itself.
+use std::time::Instant;
+
+pub fn stamp() -> f64 {
+    // pallas-lint: allow(det-wallclock) -- fixture: host-side digest timing only
+    let t0 = Instant::now();
+    t0.elapsed().as_secs_f64()
+}

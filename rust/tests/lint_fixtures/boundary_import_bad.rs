@@ -1,0 +1,6 @@
+// BAD: a policy reaching past the view/ops surface into sim internals.
+use crate::sim::{ClusterOps, SimState};
+
+pub fn peek(st: &SimState) -> usize {
+    st.event_count()
+}

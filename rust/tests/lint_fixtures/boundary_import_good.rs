@@ -1,0 +1,11 @@
+// GOOD: only the typed view/ops surface crosses the policy boundary.
+use crate::sim::{ClusterOps, ClusterView, Veto};
+
+pub fn ready(view: ClusterView<'_>) -> bool {
+    view.now_s() >= 0.0
+}
+
+pub fn noop(ops: &mut ClusterOps<'_>) -> Result<(), Veto> {
+    let _ = ops;
+    Ok(())
+}

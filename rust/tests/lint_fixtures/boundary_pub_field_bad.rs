@@ -1,0 +1,5 @@
+// BAD: a plain-`pub` field on a protected simulator-core struct.
+pub struct ReplicaRt {
+    pub down: bool,
+    pub(super) id: usize,
+}

@@ -1,0 +1,5 @@
+// GOOD: module visibility only — `sched/` cannot see these fields.
+pub struct ReplicaRt {
+    pub(super) down: bool,
+    pub(super) id: usize,
+}

@@ -1,0 +1,10 @@
+// BAD: HashMap in a simulated-time module — iteration order feeds output.
+use std::collections::HashMap;
+
+pub fn group(keys: &[u64]) -> usize {
+    let mut m: HashMap<u64, usize> = HashMap::new();
+    for &k in keys {
+        *m.entry(k).or_insert(0) += 1;
+    }
+    m.len()
+}

@@ -1,0 +1,10 @@
+// GOOD: BTreeMap — deterministic iteration order.
+use std::collections::BTreeMap;
+
+pub fn group(keys: &[u64]) -> usize {
+    let mut m: BTreeMap<u64, usize> = BTreeMap::new();
+    for &k in keys {
+        *m.entry(k).or_insert(0) += 1;
+    }
+    m.len()
+}

@@ -1,0 +1,5 @@
+// BAD: OS entropy in a simulated-time module — replays diverge.
+pub fn draw() -> u64 {
+    let mut rng = rand::thread_rng();
+    rng.gen()
+}

@@ -1,0 +1,7 @@
+// GOOD: the repo's deterministic PRNG, seeded explicitly.
+use crate::util::Rng;
+
+pub fn draw(seed: u64) -> u64 {
+    let mut rng = Rng::new(seed);
+    rng.next_u64()
+}

@@ -1,0 +1,7 @@
+// BAD: wall-clock read in a simulated-time module.
+use std::time::Instant;
+
+pub fn stamp() -> f64 {
+    let t0 = Instant::now();
+    t0.elapsed().as_secs_f64()
+}

@@ -1,0 +1,4 @@
+// GOOD: time is a simulated value threaded through explicitly.
+pub fn stamp(now_s: f64, dt_s: f64) -> f64 {
+    now_s + dt_s
+}

@@ -1,0 +1,4 @@
+// BAD: a panic on the simulator hot path.
+pub fn head(xs: &[u64]) -> u64 {
+    xs.first().copied().unwrap()
+}

@@ -1,0 +1,4 @@
+// GOOD: the absence is typed, not panicked on.
+pub fn head(xs: &[u64]) -> Option<u64> {
+    xs.first().copied()
+}

@@ -1,0 +1,10 @@
+// BAD: wildcard arm over a tracked enum — a new event variant would be
+// silently swallowed here instead of forcing this site to be revisited.
+use crate::sim::EventKind;
+
+pub fn is_arrival(k: &EventKind) -> bool {
+    match k {
+        EventKind::Arrival(_) => true,
+        _ => false,
+    }
+}

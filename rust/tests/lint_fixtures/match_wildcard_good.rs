@@ -1,0 +1,15 @@
+// GOOD: every variant enumerated — adding one breaks the build here.
+use crate::sim::EventKind;
+
+pub fn class(k: &EventKind) -> u8 {
+    match k {
+        EventKind::Arrival(_) => 0,
+        EventKind::ShortPrefillDone { .. } => 1,
+        EventKind::MigrationDone { .. } => 1,
+        EventKind::DecodeRound { .. } => 2,
+        EventKind::DecodeEpoch { .. } => 2,
+        EventKind::LongPrefillDone { .. } => 3,
+        EventKind::LongDecodeRound { .. } => 3,
+        EventKind::LongDecodeEpoch { .. } => 3,
+    }
+}

@@ -1,0 +1,153 @@
+//! Self-tests for `pallas-lint` (DESIGN.md §5).
+//!
+//! Two layers: the fixture corpus under `rust/tests/lint_fixtures/`
+//! (each bad fixture triggers exactly its rule; each good twin is clean),
+//! and the live-tree gate (zero unjustified findings in `rust/src/**` —
+//! the same check CI's `invariant-lint` job runs via the binary).
+
+use std::path::Path;
+
+use pecsched::lint::{lint_source, lint_tree, render_report, unjustified, Rule};
+
+/// One bad/good fixture pair, embedded at compile time and linted under a
+/// virtual path that puts it in the module scope its rule applies to.
+struct Fixture {
+    name: &'static str,
+    vpath: &'static str,
+    rule: Rule,
+    bad: &'static str,
+    good: &'static str,
+}
+
+macro_rules! fixture {
+    ($name:literal, $vpath:expr, $rule:expr) => {
+        Fixture {
+            name: $name,
+            vpath: $vpath,
+            rule: $rule,
+            bad: include_str!(concat!("lint_fixtures/", $name, "_bad.rs")),
+            good: include_str!(concat!("lint_fixtures/", $name, "_good.rs")),
+        }
+    };
+}
+
+const FIXTURES: &[Fixture] = &[
+    fixture!("det_collections", "sim/fixture.rs", Rule::DetCollections),
+    fixture!("det_wallclock", "sim/fixture.rs", Rule::DetWallclock),
+    fixture!("det_entropy", "trace/fixture.rs", Rule::DetEntropy),
+    fixture!("boundary_import", "sched/fixture.rs", Rule::BoundaryImport),
+    fixture!("boundary_pub_field", "sim/fixture.rs", Rule::BoundaryPubField),
+    fixture!("match_wildcard", "sim/fixture.rs", Rule::MatchWildcard),
+    fixture!("hot_path_panic", "sim/fixture.rs", Rule::HotPathPanic),
+    fixture!("bad_allow", "sim/fixture.rs", Rule::BadAllow),
+];
+
+#[test]
+fn corpus_covers_every_rule() {
+    assert!(FIXTURES.len() >= 8);
+    for rule in Rule::all() {
+        assert!(
+            FIXTURES.iter().any(|f| f.rule == rule),
+            "no fixture pair for rule {rule}"
+        );
+    }
+}
+
+#[test]
+fn each_bad_fixture_fires_exactly_its_rule() {
+    for fx in FIXTURES {
+        let findings = lint_source(fx.vpath, fx.bad);
+        let bad = unjustified(&findings);
+        assert!(
+            !bad.is_empty(),
+            "{}_bad.rs produced no unjustified findings", fx.name
+        );
+        for f in &bad {
+            assert_eq!(
+                f.rule, fx.rule,
+                "{}_bad.rs fired {} (expected only {}): {f}",
+                fx.name, f.rule, fx.rule
+            );
+        }
+    }
+}
+
+#[test]
+fn each_good_fixture_is_clean() {
+    for fx in FIXTURES {
+        let findings = lint_source(fx.vpath, fx.good);
+        let bad = unjustified(&findings);
+        assert!(
+            bad.is_empty(),
+            "{}_good.rs should be clean, got: {}",
+            fx.name,
+            bad.iter()
+                .map(|f| f.to_string())
+                .collect::<Vec<_>>()
+                .join("; ")
+        );
+    }
+}
+
+#[test]
+fn justified_allow_fixture_records_its_reason() {
+    let fx = FIXTURES
+        .iter()
+        .find(|f| f.rule == Rule::BadAllow)
+        .expect("bad_allow fixture present");
+    let findings = lint_source(fx.vpath, fx.good);
+    let justified: Vec<_> = findings
+        .iter()
+        .filter(|f| f.justification.is_some())
+        .collect();
+    assert_eq!(justified.len(), 1);
+    assert_eq!(justified[0].rule, Rule::DetWallclock);
+    assert!(justified[0]
+        .justification
+        .as_deref()
+        .unwrap()
+        .contains("digest"));
+}
+
+/// The gate: the remediated tree carries zero unjustified findings. This
+/// is the in-process twin of CI's `cargo run --bin pallas-lint`.
+#[test]
+fn live_tree_has_zero_unjustified_findings() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/src");
+    let findings = lint_tree(&root).expect("scan rust/src");
+    assert!(
+        !findings.is_empty(),
+        "sanity: the tree has justified allow sites; an empty result means the scan missed them"
+    );
+    let bad = unjustified(&findings);
+    assert!(
+        bad.is_empty(),
+        "unjustified lint findings in the live tree:\n{}",
+        render_report(&findings)
+    );
+}
+
+/// Every justified allow in the live tree names a real rule and carries a
+/// non-empty reason (render_report would show them; this pins the count
+/// floor so a refactor silently dropping the allows is caught).
+#[test]
+fn live_tree_allows_are_all_justified_wallclock_or_panic_sites() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/src");
+    let findings = lint_tree(&root).expect("scan rust/src");
+    let justified: Vec<_> = findings
+        .iter()
+        .filter(|f| f.justification.is_some())
+        .collect();
+    assert!(
+        justified.len() >= 3,
+        "expected the documented allow sites (sim/engine.rs, util/bench.rs, sim/oracle.rs), got {}",
+        justified.len()
+    );
+    for f in justified {
+        assert!(
+            matches!(f.rule, Rule::DetWallclock | Rule::HotPathPanic),
+            "unexpected allowed rule in tree: {f}"
+        );
+        assert!(!f.justification.as_deref().unwrap_or("").is_empty());
+    }
+}
