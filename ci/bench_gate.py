@@ -1,0 +1,96 @@
+#!/usr/bin/env python3
+"""Events/s regression gate over BENCH_sim.json (CI `bench-baseline` job).
+
+Usage: bench_gate.py BASELINE_JSON CURRENT_JSON
+
+Two layers:
+
+* Intra-run: the `event_engine/metrics_streaming` cell must stay within
+  STREAMING_OVERHEAD of the `event_engine/metrics_exact` cell — the GK
+  sketches may not tax the hot path. This gate is machine-independent
+  (both cells ran on the same runner) and always applies.
+
+* Cross-run: every cell present in both files must keep events/s within
+  REGRESSION of the cached baseline from the previous main run. The
+  baseline comes from actions/cache, so both runs used the same runner
+  class; a cold cache (no baseline file) skips this layer rather than
+  failing the job.
+"""
+
+import json
+import os
+import sys
+
+# Fail if a cell's events/s drops more than 20% vs the cached baseline.
+REGRESSION = 0.20
+# Streaming metrics may cost at most 20% events/s vs exact digests.
+STREAMING_OVERHEAD = 0.20
+
+EXACT_CELL = "event_engine/metrics_exact/8k_reqs"
+STREAMING_CELL = "event_engine/metrics_streaming/8k_reqs"
+
+
+def load(path):
+    with open(path) as f:
+        data = json.load(f)
+    return {r["name"]: r for r in data["results"]}
+
+
+def events_per_s(cell):
+    if cell is None:
+        return None
+    return cell.get("events_per_s")
+
+
+def main():
+    if len(sys.argv) != 3:
+        sys.exit(f"usage: {sys.argv[0]} BASELINE_JSON CURRENT_JSON")
+    baseline_path, current_path = sys.argv[1], sys.argv[2]
+    cur = load(current_path)
+    failures = []
+
+    exact = events_per_s(cur.get(EXACT_CELL))
+    streaming = events_per_s(cur.get(STREAMING_CELL))
+    if exact is None or streaming is None:
+        failures.append(
+            "metrics-mode cells missing from current BENCH_sim.json "
+            f"(need {EXACT_CELL} and {STREAMING_CELL} with events_per_s)"
+        )
+    elif streaming < (1 - STREAMING_OVERHEAD) * exact:
+        failures.append(
+            f"streaming metrics cost too much: {streaming:.3g} events/s vs "
+            f"{exact:.3g} exact (allowed overhead {STREAMING_OVERHEAD:.0%})"
+        )
+    else:
+        print(
+            f"streaming-vs-exact OK: {streaming:.3g} vs {exact:.3g} events/s "
+            f"({streaming / exact:.1%})"
+        )
+
+    if os.path.exists(baseline_path):
+        base = load(baseline_path)
+        for name in sorted(base):
+            b = events_per_s(base[name])
+            c = events_per_s(cur.get(name))
+            if b is None or c is None:
+                continue
+            if c < (1 - REGRESSION) * b:
+                failures.append(
+                    f"{name}: {c:.3g} events/s, below "
+                    f"{1 - REGRESSION:.0%} of baseline {b:.3g}"
+                )
+            else:
+                print(f"{name}: {c:.3g} events/s vs baseline {b:.3g} OK")
+    else:
+        print(f"no baseline at {baseline_path} (cold cache): cross-run gate skipped")
+
+    if failures:
+        print("\nbench gate FAILED:")
+        for f in failures:
+            print(f"  - {f}")
+        sys.exit(1)
+    print("bench gate passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -35,7 +35,7 @@ fn main() -> anyhow::Result<()> {
     );
     for kind in PolicyKind::comparison_set() {
         let mut m = run_cell(&model, kind, &trace);
-        let d = m.short_queue_delay.paper_percentiles();
+        let d = m.short_queue_delay.paper_percentiles().unwrap_or([f64::NAN; 5]);
         writeln!(
             csv,
             "{},{:.4},{:.4},{:.4},{:.4},{:.4},{:.3},{:.1},{},{:.4},{:.3}",
@@ -46,7 +46,7 @@ fn main() -> anyhow::Result<()> {
             d[3],
             d[4],
             m.short_rps(),
-            m.long_jct.mean(),
+            m.long_jct.mean().unwrap_or(f64::NAN),
             m.preemptions,
             m.gpu_idle_rate,
             m.starved_frac()

@@ -39,10 +39,16 @@ fn main() {
         println!("\n--- {} ---", m.policy);
         println!(
             "{}",
-            fmt_pcts("short delay", m.short_queue_delay.paper_percentiles())
+            fmt_pcts(
+                "short delay",
+                m.short_queue_delay.paper_percentiles().unwrap_or([0.0; 5])
+            )
         );
         println!("short throughput : {:.2} RPS", m.short_rps());
-        println!("long avg JCT     : {:.1}s", m.long_jct.mean());
+        println!(
+            "long avg JCT     : {:.1}s",
+            m.long_jct.mean().unwrap_or(0.0)
+        );
         println!("preemptions      : {}", m.preemptions);
     }
     println!(

@@ -10,6 +10,7 @@
 
 use pecsched::config::{AblationFlags, DecodeMode, ModelSpec, PolicyKind};
 use pecsched::exp::{capacity_rps, run_sweep, SweepSpec};
+use pecsched::metrics::MetricsMode;
 use pecsched::sim::{SimConfig, Simulation};
 use pecsched::trace::TraceConfig;
 use pecsched::util::{write_json, Bench, BenchReport};
@@ -70,6 +71,10 @@ fn main() {
     // Raw event throughput (the §Perf headline number), in both decode
     // modes: the default epoch fast-forward and the retained per-round
     // oracle, so BENCH_sim.json records the event-volume cut across PRs.
+    // These two cells double as the SoA before/after gate: their names are
+    // stable across PRs, so the JSON diff against the pre-arena baseline
+    // (AoS `Vec<ReqRt>` state) shows the columnar-layout gain directly,
+    // and CI's bench-baseline job fails on a >20% events/s regression.
     let model = ModelSpec::mistral_7b();
     let t = trace(&model, 8000, 2);
     let kind = PolicyKind::PecSched(AblationFlags::full());
@@ -84,6 +89,28 @@ fn main() {
         });
         if let Some(eps) = r.events_per_s {
             println!("  -> {:.2}M events/s", eps / 1e6);
+        }
+        reports.push(r);
+    }
+
+    // Metrics-mode cost: the same run with exact per-request Digests vs
+    // streaming GK sketches. Exact mode buffers every latency sample;
+    // streaming keeps O((1/eps) log(eps n)) tuples per percentile series.
+    // The pair pins the sketch overhead on the hot path — streaming must
+    // stay within a few percent of exact on events/s — and the streaming
+    // cell is the one the huge-sweep memory story rides on.
+    for (mm, name) in [
+        (MetricsMode::Exact, "event_engine/metrics_exact/8k_reqs"),
+        (MetricsMode::Streaming, "event_engine/metrics_streaming/8k_reqs"),
+    ] {
+        let r = sim_cell(name, 4000, 3, || {
+            let mut cfg = SimConfig::pecsched(model.clone(), AblationFlags::full());
+            cfg.decode_mode = DecodeMode::Epoch;
+            cfg.metrics_mode = mm;
+            Simulation::new(cfg, &t, kind)
+        });
+        if let Some(eps) = r.events_per_s {
+            println!("  -> {name}: {:.2}M events/s", eps / 1e6);
         }
         reports.push(r);
     }

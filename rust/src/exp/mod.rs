@@ -134,7 +134,9 @@ fn calibrate_rps(model: &ModelSpec) -> f64 {
             &trace,
             PolicyKind::Fifo,
         );
-        m.short_queue_delay.quantile(0.90) < 0.5
+        m.short_queue_delay
+            .quantile(0.90)
+            .is_some_and(|v| v < 0.5)
     };
     let mut lo = capacity_rps(model, 0.5);
     let mut hi = capacity_rps(model, 12.0);

@@ -205,13 +205,8 @@ fn run_one(spec: &SweepSpec, cell: &SweepCell) -> CellResult {
     let replicas = cfg.cluster.replicas_for(&cell.model);
 
     let mut m = sc.run(cfg, &trace, cell.policy);
-    let pct99 = |d: &mut crate::metrics::Digest| {
-        if d.is_empty() {
-            f64::NAN
-        } else {
-            d.quantile(0.99)
-        }
-    };
+    let pct99 =
+        |d: &mut crate::metrics::Digest| d.quantile(0.99).unwrap_or(f64::NAN);
     let sched_p99_short = pct99(&mut m.sched_overhead_short);
     let sched_p99_long = pct99(&mut m.sched_overhead_long);
     CellResult {

@@ -26,6 +26,12 @@
 //!   variant forces every dispatch site to be revisited.
 //! * [`Rule::HotPathPanic`] — **panic-freedom (D4)**: no
 //!   `.unwrap()`/`.expect()`/`panic!` in non-test `sim/` code.
+//! * [`Rule::HotPathAlloc`] — **allocation-freedom (D5)**: no
+//!   `Vec::new`/`vec!`/`.clone()` inside the non-test `sim/` event-path
+//!   functions (names prefixed `on_`/`finish_`/`catch_up_`/
+//!   `materialize_`/`truncate_`/`fail_`/`complete_`/`schedule_`) — the
+//!   per-event handlers must reuse scratch buffers or the SoA arena, so
+//!   the million-request regime never allocates per event.
 //! * [`Rule::BadAllow`] — the escape hatch polices itself: a malformed or
 //!   unused `// pallas-lint: allow(…) -- reason` comment is a finding.
 //!
@@ -69,7 +75,22 @@ const ALLOWED_SIM_IMPORTS: &[&str] = &[
 
 /// Structs that must expose no plain-`pub` field (the boundary is module
 /// visibility: `pub(super)` keeps them invisible to `sched/`).
-const PROTECTED_STRUCTS: &[&str] = &["SimState", "ReplicaRt", "LongGroup"];
+const PROTECTED_STRUCTS: &[&str] = &["SimState", "ReplicaRt", "LongGroup", "ReqArena"];
+
+/// Function-name prefixes marking the `sim/` per-event hot path: the
+/// `on_*` event handlers and the mechanical helpers they call per event.
+/// Setup (`new`, `from_*`), policy verbs (`start_*`, `try_*`) and
+/// post-run collection deliberately stay outside the rule.
+const HOT_PATH_FN_PREFIXES: &[&str] = &[
+    "on_",
+    "finish_",
+    "catch_up_",
+    "materialize_",
+    "truncate_",
+    "fail_",
+    "complete_",
+    "schedule_",
+];
 
 /// Enums whose `match` sites must stay exhaustive (no `_ =>`): the event
 /// vocabulary, the policy registry, and the verb-outcome enums.
@@ -103,6 +124,8 @@ pub enum Rule {
     MatchWildcard,
     /// `.unwrap()`/`.expect()`/`panic!`-family in non-test `sim/` code.
     HotPathPanic,
+    /// `Vec::new`/`vec!`/`.clone()` in a non-test `sim/` event-path fn.
+    HotPathAlloc,
     /// Malformed or unused `pallas-lint: allow` directive.
     BadAllow,
 }
@@ -118,6 +141,7 @@ impl Rule {
             Rule::BoundaryPubField => "boundary-pub-field",
             Rule::MatchWildcard => "match-wildcard",
             Rule::HotPathPanic => "hot-path-panic",
+            Rule::HotPathAlloc => "hot-path-alloc",
             Rule::BadAllow => "bad-allow",
         }
     }
@@ -128,7 +152,7 @@ impl Rule {
     }
 
     /// Every rule, in report order.
-    pub fn all() -> [Rule; 8] {
+    pub fn all() -> [Rule; 9] {
         [
             Rule::DetCollections,
             Rule::DetWallclock,
@@ -137,6 +161,7 @@ impl Rule {
             Rule::BoundaryPubField,
             Rule::MatchWildcard,
             Rule::HotPathPanic,
+            Rule::HotPathAlloc,
             Rule::BadAllow,
         ]
     }
@@ -202,6 +227,7 @@ pub fn lint_source(relpath: &str, src: &str) -> Vec<Finding> {
     }
     if module == "sim" {
         hot_path_rule(relpath, &scanned, &mut findings);
+        hot_path_alloc_rule(relpath, &scanned, &mut findings);
         pub_field_rule(relpath, &scanned, &mut findings);
     }
     if module == "sched" {
@@ -365,6 +391,87 @@ fn hot_path_rule(file: &str, s: &CleanSource, findings: &mut Vec<Finding>) {
                 );
             }
         }
+    }
+}
+
+/// D5: per-event allocations inside `sim/` hot-path functions. Scans
+/// every fn whose name carries a [`HOT_PATH_FN_PREFIXES`] prefix and
+/// flags allocation tokens anywhere in its body (nested closures
+/// included — they run per event too).
+fn hot_path_alloc_rule(file: &str, s: &CleanSource, findings: &mut Vec<Finding>) {
+    const ALLOCS: &[&str] = &["Vec::new", "vec!", ".clone()"];
+    let (full, line_starts) = join_code(s);
+    let bytes = full.as_bytes();
+    let mut from = 0;
+    while let Some(p) = full[from..].find("fn ") {
+        let at = from + p;
+        from = at + 3;
+        // Word boundary: reject `gen_fn ` etc.
+        if at > 0 && scan::is_ident_char(bytes[at - 1] as char) {
+            continue;
+        }
+        let name: String = full[at + 3..]
+            .chars()
+            .take_while(|&c| scan::is_ident_char(c))
+            .collect();
+        if !HOT_PATH_FN_PREFIXES.iter().any(|pre| name.starts_with(pre)) {
+            continue;
+        }
+        // Find the body's `{`: first brace outside the signature's
+        // ()/[]/<> nesting; a `;` first means a bodyless declaration.
+        let sig_start = at + 3 + name.len();
+        let mut depth = 0i64;
+        let mut body_start = None;
+        for (off, c) in full[sig_start..].char_indices() {
+            match c {
+                '(' | '[' => depth += 1,
+                ')' | ']' => depth -= 1,
+                '{' if depth == 0 => {
+                    body_start = Some(sig_start + off + 1);
+                    break;
+                }
+                '{' => depth += 1,
+                '}' => depth -= 1,
+                ';' if depth == 0 => break,
+                _ => {}
+            }
+        }
+        let Some(body_start) = body_start else { continue };
+        let mut d = 1i64;
+        let mut body_end = full.len();
+        for (off, c) in full[body_start..].char_indices() {
+            match c {
+                '{' | '(' | '[' => d += 1,
+                '}' | ')' | ']' => {
+                    d -= 1;
+                    if d == 0 {
+                        body_end = body_start + off;
+                        break;
+                    }
+                }
+                _ => {}
+            }
+        }
+        for t in ALLOCS {
+            let mut seek = 0;
+            let body = &full[body_start..body_end];
+            while let Some(q) = body[seek..].find(t) {
+                let pos = body_start + seek + q;
+                seek += q + t.len();
+                let line = line_of(&line_starts, pos);
+                if s.test_scope[line - 1] {
+                    continue;
+                }
+                push(
+                    findings,
+                    file,
+                    line,
+                    Rule::HotPathAlloc,
+                    format!("`{t}` inside hot-path fn `{name}` (per-event allocation; reuse a scratch buffer / the SoA arena, or justify)"),
+                );
+            }
+        }
+        from = body_end;
     }
 }
 
@@ -856,6 +963,39 @@ mod tests {
         assert!(unj_rules(&lint_source("exp/x.rs", src)).is_empty());
         let test_src = "#[cfg(test)]\nmod tests {\n    fn f(x: Option<u32>) -> u32 { x.unwrap() }\n}\n";
         assert!(unj_rules(&lint_source("sim/x.rs", test_src)).is_empty());
+    }
+
+    #[test]
+    fn alloc_flagged_in_hot_path_fns_only() {
+        let hot = "fn on_decode_round(&mut self) {\n    let v = Vec::new();\n}\n";
+        let f = lint_source("sim/x.rs", hot);
+        assert_eq!(unj_rules(&f), vec![Rule::HotPathAlloc]);
+        assert_eq!(unjustified(&f)[0].line, 2);
+        // Same body outside a scoped prefix, or outside `sim/`, is fine.
+        let cold = "fn build_schedule(&mut self) {\n    let v = Vec::new();\n}\n";
+        assert!(unj_rules(&lint_source("sim/x.rs", cold)).is_empty());
+        assert!(unj_rules(&lint_source("exp/x.rs", hot)).is_empty());
+    }
+
+    #[test]
+    fn alloc_in_hot_path_test_code_ignored() {
+        let src = "#[cfg(test)]\nmod tests {\n    fn on_x() { let v = vec![1]; }\n}\n";
+        assert!(unj_rules(&lint_source("sim/x.rs", src)).is_empty());
+    }
+
+    #[test]
+    fn clone_in_hot_path_can_be_justified() {
+        let src = "fn finish_round(&mut self) {\n    // pallas-lint: allow(hot-path-alloc) -- one-off completion path\n    let m = self.members.clone();\n}\n";
+        let f = lint_source("sim/x.rs", src);
+        assert!(unjustified(&f).is_empty());
+        assert_eq!(f.len(), 1);
+    }
+
+    #[test]
+    fn pub_field_on_arena_flagged() {
+        let src = "pub struct ReqArena {\n    pub meta: Vec<u32>,\n    pub(super) phase: Vec<u8>,\n}\n";
+        let f = lint_source("sim/x.rs", src);
+        assert_eq!(unj_rules(&f), vec![Rule::BoundaryPubField]);
     }
 
     #[test]

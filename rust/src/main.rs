@@ -11,7 +11,11 @@
 //! * `serve`          — run the real PJRT serving engine on a synthetic
 //!                      workload;
 //! * `plan-sp`        — show the fast-SP strategy selection for a long
-//!                      request.
+//!                      request;
+//! * `huge-smoke`     — CI smoke for the massive-grid mode: a 65k-replica
+//!                      cluster under the `huge-sweep` scenario, asserting
+//!                      streaming-metric memory is trace-length independent
+//!                      and the run fits a wall-clock budget.
 //!
 //! Run `pecsched help` for flags.
 
@@ -49,6 +53,11 @@ COMMANDS
   trace-gen       [--scenario <s>] [--requests N] [--rps F] [--seed S]
   serve           [--artifacts DIR] [--requests N] [--mode fifo|pecsched]
   plan-sp         [--model <name>] [--input-len N]
+  huge-smoke      [--gpus N] [--requests N] [--seed S] [--budget-s F]
+                  scale smoke: huge-sweep scenario (closed-form decode +
+                  streaming sketches) on a 65,536-GPU cluster; fails if
+                  streaming metric entries grow with trace length or the
+                  wall clock exceeds the budget (use a release build)
   help
 ";
 
@@ -76,6 +85,7 @@ fn main() -> Result<()> {
         "trace-gen" => cmd_trace_gen(&args),
         "serve" => cmd_serve(&args),
         "plan-sp" => cmd_plan_sp(&args),
+        "huge-smoke" => cmd_huge_smoke(&args),
         _ => {
             print!("{HELP}");
             Ok(())
@@ -108,13 +118,12 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     );
     println!("longs completed  {}/{}", m.longs_completed, m.longs_total);
     println!("short RPS        {:.2}", m.short_rps());
-    if !m.short_queue_delay.is_empty() {
-        println!(
-            "short p99 queue  {:.3}s",
-            m.short_queue_delay.quantile(0.99)
-        );
+    if let Some(p99) = m.short_queue_delay.quantile(0.99) {
+        println!("short p99 queue  {p99:.3}s");
     }
-    println!("long avg JCT     {:.1}s", m.long_jct.mean());
+    if let Some(jct) = m.long_jct.mean() {
+        println!("long avg JCT     {jct:.1}s");
+    }
     println!("preemptions      {}", m.preemptions);
     println!("GPU idle rate    {:.4}", m.gpu_idle_rate);
     Ok(())
@@ -327,6 +336,84 @@ fn cmd_serve(args: &Args) -> Result<()> {
         ttfts[ttfts.len() / 2],
         ttfts[(ttfts.len() * 99) / 100],
         stats.preemptions
+    );
+    Ok(())
+}
+
+/// The huge-sweep CI smoke (DESIGN.md §6): one scaled-down grid cell on a
+/// 65,536-GPU cluster, run twice (n and 4n requests) in the scenario's
+/// streaming-metrics + closed-form-decode mode. Asserts the engine loses
+/// no requests, that streaming metric storage does NOT scale with trace
+/// length (the 4n run may hold at most 2× the entries of the n run, and
+/// stays well below one entry per request), and that both runs together
+/// fit the wall-clock budget. Run under `--release`: the debug-only
+/// index/digest oracles are O(R) per event and would dominate at 65k
+/// replicas.
+fn cmd_huge_smoke(args: &Args) -> Result<()> {
+    let gpus = args.parse_or("gpus", 65_536usize)?;
+    let n = args.parse_or("requests", 8_000usize)?;
+    let seed = args.parse_or("seed", 42u64)?;
+    let budget_s = args.parse_or("budget-s", 120.0f64)?;
+
+    let model = ModelSpec::mistral_7b();
+    let kind = parse_policy("pecsched")?;
+    let sc = scenario::by_name("huge-sweep")
+        .ok_or_else(|| anyhow::anyhow!("huge-sweep scenario missing from registry"))?;
+    let cluster = pecsched::config::ClusterSpec::with_total_gpus(gpus);
+    let n_replicas = cluster.replicas_for(&model);
+    // capacity_rps targets the default 32-GPU cluster; scale the arrival
+    // rate to this one so the big cluster actually sees load.
+    let default_replicas =
+        pecsched::config::ClusterSpec::default().replicas_for(&model);
+    let rps =
+        exp::capacity_rps(&model, 0.6) * n_replicas as f64 / default_replicas as f64;
+
+    println!(
+        "huge-smoke: {gpus} GPUs ({n_replicas} replicas), {} then {} requests, \
+         scenario '{}'",
+        n,
+        4 * n,
+        sc.name
+    );
+    let t0 = std::time::Instant::now();
+    let mut entries = [0usize; 2];
+    for (i, scale) in [1usize, 4].into_iter().enumerate() {
+        let trace = sc.build_trace(n * scale, rps, seed);
+        let mut cfg = SimConfig::for_policy(model.clone(), kind);
+        cfg.cluster = cluster.clone();
+        let m = sc.run(cfg, &trace, kind);
+        if m.shorts_completed + m.longs_completed != trace.len() {
+            bail!(
+                "huge-smoke lost requests at {scale}x: {} of {} completed",
+                m.shorts_completed + m.longs_completed,
+                trace.len()
+            );
+        }
+        entries[i] = m.metric_entries();
+        println!(
+            "  {scale}x: {} requests -> {} metric entries, {} events, \
+             makespan {:.1}s",
+            n * scale,
+            entries[i],
+            m.events_processed,
+            m.makespan
+        );
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    let [e1, e4] = entries;
+    if e4 > 2 * e1 {
+        bail!("streaming metric entries grew with trace length: {e1} at 1x vs {e4} at 4x");
+    }
+    if e4 * 2 > 4 * n {
+        bail!("streaming metric entries not sublinear: {e4} entries for {} requests", 4 * n);
+    }
+    if wall > budget_s {
+        bail!("huge-smoke exceeded its wall-clock budget: {wall:.1}s > {budget_s:.1}s");
+    }
+    println!(
+        "huge-smoke OK: entries {e1} -> {e4} across a 4x trace, {wall:.1}s wall \
+         (budget {budget_s:.0}s)"
     );
     Ok(())
 }

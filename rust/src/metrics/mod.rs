@@ -1,20 +1,58 @@
 //! Measurement machinery: percentile digests, GPU idle accounting (Eq. 1),
 //! throughput, JCT, preemption counters, scheduling-overhead timers and an
 //! execution-timeline recorder ([`timeline`]).
+//!
+//! Two percentile backends live here (DESIGN.md §6): the exact [`Digest`]
+//! (stores every sample — the equivalence oracle, fine at testbed scale)
+//! and the O(1)-memory streaming [`GkSketch`]. [`TailDigest`] switches a
+//! run's tail metrics between them via [`MetricsMode`], so million-request
+//! sweeps stay flat in trace length.
 
+pub mod sketch;
 pub mod timeline;
 
+pub use sketch::GkSketch;
 pub use timeline::{Activity, Span, Timeline};
 
 
 /// The percentile set every delay figure in the paper reports.
 pub const PAPER_PERCENTILES: [f64; 5] = [0.01, 0.25, 0.50, 0.75, 0.99];
 
-/// Exact percentile digest (stores samples; fine at trace scale).
-#[derive(Debug, Clone, Default)]
+/// Which percentile backend a run's [`TailDigest`]s use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum MetricsMode {
+    /// Store every sample ([`Digest`]) — exact quantiles, O(n) memory.
+    /// The default, and the oracle the streaming mode is tested against.
+    #[default]
+    Exact,
+    /// Greenwald–Khanna sketch ([`GkSketch`]) — quantiles within a
+    /// provable rank error of ±εn, memory independent of trace length.
+    Streaming,
+}
+
+/// Exact percentile digest (stores samples; fine at testbed trace scale).
+///
+/// Empty-digest behavior is uniform across the query surface: every
+/// query ([`Digest::quantile`], [`Digest::mean`], [`Digest::max`],
+/// [`Digest::paper_percentiles`]) returns `None` when no samples were
+/// added, never a sentinel and never a panic.
+#[derive(Debug, Clone)]
 pub struct Digest {
     samples: Vec<f64>,
     sorted: bool,
+    /// Running maximum, maintained on [`Digest::add`] so `max` never has
+    /// to sort (it used to ensure_sorted — O(n log n) to read one value).
+    max_seen: f64,
+}
+
+impl Default for Digest {
+    fn default() -> Self {
+        Self {
+            samples: Vec::new(),
+            sorted: true,
+            max_seen: f64::NEG_INFINITY,
+        }
+    }
 }
 
 impl Digest {
@@ -26,6 +64,9 @@ impl Digest {
         debug_assert!(v.is_finite(), "non-finite sample {v}");
         self.samples.push(v);
         self.sorted = false;
+        if v > self.max_seen {
+            self.max_seen = v;
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -43,41 +84,154 @@ impl Digest {
         }
     }
 
-    /// Linear-interpolated quantile, `q` in [0, 1].
-    pub fn quantile(&mut self, q: f64) -> f64 {
-        assert!(!self.samples.is_empty(), "quantile of empty digest");
+    /// Linear-interpolated quantile, `q` in [0, 1]; `None` when empty.
+    pub fn quantile(&mut self, q: f64) -> Option<f64> {
         assert!((0.0..=1.0).contains(&q));
+        if self.samples.is_empty() {
+            return None;
+        }
         self.ensure_sorted();
         let n = self.samples.len();
         if n == 1 {
-            return self.samples[0];
+            return Some(self.samples[0]);
         }
         let pos = q * (n - 1) as f64;
         let lo = pos.floor() as usize;
         let hi = pos.ceil() as usize;
         let frac = pos - lo as f64;
-        self.samples[lo] * (1.0 - frac) + self.samples[hi] * frac
+        Some(self.samples[lo] * (1.0 - frac) + self.samples[hi] * frac)
     }
 
-    pub fn mean(&self) -> f64 {
+    /// Arithmetic mean; `None` when empty.
+    pub fn mean(&self) -> Option<f64> {
         if self.samples.is_empty() {
-            return 0.0;
+            return None;
         }
-        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+        Some(self.samples.iter().sum::<f64>() / self.samples.len() as f64)
     }
 
-    pub fn max(&mut self) -> f64 {
-        self.ensure_sorted();
-        *self.samples.last().expect("max of empty digest")
+    /// Largest sample (tracked on `add` — O(1)); `None` when empty.
+    pub fn max(&self) -> Option<f64> {
+        if self.samples.is_empty() {
+            return None;
+        }
+        Some(self.max_seen)
     }
 
-    /// The paper's five percentiles (p1, p25, p50, p75, p99).
-    pub fn paper_percentiles(&mut self) -> [f64; 5] {
+    /// The paper's five percentiles (p1, p25, p50, p75, p99); `None` when
+    /// empty.
+    pub fn paper_percentiles(&mut self) -> Option<[f64; 5]> {
+        if self.samples.is_empty() {
+            return None;
+        }
         let mut out = [0.0; 5];
         for (i, q) in PAPER_PERCENTILES.iter().enumerate() {
-            out[i] = self.quantile(*q);
+            out[i] = self.quantile(*q)?;
         }
-        out
+        Some(out)
+    }
+}
+
+/// A tail-metric digest with a switchable backend: the exact [`Digest`]
+/// oracle or the O(1)-memory streaming [`GkSketch`].
+///
+/// `mean`/`max`/`len` are exact in *both* modes (the sketch tracks running
+/// count/sum/max beside its tuples); only `quantile` carries the ±εn rank
+/// error in streaming mode. The query surface mirrors [`Digest`]:
+/// `None` on empty, never a sentinel.
+#[derive(Debug, Clone)]
+pub enum TailDigest {
+    /// Exact backend — stores every sample.
+    Exact(Digest),
+    /// Streaming backend — bounded-memory GK sketch.
+    Streaming(GkSketch),
+}
+
+impl Default for TailDigest {
+    fn default() -> Self {
+        TailDigest::Exact(Digest::new())
+    }
+}
+
+impl TailDigest {
+    /// Build the backend for `mode` (streaming uses
+    /// [`sketch::DEFAULT_EPSILON`]).
+    pub fn new(mode: MetricsMode) -> Self {
+        match mode {
+            MetricsMode::Exact => TailDigest::Exact(Digest::new()),
+            MetricsMode::Streaming => TailDigest::Streaming(GkSketch::new()),
+        }
+    }
+
+    pub fn add(&mut self, v: f64) {
+        match self {
+            TailDigest::Exact(d) => d.add(v),
+            TailDigest::Streaming(s) => s.add(v),
+        }
+    }
+
+    /// Number of samples observed (exact in both modes).
+    pub fn len(&self) -> usize {
+        match self {
+            TailDigest::Exact(d) => d.len(),
+            TailDigest::Streaming(s) => s.count() as usize,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Quantile, `q` in [0, 1]; exact or within ±εn rank error depending
+    /// on the backend. `None` when empty.
+    pub fn quantile(&mut self, q: f64) -> Option<f64> {
+        match self {
+            TailDigest::Exact(d) => d.quantile(q),
+            TailDigest::Streaming(s) => s.quantile(q),
+        }
+    }
+
+    /// Arithmetic mean — exact in both modes. `None` when empty.
+    pub fn mean(&self) -> Option<f64> {
+        match self {
+            TailDigest::Exact(d) => d.mean(),
+            TailDigest::Streaming(s) => s.mean(),
+        }
+    }
+
+    /// Largest sample — exact in both modes. `None` when empty.
+    pub fn max(&self) -> Option<f64> {
+        match self {
+            TailDigest::Exact(d) => d.max(),
+            TailDigest::Streaming(s) => s.max(),
+        }
+    }
+
+    /// The paper's five percentiles; `None` when empty.
+    pub fn paper_percentiles(&mut self) -> Option<[f64; 5]> {
+        match self {
+            TailDigest::Exact(d) => d.paper_percentiles(),
+            TailDigest::Streaming(s) => {
+                if s.count() == 0 {
+                    return None;
+                }
+                let mut out = [0.0; 5];
+                for (i, q) in PAPER_PERCENTILES.iter().enumerate() {
+                    out[i] = s.quantile(*q)?;
+                }
+                Some(out)
+            }
+        }
+    }
+
+    /// Stored entries backing this digest: samples (exact) or sketch
+    /// tuples (streaming). The memory-flatness gate the huge-sweep smoke
+    /// asserts on — streaming entries must not grow with trace length.
+    pub fn entries(&self) -> usize {
+        match self {
+            TailDigest::Exact(d) => d.len(),
+            TailDigest::Streaming(s) => s.entries(),
+        }
     }
 }
 
@@ -140,13 +294,13 @@ pub struct RunMetrics {
     pub policy: String,
     pub model: String,
     /// Queueing delay (arrival → prefill start) of short requests.
-    pub short_queue_delay: Digest,
+    pub short_queue_delay: TailDigest,
     /// Queueing delay of long requests.
-    pub long_queue_delay: Digest,
+    pub long_queue_delay: TailDigest,
     /// JCT (arrival → last token) of short requests.
-    pub short_jct: Digest,
+    pub short_jct: TailDigest,
     /// JCT of long requests (only those that completed).
-    pub long_jct: Digest,
+    pub long_jct: TailDigest,
     pub shorts_completed: usize,
     pub longs_completed: usize,
     pub longs_total: usize,
@@ -166,11 +320,34 @@ pub struct RunMetrics {
     /// O(1) between interruptions instead of O(output_len / decode_chunk)).
     pub events_processed: u64,
     /// Wall-clock scheduling time per request / simulated JCT (Table 7).
+    /// Always exact `Digest`s: excluded from sweep JSON, tiny, and not
+    /// worth a mode switch.
     pub sched_overhead_short: Digest,
     pub sched_overhead_long: Digest,
 }
 
 impl RunMetrics {
+    /// Fresh metrics whose four tail digests use `mode`'s backend.
+    pub fn with_mode(mode: MetricsMode) -> Self {
+        Self {
+            short_queue_delay: TailDigest::new(mode),
+            long_queue_delay: TailDigest::new(mode),
+            short_jct: TailDigest::new(mode),
+            long_jct: TailDigest::new(mode),
+            ..Self::default()
+        }
+    }
+
+    /// Total stored entries across the four tail digests — the number the
+    /// huge-sweep smoke asserts is trace-length independent in streaming
+    /// mode (samples in exact mode, sketch tuples in streaming mode).
+    pub fn metric_entries(&self) -> usize {
+        self.short_queue_delay.entries()
+            + self.long_queue_delay.entries()
+            + self.short_jct.entries()
+            + self.long_jct.entries()
+    }
+
     /// Throughput of short requests (Fig. 2b/3b/10), requests per second,
     /// measured over the window in which the short workload was served
     /// (so a policy that merely delays *long* completions is not
@@ -199,15 +376,13 @@ impl RunMetrics {
     /// deliberately excluded — so sweep output built from summaries is
     /// byte-identical across thread counts and machine load (and across
     /// hosts in practice, modulo per-platform libm ULP differences).
+    /// Empty digests zero-fill their summary fields (the documented
+    /// serialization of "no samples").
     pub fn summary(&mut self) -> RunSummary {
         RunSummary {
-            short_delay_pcts: if self.short_queue_delay.is_empty() {
-                [0.0; 5]
-            } else {
-                self.short_queue_delay.paper_percentiles()
-            },
+            short_delay_pcts: self.short_queue_delay.paper_percentiles().unwrap_or([0.0; 5]),
             short_rps: self.short_rps(),
-            long_jct_mean: self.long_jct.mean(),
+            long_jct_mean: self.long_jct.mean().unwrap_or(0.0),
             shorts_completed: self.shorts_completed,
             longs_completed: self.longs_completed,
             longs_total: self.longs_total,
@@ -297,10 +472,10 @@ mod tests {
         for i in 0..=100 {
             d.add(i as f64);
         }
-        assert_eq!(d.quantile(0.0), 0.0);
-        assert_eq!(d.quantile(0.5), 50.0);
-        assert_eq!(d.quantile(1.0), 100.0);
-        assert!((d.quantile(0.99) - 99.0).abs() < 1e-9);
+        assert_eq!(d.quantile(0.0), Some(0.0));
+        assert_eq!(d.quantile(0.5), Some(50.0));
+        assert_eq!(d.quantile(1.0), Some(100.0));
+        assert!((d.quantile(0.99).unwrap() - 99.0).abs() < 1e-9);
     }
 
     #[test]
@@ -308,21 +483,64 @@ mod tests {
         let mut d = Digest::new();
         d.add(0.0);
         d.add(10.0);
-        assert!((d.quantile(0.25) - 2.5).abs() < 1e-12);
+        assert!((d.quantile(0.25).unwrap() - 2.5).abs() < 1e-12);
     }
 
     #[test]
     fn digest_single_sample() {
         let mut d = Digest::new();
         d.add(7.0);
-        assert_eq!(d.quantile(0.99), 7.0);
-        assert_eq!(d.mean(), 7.0);
+        assert_eq!(d.quantile(0.99), Some(7.0));
+        assert_eq!(d.mean(), Some(7.0));
+        assert_eq!(d.max(), Some(7.0));
     }
 
     #[test]
-    #[should_panic]
-    fn digest_empty_quantile_panics() {
-        Digest::new().quantile(0.5);
+    fn empty_digest_queries_are_uniformly_none() {
+        // Satellite fix: quantile used to panic while mean returned 0.0 —
+        // every query on an empty digest now answers None.
+        let mut d = Digest::new();
+        assert_eq!(d.quantile(0.5), None);
+        assert_eq!(d.mean(), None);
+        assert_eq!(d.max(), None);
+        assert_eq!(d.paper_percentiles(), None);
+        let mut t = TailDigest::new(MetricsMode::Streaming);
+        assert_eq!(t.quantile(0.5), None);
+        assert_eq!(t.mean(), None);
+        assert_eq!(t.max(), None);
+        assert_eq!(t.paper_percentiles(), None);
+    }
+
+    #[test]
+    fn digest_max_is_running_not_sorted() {
+        // Satellite fix: max no longer sorts — it must be correct even
+        // while the sample vec is unsorted, and O(1) to read.
+        let mut d = Digest::new();
+        for v in [3.0, 9.0, 1.0, 7.5] {
+            d.add(v);
+        }
+        assert_eq!(d.max(), Some(9.0));
+        // Interleave with a sort-forcing quantile and keep adding.
+        assert!(d.quantile(0.5).is_some());
+        d.add(11.0);
+        d.add(2.0);
+        assert_eq!(d.max(), Some(11.0));
+    }
+
+    #[test]
+    fn tail_digest_streaming_matches_exact_on_count_mean_max() {
+        let mut ex = TailDigest::new(MetricsMode::Exact);
+        let mut st = TailDigest::new(MetricsMode::Streaming);
+        for i in 0..10_000 {
+            let v = ((i * 7919) % 1000) as f64 / 10.0;
+            ex.add(v);
+            st.add(v);
+        }
+        assert_eq!(ex.len(), st.len());
+        assert!((ex.mean().unwrap() - st.mean().unwrap()).abs() < 1e-9);
+        assert_eq!(ex.max(), st.max());
+        // The streaming backend is the whole point: bounded entries.
+        assert!(st.entries() < ex.entries());
     }
 
     #[test]
@@ -344,6 +562,17 @@ mod tests {
         let r = idle_rate(&[10.0, 0.0], &[1, 4], 10.0);
         assert!((r - 0.8).abs() < 1e-12);
         assert_eq!(idle_rate(&[], &[], 10.0), 0.0);
+    }
+
+    #[test]
+    fn idle_rate_clamps_busy_beyond_horizon() {
+        // busy > horizon (a replica whose last interval closed after the
+        // chosen horizon): the min(horizon) clamp keeps the rate at 0,
+        // never negative.
+        assert_eq!(idle_rate(&[15.0], &[1], 10.0), 0.0);
+        // Mixed: the over-busy replica contributes exactly `horizon` busy.
+        let r = idle_rate(&[15.0, 0.0], &[1, 1], 10.0);
+        assert!((r - 0.5).abs() < 1e-12);
     }
 
     #[test]
@@ -378,10 +607,21 @@ mod tests {
         m.sched_overhead_short.add(0.123);
         let s = m.summary();
         assert_eq!(s, m.summary());
-        assert_eq!(s.short_p99_delay(), m.short_queue_delay.quantile(0.99));
+        assert_eq!(
+            Some(s.short_p99_delay()),
+            m.short_queue_delay.quantile(0.99)
+        );
         assert_eq!(s.preemptions, 3);
         assert_eq!(s.events_processed, 99);
         assert!((s.long_jct_mean - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_zero_fills_empty_digests() {
+        let mut m = RunMetrics::with_mode(MetricsMode::Streaming);
+        let s = m.summary();
+        assert_eq!(s.short_delay_pcts, [0.0; 5]);
+        assert_eq!(s.long_jct_mean, 0.0);
     }
 
     #[test]
@@ -404,12 +644,35 @@ mod tests {
     }
 
     #[test]
+    fn aggregate_seeds_single_seed_group() {
+        // Satellite coverage: a one-seed group must report mean == min ==
+        // max (the spread collapses to the single observation).
+        let one = RunSummary {
+            short_delay_pcts: [0.1, 0.2, 0.3, 0.4, 2.5],
+            short_rps: 12.0,
+            long_jct_mean: 80.0,
+            preemptions: 7,
+            gpu_idle_rate: 0.3,
+            ..Default::default()
+        };
+        let a = aggregate_seeds(&[one]);
+        assert_eq!(a.seeds, 1);
+        assert_eq!(a.short_p99_delay_mean, 2.5);
+        assert_eq!(a.short_p99_delay_min, 2.5);
+        assert_eq!(a.short_p99_delay_max, 2.5);
+        assert_eq!(a.short_rps_mean, 12.0);
+        assert_eq!(a.long_jct_mean, 80.0);
+        assert_eq!(a.preemptions_mean, 7.0);
+        assert_eq!(a.gpu_idle_rate_mean, 0.3);
+    }
+
+    #[test]
     fn paper_percentiles_ordering() {
         let mut d = Digest::new();
         for i in 0..1000 {
             d.add((i % 37) as f64);
         }
-        let p = d.paper_percentiles();
+        let p = d.paper_percentiles().unwrap();
         for w in p.windows(2) {
             assert!(w[0] <= w[1]);
         }

@@ -17,7 +17,7 @@ mod registry;
 pub use registry::{all, by_name, names};
 
 use crate::config::{DecodeMode, PolicyKind};
-use crate::metrics::RunMetrics;
+use crate::metrics::{MetricsMode, RunMetrics};
 use crate::sched::Policy;
 use crate::sim::{run_sim, ClusterOps, SimConfig, SimState, Simulation};
 use crate::trace::{generate_trace, ArrivalProcess, LengthMix, Trace};
@@ -41,6 +41,9 @@ pub struct SimOverrides {
     /// Override the decode stepping mode (e.g. the approximate
     /// closed-form fast-forward for massive grids).
     pub decode_mode: Option<DecodeMode>,
+    /// Override the percentile backend (e.g. streaming GK sketches so a
+    /// massive grid's memory stays trace-length independent).
+    pub metrics_mode: Option<MetricsMode>,
 }
 
 /// Arrival shape, parameterised at build time by the cell's mean rate so
@@ -151,6 +154,9 @@ impl Scenario {
         if let Some(mode) = self.overrides.decode_mode {
             cfg.decode_mode = mode;
         }
+        if let Some(mode) = self.overrides.metrics_mode {
+            cfg.metrics_mode = mode;
+        }
     }
 
     /// Run one simulation under this scenario: overrides applied, the
@@ -168,13 +174,15 @@ impl Scenario {
         // against simulated time only — thread-count independent.
         let mut failed = vec![false; self.failures.len()];
         let mut recovered = vec![false; self.failures.len()];
+        let mut displaced = Vec::new();
         sim.run_with_hook(|st: &mut SimState, policy: &mut dyn Policy| {
             for (i, f) in self.failures.iter().enumerate() {
                 let rid = f.replica % st.replica_count();
                 if !failed[i] && st.now() >= span * f.at_frac {
                     failed[i] = true;
                     if !st.replica(rid).is_down() {
-                        for req in st.fail_replica(rid) {
+                        st.fail_replica(rid, &mut displaced);
+                        for &req in &displaced {
                             policy.on_arrival(&mut ClusterOps::new(st), req);
                         }
                     }
@@ -256,7 +264,9 @@ mod tests {
     fn overrides_apply_to_simconfig() {
         let s = by_name("huge-sweep").unwrap();
         let mut cfg = SimConfig::baseline(crate::config::ModelSpec::mistral_7b());
+        assert_eq!(cfg.metrics_mode, MetricsMode::Exact, "default is exact");
         s.apply_overrides(&mut cfg);
         assert_eq!(cfg.decode_mode, DecodeMode::EpochClosedForm);
+        assert_eq!(cfg.metrics_mode, MetricsMode::Streaming);
     }
 }

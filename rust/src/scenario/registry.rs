@@ -7,6 +7,7 @@
 //! — discovers it automatically.
 
 use crate::config::DecodeMode;
+use crate::metrics::MetricsMode;
 
 use super::{ArrivalShape, FailurePoint, MixShape, Scenario, SimOverrides};
 
@@ -109,13 +110,15 @@ pub fn all() -> Vec<Scenario> {
         Scenario {
             name: "huge-sweep",
             description: "azure-steady under the approximate closed-form \
-                          decode fast-forward (DecodeMode::EpochClosedForm) — \
-                          the cheap mode for massive grids",
+                          decode fast-forward (DecodeMode::EpochClosedForm) \
+                          and streaming GK percentile sketches — the cheap, \
+                          bounded-memory mode for massive grids",
             arrival: ArrivalShape::Steady,
             mix: MixShape::AzureStandard,
             failures: vec![],
             overrides: SimOverrides {
                 decode_mode: Some(DecodeMode::EpochClosedForm),
+                metrics_mode: Some(MetricsMode::Streaming),
             },
         },
     ]

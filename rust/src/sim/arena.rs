@@ -1,0 +1,95 @@
+//! Struct-of-arrays (SoA) request arena: the hot-path layout of
+//! per-request runtime state.
+//!
+//! The event loop touches one or two fields of one request per event —
+//! `phase` on a dispatch check, `generated` on a decode boundary,
+//! `sched_ns` on an arrival. Under the old array-of-structs layout
+//! (`Vec<ReqRt>`, one multi-field record per request) every such touch
+//! dragged the request's entire record through the cache, and bulk
+//! passes (completion scans, index recomputes) streamed mostly-dead
+//! bytes. [`ReqArena`] splits the record into parallel column vectors
+//! indexed by [`ReqId`], so each access streams exactly the column it
+//! needs.
+//!
+//! [`super::SimState`] owns one arena. Policies, tests, and metrics
+//! collection keep the familiar row view through [`ReqRt`] *snapshots*
+//! ([`ReqArena::snapshot`], [`super::SimState::requests`]): `ReqRt` is
+//! `Copy`, so the row view is a value, not a borrow into the arena.
+
+use crate::cluster::ReplicaId;
+use crate::trace::{ReqId, Request};
+
+use super::state::{ReqPhase, ReqRt};
+
+/// Columnar per-request runtime state. Every column has one entry per
+/// trace request and [`ReqId`] indexes them all; the columns only ever
+/// grow together (built once in [`super::SimState::new`], never
+/// resized).
+#[derive(Debug, Clone)]
+pub struct ReqArena {
+    /// Immutable trace metadata (arrival, lengths, class).
+    pub(super) meta: Vec<Request>,
+    /// Lifecycle phase.
+    pub(super) phase: Vec<ReqPhase>,
+    /// When the prefill first got GPUs (never reset by failures).
+    pub(super) prefill_start: Vec<Option<f64>>,
+    /// Completion time.
+    pub(super) finish: Vec<Option<f64>>,
+    /// Output tokens generated so far.
+    pub(super) generated: Vec<u32>,
+    /// Replica whose §5.2 colocation budget this request is charged to.
+    pub(super) colocated_on: Vec<Option<ReplicaId>>,
+    /// Wall-clock scheduling nanoseconds attributed (Table 7).
+    pub(super) sched_ns: Vec<u64>,
+}
+
+impl ReqArena {
+    /// Build the arena for a trace; every request starts `Queued` with
+    /// no progress. Requests must be id-ordered (`Trace::new` reassigns
+    /// ids to positions, and the event queue indexes by [`ReqId`]).
+    pub(super) fn from_requests(requests: &[Request]) -> Self {
+        debug_assert!(
+            requests.iter().enumerate().all(|(i, r)| r.id == i),
+            "request ids must equal their trace positions"
+        );
+        let n = requests.len();
+        Self {
+            meta: requests.to_vec(),
+            phase: vec![ReqPhase::Queued; n],
+            prefill_start: vec![None; n],
+            finish: vec![None; n],
+            generated: vec![0; n],
+            colocated_on: vec![None; n],
+            sched_ns: vec![0; n],
+        }
+    }
+
+    /// Number of requests in the arena (the trace length).
+    pub fn len(&self) -> usize {
+        self.meta.len()
+    }
+
+    /// True when the arena holds no requests.
+    pub fn is_empty(&self) -> bool {
+        self.meta.is_empty()
+    }
+
+    /// KV-cache context tokens `req` holds: full prompt plus tokens
+    /// generated so far (the decode-admission and migration currency).
+    pub fn context_tokens(&self, req: ReqId) -> u64 {
+        self.meta[req].input_len as u64 + self.generated[req] as u64
+    }
+
+    /// Materialise the row view of one request.
+    pub fn snapshot(&self, req: ReqId) -> ReqRt {
+        ReqRt {
+            req: self.meta[req],
+            phase: self.phase[req],
+            prefill_start: self.prefill_start[req],
+            finish: self.finish[req],
+            generated: self.generated[req],
+            colocated_on: self.colocated_on[req],
+            sched_ns: self.sched_ns[req],
+        }
+    }
+}

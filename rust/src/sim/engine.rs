@@ -86,7 +86,7 @@ impl Simulation {
                     // pallas-lint: allow(det-wallclock) -- Table 7 overhead digest; never feeds simulated time
                     let t0 = Instant::now();
                     self.policy.on_arrival(&mut ClusterOps::new(st), req);
-                    st.reqs[req].sched_ns += t0.elapsed().as_nanos() as u64;
+                    st.reqs.sched_ns[req] += t0.elapsed().as_nanos() as u64;
                     // Starts triggered by this arrival are already billed
                     // to it; drop them from the attribution log.
                     st.recent_prefill_starts.clear();
@@ -104,7 +104,7 @@ impl Simulation {
                         // pallas-lint: allow(det-wallclock) -- Table 7 overhead digest; never feeds simulated time
                         let t0 = Instant::now();
                         self.policy.on_arrival(&mut ClusterOps::new(st), req);
-                        st.reqs[req].sched_ns += t0.elapsed().as_nanos() as u64;
+                        st.reqs.sched_ns[req] += t0.elapsed().as_nanos() as u64;
                         st.recent_prefill_starts.clear();
                     }
                 }
@@ -174,7 +174,7 @@ impl Simulation {
             let extra = (ns % len) as usize;
             for i in 0..st.recent_prefill_starts.len() {
                 let req = st.recent_prefill_starts[i];
-                st.reqs[req].sched_ns += share + u64::from(i < extra);
+                st.reqs.sched_ns[req] += share + u64::from(i < extra);
             }
             st.recent_prefill_starts.clear();
         }
@@ -182,22 +182,22 @@ impl Simulation {
 
     fn collect(&mut self) -> RunMetrics {
         let st = &mut self.state;
-        let mut m = RunMetrics {
-            policy: self.policy_kind.name(),
-            model: st.cm.model.name.clone(),
-            ..Default::default()
-        };
+        let mut m = RunMetrics::with_mode(st.metrics_mode);
+        m.policy = self.policy_kind.name();
+        m.model = st.cm.model.name.clone();
 
         let makespan = st
             .reqs
+            .finish
             .iter()
-            .filter_map(|r| r.finish)
+            .filter_map(|&f| f)
             .fold(st.now, f64::max);
         m.makespan = makespan;
 
         let t_shorts_done = st.t_shorts_done.unwrap_or(makespan);
         m.t_shorts_done = t_shorts_done;
-        for rt in &st.reqs {
+        for i in 0..st.reqs.len() {
+            let rt = st.reqs.snapshot(i);
             let is_long = rt.req.is_long;
             if is_long {
                 m.longs_total += 1;

@@ -37,7 +37,8 @@ use std::collections::BTreeSet;
 
 use crate::cluster::ReplicaId;
 
-use super::state::{LongGroup, LongPhase, ReplicaRt, ReqRt};
+use super::arena::ReqArena;
+use super::state::{LongGroup, LongPhase, ReplicaRt};
 
 /// Number of static partitions (0 = ordinary; 1 = a policy-reserved pool,
 /// used by Reservation's long partition).
@@ -63,7 +64,7 @@ impl IndexEntry {
     /// Compute the entry for a replica from current simulation state.
     /// This is the single definition of set membership; the naive-scan
     /// oracles in `state.rs` must stay predicate-for-predicate identical.
-    pub fn compute(r: &ReplicaRt, groups: &[Option<LongGroup>], reqs: &[ReqRt]) -> Self {
+    pub fn compute(r: &ReplicaRt, groups: &[Option<LongGroup>], reqs: &ReqArena) -> Self {
         if r.down {
             return Self::default();
         }
@@ -284,7 +285,7 @@ impl SchedIndex {
         &self,
         replicas: &[ReplicaRt],
         groups: &[Option<LongGroup>],
-        reqs: &[ReqRt],
+        reqs: &ReqArena,
     ) -> Result<(), String> {
         let mut fresh = SchedIndex::new(replicas.len());
         fresh.partition.copy_from_slice(&self.partition);

@@ -14,6 +14,7 @@
 //! retained in [`oracle_simulation`]'s module as the golden-equivalence
 //! oracle; DESIGN.md §3 documents the contract for writing a new policy.
 
+mod arena;
 mod engine;
 mod events;
 mod index;
@@ -22,6 +23,7 @@ mod oracle;
 mod state;
 mod view;
 
+pub use arena::ReqArena;
 pub use engine::{run_sim, Simulation};
 pub use events::{Event, EventKind, EventQueue, GroupId};
 pub use index::{IndexEntry, SchedIndex};

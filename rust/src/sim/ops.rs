@@ -208,13 +208,13 @@ impl<'a> ClusterOps<'a> {
     }
 
     fn short_place_veto(&self, rid: ReplicaId, req: ReqId) -> Option<Veto> {
-        if self.st.reqs[req].req.is_long {
+        if self.st.reqs.meta[req].is_long {
             return Some(Veto::WrongClass);
         }
         // O(1) checks only — this guards every placement on the hot path.
         // (A request parked in some local queue is also `Queued`; placing
         // it twice is a policy bug the debug-build index oracle catches.)
-        if self.st.reqs[req].phase != ReqPhase::Queued {
+        if self.st.reqs.phase[req] != ReqPhase::Queued {
             return Some(Veto::NotDispatchable);
         }
         if self.st.replicas[rid].down {
@@ -262,7 +262,7 @@ impl<'a> ClusterOps<'a> {
         if !decoding {
             return PrefillOutcome::Rejected(Veto::HostNotDecoding);
         }
-        let len = self.st.reqs[req].req.input_len as u64;
+        let len = self.st.reqs.meta[req].input_len as u64;
         let budget = self.st.params.colocate_max_tokens as u64;
         if self.st.replicas[rid].colocated_tokens + len > budget {
             return PrefillOutcome::Rejected(Veto::OverBudget);
@@ -308,10 +308,10 @@ impl<'a> ClusterOps<'a> {
         cap: usize,
     ) -> LongStartOutcome {
         let st = &mut *self.st;
-        if !st.reqs[req].req.is_long {
+        if !st.reqs.meta[req].is_long {
             return LongStartOutcome::Rejected(Veto::WrongClass);
         }
-        if st.reqs[req].phase != ReqPhase::Queued {
+        if st.reqs.phase[req] != ReqPhase::Queued {
             return LongStartOutcome::Rejected(Veto::NotDispatchable);
         }
         let avail = match eligibility {
@@ -329,7 +329,7 @@ impl<'a> ClusterOps<'a> {
                 }
             }
         };
-        let len = st.reqs[req].req.input_len;
+        let len = st.reqs.meta[req].input_len;
         let n = st.replicas_needed(len).min(cap).max(1);
         debug_assert_eq!(
             avail,
@@ -378,7 +378,7 @@ impl<'a> ClusterOps<'a> {
         if self.st.replicas[to].down {
             return MigrateOutcome::Rejected(Veto::ReplicaDown);
         }
-        if self.st.reqs[req].req.is_long {
+        if self.st.reqs.meta[req].is_long {
             return MigrateOutcome::Rejected(Veto::WrongClass);
         }
         if self.st.start_migration(req, to) {
@@ -394,7 +394,7 @@ impl<'a> ClusterOps<'a> {
     /// [`ClusterOps::start_prefill`]; lets a policy re-place work it now
     /// regrets.
     pub fn requeue(&mut self, req: ReqId) -> RequeueOutcome {
-        if self.st.reqs[req].req.is_long {
+        if self.st.reqs.meta[req].is_long {
             return RequeueOutcome::Rejected(Veto::WrongClass);
         }
         if self.st.withdraw_queued_prefill(req) {

@@ -42,7 +42,7 @@ fn try_start_long(
     avail: usize,
     eligible: &dyn Fn(&super::state::ReplicaRt) -> bool,
 ) -> Option<Vec<ReqId>> {
-    let len = st.reqs[req].req.input_len;
+    let len = st.reqs.meta[req].input_len;
     let n = st.replicas_needed(len).min(cap).max(1);
     debug_assert_eq!(
         avail,
@@ -80,7 +80,7 @@ impl DirectPolicy for OracleFifo {
 
     fn dispatch(&mut self, st: &mut SimState) {
         while let Some(&head) = self.global.front() {
-            if st.reqs[head].req.is_long {
+            if st.reqs.meta[head].is_long {
                 let avail = st.index.idle_count();
                 let placed = try_start_long(st, head, usize::MAX, avail, &|r| {
                     r.is_idle() && !r.dedicated_decode
@@ -117,7 +117,7 @@ struct OraclePriority {
 
 impl DirectPolicy for OraclePriority {
     fn on_arrival(&mut self, st: &mut SimState, req: ReqId) {
-        if st.reqs[req].req.is_long {
+        if st.reqs.meta[req].is_long {
             self.longs.push_back(req);
         } else {
             self.shorts.push_back(req);
@@ -186,7 +186,7 @@ impl OracleReservation {
 
 impl DirectPolicy for OracleReservation {
     fn on_arrival(&mut self, st: &mut SimState, req: ReqId) {
-        if st.reqs[req].req.is_long {
+        if st.reqs.meta[req].is_long {
             self.longs.push_back(req);
         } else {
             self.shorts.push_back(req);
@@ -265,7 +265,7 @@ impl OraclePecSched {
     }
 
     fn try_place_short(&self, st: &mut SimState, req: ReqId) -> bool {
-        let len = st.reqs[req].req.input_len;
+        let len = st.reqs.meta[req].input_len;
 
         if let Some(rid) = st.pick_idle_ordinary() {
             st.enqueue_short_prefill(rid, req);
@@ -338,7 +338,7 @@ impl OraclePecSched {
 
 impl DirectPolicy for OraclePecSched {
     fn on_arrival(&mut self, st: &mut SimState, req: ReqId) {
-        if st.reqs[req].req.is_long {
+        if st.reqs.meta[req].is_long {
             self.pending_longs.push_back(req);
             self.dispatch_longs(st);
         } else if !self.try_place_short(st, req) {

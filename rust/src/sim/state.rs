@@ -26,9 +26,10 @@ use crate::config::{
     AblationFlags, ClusterSpec, DecodeMode, ModelSpec, PolicyKind, SchedParams,
 };
 use crate::costmodel::{sp, CostModel, SpPlan};
-use crate::metrics::BusyTracker;
+use crate::metrics::{BusyTracker, MetricsMode};
 use crate::trace::{ReqId, Request};
 
+use super::arena::ReqArena;
 use super::events::{Event, EventKind, EventQueue, GroupId};
 use super::index::{IndexEntry, SchedIndex};
 
@@ -49,12 +50,14 @@ pub enum ReqPhase {
     Done,
 }
 
-/// Per-request runtime bookkeeping.
+/// Row view of one request's runtime state.
 ///
-/// Read-only to policies (via [`super::ClusterView::request`]) and to
-/// external drivers (via [`SimState::requests`]); only the simulator's
-/// mechanics mutate it.
-#[derive(Debug, Clone)]
+/// Since the SoA refactor the authoritative storage is the columnar
+/// [`ReqArena`]; a `ReqRt` is a `Copy` *snapshot* materialised on demand
+/// for policies (via [`super::ClusterView::request`]) and external
+/// drivers (via [`SimState::requests`]). Mutating a snapshot does not
+/// touch the simulation.
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct ReqRt {
     /// The immutable trace request this runtime entry tracks.
     pub req: Request,
@@ -221,16 +224,16 @@ pub struct ReplicaRt {
 impl ReplicaRt {
     /// Total prefill tokens queued or running (the "local queue length" of
     /// §5, measured in tokens [36]).
-    pub fn prefill_load_tokens(&self, reqs: &[ReqRt]) -> u64 {
+    pub fn prefill_load_tokens(&self, reqs: &ReqArena) -> u64 {
         let running = self
             .running_prefill
-            .map(|r| reqs[r].req.input_len as u64)
+            .map(|r| reqs.meta[r].input_len as u64)
             .unwrap_or(0);
         self.queued_prefill_tokens + running
     }
 
     /// Context tokens held by the decode batch (active + waiting).
-    pub fn decode_load_tokens(&self, _reqs: &[ReqRt]) -> u64 {
+    pub fn decode_load_tokens(&self, _reqs: &ReqArena) -> u64 {
         self.decode_active_tokens + self.decode_waiting_tokens
     }
 
@@ -302,6 +305,9 @@ pub struct SimConfig {
     /// Decode stepping granularity: epoch fast-forward (default) or the
     /// per-round oracle; see [`DecodeMode`].
     pub decode_mode: DecodeMode,
+    /// Tail-metric storage: exact digests (default) or O(1)-memory
+    /// streaming sketches; see [`MetricsMode`].
+    pub metrics_mode: MetricsMode,
     /// Hard cap on simulated events (runaway guard).
     pub max_events: u64,
 }
@@ -317,6 +323,7 @@ impl SimConfig {
             flags: AblationFlags::full(),
             dedicated_decode_pool: false,
             decode_mode: DecodeMode::default(),
+            metrics_mode: MetricsMode::default(),
             max_events: 500_000_000,
         }
     }
@@ -332,6 +339,7 @@ impl SimConfig {
             flags,
             dedicated_decode_pool: flags.disaggregation,
             decode_mode: DecodeMode::default(),
+            metrics_mode: MetricsMode::default(),
             max_events: 500_000_000,
         }
     }
@@ -367,7 +375,10 @@ pub struct SimState {
     pub(super) flags: AblationFlags,
     /// Decode stepping granularity (see [`DecodeMode`]).
     pub(super) decode_mode: DecodeMode,
-    pub(super) reqs: Vec<ReqRt>,
+    /// Tail-metric storage mode (consumed by the engine's collector).
+    pub(super) metrics_mode: MetricsMode,
+    /// Columnar per-request runtime state (see [`ReqArena`]).
+    pub(super) reqs: ReqArena,
     pub(super) replicas: Vec<ReplicaRt>,
     pub(super) groups: Vec<Option<LongGroup>>,
     /// KV token capacity of one replica (cached).
@@ -396,6 +407,9 @@ pub struct SimState {
     scratch_active: Vec<ReqId>,
     /// Persistent scratch for the requests that completed this round.
     scratch_done: Vec<ReqId>,
+    /// Persistent scratch holding a long group's member list while the
+    /// group is mutated (avoids cloning `members` on every long event).
+    scratch_members: Vec<ReplicaId>,
 }
 
 impl std::fmt::Debug for SimState {
@@ -460,22 +474,11 @@ impl SimState {
         }
 
         let mut queue = EventQueue::new();
-        let reqs: Vec<ReqRt> = requests
-            .iter()
-            .map(|&req| ReqRt {
-                req,
-                phase: ReqPhase::Queued,
-                prefill_start: None,
-                finish: None,
-                generated: 0,
-                colocated_on: None,
-                sched_ns: 0,
-            })
-            .collect();
-        for r in &reqs {
-            queue.push(r.req.arrival, EventKind::Arrival(r.req.id));
+        let reqs = ReqArena::from_requests(requests);
+        for r in &reqs.meta {
+            queue.push(r.arrival, EventKind::Arrival(r.id));
         }
-        let shorts_total = reqs.iter().filter(|r| !r.req.is_long).count();
+        let shorts_total = reqs.meta.iter().filter(|r| !r.is_long).count();
 
         let mut index = SchedIndex::new(replicas.len());
         let groups: Vec<Option<LongGroup>> = Vec::new();
@@ -491,6 +494,7 @@ impl SimState {
             params: cfg.params.clone(),
             flags: cfg.flags,
             decode_mode: cfg.decode_mode,
+            metrics_mode: cfg.metrics_mode,
             reqs,
             replicas,
             groups,
@@ -506,6 +510,7 @@ impl SimState {
             index,
             scratch_active: Vec::new(),
             scratch_done: Vec::new(),
+            scratch_members: Vec::new(),
         }
     }
 
@@ -526,14 +531,23 @@ impl SimState {
         self.now
     }
 
-    /// Per-request runtime entries, indexed by [`ReqId`].
-    pub fn requests(&self) -> &[ReqRt] {
-        &self.reqs
+    /// Snapshot of every request's runtime entry, indexed by [`ReqId`].
+    ///
+    /// Materialises one [`ReqRt`] row per request from the columnar
+    /// [`ReqArena`] — an allocation, intended for post-run inspection
+    /// and tests, not per-event use.
+    pub fn requests(&self) -> Vec<ReqRt> {
+        (0..self.reqs.len()).map(|i| self.reqs.snapshot(i)).collect()
     }
 
-    /// One request's runtime entry.
-    pub fn request(&self, req: ReqId) -> &ReqRt {
-        &self.reqs[req]
+    /// Snapshot of one request's runtime entry.
+    pub fn request(&self, req: ReqId) -> ReqRt {
+        self.reqs.snapshot(req)
+    }
+
+    /// The columnar request arena (read-only; see [`ReqArena`]).
+    pub fn arena(&self) -> &ReqArena {
+        &self.reqs
     }
 
     /// Number of replicas in the cluster (including failed ones).
@@ -791,13 +805,14 @@ impl SimState {
         got
     }
 
-    /// All completely idle ordinary (non-dedicated, live) replicas.
-    pub fn idle_replicas(&self) -> Vec<ReplicaId> {
+    /// All completely idle ordinary (non-dedicated, live) replicas, in id
+    /// order. Returns a lazy iterator — no allocation on the caller's
+    /// side (failure hooks used to collect this every probe).
+    pub fn idle_replicas(&self) -> impl Iterator<Item = ReplicaId> + '_ {
         self.replicas
             .iter()
             .filter(|r| r.is_idle() && !r.dedicated_decode && !r.down)
             .map(|r| r.id)
-            .collect()
     }
 
     // ------------------------------------------------------------------
@@ -809,17 +824,20 @@ impl SimState {
     /// and in-flight prefill work are gone; generated tokens restart —
     /// inference has no mid-stream checkpoint). A long group with a failed
     /// member aborts entirely: its other members are released and the long
-    /// request is returned for re-dispatch. Returns all displaced requests.
-    pub fn fail_replica(&mut self, rid: ReplicaId) -> Vec<ReqId> {
-        let mut displaced = Vec::new();
+    /// request is returned for re-dispatch.
+    ///
+    /// Displaced requests are written into the caller-owned `displaced`
+    /// buffer (cleared first), so a failure-injection hook that probes
+    /// every event can reuse one allocation for the whole run.
+    pub fn fail_replica(&mut self, rid: ReplicaId, displaced: &mut Vec<ReqId>) {
+        displaced.clear();
         let now = self.now;
 
         // Abort any long group this replica belongs to.
         if let Some(gid) = self.replicas[rid].long_group {
             if let Some(g) = self.groups[gid].take() {
-                let rt = &mut self.reqs[g.req];
-                rt.phase = ReqPhase::Queued;
-                rt.generated = 0;
+                self.reqs.phase[g.req] = ReqPhase::Queued;
+                self.reqs.generated[g.req] = 0;
                 displaced.push(g.req);
                 for &m in &g.members {
                     self.replicas[m].long_group = None;
@@ -849,18 +867,16 @@ impl SimState {
         r.colocated_tokens = 0;
         r.busy.set_idle(now);
 
-        for &req in &displaced {
-            let rt = &mut self.reqs[req];
-            if rt.phase != ReqPhase::Done {
-                rt.phase = ReqPhase::Queued;
+        for &req in displaced.iter() {
+            if self.reqs.phase[req] != ReqPhase::Done {
+                self.reqs.phase[req] = ReqPhase::Queued;
                 // KV lost: decode progress restarts from the prompt.
-                rt.generated = 0;
-                rt.colocated_on = None;
+                self.reqs.generated[req] = 0;
+                self.reqs.colocated_on[req] = None;
             }
         }
-        displaced.retain(|&req| self.reqs[req].phase != ReqPhase::Done);
+        displaced.retain(|&req| self.reqs.phase[req] != ReqPhase::Done);
         self.reindex(rid);
-        displaced
     }
 
     /// Bring a failed replica back (empty, schedulable again).
@@ -879,12 +895,12 @@ impl SimState {
     /// decision that `rid` is the right place (idle / colocation /
     /// preemption target) belongs to the policy.
     pub fn enqueue_short_prefill(&mut self, rid: ReplicaId, req: ReqId) {
-        debug_assert!(!self.reqs[req].req.is_long);
+        debug_assert!(!self.reqs.meta[req].is_long);
         debug_assert!(!self.replicas[rid].down, "placing work on a failed replica");
-        self.reqs[req].phase = ReqPhase::Queued;
+        self.reqs.phase[req] = ReqPhase::Queued;
         let r = &mut self.replicas[rid];
         r.prefill_queue.push_back(req);
-        r.queued_prefill_tokens += self.reqs[req].req.input_len as u64;
+        r.queued_prefill_tokens += self.reqs.meta[req].input_len as u64;
         self.try_start_prefill(rid);
         // A decode batch in flight blocks the prefill until its round
         // boundary; in epoch mode that boundary event must exist, so the
@@ -897,8 +913,8 @@ impl SimState {
 
     /// Charge a colocated short against the replica's token budget (§5.2).
     pub fn charge_colocation(&mut self, rid: ReplicaId, req: ReqId) {
-        self.replicas[rid].colocated_tokens += self.reqs[req].req.input_len as u64;
-        self.reqs[req].colocated_on = Some(rid);
+        self.replicas[rid].colocated_tokens += self.reqs.meta[req].input_len as u64;
+        self.reqs.colocated_on[req] = Some(rid);
         self.reindex(rid);
     }
 
@@ -948,17 +964,16 @@ impl SimState {
         let Some(req) = r.prefill_queue.pop_front() else {
             return;
         };
-        let len = self.reqs[req].req.input_len;
+        let len = self.reqs.meta[req].input_len;
         r.queued_prefill_tokens -= len as u64;
         r.running_prefill = Some(req);
         r.prefill_gen += 1;
         let gen = r.prefill_gen;
         r.busy.set_busy(self.now);
 
-        let rt = &mut self.reqs[req];
-        rt.phase = ReqPhase::Prefilling;
-        if rt.prefill_start.is_none() {
-            rt.prefill_start = Some(self.now);
+        self.reqs.phase[req] = ReqPhase::Prefilling;
+        if self.reqs.prefill_start[req].is_none() {
+            self.reqs.prefill_start[req] = Some(self.now);
             self.recent_prefill_starts.push(req);
         }
         let dur = self.cm.short_prefill_time(len);
@@ -976,8 +991,8 @@ impl SimState {
         self.replicas[rid].running_prefill = None;
 
         // Release any colocation budget the request held.
-        if let Some(crid) = self.reqs[req].colocated_on.take() {
-            let len = self.reqs[req].req.input_len as u64;
+        if let Some(crid) = self.reqs.colocated_on[req].take() {
+            let len = self.reqs.meta[req].input_len as u64;
             let c = &mut self.replicas[crid].colocated_tokens;
             *c = c.saturating_sub(len);
             self.reindex(crid);
@@ -998,15 +1013,15 @@ impl SimState {
             None
         };
         if let Some(target) = decode_target {
-            self.reqs[req].phase = ReqPhase::Migrating;
+            self.reqs.phase[req] = ReqPhase::Migrating;
             let dur = self
                 .cm
-                .kv_migration_exposed_time(self.reqs[req].req.input_len);
+                .kv_migration_exposed_time(self.reqs.meta[req].input_len);
             self.queue
                 .push(self.now + dur, EventKind::MigrationDone { req, rid: target });
         } else {
-            self.reqs[req].phase = ReqPhase::DecodeQueued;
-            let ctx = self.reqs[req].context_tokens();
+            self.reqs.phase[req] = ReqPhase::DecodeQueued;
+            let ctx = self.reqs.context_tokens(req);
             let r = &mut self.replicas[rid];
             r.decode_waiting.push_back(req);
             r.decode_waiting_tokens += ctx;
@@ -1031,17 +1046,16 @@ impl SimState {
     /// displacement contract).
     pub fn on_migration_done(&mut self, req: ReqId, rid: ReplicaId) -> bool {
         if self.replicas[rid].down {
-            let rt = &mut self.reqs[req];
-            rt.phase = ReqPhase::Queued;
-            rt.generated = 0;
-            rt.colocated_on = None;
+            self.reqs.phase[req] = ReqPhase::Queued;
+            self.reqs.generated[req] = 0;
+            self.reqs.colocated_on[req] = None;
             return false;
         }
         // Fold the in-flight epoch's progress *before* membership can
         // change, so deferred rounds are never credited to the newcomer.
         self.materialize_decode_epoch(rid);
-        self.reqs[req].phase = ReqPhase::DecodeQueued;
-        let ctx = self.reqs[req].context_tokens();
+        self.reqs.phase[req] = ReqPhase::DecodeQueued;
+        let ctx = self.reqs.context_tokens(req);
         let r = &mut self.replicas[rid];
         r.decode_waiting.push_back(req);
         r.decode_waiting_tokens += ctx;
@@ -1068,8 +1082,8 @@ impl SimState {
         loop {
             let r = &self.replicas[rid];
             let Some(&head) = r.decode_waiting.front() else { break };
-            let ctx = self.reqs[head].context_tokens();
-            let need = ctx + self.reqs[head].req.output_len as u64;
+            let ctx = self.reqs.context_tokens(head);
+            let need = ctx + self.reqs.meta[head].output_len as u64;
             if !r.decode_active.is_empty()
                 && r.decode_active_tokens + need > self.kv_capacity
             {
@@ -1080,7 +1094,7 @@ impl SimState {
             r.decode_waiting_tokens -= ctx;
             r.decode_active.push(head);
             r.decode_active_tokens += ctx;
-            self.reqs[head].phase = ReqPhase::Decoding;
+            self.reqs.phase[head] = ReqPhase::Decoding;
         }
     }
 
@@ -1128,7 +1142,7 @@ impl SimState {
     /// Returns false — without mutating anything — when the request is not
     /// currently waiting for a decode slot or `to` is down.
     pub fn start_migration(&mut self, req: ReqId, to: ReplicaId) -> bool {
-        if self.replicas[to].down || self.reqs[req].phase != ReqPhase::DecodeQueued {
+        if self.replicas[to].down || self.reqs.phase[req] != ReqPhase::DecodeQueued {
             return false;
         }
         // Decode-waiting membership is not back-referenced from the
@@ -1139,14 +1153,14 @@ impl SimState {
         }) else {
             return false;
         };
-        let ctx = self.reqs[req].context_tokens();
+        let ctx = self.reqs.context_tokens(req);
         let r = &mut self.replicas[from];
         r.decode_waiting.retain(|&q| q != req);
         r.decode_waiting_tokens -= ctx;
-        self.reqs[req].phase = ReqPhase::Migrating;
+        self.reqs.phase[req] = ReqPhase::Migrating;
         let dur = self
             .cm
-            .kv_migration_exposed_time(self.reqs[req].req.input_len);
+            .kv_migration_exposed_time(self.reqs.meta[req].input_len);
         self.queue
             .push(self.now + dur, EventKind::MigrationDone { req, rid: to });
         self.update_busy(from);
@@ -1160,7 +1174,7 @@ impl SimState {
     /// mutating anything — when the request is not sitting in a local
     /// prefill queue.
     pub fn withdraw_queued_prefill(&mut self, req: ReqId) -> bool {
-        if self.reqs[req].phase != ReqPhase::Queued {
+        if self.reqs.phase[req] != ReqPhase::Queued {
             return false;
         }
         let Some(rid) = (0..self.replicas.len()).find(|&rid| {
@@ -1168,11 +1182,11 @@ impl SimState {
         }) else {
             return false;
         };
-        let len = self.reqs[req].req.input_len as u64;
+        let len = self.reqs.meta[req].input_len as u64;
         let r = &mut self.replicas[rid];
         r.prefill_queue.retain(|&q| q != req);
         r.queued_prefill_tokens -= len;
-        if let Some(crid) = self.reqs[req].colocated_on.take() {
+        if let Some(crid) = self.reqs.colocated_on[req].take() {
             let c = &mut self.replicas[crid].colocated_tokens;
             *c = c.saturating_sub(len);
             self.reindex(crid);
@@ -1228,7 +1242,7 @@ impl SimState {
         let Some(min_rem) = r
             .decode_active
             .iter()
-            .map(|&q| self.reqs[q].req.output_len - self.reqs[q].generated)
+            .map(|&q| self.reqs.meta[q].output_len - self.reqs.generated[q])
             .min()
         else {
             return;
@@ -1313,12 +1327,11 @@ impl SimState {
         let step = ep.pending_rounds * self.params.decode_chunk;
         for i in 0..self.replicas[rid].decode_active.len() {
             let req = self.replicas[rid].decode_active[i];
-            let rt = &mut self.reqs[req];
             debug_assert!(
-                rt.generated + step < rt.req.output_len,
+                self.reqs.generated[req] + step < self.reqs.meta[req].output_len,
                 "a deferred mid-epoch round completed a request"
             );
-            rt.generated += step;
+            self.reqs.generated[req] += step;
         }
         ep.pending_rounds = 0;
         self.replicas[rid].decode_epoch = Some(ep);
@@ -1395,12 +1408,12 @@ impl SimState {
         let mut removed: u64 = 0;
         for i in 0..active.len() {
             let req = active[i];
-            let rt = &mut self.reqs[req];
-            let step = chunk.min(rt.req.output_len - rt.generated);
-            rt.generated += step;
+            let step =
+                chunk.min(self.reqs.meta[req].output_len - self.reqs.generated[req]);
+            self.reqs.generated[req] += step;
             added += step as u64;
-            if rt.generated >= rt.req.output_len {
-                removed += rt.context_tokens();
+            if self.reqs.generated[req] >= self.reqs.meta[req].output_len {
+                removed += self.reqs.context_tokens(req);
                 self.scratch_done.push(req);
             } else {
                 self.replicas[rid].decode_active.push(req);
@@ -1454,7 +1467,7 @@ impl SimState {
         members: Vec<ReplicaId>,
         plan: SpPlan,
     ) -> Vec<ReqId> {
-        debug_assert!(self.reqs[req].req.is_long);
+        debug_assert!(self.reqs.meta[req].is_long);
         let gid = self.groups.len();
         let mut displaced = Vec::new();
         for &rid in &members {
@@ -1463,15 +1476,15 @@ impl SimState {
             debug_assert!(!r.dedicated_decode);
             r.long_group = Some(gid);
             while let Some(q) = r.prefill_queue.pop_front() {
-                r.queued_prefill_tokens -= self.reqs[q].req.input_len as u64;
+                r.queued_prefill_tokens -= self.reqs.meta[q].input_len as u64;
                 displaced.push(q);
             }
         }
         // Colocation budgets of displaced requests are released; the
         // policy re-charges wherever it re-places them.
         for &q in &displaced {
-            if let Some(crid) = self.reqs[q].colocated_on.take() {
-                let len = self.reqs[q].req.input_len as u64;
+            if let Some(crid) = self.reqs.colocated_on[q].take() {
+                let len = self.reqs.meta[q].input_len as u64;
                 let c = &mut self.replicas[crid].colocated_tokens;
                 *c = c.saturating_sub(len);
                 self.reindex(crid);
@@ -1523,10 +1536,9 @@ impl SimState {
         if g.phase != LongPhase::Waiting || !self.members_clear(gid) {
             return;
         }
-        let input_len = self.reqs[g.req].req.input_len;
+        let input_len = self.reqs.meta[g.req].input_len;
         let dur = g.plan.total_time(&self.cm, input_len);
         let req = g.req;
-        let members = g.members.clone();
         let Some(g) = self.groups[gid].as_mut() else {
             return;
         };
@@ -1538,15 +1550,17 @@ impl SimState {
         g.gen += 1;
         g.last_resume = self.now;
         let gen = g.gen;
-        let rt = &mut self.reqs[req];
-        rt.phase = ReqPhase::Prefilling;
-        if rt.prefill_start.is_none() {
-            rt.prefill_start = Some(self.now);
+        self.scratch_members.clear();
+        self.scratch_members.extend_from_slice(&g.members);
+        self.reqs.phase[req] = ReqPhase::Prefilling;
+        if self.reqs.prefill_start[req].is_none() {
+            self.reqs.prefill_start[req] = Some(self.now);
             self.recent_prefill_starts.push(req);
         }
         self.queue
             .push(self.now + dur, EventKind::LongPrefillDone { gid, gen });
-        for rid in members {
+        for i in 0..self.scratch_members.len() {
+            let rid = self.scratch_members[i];
             self.replicas[rid].busy.set_busy(self.now);
             self.update_busy(rid);
         }
@@ -1621,10 +1635,12 @@ impl SimState {
                 g.gen += 1;
                 g.last_resume = now;
                 let gen = g.gen;
-                let members = g.members.clone();
+                self.scratch_members.clear();
+                self.scratch_members.extend_from_slice(&g.members);
                 self.queue
                     .push(now + remaining, EventKind::LongPrefillDone { gid, gen });
-                for rid in members {
+                for i in 0..self.scratch_members.len() {
+                    let rid = self.scratch_members[i];
                     self.update_busy(rid);
                 }
             }
@@ -1634,9 +1650,11 @@ impl SimState {
                 };
                 g.phase = LongPhase::Decode { paused: false };
                 g.gen += 1;
-                let members = g.members.clone();
+                self.scratch_members.clear();
+                self.scratch_members.extend_from_slice(&g.members);
                 self.schedule_long_decode_round(gid);
-                for rid in members {
+                for i in 0..self.scratch_members.len() {
+                    let rid = self.scratch_members[i];
                     self.update_busy(rid);
                 }
             }
@@ -1659,11 +1677,13 @@ impl SimState {
         };
         g.phase = LongPhase::Decode { paused: false };
         g.gen += 1;
-        let members = g.members.clone();
+        self.scratch_members.clear();
+        self.scratch_members.extend_from_slice(&g.members);
         self.schedule_long_decode_round(gid);
         // Shorts queued behind the prefill (e.g. under /PE) may now run,
         // colocated with the decode phase.
-        for rid in members {
+        for i in 0..self.scratch_members.len() {
+            let rid = self.scratch_members[i];
             self.try_start_prefill(rid);
             self.update_busy(rid);
         }
@@ -1677,11 +1697,9 @@ impl SimState {
         let Some(g) = self.groups[gid].as_ref() else {
             return;
         };
-        let req = &self.reqs[g.req];
+        let ctx = self.reqs.context_tokens(g.req);
         let chunk = self.params.decode_chunk as f64;
-        let iter = self
-            .cm
-            .long_decode_iter_time(req.context_tokens(), g.members.len());
+        let iter = self.cm.long_decode_iter_time(ctx, g.members.len());
         let gen = g.gen;
         self.queue.push(
             self.now + iter * chunk,
@@ -1699,12 +1717,13 @@ impl SimState {
         let Some(g) = self.groups[gid].as_ref() else {
             return;
         };
-        let rt = &self.reqs[g.req];
         let n_members = g.members.len();
-        debug_assert!(rt.generated < rt.req.output_len);
-        let remaining = rt.req.output_len - rt.generated;
+        let out_len = self.reqs.meta[g.req].output_len;
+        let generated = self.reqs.generated[g.req];
+        debug_assert!(generated < out_len);
+        let remaining = out_len - generated;
         let rounds = remaining.div_ceil(chunk_u).max(1);
-        let mut ctx = rt.context_tokens();
+        let mut ctx = self.reqs.context_tokens(g.req);
         let mut t = self.now;
         let mut first_round_end = self.now;
         if self.decode_mode == DecodeMode::EpochClosedForm && rounds > 1 {
@@ -1752,11 +1771,11 @@ impl SimState {
         let chunk_u = self.params.decode_chunk;
         let chunk_f = chunk_u as f64;
         while ep.rounds_done + 1 < ep.rounds_total && ep.round_end <= limit {
-            self.reqs[req].generated += chunk_u;
+            self.reqs.generated[req] += chunk_u;
             ep.rounds_done += 1;
             let iter = self
                 .cm
-                .long_decode_iter_time(self.reqs[req].context_tokens(), n_members);
+                .long_decode_iter_time(self.reqs.context_tokens(req), n_members);
             ep.round_end += iter * chunk_f;
         }
         if let Some(g) = self.groups[gid].as_mut() {
@@ -1802,24 +1821,21 @@ impl SimState {
         let Some(g) = self.groups[gid].as_ref() else { return None };
         let req = g.req;
         let chunk = self.params.decode_chunk;
-        let rt = &mut self.reqs[req];
-        let step = chunk.min(rt.req.output_len - rt.generated);
-        rt.generated += step;
-        rt.phase = ReqPhase::Decoding;
-        if rt.generated >= rt.req.output_len {
-            let Some(members) = self.groups[gid].as_ref().map(|g| g.members.clone())
-            else {
-                return None;
-            };
+        let step = chunk.min(self.reqs.meta[req].output_len - self.reqs.generated[req]);
+        self.reqs.generated[req] += step;
+        self.reqs.phase[req] = ReqPhase::Decoding;
+        if self.reqs.generated[req] >= self.reqs.meta[req].output_len {
+            // Take the group out whole: its owned member list is both the
+            // release worklist and the return value — no clone.
+            let Some(g) = self.groups[gid].take() else { return None };
             self.preemptions_commit(gid);
             self.complete_request(req);
-            for &rid in &members {
+            for &rid in &g.members {
                 self.replicas[rid].long_group = None;
                 self.try_start_prefill(rid);
                 self.update_busy(rid);
             }
-            self.groups[gid] = None;
-            Some(members)
+            Some(g.members)
         } else {
             self.schedule_long_decode_round(gid);
             None
@@ -1836,11 +1852,10 @@ impl SimState {
     // ------------------------------------------------------------------
 
     fn complete_request(&mut self, req: ReqId) {
-        let rt = &mut self.reqs[req];
-        debug_assert!(rt.finish.is_none());
-        rt.phase = ReqPhase::Done;
-        rt.finish = Some(self.now);
-        if rt.req.is_long {
+        debug_assert!(self.reqs.finish[req].is_none());
+        self.reqs.phase[req] = ReqPhase::Done;
+        self.reqs.finish[req] = Some(self.now);
+        if self.reqs.meta[req].is_long {
             self.longs_done += 1;
         } else {
             self.shorts_done += 1;
@@ -1953,10 +1968,10 @@ mod tests {
         assert!(!st.decode_pool.is_empty());
         st.queue.pop(); // discard arrival; place manually
         st.enqueue_short_prefill(0, 0);
-        assert_eq!(st.reqs[0].phase, ReqPhase::Prefilling);
+        assert_eq!(st.reqs.phase[0], ReqPhase::Prefilling);
         drain(&mut st);
-        assert_eq!(st.reqs[0].phase, ReqPhase::Done);
-        assert!(st.reqs[0].finish.unwrap() > 0.0);
+        assert_eq!(st.reqs.phase[0], ReqPhase::Done);
+        assert!(st.reqs.finish[0].unwrap() > 0.0);
         // decode happened on a dedicated replica, not replica 0
         assert!(st.replicas[0].decode_active.is_empty());
         assert_eq!(st.shorts_done, 1);
@@ -1969,7 +1984,7 @@ mod tests {
         st.queue.pop();
         st.enqueue_short_prefill(3, 0);
         drain(&mut st);
-        assert_eq!(st.reqs[0].phase, ReqPhase::Done);
+        assert_eq!(st.reqs.phase[0], ReqPhase::Done);
         assert_eq!(st.shorts_done, 1);
     }
 
@@ -1983,9 +1998,9 @@ mod tests {
         let plan = st.plan_for_long(150_000, n);
         let displaced = st.start_long_group(0, members.clone(), plan);
         assert!(displaced.is_empty());
-        assert!(st.reqs[0].prefill_start.is_some(), "starts when idle");
+        assert!(st.reqs.prefill_start[0].is_some(), "starts when idle");
         drain(&mut st);
-        assert_eq!(st.reqs[0].phase, ReqPhase::Done);
+        assert_eq!(st.reqs.phase[0], ReqPhase::Done);
         for rid in members {
             assert!(st.replicas[rid].long_group.is_none(), "released");
         }
@@ -2017,7 +2032,7 @@ mod tests {
         assert_eq!(st.shorts_done, 1);
         assert_eq!(st.longs_done, 1);
         // The long finished strictly after the short's prefill completed.
-        assert!(st.reqs[0].finish.unwrap() > st.reqs[1].prefill_start.unwrap());
+        assert!(st.reqs.finish[0].unwrap() > st.reqs.prefill_start[1].unwrap());
     }
 
     #[test]
@@ -2032,12 +2047,12 @@ mod tests {
         st.enqueue_short_prefill(0, 1);
         assert_eq!(st.preemptions, 0);
         // Short waits: still queued, not prefilling.
-        assert_eq!(st.reqs[1].phase, ReqPhase::Queued);
+        assert_eq!(st.reqs.phase[1], ReqPhase::Queued);
         drain(&mut st);
         assert_eq!(st.shorts_done + st.longs_done, 2);
         // Short prefill started only after long prefill ended (it runs
         // colocated with the decode phase).
-        assert!(st.reqs[1].prefill_start.unwrap() > st.reqs[0].prefill_start.unwrap());
+        assert!(st.reqs.prefill_start[1].unwrap() > st.reqs.prefill_start[0].unwrap());
     }
 
     #[test]
@@ -2153,12 +2168,12 @@ mod tests {
                 let naive_a: u64 = r
                     .decode_active
                     .iter()
-                    .map(|&q| st.reqs[q].context_tokens())
+                    .map(|&q| st.reqs.context_tokens(q))
                     .sum();
                 let naive_w: u64 = r
                     .decode_waiting
                     .iter()
-                    .map(|&q| st.reqs[q].context_tokens())
+                    .map(|&q| st.reqs.context_tokens(q))
                     .sum();
                 let deferred: u64 = r
                     .decode_epoch
@@ -2191,16 +2206,17 @@ mod tests {
             panic!("expected prefill completion");
         };
         st.on_short_prefill_done(rid, req, gen);
-        assert_eq!(st.reqs[0].phase, ReqPhase::Migrating);
+        assert_eq!(st.reqs.phase[0], ReqPhase::Migrating);
         // The chosen target crashes during the transfer window.
         let ev = st.queue.pop().unwrap();
         st.now = ev.time.max(st.now);
         let EventKind::MigrationDone { req, rid } = ev.kind else {
             panic!("expected migration completion");
         };
-        st.fail_replica(rid);
+        let mut displaced = Vec::new();
+        st.fail_replica(rid, &mut displaced);
         assert!(!st.on_migration_done(req, rid), "must not land on a down replica");
-        assert_eq!(st.reqs[0].phase, ReqPhase::Queued, "returned for re-placement");
+        assert_eq!(st.reqs.phase[0], ReqPhase::Queued, "returned for re-placement");
         assert!(st.replicas[rid].decode_waiting.is_empty());
         assert!(!st.replicas[rid].busy.is_busy());
     }

@@ -72,6 +72,10 @@ impl<'a> ClusterView<'a> {
 
     /// A request's runtime entry: trace metadata, phase, progress.
     ///
+    /// Returns a [`ReqRt`] *snapshot* assembled from the columnar
+    /// [`super::ReqArena`] — a `Copy` value, valid indefinitely but not
+    /// updated by later mutations.
+    ///
     /// Staleness caveat: under the epoch fast-forward decode modes,
     /// `generated` for a request inside another replica's *mid-epoch*
     /// batch reflects the last materialised round boundary, not the
@@ -79,8 +83,8 @@ impl<'a> ClusterView<'a> {
     /// decision the core makes about that batch). Timestamps and phases
     /// are always current. Use [`super::ClusterOps::decode_load_tokens`]
     /// for epoch-exact decode loads.
-    pub fn request(&self, req: ReqId) -> &'a ReqRt {
-        &self.st.reqs[req]
+    pub fn request(&self, req: ReqId) -> ReqRt {
+        self.st.reqs.snapshot(req)
     }
 
     /// Number of replicas in the cluster (including failed ones).

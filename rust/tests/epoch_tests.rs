@@ -10,7 +10,7 @@
 
 use pecsched::config::{AblationFlags, DecodeMode, ModelSpec, PolicyKind};
 use pecsched::sim::{SimConfig, Simulation};
-use pecsched::trace::{Request, Trace};
+use pecsched::trace::{Request, Trace, TraceConfig};
 
 /// Fixed mixed trace: a steady short stream with decode-heavy outputs
 /// (400–770 tokens ≈ 50–97 rounds at chunk=8) plus two long requests, so
@@ -144,4 +144,67 @@ fn closed_form_mode_stays_near_the_exact_path() {
     let rel = (mc.makespan - me.makespan).abs() / me.makespan;
     assert!(rel < 0.05, "makespan drifted {rel} (exact {} vs closed {})", me.makespan, mc.makespan);
     assert!(mc.events_processed <= me.events_processed * 2);
+}
+
+/// Every policy the test suites exercise: the §6.2 comparison set, the
+/// §6.4 ablation variants, and the verb-API-only SJF.
+fn registry_policies() -> Vec<PolicyKind> {
+    let mut v = PolicyKind::comparison_set();
+    v.extend(PolicyKind::ablation_set().into_iter().skip(1));
+    v.push(PolicyKind::Sjf);
+    v
+}
+
+/// Certification of the closed-form fast path (DESIGN.md §6): on random
+/// generated traces, under *every* registry policy, the
+/// `EpochClosedForm` mode completes every request and each per-request
+/// completion timestamp stays within ε = 15% of the exact epoch run's
+/// makespan of its exact counterpart. The only approximation in the mode
+/// is the cost model's per-sequence floor division; this bounds how far
+/// the resulting placement flips can push any individual request, not
+/// just the aggregate.
+#[test]
+fn closed_form_per_request_divergence_is_certified() {
+    const EPSILON: f64 = 0.15;
+    let model = ModelSpec::mistral_7b();
+    let rps = pecsched::exp::capacity_rps(&model, 0.5);
+    for seed in [41u64, 97] {
+        let trace = TraceConfig {
+            n_requests: 150,
+            rps,
+            seed,
+            ..TraceConfig::default()
+        }
+        .generate();
+        for kind in registry_policies() {
+            let mut exact =
+                Simulation::new(cfg_for(kind, DecodeMode::Epoch), &trace, kind);
+            let me = exact.run();
+            let mut closed =
+                Simulation::new(cfg_for(kind, DecodeMode::EpochClosedForm), &trace, kind);
+            let mc = closed.run();
+            assert_eq!(
+                mc.shorts_completed + mc.longs_completed,
+                trace.len(),
+                "{} seed {seed}: closed-form mode lost requests",
+                kind.name()
+            );
+            let bound = EPSILON * me.makespan;
+            for (a, b) in
+                exact.state.requests().iter().zip(closed.state.requests().iter())
+            {
+                let (Some(fe), Some(fc)) = (a.finish, b.finish) else {
+                    panic!("{} seed {seed}: req {} unfinished", kind.name(), a.req.id);
+                };
+                assert!(
+                    (fe - fc).abs() <= bound,
+                    "{} seed {seed}: req {} diverged {:.3}s (exact {fe:.3} vs \
+                     closed {fc:.3}, bound {bound:.3})",
+                    kind.name(),
+                    a.req.id,
+                    (fe - fc).abs()
+                );
+            }
+        }
+    }
 }

@@ -48,8 +48,8 @@ fn fig2_cells_run_and_longs_hurt_fifo() {
     let mut wo = run_cell(&model, PolicyKind::Fifo, &without);
     if trace.longs().count() > 0 {
         assert!(
-            w.short_queue_delay.quantile(0.99)
-                >= wo.short_queue_delay.quantile(0.99)
+            w.short_queue_delay.quantile(0.99).unwrap()
+                >= wo.short_queue_delay.quantile(0.99).unwrap()
         );
     }
 }
@@ -92,7 +92,7 @@ fn table7_overheads_are_small() {
     );
     if !m.sched_overhead_short.is_empty() {
         // wall-clock scheduling / simulated JCT must be far below 1
-        assert!(m.sched_overhead_short.quantile(0.99) < 0.5);
+        assert!(m.sched_overhead_short.quantile(0.99).unwrap() < 0.5);
     }
 }
 

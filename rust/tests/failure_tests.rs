@@ -32,11 +32,12 @@ fn run_with_failure(
     let cfg = SimConfig::for_policy(model, kind);
     let mut sim = Simulation::new(cfg, trace, kind);
     let span = trace.span();
+    let mut displaced = Vec::new();
     sim.run_with_hook(|st: &mut SimState, policy: &mut dyn Policy| {
         // One-shot crash around the chosen point of the arrival window.
         if st.now() >= span * fail_at_frac && !st.replica(fail_rid).is_down() {
-            let displaced = st.fail_replica(fail_rid);
-            for req in displaced {
+            st.fail_replica(fail_rid, &mut displaced);
+            for &req in &displaced {
                 policy.on_arrival(&mut ClusterOps::new(st), req);
             }
         }
@@ -143,19 +144,20 @@ fn fail_replica_unit_semantics() {
     st.next_event();
     st.enqueue_short_prefill(0, 0); // running
     st.enqueue_short_prefill(0, 1); // queued behind it
-    let displaced = st.fail_replica(0);
+    let mut displaced = Vec::new();
+    st.fail_replica(0, &mut displaced);
     assert_eq!(displaced.len(), 2);
     assert!(st.replica(0).is_down());
     assert!(st.replica(0).running_prefill().is_none());
     assert_eq!(st.replica(0).queued_prefill_tokens(), 0);
     assert_eq!(st.request(0).phase, ReqPhase::Queued);
     // Down replicas are invisible to placement helpers.
-    assert!(!st.idle_replicas().contains(&0));
+    assert!(!st.idle_replicas().any(|r| r == 0));
     assert_ne!(
         st.least_loaded_prefill(|_| true),
         Some(0),
         "down replica must not be chosen"
     );
     st.recover_replica(0);
-    assert!(st.idle_replicas().contains(&0));
+    assert!(st.idle_replicas().any(|r| r == 0));
 }

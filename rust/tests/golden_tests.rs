@@ -171,7 +171,8 @@ fn rejected_verbs_do_not_mutate() {
     let mut st = SimState::new(&cfg, &reqs);
     st.next_event();
     st.next_event();
-    st.fail_replica(0);
+    let mut displaced = Vec::new();
+    st.fail_replica(0, &mut displaced);
     let mut ops = ClusterOps::new(&mut st);
 
     // Wrong class both ways.

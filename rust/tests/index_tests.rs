@@ -211,7 +211,8 @@ fn replica_down_and_recovery_reindex() {
     st.next_event();
     st.enqueue_short_prefill(0, 0);
     st.enqueue_short_prefill(0, 1);
-    let displaced = st.fail_replica(0);
+    let mut displaced = Vec::new();
+    st.fail_replica(0, &mut displaced);
     assert_eq!(displaced.len(), 2);
     check(&st, "after fail_replica");
     // A down replica must be invisible to every indexed pick.
@@ -232,14 +233,15 @@ fn decode_pool_failure_reroutes_and_reindexes() {
     let pool = st.decode_pool().to_vec();
     assert!(!pool.is_empty());
     let first = st.least_loaded_decode().unwrap();
-    st.fail_replica(first);
+    let mut displaced = Vec::new();
+    st.fail_replica(first, &mut displaced);
     check(&st, "after decode-pool failure");
     assert_ne!(st.least_loaded_decode(), Some(first));
     // Fail the whole pool: the indexed pick must go empty (local decode
     // fallback), exactly like the naive scan.
     for rid in pool {
         if !st.replica(rid).is_down() {
-            st.fail_replica(rid);
+            st.fail_replica(rid, &mut displaced);
         }
     }
     check(&st, "after whole-pool failure");

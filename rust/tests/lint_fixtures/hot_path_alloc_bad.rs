@@ -1,0 +1,16 @@
+//! Bad: per-event allocations inside `sim/` event-path functions —
+//! `Vec::new`, `vec!` and `.clone()` in an `on_*`/`finish_*` body all
+//! fire `hot-path-alloc`.
+
+pub struct Core {
+    members: Vec<usize>,
+}
+
+impl Core {
+    fn on_long_prefill_done(&mut self, n: usize) -> usize {
+        let members = self.members.clone();
+        let mut done = Vec::new();
+        done.extend(vec![0usize; n]);
+        members.len() + done.len()
+    }
+}

@@ -1,0 +1,29 @@
+//! Good twin: the handler reuses a persistent scratch buffer instead of
+//! allocating per event, and the one unavoidable completion-path
+//! allocation carries a justified allow. Setup code (`new`) may allocate
+//! freely — the rule only scopes the event-path prefixes.
+
+pub struct Core {
+    members: Vec<usize>,
+    scratch: Vec<usize>,
+}
+
+impl Core {
+    fn new(members: Vec<usize>) -> Self {
+        Self {
+            members,
+            scratch: Vec::new(),
+        }
+    }
+
+    fn on_long_prefill_done(&mut self, n: usize) -> usize {
+        self.scratch.clear();
+        self.scratch.extend_from_slice(&self.members);
+        self.scratch.len() + n
+    }
+
+    fn finish_long_decode_round(&mut self) -> Vec<usize> {
+        // pallas-lint: allow(hot-path-alloc) -- one allocation per long-request completion, not per event
+        self.members.clone()
+    }
+}

@@ -39,12 +39,13 @@ const FIXTURES: &[Fixture] = &[
     fixture!("boundary_pub_field", "sim/fixture.rs", Rule::BoundaryPubField),
     fixture!("match_wildcard", "sim/fixture.rs", Rule::MatchWildcard),
     fixture!("hot_path_panic", "sim/fixture.rs", Rule::HotPathPanic),
+    fixture!("hot_path_alloc", "sim/fixture.rs", Rule::HotPathAlloc),
     fixture!("bad_allow", "sim/fixture.rs", Rule::BadAllow),
 ];
 
 #[test]
 fn corpus_covers_every_rule() {
-    assert!(FIXTURES.len() >= 8);
+    assert!(FIXTURES.len() >= 9);
     for rule in Rule::all() {
         assert!(
             FIXTURES.iter().any(|f| f.rule == rule),

@@ -74,9 +74,12 @@ fn prop_delays_nonnegative_and_jct_exceeds_delay() {
         let cfg = SimConfig::for_policy(model.clone(), kind);
         let mut m = run_sim(cfg, &trace, kind);
         if !m.short_queue_delay.is_empty() && !m.short_jct.is_empty() {
-            assert!(m.short_queue_delay.quantile(0.0) >= -1e-9);
+            assert!(m.short_queue_delay.quantile(0.0).unwrap() >= -1e-9);
             // p99 JCT must dominate p99 queueing delay: execution adds time.
-            assert!(m.short_jct.quantile(0.99) >= m.short_queue_delay.quantile(0.99));
+            assert!(
+                m.short_jct.quantile(0.99).unwrap()
+                    >= m.short_queue_delay.quantile(0.99).unwrap()
+            );
         }
     }
 }
@@ -296,7 +299,7 @@ fn prop_digest_matches_naive_quantile() {
             let (lo, hi) = (pos.floor() as usize, pos.ceil() as usize);
             let frac = pos - lo as f64;
             let naive = sorted[lo] * (1.0 - frac) + sorted[hi] * frac;
-            assert!((d.quantile(q) - naive).abs() < 1e-9);
+            assert!((d.quantile(q).unwrap() - naive).abs() < 1e-9);
         }
     }
 }

@@ -107,8 +107,8 @@ fn fifo_long_blocks_shorts_behind_it() {
         PolicyKind::PecSched(AblationFlags::full()),
         &trace,
     );
-    let f99 = fifo.short_queue_delay.quantile(0.99);
-    let p99 = pec.short_queue_delay.quantile(0.99);
+    let f99 = fifo.short_queue_delay.quantile(0.99).unwrap();
+    let p99 = pec.short_queue_delay.quantile(0.99).unwrap();
     assert!(
         p99 < 0.5 * f99,
         "PecSched p99 {p99}s should be far below FIFO {f99}s"
@@ -203,12 +203,12 @@ fn pecsched_low_delay_without_wrecking_long_jct() {
         PolicyKind::PecSched(AblationFlags::full()),
         &trace,
     );
-    let f99 = fifo.short_queue_delay.quantile(0.99);
-    let p99 = pec.short_queue_delay.quantile(0.99);
+    let f99 = fifo.short_queue_delay.quantile(0.99).unwrap();
+    let p99 = pec.short_queue_delay.quantile(0.99).unwrap();
     assert!(p99 <= f99, "pecsched p99 {p99} vs fifo {f99}");
 
-    let fifo_jct = fifo.long_jct.mean();
-    let pec_jct = pec.long_jct.mean();
+    let fifo_jct = fifo.long_jct.mean().unwrap();
+    let pec_jct = pec.long_jct.mean().unwrap();
     assert!(
         pec_jct < 2.0 * fifo_jct,
         "long JCT blowup: pecsched {pec_jct} vs fifo {fifo_jct}"
@@ -223,7 +223,7 @@ fn queueing_delays_are_nonnegative_and_finite() {
     for kind in all_policies() {
         let mut m = run(model.clone(), kind, &trace);
         if !m.short_queue_delay.is_empty() {
-            let p = m.short_queue_delay.paper_percentiles();
+            let p = m.short_queue_delay.paper_percentiles().unwrap();
             assert!(p[0] >= -1e-9, "{}: negative delay", kind.name());
             assert!(p[4].is_finite());
             for w in p.windows(2) {
