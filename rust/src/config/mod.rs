@@ -166,6 +166,11 @@ pub struct SchedParams {
     /// and the long starves — the anti-starvation guarantee §5 implies
     /// ("without significantly affecting the JCT of long requests").
     pub preempt_min_quantum: f64,
+    /// Cold-start latency a provisioned replica pays before it is live
+    /// again (seconds) — model load + weight transfer + runtime warmup,
+    /// the DeepBoot-style reclaim overhead. Consumed by the `provision`
+    /// lifecycle verb via `EventKind::ReplicaReady`.
+    pub provision_cold_start: f64,
 }
 
 impl Default for SchedParams {
@@ -179,6 +184,7 @@ impl Default for SchedParams {
             decode_chunk: 8,
             preempt_wait_threshold: 0.25,
             preempt_min_quantum: 1.0,
+            provision_cold_start: 30.0,
         }
     }
 }

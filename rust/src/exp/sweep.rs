@@ -22,7 +22,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 use crate::config::{ClusterSpec, ModelSpec, PolicyKind, SchedParams};
-use crate::metrics::{aggregate_seeds, RunSummary, SeedAggregate};
+use crate::metrics::{aggregate_seeds, RunSummary, SeedAggregate, TailDigest};
 use crate::scenario;
 use crate::sim::SimConfig;
 use crate::util::Json;
@@ -165,6 +165,11 @@ pub struct CellResult {
     /// Replica count of the (possibly scaled) cluster this cell ran on.
     pub replicas: usize,
     pub summary: RunSummary,
+    /// The run's short queueing-delay digest, kept for cross-seed quantile
+    /// pooling in [`aggregate`]. In streaming mode this is a GK summary
+    /// (O(1) memory) and pooling merges summaries — exact sample stores
+    /// are never rehydrated.
+    pub short_queue_delay: TailDigest,
     /// p99 wall-clock scheduling-time / JCT ratio of shorts (NaN when the
     /// run measured none). Nondeterministic; excluded from sweep JSON.
     pub sched_p99_short: f64,
@@ -209,10 +214,12 @@ fn run_one(spec: &SweepSpec, cell: &SweepCell) -> CellResult {
         |d: &mut crate::metrics::Digest| d.quantile(0.99).unwrap_or(f64::NAN);
     let sched_p99_short = pct99(&mut m.sched_overhead_short);
     let sched_p99_long = pct99(&mut m.sched_overhead_long);
+    let short_queue_delay = m.short_queue_delay.clone();
     CellResult {
         cell: cell.clone(),
         replicas,
         summary: m.summary(),
+        short_queue_delay,
         sched_p99_short,
         sched_p99_long,
     }
@@ -265,6 +272,10 @@ pub struct AggregateRow {
     pub load: f64,
     pub gpus: usize,
     pub agg: SeedAggregate,
+    /// p99 of the *pooled* short queueing-delay distribution across the
+    /// group's seeds (digest merge, not a mean of per-seed p99s). NaN
+    /// when the group served no shorts.
+    pub short_p99_delay_pooled: f64,
 }
 
 /// Group results by everything except the seed (first-seen order — which
@@ -278,6 +289,10 @@ pub fn aggregate(results: &[CellResult]) -> Vec<AggregateRow> {
     let mut index: BTreeMap<Key, usize> = BTreeMap::new();
     let mut keys: Vec<Key> = Vec::new();
     let mut groups: Vec<Vec<RunSummary>> = Vec::new();
+    // Pooled per-group short-delay digests, merged in grid order. In
+    // streaming mode each merge is a GK summary merge — the pooled p99
+    // never rehydrates exact sample stores.
+    let mut pooled: Vec<TailDigest> = Vec::new();
     for r in results {
         let key = (
             r.cell.model.name.clone(),
@@ -287,24 +302,32 @@ pub fn aggregate(results: &[CellResult]) -> Vec<AggregateRow> {
             r.cell.gpus,
         );
         match index.get(&key) {
-            Some(&i) => groups[i].push(r.summary.clone()),
+            Some(&i) => {
+                groups[i].push(r.summary.clone());
+                pooled[i].merge(&r.short_queue_delay);
+            }
             None => {
                 index.insert(key.clone(), keys.len());
                 keys.push(key);
                 groups.push(vec![r.summary.clone()]);
+                pooled.push(r.short_queue_delay.clone());
             }
         }
     }
     keys.into_iter()
         .zip(groups)
-        .map(|((model, policy, scenario, load_bits, gpus), g)| AggregateRow {
-            model,
-            policy,
-            scenario,
-            load: f64::from_bits(load_bits),
-            gpus,
-            agg: aggregate_seeds(&g),
-        })
+        .zip(pooled)
+        .map(
+            |(((model, policy, scenario, load_bits, gpus), g), mut dig)| AggregateRow {
+                model,
+                policy,
+                scenario,
+                load: f64::from_bits(load_bits),
+                gpus,
+                agg: aggregate_seeds(&g),
+                short_p99_delay_pooled: dig.quantile(0.99).unwrap_or(f64::NAN),
+            },
+        )
         .collect()
 }
 
@@ -386,6 +409,12 @@ pub fn sweep_json(spec: &SweepSpec, results: &[CellResult]) -> Json {
                     ("short_delay_p75", num(s.short_delay_pcts[3])),
                     ("short_delay_p99", num(s.short_delay_pcts[4])),
                     ("long_jct_mean_s", num(s.long_jct_mean)),
+                    ("shorts_shed", num(s.shorts_shed as f64)),
+                    ("longs_shed", num(s.longs_shed as f64)),
+                    ("deadlines_total", num(s.deadlines_total as f64)),
+                    ("deadlines_met", num(s.deadlines_met as f64)),
+                    ("slo_attainment", num(s.slo_attainment())),
+                    ("goodput_rps", num(s.goodput_rps())),
                 ])
             })
             .collect(),
@@ -409,6 +438,10 @@ pub fn sweep_json(spec: &SweepSpec, results: &[CellResult]) -> Json {
                     ("long_jct_mean_s", num(row.agg.long_jct_mean)),
                     ("preemptions_mean", num(row.agg.preemptions_mean)),
                     ("gpu_idle_rate_mean", num(row.agg.gpu_idle_rate_mean)),
+                    ("short_p99_delay_pooled", num(row.short_p99_delay_pooled)),
+                    ("slo_attainment_mean", num(row.agg.slo_attainment_mean)),
+                    ("goodput_rps_mean", num(row.agg.goodput_rps_mean)),
+                    ("shed_frac_mean", num(row.agg.shed_frac_mean)),
                 ])
             })
             .collect(),
@@ -531,5 +564,57 @@ mod tests {
             250,
             "requests lost under injected failures"
         );
+        // No admission control in this scenario — nothing may be shed.
+        assert_eq!(s.shorts_shed + s.longs_shed, 0);
+    }
+
+    #[test]
+    fn aggregate_pools_delay_digests_across_seeds() {
+        let spec = tiny_spec(1);
+        let results = run_sweep(&spec);
+        let rows = aggregate(&results);
+        // Each pooled digest holds the union of its group's per-seed
+        // samples, so the pooled p99 is a real delay value: finite,
+        // non-negative, and no larger than the largest sample any seed
+        // produced (per-seed p99s bound it only loosely — interpolation
+        // at tied tails can push the pooled value past their max).
+        for row in &rows {
+            assert!(row.short_p99_delay_pooled.is_finite());
+            assert!(row.short_p99_delay_pooled >= 0.0);
+        }
+        let global_max = results
+            .iter()
+            .map(|r| r.short_queue_delay.max().unwrap_or(0.0))
+            .fold(0.0_f64, f64::max);
+        for row in &rows {
+            assert!(row.short_p99_delay_pooled <= global_max);
+        }
+    }
+
+    #[test]
+    fn deadline_mix_sweep_reports_slo_fields() {
+        let spec = SweepSpec {
+            name: "deadline-mix".into(),
+            models: vec![ModelSpec::mistral_7b()],
+            policies: vec![PolicyKind::PecSched(AblationFlags::full())],
+            scenarios: vec!["deadline-mix".into()],
+            loads: vec![0.5],
+            seeds: vec![3],
+            n_requests: 250,
+            gpu_counts: vec![32],
+            threads: 1,
+        };
+        let r = run_sweep(&spec);
+        let s = &r[0].summary;
+        // Every request carries a deadline in this scenario; shed ones
+        // count as misses but are never silently dropped.
+        assert_eq!(s.deadlines_total, 250);
+        assert_eq!(
+            s.shorts_completed + s.longs_completed + s.shorts_shed + s.longs_shed,
+            250
+        );
+        let rows = aggregate(&r);
+        assert!(rows[0].agg.slo_attainment_mean >= 0.0);
+        assert!(rows[0].agg.slo_attainment_mean <= 1.0);
     }
 }

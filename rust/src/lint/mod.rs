@@ -71,6 +71,9 @@ const ALLOWED_SIM_IMPORTS: &[&str] = &[
     "AdmitOutcome",
     "MigrateOutcome",
     "RequeueOutcome",
+    "ProvisionOutcome",
+    "DrainOutcome",
+    "ShedOutcome",
 ];
 
 /// Structs that must expose no plain-`pub` field (the boundary is module
@@ -104,6 +107,10 @@ const TRACKED_ENUMS: &[&str] = &[
     "AdmitOutcome",
     "MigrateOutcome",
     "RequeueOutcome",
+    "ProvisionOutcome",
+    "DrainOutcome",
+    "ShedOutcome",
+    "FaultKind",
 ];
 
 /// One invariant the lint enforces. `id()` is the name used in

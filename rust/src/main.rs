@@ -242,8 +242,8 @@ fn cmd_sweep(args: &Args) -> Result<()> {
 
 fn cmd_list_scenarios() -> Result<()> {
     println!(
-        "{:<14} {:<15} {:<12} {:>9} {:>10}  description",
-        "name", "arrival", "length mix", "failures", "overrides"
+        "{:<16} {:<15} {:<12} {:<22} {:>4} {:>4} {:>10}  description",
+        "name", "arrival", "length mix", "faults", "slo", "elas", "overrides"
     );
     for s in scenario::all() {
         let overrides = if s.overrides == Default::default() {
@@ -251,12 +251,21 @@ fn cmd_list_scenarios() -> Result<()> {
         } else {
             "sim-cfg".to_string()
         };
+        let faults = if s.faults.is_empty() {
+            "-".to_string()
+        } else {
+            let mut kinds: Vec<&str> = s.faults.iter().map(|f| f.kind.label()).collect();
+            kinds.dedup();
+            format!("{}x {}", s.faults.len(), kinds.join("+"))
+        };
         println!(
-            "{:<14} {:<15} {:<12} {:>9} {:>10}  {}",
+            "{:<16} {:<15} {:<12} {:<22} {:>4} {:>4} {:>10}  {}",
             s.name,
             s.arrival.label(),
             s.mix.label(),
-            s.failures.len(),
+            faults,
+            if s.deadlines.is_some() { "yes" } else { "-" },
+            if s.elastic.is_some() { "yes" } else { "-" },
             overrides,
             s.description
         );

@@ -130,6 +130,14 @@ impl Digest {
         }
         Some(out)
     }
+
+    /// Pool another exact digest's samples into this one (in the other's
+    /// stored order — deterministic for identical inputs).
+    pub fn merge(&mut self, other: &Digest) {
+        for &v in &other.samples {
+            self.add(v);
+        }
+    }
 }
 
 /// A tail-metric digest with a switchable backend: the exact [`Digest`]
@@ -233,6 +241,39 @@ impl TailDigest {
             TailDigest::Streaming(s) => s.entries(),
         }
     }
+
+    /// Pool another digest into this one (cross-seed quantile pooling).
+    ///
+    /// Exact + Exact concatenates sample sets (pooled quantiles stay
+    /// exact). Streaming + Streaming merges the GK summaries directly —
+    /// the pooled rank error stays within ±εn of the *combined* count and
+    /// no sample store is ever rehydrated, so multi-seed aggregation is
+    /// O(1)-memory end to end in streaming mode. Mixed backends promote
+    /// `self` to streaming first (feeding its stored samples through in
+    /// stored order — deterministic), for the same reason.
+    pub fn merge(&mut self, other: &TailDigest) {
+        let mut promoted: Option<GkSketch> = None;
+        match (&mut *self, other) {
+            (TailDigest::Exact(a), TailDigest::Exact(b)) => a.merge(b),
+            (TailDigest::Streaming(a), TailDigest::Streaming(b)) => a.merge(b),
+            (TailDigest::Streaming(a), TailDigest::Exact(b)) => {
+                for &v in &b.samples {
+                    a.add(v);
+                }
+            }
+            (TailDigest::Exact(a), TailDigest::Streaming(b)) => {
+                let mut sk = GkSketch::with_epsilon(b.epsilon());
+                for &v in &a.samples {
+                    sk.add(v);
+                }
+                sk.merge(b);
+                promoted = Some(sk);
+            }
+        }
+        if let Some(sk) = promoted {
+            *self = TailDigest::Streaming(sk);
+        }
+    }
 }
 
 /// Per-GPU-group busy/idle accounting for Eq. (1).
@@ -304,6 +345,18 @@ pub struct RunMetrics {
     pub shorts_completed: usize,
     pub longs_completed: usize,
     pub longs_total: usize,
+    /// Short requests shed at admission (terminal — counted, never run).
+    pub shorts_shed: usize,
+    /// Long requests shed at admission.
+    pub longs_shed: usize,
+    /// Requests that carried a completion deadline (the SLO population).
+    pub deadlines_total: usize,
+    /// Deadline-carrying requests that finished at or before it. Shed or
+    /// unfinished deadline requests count as misses.
+    pub deadlines_met: usize,
+    /// Goodput numerator: completions that were useful under the SLO —
+    /// finished with no deadline attached, or finished by their deadline.
+    pub good_completions: usize,
     /// Long requests with no service by the time all shorts finished.
     pub longs_starved: usize,
     /// Total suspensions of long-request prefill (Tables 3/6) plus, under
@@ -386,6 +439,11 @@ impl RunMetrics {
             shorts_completed: self.shorts_completed,
             longs_completed: self.longs_completed,
             longs_total: self.longs_total,
+            shorts_shed: self.shorts_shed,
+            longs_shed: self.longs_shed,
+            deadlines_total: self.deadlines_total,
+            deadlines_met: self.deadlines_met,
+            good_completions: self.good_completions,
             longs_starved: self.longs_starved,
             preemptions: self.preemptions,
             gpu_idle_rate: self.gpu_idle_rate,
@@ -407,6 +465,16 @@ pub struct RunSummary {
     pub shorts_completed: usize,
     pub longs_completed: usize,
     pub longs_total: usize,
+    /// Requests shed at admission (terminal, counted — never silently
+    /// dropped): conservation is `completed + shed == arrived`.
+    pub shorts_shed: usize,
+    pub longs_shed: usize,
+    /// Requests that carried a completion deadline.
+    pub deadlines_total: usize,
+    /// Deadline-carrying requests that finished at or before it.
+    pub deadlines_met: usize,
+    /// Completions useful under the SLO (no deadline, or deadline met).
+    pub good_completions: usize,
     pub longs_starved: usize,
     pub preemptions: u64,
     pub gpu_idle_rate: f64,
@@ -426,6 +494,35 @@ impl RunSummary {
         }
         self.longs_starved as f64 / self.longs_total as f64
     }
+
+    /// SLO attainment: fraction of deadline-carrying requests that
+    /// finished by their deadline. Vacuously 1.0 when nothing carried a
+    /// deadline (there was no SLO to miss).
+    pub fn slo_attainment(&self) -> f64 {
+        if self.deadlines_total == 0 {
+            return 1.0;
+        }
+        self.deadlines_met as f64 / self.deadlines_total as f64
+    }
+
+    /// Goodput: SLO-useful completions per second of makespan. Equals
+    /// total completion throughput when no request carries a deadline.
+    pub fn goodput_rps(&self) -> f64 {
+        if self.makespan <= 0.0 {
+            return 0.0;
+        }
+        self.good_completions as f64 / self.makespan
+    }
+
+    /// Fraction of arrived requests shed at admission.
+    pub fn shed_frac(&self) -> f64 {
+        let shed = self.shorts_shed + self.longs_shed;
+        let arrived = self.shorts_completed + self.longs_completed + shed;
+        if arrived == 0 {
+            return 0.0;
+        }
+        shed as f64 / arrived as f64
+    }
 }
 
 /// Cross-seed aggregate of one sweep group: per-metric means plus the
@@ -441,6 +538,12 @@ pub struct SeedAggregate {
     pub long_jct_mean: f64,
     pub preemptions_mean: f64,
     pub gpu_idle_rate_mean: f64,
+    /// Mean SLO attainment across seeds (1.0 when no deadlines anywhere).
+    pub slo_attainment_mean: f64,
+    /// Mean goodput (SLO-useful completions / second) across seeds.
+    pub goodput_rps_mean: f64,
+    /// Mean fraction of arrivals shed at admission across seeds.
+    pub shed_frac_mean: f64,
 }
 
 /// Aggregate one group of per-seed summaries (all from the same
@@ -459,6 +562,9 @@ pub fn aggregate_seeds(runs: &[RunSummary]) -> SeedAggregate {
         long_jct_mean: mean(&|r| r.long_jct_mean),
         preemptions_mean: mean(&|r| r.preemptions as f64),
         gpu_idle_rate_mean: mean(&|r| r.gpu_idle_rate),
+        slo_attainment_mean: mean(&|r| r.slo_attainment()),
+        goodput_rps_mean: mean(&|r| r.goodput_rps()),
+        shed_frac_mean: mean(&|r| r.shed_frac()),
     }
 }
 
@@ -541,6 +647,71 @@ mod tests {
         assert_eq!(ex.max(), st.max());
         // The streaming backend is the whole point: bounded entries.
         assert!(st.entries() < ex.entries());
+    }
+
+    #[test]
+    fn tail_digest_merge_pools_across_backends() {
+        // Exact+Exact pools exactly.
+        let mut a = TailDigest::new(MetricsMode::Exact);
+        let mut b = TailDigest::new(MetricsMode::Exact);
+        for i in 0..50 {
+            a.add(i as f64);
+        }
+        for i in 50..100 {
+            b.add(i as f64);
+        }
+        a.merge(&b);
+        assert_eq!(a.len(), 100);
+        assert_eq!(a.max(), Some(99.0));
+        assert!((a.quantile(0.5).unwrap() - 49.5).abs() < 1e-9);
+        assert!(matches!(a, TailDigest::Exact(_)));
+
+        // Exact+Streaming promotes to streaming — pooling never
+        // rehydrates an exact store (count/mean/max stay exact).
+        let mut ex = TailDigest::new(MetricsMode::Exact);
+        let mut st = TailDigest::new(MetricsMode::Streaming);
+        for i in 0..2_000 {
+            ex.add(i as f64);
+            st.add((2_000 + i) as f64);
+        }
+        ex.merge(&st);
+        assert!(matches!(ex, TailDigest::Streaming(_)));
+        assert_eq!(ex.len(), 4_000);
+        assert_eq!(ex.max(), Some(3_999.0));
+        let med = ex.quantile(0.5).unwrap();
+        assert!((med - 2_000.0).abs() < 50.0, "pooled median {med}");
+
+        // Streaming+Exact feeds the samples through.
+        let mut s2 = TailDigest::new(MetricsMode::Streaming);
+        s2.add(1.0);
+        let mut e2 = TailDigest::new(MetricsMode::Exact);
+        e2.add(2.0);
+        s2.merge(&e2);
+        assert_eq!(s2.len(), 2);
+        assert_eq!(s2.max(), Some(2.0));
+    }
+
+    #[test]
+    fn slo_and_goodput_helpers() {
+        let s = RunSummary {
+            deadlines_total: 8,
+            deadlines_met: 6,
+            good_completions: 30,
+            shorts_completed: 28,
+            longs_completed: 4,
+            shorts_shed: 8,
+            longs_shed: 0,
+            makespan: 10.0,
+            ..Default::default()
+        };
+        assert!((s.slo_attainment() - 0.75).abs() < 1e-12);
+        assert!((s.goodput_rps() - 3.0).abs() < 1e-12);
+        assert!((s.shed_frac() - 0.2).abs() < 1e-12);
+        // No deadlines anywhere: vacuously attained, goodput == rps.
+        let none = RunSummary::default();
+        assert_eq!(none.slo_attainment(), 1.0);
+        assert_eq!(none.goodput_rps(), 0.0);
+        assert_eq!(none.shed_frac(), 0.0);
     }
 
     #[test]

@@ -199,6 +199,67 @@ impl GkSketch {
         }
         Some(self.max)
     }
+
+    /// Fold another sketch's summary into this one without touching any
+    /// raw samples — the O(1)-memory cross-seed pooling primitive.
+    ///
+    /// Rank-error argument: a tuple from one summary, placed among the
+    /// other's tuples, gains at most the other stream's full rank
+    /// uncertainty, so bumping its `Δ` by `⌊2ε·n_other⌋` keeps
+    /// `g + Δ ≤ ⌊2ε·n_self⌋ + ⌊2ε·n_other⌋ ≤ ⌊2ε·(n_self+n_other)⌋` —
+    /// the GK invariant at the pooled count, hence pooled queries stay
+    /// within `±ε·n_total` ranks. The boundary tuples keep `Δ = 0`: each
+    /// input's first/last tuple is its exact min/max (inserts at the ends
+    /// get `Δ = 0` and compression never discards them), so the merged
+    /// first tuple is the exact pooled minimum (rank = its `g`-prefix)
+    /// and the merged last tuple the exact pooled maximum (`Σg = n`).
+    /// Count, sum, min and max combine exactly. Deterministic: a stable
+    /// two-pointer merge by `v`, `self`'s tuples first on ties.
+    pub fn merge(&mut self, other: &GkSketch) {
+        assert!(
+            (self.eps - other.eps).abs() < 1e-12,
+            "merging sketches with different epsilon ({} vs {})",
+            self.eps,
+            other.eps
+        );
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let bump_self = (2.0 * self.eps * other.n as f64).floor() as u64;
+        let bump_other = (2.0 * self.eps * self.n as f64).floor() as u64;
+        let mut merged = Vec::with_capacity(self.tuples.len() + other.tuples.len());
+        let (mut i, mut j) = (0, 0);
+        while i < self.tuples.len() || j < other.tuples.len() {
+            let take_self = j >= other.tuples.len()
+                || (i < self.tuples.len() && self.tuples[i].v <= other.tuples[j].v);
+            let mut t = if take_self {
+                i += 1;
+                self.tuples[i - 1]
+            } else {
+                j += 1;
+                other.tuples[j - 1]
+            };
+            t.delta += if take_self { bump_self } else { bump_other };
+            merged.push(t);
+        }
+        if let Some(first) = merged.first_mut() {
+            first.delta = 0;
+        }
+        if let Some(last) = merged.last_mut() {
+            last.delta = 0;
+        }
+        self.tuples = merged;
+        self.n += other.n;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+        self.compress();
+        self.since_compress = 0;
+    }
 }
 
 #[cfg(test)]
@@ -328,6 +389,58 @@ mod tests {
             QS.map(|q| sk.quantile(q).unwrap().to_bits())
         };
         assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn merged_sketch_stays_within_pooled_rank_budget() {
+        // Pool several per-seed streams by summary merge and check the
+        // rank bound against the exact pooled sample set — the
+        // aggregate_seeds streaming-mode contract.
+        let mut rng = Rng::seed_from_u64(0x6b_06);
+        let mut pooled = GkSketch::new();
+        let mut all = Vec::new();
+        for part in 0..5 {
+            let mut sk = GkSketch::new();
+            let n = 3_000 + 2_000 * part;
+            for _ in 0..n {
+                // Disjoint-ish ranges per part make a bad merge obvious.
+                let v = rng.exponential(0.1) + 10.0 * part as f64;
+                sk.add(v);
+                all.push(v);
+            }
+            pooled.merge(&sk);
+        }
+        let mut sorted = all.clone();
+        sorted.sort_by(|a, b| a.total_cmp(b));
+        let budget = pooled.epsilon() * all.len() as f64 + 1.0;
+        for q in QS {
+            let ans = pooled.quantile(q).unwrap();
+            let err = rank_err(&sorted, ans, q);
+            assert!(err <= budget, "q={q}: rank error {err} > {budget}");
+        }
+        // Exact side-channels combine exactly.
+        assert_eq!(pooled.count() as usize, all.len());
+        assert_eq!(pooled.min(), Some(sorted[0]));
+        assert_eq!(pooled.max(), Some(sorted[sorted.len() - 1]));
+        let naive = all.iter().sum::<f64>() / all.len() as f64;
+        assert!((pooled.mean().unwrap() - naive).abs() < 1e-6 * naive.abs());
+        // Still a summary, not a rehydrated sample store.
+        assert!(pooled.entries() < all.len() / 10);
+    }
+
+    #[test]
+    fn merge_with_empty_is_identity_either_way() {
+        let mut a = GkSketch::new();
+        for i in 0..1_000 {
+            a.add(i as f64);
+        }
+        let before = (a.count(), a.quantile(0.5).map(f64::to_bits));
+        a.merge(&GkSketch::new());
+        assert_eq!((a.count(), a.quantile(0.5).map(f64::to_bits)), before);
+        let mut e = GkSketch::new();
+        e.merge(&a);
+        assert_eq!(e.count(), a.count());
+        assert_eq!(e.quantile(0.99), a.quantile(0.99));
     }
 
     #[test]

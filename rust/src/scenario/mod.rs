@@ -1,16 +1,19 @@
 //! Named workload scenarios: an arrival process + a length mix + a
-//! failure schedule + [`SimConfig`] overrides, registered by name.
+//! fault schedule + SLO/elasticity specs + [`SimConfig`] overrides,
+//! registered by name.
 //!
 //! Length-aware schedulers are judged on how they behave across load and
 //! length regimes, not one operating point, so the evaluation stack runs
 //! every experiment cell through a [`Scenario`] instead of hardcoding the
 //! paper's steady Poisson mix. `azure-steady` reproduces the pre-refactor
 //! generator bit-for-bit; the rest reshape arrivals (`burst`, `diurnal`),
-//! the length mix (`long-heavy`, `shorts-only`), inject failures
-//! (`failures`), or override the simulator (`huge-sweep`). The registry
-//! ([`registry::all`]) is the single source `pecsched list-scenarios`,
-//! `pecsched sweep` and the sweep runner ([`crate::exp::sweep`]) draw
-//! from; see ROADMAP.md for the determinism contract and how to add one.
+//! the length mix (`long-heavy`, `shorts-only`), inject faults
+//! (`failures`, `spot-reclaim`), attach deadlines and admission control
+//! (`deadline-mix`), autoscale capacity (`elastic-diurnal`), or override
+//! the simulator (`huge-sweep`). The registry ([`registry::all`]) is the
+//! single source `pecsched list-scenarios`, `pecsched sweep` and the
+//! sweep runner ([`crate::exp::sweep`]) draw from; see ROADMAP.md for
+//! the determinism contract and how to add one.
 
 mod registry;
 
@@ -22,17 +25,99 @@ use crate::sched::Policy;
 use crate::sim::{run_sim, ClusterOps, SimConfig, SimState, Simulation};
 use crate::trace::{generate_trace, ArrivalProcess, LengthMix, Trace};
 
-/// One injected replica failure, timed as a fraction of the trace's
-/// arrival span (so the schedule scales with any load or request count).
+/// What an injected fault does to its target (DESIGN.md §7).
+///
+/// All durations are fractions of the trace's arrival span, so one
+/// schedule scales with any load or request count.
 #[derive(Debug, Clone, PartialEq)]
-pub struct FailurePoint {
-    /// Crash when simulated time passes `at_frac * trace.span()`.
+pub enum FaultKind {
+    /// Hard crash: in-flight work is destroyed and bounced through the
+    /// recovery path. Optionally comes back (instantly — checkpoint-free
+    /// restart) after another `recover_frac` of the span.
+    Crash { recover_frac: Option<f64> },
+    /// Spot-instance reclaim: a graceful `drain` at notice time (no new
+    /// placements, queued work displaced, in-flight work keeps running),
+    /// then a hard kill `deadline_frac` later if the drain has not
+    /// settled, then optionally a `provision` (paying the cold-start
+    /// latency) another `reprovision_frac` after the kill deadline.
+    SpotReclaim {
+        deadline_frac: f64,
+        reprovision_frac: Option<f64>,
+    },
+    /// Straggler: the target's kernels genuinely slow down — every
+    /// prefill/decode duration is multiplied by `slowdown` — for
+    /// `span_frac` of the span, then return to nominal speed.
+    Straggler { slowdown: f64, span_frac: f64 },
+}
+
+impl FaultKind {
+    /// Short label for tables (`list-scenarios`, DESIGN.md).
+    pub fn label(&self) -> &'static str {
+        match self {
+            Self::Crash { .. } => "crash",
+            Self::SpotReclaim { .. } => "spot-reclaim",
+            Self::Straggler { .. } => "straggler",
+        }
+    }
+}
+
+/// Which replica(s) a fault hits.
+///
+/// Indices are taken modulo the cluster's replica (resp. node) count.
+/// This is deliberate — one schedule stays valid for every model, whose
+/// TP degree changes the replica count — but it means `Replica(1)` and
+/// `Replica(33)` alias on a 32-replica cluster; schedules that must hit
+/// distinct replicas should use indices below the smallest replica count
+/// in the sweep grid.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultTarget {
+    /// One replica, index modulo the replica count.
+    Replica(usize),
+    /// Every replica hosted on one node (correlated failure: a host
+    /// reboot or network partition), node index modulo the node count.
+    Node(usize),
+}
+
+/// One scheduled fault, timed as a fraction of the trace's arrival span.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPoint {
+    /// Fire when simulated time passes `at_frac * trace.span()`.
     pub at_frac: f64,
-    /// Replica to fail, taken modulo the cluster's replica count so one
-    /// schedule is valid for every model's TP degree.
-    pub replica: usize,
-    /// Recover after this additional span fraction; `None` stays down.
-    pub recover_frac: Option<f64>,
+    /// Blast radius.
+    pub target: FaultTarget,
+    /// What happens to the target.
+    pub kind: FaultKind,
+}
+
+/// Deadline SLOs a scenario attaches to its generated trace: each
+/// request's deadline is `arrival + slack` for its class. Applied as a
+/// deterministic post-pass over the built trace, so the underlying
+/// request stream (and every golden/oracle test built on it) is
+/// untouched.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DeadlineSpec {
+    /// Completion slack for short requests, seconds after arrival.
+    pub short_slack_s: f64,
+    /// Completion slack for long requests, seconds after arrival.
+    pub long_slack_s: f64,
+}
+
+/// A backlog-driven replica autoscaler the scenario hook runs: the
+/// graceful-degradation loop that pairs with admission-control shedding.
+/// Decisions read only simulated state (`queued_backlog`, replica
+/// liveness) at simulated times — thread-count independent.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ElasticSpec {
+    /// Provision the lowest-id down replica when the queued backlog
+    /// exceeds this.
+    pub scale_up_backlog: usize,
+    /// Drain the highest-id idle replica when the backlog is at or below
+    /// this.
+    pub scale_down_backlog: usize,
+    /// Never drain below this many live replicas.
+    pub min_live: usize,
+    /// Simulated seconds between autoscaler actions.
+    pub cooldown_s: f64,
 }
 
 /// [`SimConfig`] tweaks a scenario carries on top of the policy defaults.
@@ -44,6 +129,9 @@ pub struct SimOverrides {
     /// Override the percentile backend (e.g. streaming GK sketches so a
     /// massive grid's memory stays trace-length independent).
     pub metrics_mode: Option<MetricsMode>,
+    /// Admission-control backlog cap: arrivals beyond this many queued
+    /// requests are shed (typed, counted) instead of enqueued.
+    pub shed_backlog: Option<usize>,
 }
 
 /// Arrival shape, parameterised at build time by the cell's mean rate so
@@ -138,15 +226,31 @@ pub struct Scenario {
     pub description: &'static str,
     pub arrival: ArrivalShape,
     pub mix: MixShape,
-    pub failures: Vec<FailurePoint>,
+    pub faults: Vec<FaultPoint>,
+    pub deadlines: Option<DeadlineSpec>,
+    pub elastic: Option<ElasticSpec>,
     pub overrides: SimOverrides,
 }
 
 impl Scenario {
     /// Build the scenario's trace at a mean rate of `rps` — deterministic
-    /// given `(n_requests, rps, seed)`.
+    /// given `(n_requests, rps, seed)`. A [`DeadlineSpec`], if present,
+    /// stamps deadlines in a post-pass (the RNG stream feeding lengths
+    /// and arrivals is untouched).
     pub fn build_trace(&self, n_requests: usize, rps: f64, seed: u64) -> Trace {
-        generate_trace(n_requests, seed, &self.arrival.process(rps), &self.mix.mix())
+        let mut trace =
+            generate_trace(n_requests, seed, &self.arrival.process(rps), &self.mix.mix());
+        if let Some(d) = self.deadlines {
+            for r in &mut trace.requests {
+                let slack = if r.is_long {
+                    d.long_slack_s
+                } else {
+                    d.short_slack_s
+                };
+                r.deadline = Some(r.arrival + slack);
+            }
+        }
+        trace
     }
 
     /// Apply the scenario's [`SimConfig`] overrides.
@@ -157,47 +261,199 @@ impl Scenario {
         if let Some(mode) = self.overrides.metrics_mode {
             cfg.metrics_mode = mode;
         }
+        if let Some(cap) = self.overrides.shed_backlog {
+            cfg.shed_backlog = Some(cap);
+        }
     }
 
     /// Run one simulation under this scenario: overrides applied, the
-    /// failure schedule injected via the engine's per-event hook, and
-    /// displaced requests re-placed through the policy (the same recovery
-    /// path `rust/tests/failure_tests.rs` exercises).
+    /// fault schedule and autoscaler driven through the engine's
+    /// per-event hook, displaced requests re-placed through the policy
+    /// (the same recovery path `rust/tests/failure_tests.rs` and
+    /// `rust/tests/chaos_tests.rs` exercise).
+    ///
+    /// Every hook decision reads simulated time and simulated state only,
+    /// so runs are byte-identical across `--threads` settings.
     pub fn run(&self, mut cfg: SimConfig, trace: &Trace, kind: PolicyKind) -> RunMetrics {
         self.apply_overrides(&mut cfg);
-        if self.failures.is_empty() {
+        if self.faults.is_empty() && self.elastic.is_none() {
             return run_sim(cfg, trace, kind);
         }
         let span = trace.span();
         let mut sim = Simulation::new(cfg, trace, kind);
-        // (fail time, replica, recover time) with fired flags, resolved
-        // against simulated time only — thread-count independent.
-        let mut failed = vec![false; self.failures.len()];
-        let mut recovered = vec![false; self.failures.len()];
+        // Per-fault stage cursor (0 = pending, bumped as each phase of
+        // the fault fires), resolved against simulated time only.
+        let mut stage = vec![0u8; self.faults.len()];
+        let mut last_scale = f64::NEG_INFINITY;
         let mut displaced = Vec::new();
         sim.run_with_hook(|st: &mut SimState, policy: &mut dyn Policy| {
-            for (i, f) in self.failures.iter().enumerate() {
-                let rid = f.replica % st.replica_count();
-                if !failed[i] && st.now() >= span * f.at_frac {
-                    failed[i] = true;
+            for (i, f) in self.faults.iter().enumerate() {
+                run_fault(f, &mut stage[i], span, st, policy, &mut displaced);
+            }
+            if let Some(el) = self.elastic {
+                run_autoscaler(&el, &mut last_scale, st, &mut displaced, policy);
+            }
+        })
+    }
+}
+
+/// Resolve a fault's blast radius against the live topology.
+fn fault_replicas(st: &SimState, target: FaultTarget) -> Vec<usize> {
+    match target {
+        FaultTarget::Replica(r) => vec![r % st.replica_count()],
+        FaultTarget::Node(n) => st.replicas_on_node(n % st.node_count()),
+    }
+}
+
+/// Bounce a displaced-request buffer through the policy's arrival path
+/// (the standard re-placement seam), leaving the buffer empty.
+fn replace_displaced(
+    st: &mut SimState,
+    policy: &mut dyn Policy,
+    displaced: &mut Vec<usize>,
+) {
+    for i in 0..displaced.len() {
+        let req = displaced[i];
+        policy.on_arrival(&mut ClusterOps::new(st), req);
+    }
+    displaced.clear();
+}
+
+/// Advance one fault's stage machine against simulated time.
+fn run_fault(
+    f: &FaultPoint,
+    stage: &mut u8,
+    span: f64,
+    st: &mut SimState,
+    policy: &mut dyn Policy,
+    displaced: &mut Vec<usize>,
+) {
+    let now = st.now();
+    match f.kind {
+        FaultKind::Crash { recover_frac } => {
+            if *stage == 0 && now >= span * f.at_frac {
+                *stage = 1;
+                for rid in fault_replicas(st, f.target) {
                     if !st.replica(rid).is_down() {
-                        st.fail_replica(rid, &mut displaced);
-                        for &req in &displaced {
-                            policy.on_arrival(&mut ClusterOps::new(st), req);
-                        }
+                        st.fail_replica(rid, displaced);
+                        replace_displaced(st, policy, displaced);
                     }
                 }
-                if let Some(rec) = f.recover_frac {
-                    if failed[i] && !recovered[i] && st.now() >= span * (f.at_frac + rec)
-                    {
-                        recovered[i] = true;
+            }
+            if let Some(rec) = recover_frac {
+                if *stage == 1 && now >= span * (f.at_frac + rec) {
+                    *stage = 2;
+                    for rid in fault_replicas(st, f.target) {
                         if st.replica(rid).is_down() {
                             st.recover_replica(rid);
                         }
                     }
                 }
             }
-        })
+        }
+        FaultKind::SpotReclaim {
+            deadline_frac,
+            reprovision_frac,
+        } => {
+            if *stage == 0 && now >= span * f.at_frac {
+                *stage = 1;
+                for rid in fault_replicas(st, f.target) {
+                    if !st.replica(rid).is_down() {
+                        let mut ops = ClusterOps::new(st);
+                        let _ = ops.drain(rid, displaced);
+                        replace_displaced(st, policy, displaced);
+                    }
+                }
+            }
+            if *stage == 1 && now >= span * (f.at_frac + deadline_frac) {
+                *stage = 2;
+                for rid in fault_replicas(st, f.target) {
+                    // Kill only drains that missed the reclaim deadline;
+                    // settled drains already retired their work.
+                    if st.replica(rid).is_draining() {
+                        st.fail_replica(rid, displaced);
+                        replace_displaced(st, policy, displaced);
+                    }
+                }
+            }
+            if let Some(rep) = reprovision_frac {
+                if *stage == 2 && now >= span * (f.at_frac + deadline_frac + rep) {
+                    *stage = 3;
+                    for rid in fault_replicas(st, f.target) {
+                        let r = st.replica(rid);
+                        if r.is_down() && !r.is_provisioning() && !r.is_draining() {
+                            let mut ops = ClusterOps::new(st);
+                            let _ = ops.provision(rid);
+                        }
+                    }
+                }
+            }
+        }
+        FaultKind::Straggler {
+            slowdown,
+            span_frac,
+        } => {
+            if *stage == 0 && now >= span * f.at_frac {
+                *stage = 1;
+                for rid in fault_replicas(st, f.target) {
+                    if !st.replica(rid).is_down() {
+                        st.set_replica_slowdown(rid, slowdown);
+                    }
+                }
+            }
+            if *stage == 1 && now >= span * (f.at_frac + span_frac) {
+                *stage = 2;
+                for rid in fault_replicas(st, f.target) {
+                    st.set_replica_slowdown(rid, 1.0);
+                }
+            }
+        }
+    }
+}
+
+/// One autoscaler step: provision on deep backlog, drain on idle excess.
+fn run_autoscaler(
+    el: &ElasticSpec,
+    last_scale: &mut f64,
+    st: &mut SimState,
+    displaced: &mut Vec<usize>,
+    policy: &mut dyn Policy,
+) {
+    if st.now() < *last_scale + el.cooldown_s {
+        return;
+    }
+    let backlog = st.queued_backlog();
+    let n = st.replica_count();
+    if backlog > el.scale_up_backlog {
+        // Scale up: revive the lowest-id down replica (deterministic
+        // pick) — capacity arrives after the cold-start latency.
+        let pick = (0..n).find(|&rid| {
+            let r = st.replica(rid);
+            r.is_down() && !r.is_provisioning() && !r.is_draining()
+        });
+        if let Some(rid) = pick {
+            let mut ops = ClusterOps::new(st);
+            let _ = ops.provision(rid);
+            *last_scale = st.now();
+        }
+    } else if backlog <= el.scale_down_backlog {
+        let live = (0..n).filter(|&rid| !st.replica(rid).is_down()).count();
+        if live <= el.min_live {
+            return;
+        }
+        // Scale down: drain the highest-id idle non-pool replica. Idle
+        // means the drain settles immediately and displaces nothing, but
+        // route it through the verb anyway — one code path.
+        let pick = (0..n).rev().find(|&rid| {
+            let r = st.replica(rid);
+            !r.is_down() && r.is_idle() && !st.decode_pool().contains(&rid)
+        });
+        if let Some(rid) = pick {
+            let mut ops = ClusterOps::new(st);
+            let _ = ops.drain(rid, displaced);
+            replace_displaced(st, policy, displaced);
+            *last_scale = st.now();
+        }
     }
 }
 
@@ -215,6 +471,9 @@ mod tests {
             "long-heavy",
             "shorts-only",
             "failures",
+            "spot-reclaim",
+            "elastic-diurnal",
+            "deadline-mix",
         ] {
             assert!(names.contains(&required), "missing scenario {required}");
         }
@@ -268,5 +527,88 @@ mod tests {
         s.apply_overrides(&mut cfg);
         assert_eq!(cfg.decode_mode, DecodeMode::EpochClosedForm);
         assert_eq!(cfg.metrics_mode, MetricsMode::Streaming);
+        let dm = by_name("deadline-mix").unwrap();
+        let mut cfg = SimConfig::baseline(crate::config::ModelSpec::mistral_7b());
+        assert_eq!(cfg.shed_backlog, None);
+        dm.apply_overrides(&mut cfg);
+        assert_eq!(cfg.shed_backlog, Some(64));
+    }
+
+    #[test]
+    fn deadline_spec_is_a_pure_post_pass() {
+        // Same (n, rps, seed): the deadline scenario's request stream
+        // must be identical to the no-deadline generator output except
+        // for the stamped deadlines — the RNG stream is untouched.
+        let dm = by_name("deadline-mix").unwrap();
+        let stamped = dm.build_trace(400, 8.0, 11);
+        let mut bare = dm.clone();
+        bare.deadlines = None;
+        let plain = bare.build_trace(400, 8.0, 11);
+        assert_eq!(stamped.len(), plain.len());
+        for (a, b) in stamped.requests.iter().zip(&plain.requests) {
+            assert_eq!(a.arrival.to_bits(), b.arrival.to_bits());
+            assert_eq!((a.input_len, a.output_len, a.is_long), (b.input_len, b.output_len, b.is_long));
+            assert_eq!(b.deadline, None);
+            let slack = if a.is_long { 900.0 } else { 20.0 };
+            assert_eq!(a.deadline, Some(a.arrival + slack));
+        }
+    }
+
+    #[test]
+    fn spot_reclaim_scenario_conserves_requests() {
+        use crate::config::{AblationFlags, ModelSpec, PolicyKind};
+        let s = by_name("spot-reclaim").unwrap();
+        let trace = s.build_trace(250, 10.0, 5);
+        let cfg = SimConfig::pecsched(
+            ModelSpec::mistral_7b(),
+            AblationFlags::full(),
+        );
+        let m = s.run(cfg, &trace, PolicyKind::PecSched(AblationFlags::full()));
+        assert_eq!(
+            m.shorts_completed + m.longs_completed + m.shorts_shed + m.longs_shed,
+            trace.len(),
+            "every request must end completed or shed"
+        );
+        assert_eq!(m.shorts_shed + m.longs_shed, 0, "no admission cap here");
+    }
+
+    #[test]
+    fn elastic_diurnal_scenario_terminates_and_conserves() {
+        use crate::config::{AblationFlags, ModelSpec, PolicyKind};
+        let s = by_name("elastic-diurnal").unwrap();
+        let trace = s.build_trace(250, 12.0, 7);
+        let cfg = SimConfig::pecsched(
+            ModelSpec::mistral_7b(),
+            AblationFlags::full(),
+        );
+        let m = s.run(cfg, &trace, PolicyKind::PecSched(AblationFlags::full()));
+        assert_eq!(
+            m.shorts_completed + m.longs_completed + m.shorts_shed + m.longs_shed,
+            trace.len()
+        );
+    }
+
+    #[test]
+    fn deadline_mix_reports_slo_metrics() {
+        use crate::config::{AblationFlags, ModelSpec, PolicyKind};
+        let s = by_name("deadline-mix").unwrap();
+        let trace = s.build_trace(300, 14.0, 3);
+        let cfg = SimConfig::pecsched(
+            ModelSpec::mistral_7b(),
+            AblationFlags::full(),
+        );
+        let mut m = s.run(cfg, &trace, PolicyKind::PecSched(AblationFlags::full()));
+        // Every request carries a deadline under this scenario, so the
+        // SLO population is exactly the trace.
+        assert_eq!(m.deadlines_total, trace.len());
+        assert!(m.deadlines_met <= m.deadlines_total);
+        assert_eq!(
+            m.shorts_completed + m.longs_completed + m.shorts_shed + m.longs_shed,
+            trace.len(),
+            "shed requests are counted, never silently dropped"
+        );
+        let sum = m.summary();
+        assert!((0.0..=1.0).contains(&sum.slo_attainment()));
+        assert!(sum.goodput_rps() >= 0.0);
     }
 }

@@ -1,15 +1,19 @@
 //! The scenario registry — the full catalogue of named workloads.
 //!
 //! Adding a scenario is one entry here (plus a ROADMAP table row): pick
-//! an [`ArrivalShape`], a [`MixShape`], an optional failure schedule and
-//! optional [`SimOverrides`]. Everything downstream — `pecsched sweep`,
+//! an [`ArrivalShape`], a [`MixShape`], an optional fault schedule,
+//! optional [`DeadlineSpec`]/[`ElasticSpec`] and optional
+//! [`SimOverrides`]. Everything downstream — `pecsched sweep`,
 //! `pecsched list-scenarios`, the `exp_*` binaries and the CI smoke grid
 //! — discovers it automatically.
 
 use crate::config::DecodeMode;
 use crate::metrics::MetricsMode;
 
-use super::{ArrivalShape, FailurePoint, MixShape, Scenario, SimOverrides};
+use super::{
+    ArrivalShape, DeadlineSpec, ElasticSpec, FaultKind, FaultPoint, FaultTarget,
+    MixShape, Scenario, SimOverrides,
+};
 
 /// Every registered scenario, in presentation order.
 pub fn all() -> Vec<Scenario> {
@@ -21,7 +25,9 @@ pub fn all() -> Vec<Scenario> {
                           the pre-scenario generator)",
             arrival: ArrivalShape::Steady,
             mix: MixShape::AzureStandard,
-            failures: vec![],
+            faults: vec![],
+            deadlines: None,
+            elastic: None,
             overrides: SimOverrides::default(),
         },
         Scenario {
@@ -36,7 +42,9 @@ pub fn all() -> Vec<Scenario> {
                 off_s: 60.0,
             },
             mix: MixShape::AzureStandard,
-            failures: vec![],
+            faults: vec![],
+            deadlines: None,
+            elastic: None,
             overrides: SimOverrides::default(),
         },
         Scenario {
@@ -48,7 +56,9 @@ pub fn all() -> Vec<Scenario> {
                 period_s: 600.0,
             },
             mix: MixShape::AzureStandard,
-            failures: vec![],
+            faults: vec![],
+            deadlines: None,
+            elastic: None,
             overrides: SimOverrides::default(),
         },
         Scenario {
@@ -60,7 +70,9 @@ pub fn all() -> Vec<Scenario> {
             mix: MixShape::LongHeavy {
                 long_quantile: 0.999,
             },
-            failures: vec![],
+            faults: vec![],
+            deadlines: None,
+            elastic: None,
             overrides: SimOverrides::default(),
         },
         Scenario {
@@ -72,7 +84,9 @@ pub fn all() -> Vec<Scenario> {
             mix: MixShape::LongHeavy {
                 long_quantile: 0.95,
             },
-            failures: vec![],
+            faults: vec![],
+            deadlines: None,
+            elastic: None,
             overrides: SimOverrides::default(),
         },
         Scenario {
@@ -82,7 +96,9 @@ pub fn all() -> Vec<Scenario> {
                           'w/o longs' comparison rests on",
             arrival: ArrivalShape::Steady,
             mix: MixShape::ShortsOnly,
-            failures: vec![],
+            faults: vec![],
+            deadlines: None,
+            elastic: None,
             overrides: SimOverrides::default(),
         },
         Scenario {
@@ -93,19 +109,124 @@ pub fn all() -> Vec<Scenario> {
                           the policy",
             arrival: ArrivalShape::Steady,
             mix: MixShape::AzureStandard,
-            failures: vec![
-                FailurePoint {
+            faults: vec![
+                FaultPoint {
                     at_frac: 0.25,
-                    replica: 1,
-                    recover_frac: Some(0.20),
+                    target: FaultTarget::Replica(1),
+                    kind: FaultKind::Crash {
+                        recover_frac: Some(0.20),
+                    },
                 },
-                FailurePoint {
+                FaultPoint {
                     at_frac: 0.55,
-                    replica: 2,
-                    recover_frac: Some(0.20),
+                    target: FaultTarget::Replica(2),
+                    kind: FaultKind::Crash {
+                        recover_frac: Some(0.20),
+                    },
                 },
             ],
+            deadlines: None,
+            elastic: None,
             overrides: SimOverrides::default(),
+        },
+        Scenario {
+            name: "spot-reclaim",
+            description: "burst arrivals plus spot reclaims: one replica and \
+                          one whole node get a drain notice (30%/60% of span), \
+                          a hard kill 10% later if still draining, and a \
+                          cold-start reprovision another 10% after that — the \
+                          elastic-capacity churn regime",
+            arrival: ArrivalShape::Burst {
+                on_mult: 3.0,
+                off_mult: 1.0 / 3.0,
+                on_s: 20.0,
+                off_s: 60.0,
+            },
+            mix: MixShape::AzureStandard,
+            faults: vec![
+                FaultPoint {
+                    at_frac: 0.30,
+                    target: FaultTarget::Replica(1),
+                    kind: FaultKind::SpotReclaim {
+                        deadline_frac: 0.10,
+                        reprovision_frac: Some(0.10),
+                    },
+                },
+                FaultPoint {
+                    at_frac: 0.60,
+                    target: FaultTarget::Node(1),
+                    kind: FaultKind::SpotReclaim {
+                        deadline_frac: 0.10,
+                        reprovision_frac: Some(0.10),
+                    },
+                },
+            ],
+            deadlines: None,
+            elastic: None,
+            overrides: SimOverrides::default(),
+        },
+        Scenario {
+            name: "elastic-diurnal",
+            description: "diurnal arrivals over a cluster that starts with a \
+                          third of its replicas parked (crashed at t=0, never \
+                          auto-recovered) and a backlog-driven autoscaler: \
+                          provision on deep backlog, drain idle excess at \
+                          night — cold-start latency included",
+            arrival: ArrivalShape::Diurnal {
+                amplitude: 0.6,
+                period_s: 600.0,
+            },
+            mix: MixShape::AzureStandard,
+            // Park capacity up front so the autoscaler has something to
+            // provision when the daytime peak hits.
+            faults: vec![
+                FaultPoint {
+                    at_frac: 0.0,
+                    target: FaultTarget::Node(0),
+                    kind: FaultKind::Crash { recover_frac: None },
+                },
+            ],
+            deadlines: None,
+            elastic: Some(ElasticSpec {
+                scale_up_backlog: 12,
+                scale_down_backlog: 1,
+                min_live: 4,
+                cooldown_s: 15.0,
+            }),
+            overrides: SimOverrides::default(),
+        },
+        Scenario {
+            name: "deadline-mix",
+            description: "burst arrivals with per-class completion deadlines \
+                          (shorts: 20 s slack, longs: 900 s), admission \
+                          control shedding past a 64-request backlog, and a \
+                          mid-run straggler replica — the SLO/goodput and \
+                          graceful-degradation scenario",
+            arrival: ArrivalShape::Burst {
+                on_mult: 3.0,
+                off_mult: 1.0 / 3.0,
+                on_s: 20.0,
+                off_s: 60.0,
+            },
+            mix: MixShape::AzureStandard,
+            faults: vec![FaultPoint {
+                at_frac: 0.40,
+                target: FaultTarget::Replica(3),
+                kind: FaultKind::Straggler {
+                    slowdown: 3.0,
+                    span_frac: 0.25,
+                },
+            }],
+            deadlines: Some(DeadlineSpec {
+                short_slack_s: 20.0,
+                long_slack_s: 900.0,
+            }),
+            elastic: None,
+            overrides: SimOverrides {
+                decode_mode: None,
+                metrics_mode: None,
+                shed_backlog: Some(64),
+            },
         },
         Scenario {
             name: "huge-sweep",
@@ -115,10 +236,13 @@ pub fn all() -> Vec<Scenario> {
                           bounded-memory mode for massive grids",
             arrival: ArrivalShape::Steady,
             mix: MixShape::AzureStandard,
-            failures: vec![],
+            faults: vec![],
+            deadlines: None,
+            elastic: None,
             overrides: SimOverrides {
                 decode_mode: Some(DecodeMode::EpochClosedForm),
                 metrics_mode: Some(MetricsMode::Streaming),
+                shed_backlog: None,
             },
         },
     ]

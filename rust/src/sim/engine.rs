@@ -9,7 +9,7 @@ use crate::sched::{build_policy, Policy};
 use crate::trace::Trace;
 
 use super::events::EventKind;
-use super::ops::ClusterOps;
+use super::ops::{ClusterOps, ShedOutcome};
 use super::state::{SimConfig, SimState};
 
 /// One simulation run = one (trace, model, policy) triple.
@@ -83,13 +83,25 @@ impl Simulation {
 
             match ev.kind {
                 EventKind::Arrival(req) => {
-                    // pallas-lint: allow(det-wallclock) -- Table 7 overhead digest; never feeds simulated time
-                    let t0 = Instant::now();
-                    self.policy.on_arrival(&mut ClusterOps::new(st), req);
-                    st.reqs.sched_ns[req] += t0.elapsed().as_nanos() as u64;
-                    // Starts triggered by this arrival are already billed
-                    // to it; drop them from the attribution log.
-                    st.recent_prefill_starts.clear();
+                    st.note_arrival(req);
+                    if st.shed_backlog.is_some_and(|cap| st.queued_backlog > cap) {
+                        // Admission control: past the backlog cap the
+                        // arrival is shed — typed and counted, never
+                        // silently dropped — so overload degrades to a
+                        // bounded queue instead of unbounded staleness.
+                        // The policy never sees the request.
+                        let outcome = ClusterOps::new(st).shed(req);
+                        debug_assert!(matches!(outcome, ShedOutcome::Shed));
+                    } else {
+                        // pallas-lint: allow(det-wallclock) -- Table 7 overhead digest; never feeds simulated time
+                        let t0 = Instant::now();
+                        self.policy.on_arrival(&mut ClusterOps::new(st), req);
+                        st.reqs.sched_ns[req] += t0.elapsed().as_nanos() as u64;
+                        // Starts triggered by this arrival are already
+                        // billed to it; drop them from the attribution
+                        // log.
+                        st.recent_prefill_starts.clear();
+                    }
                 }
                 EventKind::ShortPrefillDone { rid, req, gen } => {
                     if st.on_short_prefill_done(rid, req, gen) {
@@ -136,6 +148,15 @@ impl Simulation {
                 }
                 EventKind::LongDecodeEpoch { gid, gen } => {
                     if st.on_long_decode_epoch(gid, gen).is_some() {
+                        Self::timed_dispatch(&mut *self.policy, st);
+                    }
+                }
+                EventKind::ReplicaReady { rid, gen } => {
+                    // A cold start finished: the replica is live again —
+                    // fresh placement capacity, so let the policy drain
+                    // its backlog. Stale generations (the replica crashed
+                    // or was re-drained mid-cold-start) are dropped.
+                    if st.on_replica_ready(rid, gen) {
                         Self::timed_dispatch(&mut *self.policy, st);
                     }
                 }
@@ -198,6 +219,21 @@ impl Simulation {
         m.t_shorts_done = t_shorts_done;
         for i in 0..st.reqs.len() {
             let rt = st.reqs.snapshot(i);
+            // SLO accounting: a deadline request counts as met only when
+            // it finished in time — shed or never-finished deadlines are
+            // misses. Goodput counts completions still useful under the
+            // SLO (best-effort completions always are).
+            if let Some(d) = rt.req.deadline {
+                m.deadlines_total += 1;
+                if rt.finish.is_some_and(|f| f <= d) {
+                    m.deadlines_met += 1;
+                }
+            }
+            if let Some(f) = rt.finish {
+                if !rt.req.deadline.is_some_and(|d| f > d) {
+                    m.good_completions += 1;
+                }
+            }
             let is_long = rt.req.is_long;
             if is_long {
                 m.longs_total += 1;
@@ -232,6 +268,8 @@ impl Simulation {
             }
         }
 
+        m.shorts_shed = st.shorts_shed;
+        m.longs_shed = st.longs_shed;
         m.preemptions = st.preemptions;
         m.events_processed = st.events_processed;
         let busy: Vec<f64> = st

@@ -83,6 +83,15 @@ pub enum EventKind {
         /// Group generation tag (stale events are dropped).
         gen: u64,
     },
+    /// A provisioned replica finished its cold start and is live again
+    /// (the completion half of [`super::ClusterOps::provision`]).
+    ReplicaReady {
+        /// The replica that came up.
+        rid: ReplicaId,
+        /// Lifecycle generation tag (stale events are dropped: a crash or
+        /// drain during the cold start invalidates the pending ready).
+        gen: u64,
+    },
 }
 
 /// A timestamped occurrence in the queue.

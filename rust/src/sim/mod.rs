@@ -28,8 +28,9 @@ pub use engine::{run_sim, Simulation};
 pub use events::{Event, EventKind, EventQueue, GroupId};
 pub use index::{IndexEntry, SchedIndex};
 pub use ops::{
-    AdmitOutcome, ClusterOps, LongEligibility, LongStartOutcome, MigrateOutcome,
-    PreemptOutcome, PrefillOutcome, RequeueOutcome, Veto,
+    AdmitOutcome, ClusterOps, DrainOutcome, LongEligibility, LongStartOutcome,
+    MigrateOutcome, PreemptOutcome, PrefillOutcome, ProvisionOutcome, RequeueOutcome,
+    ShedOutcome, Veto,
 };
 pub use oracle::oracle_simulation;
 pub use state::{

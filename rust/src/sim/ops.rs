@@ -41,8 +41,18 @@ pub enum Veto {
     /// The colocation charge would exceed the per-replica token budget.
     OverBudget,
     /// The request is not waiting where the verb expects it (no queued
-    /// prefill to withdraw / no decode-waiting entry to migrate).
+    /// prefill to withdraw / no decode-waiting entry to migrate / parked
+    /// in a local prefill queue where [`ClusterOps::shed`] will not reach).
     NotWaiting,
+    /// The replica is already in service ([`ClusterOps::provision`] needs
+    /// a down one).
+    AlreadyLive,
+    /// A cold start is already in flight for this replica.
+    AlreadyProvisioning,
+    /// The replica is mid-drain: in-flight work is still retiring, so it
+    /// cannot be provisioned until the drain settles (or a crash clears
+    /// it).
+    Draining,
 }
 
 /// Outcome of [`ClusterOps::start_prefill`] and
@@ -150,6 +160,46 @@ pub enum RequeueOutcome {
     /// The request left its replica's local queue and is back in the
     /// policy's custody.
     Requeued,
+    /// Preconditions failed; nothing changed.
+    Rejected(Veto),
+}
+
+/// Outcome of [`ClusterOps::provision`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ProvisionOutcome {
+    /// A cold start began; the replica comes into service at `ready_at`
+    /// (simulated seconds) via a `ReplicaReady` event — unless a crash or
+    /// drain invalidates it first.
+    Provisioning {
+        /// When the replica will be live.
+        ready_at: f64,
+    },
+    /// Preconditions failed; nothing changed.
+    Rejected(Veto),
+}
+
+/// Outcome of [`ClusterOps::drain`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DrainOutcome {
+    /// The replica stopped taking placements; `displaced` queued shorts
+    /// were handed back for re-placement, and in-flight work is retiring
+    /// in place.
+    Draining {
+        /// How many queued requests were displaced into the caller's
+        /// buffer.
+        displaced: usize,
+    },
+    /// Preconditions failed; nothing changed.
+    Rejected(Veto),
+}
+
+/// Outcome of [`ClusterOps::shed`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedOutcome {
+    /// The request was rejected by admission control: a terminal,
+    /// counted outcome — it never executes, and conservation holds as
+    /// `completed + shed == arrived`.
+    Shed,
     /// Preconditions failed; nothing changed.
     Rejected(Veto),
 }
@@ -423,5 +473,62 @@ impl<'a> ClusterOps<'a> {
     /// setup (Reservation); not meant for per-event use.
     pub fn set_partition(&mut self, pool: &[ReplicaId]) {
         self.st.index.set_partition(pool);
+    }
+
+    /// Begin a cold start on a down replica (elastic scale-up). The
+    /// replica stays unschedulable for the configured
+    /// `provision_cold_start`, then a `ReplicaReady` event flips it live;
+    /// a crash or drain during the window invalidates the pending ready.
+    pub fn provision(&mut self, rid: ReplicaId) -> ProvisionOutcome {
+        let r = &self.st.replicas[rid];
+        if !r.down {
+            return ProvisionOutcome::Rejected(Veto::AlreadyLive);
+        }
+        if r.provisioning {
+            return ProvisionOutcome::Rejected(Veto::AlreadyProvisioning);
+        }
+        if r.draining {
+            return ProvisionOutcome::Rejected(Veto::Draining);
+        }
+        ProvisionOutcome::Provisioning {
+            ready_at: self.st.provision_replica(rid),
+        }
+    }
+
+    /// Gracefully vacate a replica (elastic scale-down / spot reclaim):
+    /// new placements stop immediately, queued-but-not-running shorts are
+    /// written into the caller-owned `displaced` buffer (cleared first)
+    /// for re-placement, and work already executing retires in place.
+    /// Epoch cursors are fast-forwarded at the drain instant, so the
+    /// PR-3 timing invariant survives the transition.
+    pub fn drain(&mut self, rid: ReplicaId, displaced: &mut Vec<ReqId>) -> DrainOutcome {
+        if self.st.replicas[rid].down {
+            return DrainOutcome::Rejected(Veto::ReplicaDown);
+        }
+        self.st.drain_replica(rid, displaced);
+        DrainOutcome::Draining {
+            displaced: displaced.len(),
+        }
+    }
+
+    /// Shed a queued request under overload (admission control): a typed,
+    /// counted, terminal outcome — never a silent drop. Rejects requests
+    /// that are already in service (or done), and requests parked in a
+    /// replica's local prefill queue ([`ClusterOps::requeue`] them first).
+    pub fn shed(&mut self, req: ReqId) -> ShedOutcome {
+        if self.st.reqs.phase[req] != ReqPhase::Queued {
+            return ShedOutcome::Rejected(Veto::NotDispatchable);
+        }
+        if self
+            .st
+            .replicas
+            .iter()
+            .any(|r| r.prefill_queue.contains(&req))
+        {
+            return ShedOutcome::Rejected(Veto::NotWaiting);
+        }
+        let shed = self.st.shed_request(req);
+        debug_assert!(shed, "the vetoes above cover every failure mode");
+        ShedOutcome::Shed
     }
 }

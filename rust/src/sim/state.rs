@@ -48,6 +48,11 @@ pub enum ReqPhase {
     Decoding,
     /// Finished: `finish` is set and the request left every queue.
     Done,
+    /// Rejected by admission control under overload (the
+    /// [`super::ClusterOps::shed`] verb): never executed, counted in the
+    /// shed totals — a terminal state like [`ReqPhase::Done`], but with no
+    /// `finish` time.
+    Shed,
 }
 
 /// Row view of one request's runtime state.
@@ -217,8 +222,24 @@ pub struct ReplicaRt {
     pub(super) colocated_tokens: u64,
     /// Member of the dedicated short-decode pool (§5.2/§6.2).
     pub(super) dedicated_decode: bool,
-    /// Replica is failed/unavailable (failure injection).
+    /// Replica is failed/unavailable (failure injection, or a lifecycle
+    /// drain/cold-start window — see `draining`/`provisioning`).
     pub(super) down: bool,
+    /// Mid-drain: `down` already blocks new placements, but work that was
+    /// executing at the drain instant is still running to completion here.
+    /// Cleared automatically once the last in-flight item retires.
+    pub(super) draining: bool,
+    /// A cold start is in flight: a `ReplicaReady` event carrying
+    /// `lifecycle_gen` will flip `down` off when it lands (unless a crash
+    /// or drain bumps the generation first).
+    pub(super) provisioning: bool,
+    /// Lifecycle generation tag: bumped by every crash, drain and
+    /// provision so stale `ReplicaReady` events are dropped.
+    pub(super) lifecycle_gen: u64,
+    /// Straggler duration multiplier (1.0 nominal, > 1 slower): scales
+    /// every prefill/decode duration computed for this replica from the
+    /// instant it is set (in-flight work keeps its original timing).
+    pub(super) slowdown: f64,
 }
 
 impl ReplicaRt {
@@ -250,6 +271,22 @@ impl ReplicaRt {
     /// Failed / unavailable (failure injection)?
     pub fn is_down(&self) -> bool {
         self.down
+    }
+
+    /// Draining: no new placements, but in-flight work is still
+    /// completing here (the graceful half of a lifecycle drain)?
+    pub fn is_draining(&self) -> bool {
+        self.draining
+    }
+
+    /// Cold start in flight (a `ReplicaReady` event is pending)?
+    pub fn is_provisioning(&self) -> bool {
+        self.provisioning
+    }
+
+    /// Straggler duration multiplier (1.0 nominal, > 1 slower).
+    pub fn slowdown(&self) -> f64 {
+        self.slowdown
     }
 
     /// Member of the dedicated short-decode pool (§5.2/§6.2)?
@@ -308,6 +345,11 @@ pub struct SimConfig {
     /// Tail-metric storage: exact digests (default) or O(1)-memory
     /// streaming sketches; see [`MetricsMode`].
     pub metrics_mode: MetricsMode,
+    /// Admission-control backlog cap: an arrival that would push the
+    /// queued backlog past this is shed (typed, counted) instead of
+    /// queued, so overload degrades to bounded staleness rather than
+    /// unbounded queueing. `None` (default) disables shedding.
+    pub shed_backlog: Option<usize>,
     /// Hard cap on simulated events (runaway guard).
     pub max_events: u64,
 }
@@ -324,6 +366,7 @@ impl SimConfig {
             dedicated_decode_pool: false,
             decode_mode: DecodeMode::default(),
             metrics_mode: MetricsMode::default(),
+            shed_backlog: None,
             max_events: 500_000_000,
         }
     }
@@ -340,6 +383,7 @@ impl SimConfig {
             dedicated_decode_pool: flags.disaggregation,
             decode_mode: DecodeMode::default(),
             metrics_mode: MetricsMode::default(),
+            shed_backlog: None,
             max_events: 500_000_000,
         }
     }
@@ -390,6 +434,16 @@ pub struct SimState {
     pub(super) shorts_done: usize,
     pub(super) shorts_total: usize,
     pub(super) longs_done: usize,
+    /// Shed (admission-rejected) totals — terminal outcomes like `Done`,
+    /// so conservation is `done + shed == arrived`.
+    pub(super) shorts_shed: usize,
+    pub(super) longs_shed: usize,
+    /// Arrived requests currently in `Queued` phase (global queue plus
+    /// local prefill queues) — the exact overload gauge admission control
+    /// and the autoscaler hook read. Maintained by [`SimState::set_phase`].
+    pub(super) queued_backlog: usize,
+    /// Admission-control cap (see [`SimConfig::shed_backlog`]).
+    pub(super) shed_backlog: Option<usize>,
     /// Time all shorts finished (starvation reference point).
     pub(super) t_shorts_done: Option<f64>,
     pub(super) events_processed: u64,
@@ -458,6 +512,10 @@ impl SimState {
                 colocated_tokens: 0,
                 dedicated_decode: false,
                 down: false,
+                draining: false,
+                provisioning: false,
+                lifecycle_gen: 0,
+                slowdown: 1.0,
             })
             .collect();
 
@@ -504,6 +562,10 @@ impl SimState {
             shorts_done: 0,
             shorts_total,
             longs_done: 0,
+            shorts_shed: 0,
+            longs_shed: 0,
+            queued_backlog: 0,
+            shed_backlog: cfg.shed_backlog,
             t_shorts_done: None,
             events_processed: 0,
             recent_prefill_starts: Vec::new(),
@@ -560,6 +622,17 @@ impl SimState {
         &self.replicas[rid]
     }
 
+    /// Number of physical nodes in the topology.
+    pub fn node_count(&self) -> usize {
+        self.topo.nodes
+    }
+
+    /// Replica ids hosted on `node`, ascending — the blast radius of a
+    /// node-scoped fault.
+    pub fn replicas_on_node(&self, node: usize) -> Vec<ReplicaId> {
+        self.topo.replicas_on_node(node).map(|m| m.id).collect()
+    }
+
     /// A long group, if `gid` is still live.
     pub fn group(&self, gid: GroupId) -> Option<&LongGroup> {
         self.groups.get(gid).and_then(|g| g.as_ref())
@@ -598,6 +671,28 @@ impl SimState {
     /// Long requests completed so far.
     pub fn longs_done(&self) -> usize {
         self.longs_done
+    }
+
+    /// Short requests shed by admission control so far.
+    pub fn shorts_shed(&self) -> usize {
+        self.shorts_shed
+    }
+
+    /// Long requests shed by admission control so far.
+    pub fn longs_shed(&self) -> usize {
+        self.longs_shed
+    }
+
+    /// Arrived requests currently queued (global queue + local prefill
+    /// queues) — the overload gauge admission control and autoscalers
+    /// read. O(1): maintained incrementally at every phase transition.
+    pub fn queued_backlog(&self) -> usize {
+        self.queued_backlog
+    }
+
+    /// The admission-control backlog cap this run executes under.
+    pub fn shed_backlog(&self) -> Option<usize> {
+        self.shed_backlog
     }
 
     /// Events popped off the queue so far (engine-maintained).
@@ -836,7 +931,7 @@ impl SimState {
         // Abort any long group this replica belongs to.
         if let Some(gid) = self.replicas[rid].long_group {
             if let Some(g) = self.groups[gid].take() {
-                self.reqs.phase[g.req] = ReqPhase::Queued;
+                self.set_phase(g.req, ReqPhase::Queued);
                 self.reqs.generated[g.req] = 0;
                 displaced.push(g.req);
                 for &m in &g.members {
@@ -848,6 +943,12 @@ impl SimState {
 
         let r = &mut self.replicas[rid];
         r.down = true;
+        // A crash supersedes any lifecycle transition in flight: the
+        // generation bump drops a pending `ReplicaReady`, and a mid-drain
+        // crash simply becomes a crash.
+        r.draining = false;
+        r.provisioning = false;
+        r.lifecycle_gen += 1;
         // Cancel in-flight work by bumping generations. The epoch cursor
         // dies with the batch: its deferred progress is moot because every
         // displaced request restarts from the prompt (`generated = 0`).
@@ -867,9 +968,10 @@ impl SimState {
         r.colocated_tokens = 0;
         r.busy.set_idle(now);
 
-        for &req in displaced.iter() {
+        for i in 0..displaced.len() {
+            let req = displaced[i];
             if self.reqs.phase[req] != ReqPhase::Done {
-                self.reqs.phase[req] = ReqPhase::Queued;
+                self.set_phase(req, ReqPhase::Queued);
                 // KV lost: decode progress restarts from the prompt.
                 self.reqs.generated[req] = 0;
                 self.reqs.colocated_on[req] = None;
@@ -879,12 +981,155 @@ impl SimState {
         self.reindex(rid);
     }
 
-    /// Bring a failed replica back (empty, schedulable again).
+    /// Bring a failed replica back (empty, schedulable again). Instant —
+    /// the crash/recover oracle path; lifecycle provisioning with a cold
+    /// start goes through [`SimState::provision_replica`].
     pub fn recover_replica(&mut self, rid: ReplicaId) {
         let r = &mut self.replicas[rid];
         debug_assert!(r.down, "recovering a live replica");
         r.down = false;
+        r.draining = false;
+        r.provisioning = false;
         self.reindex(rid);
+    }
+
+    // ------------------------------------------------------------------
+    // replica lifecycle (provision / drain / straggler injection)
+    // ------------------------------------------------------------------
+
+    /// Gracefully vacate a replica (the [`super::ClusterOps::drain`]
+    /// verb's mechanics). New placements stop immediately: `down` flips
+    /// on, which removes the replica from every index pick set *and*
+    /// every naive scan oracle in one move, so the PR-2 index invariant
+    /// holds through the drain. Queued-but-not-running prefills are
+    /// displaced into the caller-owned buffer (cleared first) for
+    /// re-placement — the same contract as [`SimState::fail_replica`] —
+    /// while work already executing (the running prefill, the decode
+    /// batch and its waiters, a hosted long group) keeps its state and
+    /// runs to completion here; `draining` clears itself once the last
+    /// in-flight item retires (see [`SimState::update_busy`]). A drain
+    /// that must not wait (spot reclaim past its deadline) is a
+    /// follow-up [`SimState::fail_replica`].
+    pub fn drain_replica(&mut self, rid: ReplicaId, displaced: &mut Vec<ReqId>) {
+        displaced.clear();
+        // Fold the lazy epoch cursor to the drain instant first so every
+        // later read of the surviving batch sees per-round-equivalent
+        // token state (the batch keeps running, but from exact books).
+        self.catch_up_decode_epoch(rid, self.now);
+        let r = &mut self.replicas[rid];
+        debug_assert!(!r.down, "draining a replica that is already down");
+        r.down = true;
+        r.draining = true;
+        r.provisioning = false;
+        r.lifecycle_gen += 1;
+        displaced.extend(r.prefill_queue.drain(..));
+        r.queued_prefill_tokens = 0;
+        for i in 0..displaced.len() {
+            let req = displaced[i];
+            debug_assert_eq!(self.reqs.phase[req], ReqPhase::Queued);
+            // Unlike a crash, no state is lost: the requests were only
+            // queued. Release any colocation budget they held so the
+            // policy can re-place them anywhere.
+            if let Some(crid) = self.reqs.colocated_on[req].take() {
+                let len = self.reqs.meta[req].input_len as u64;
+                let c = &mut self.replicas[crid].colocated_tokens;
+                *c = c.saturating_sub(len);
+                self.reindex(crid);
+            }
+        }
+        // A paused long occupant may have been waiting on the queue we
+        // just emptied; let it finish so the drain can settle.
+        if let Some(gid) = self.replicas[rid].long_group {
+            self.maybe_resume_long(gid);
+        }
+        self.update_busy(rid);
+    }
+
+    /// Begin a cold start on a down replica (the
+    /// [`super::ClusterOps::provision`] verb's mechanics): the replica
+    /// stays unschedulable for [`SchedParams::provision_cold_start`]
+    /// seconds — model load + weight transfer + runtime warmup — then a
+    /// `ReplicaReady` event flips it live. Returns the ready time. A
+    /// crash (or another lifecycle transition) during the window bumps
+    /// `lifecycle_gen`, so the pending ready event is dropped as stale.
+    pub fn provision_replica(&mut self, rid: ReplicaId) -> f64 {
+        let ready_at = self.now + self.params.provision_cold_start;
+        let r = &mut self.replicas[rid];
+        debug_assert!(r.down, "provisioning a live replica");
+        debug_assert!(!r.draining, "provisioning a replica mid-drain");
+        r.provisioning = true;
+        r.lifecycle_gen += 1;
+        let gen = r.lifecycle_gen;
+        self.queue.push(ready_at, EventKind::ReplicaReady { rid, gen });
+        ready_at
+    }
+
+    /// Handle `ReplicaReady`: the cold start finished — bring the replica
+    /// into service. Returns false (without mutating anything) when the
+    /// event is stale: a crash or drain bumped the lifecycle generation
+    /// while the cold start was in flight.
+    pub fn on_replica_ready(&mut self, rid: ReplicaId, gen: u64) -> bool {
+        let r = &mut self.replicas[rid];
+        if r.lifecycle_gen != gen || !r.provisioning {
+            return false;
+        }
+        r.provisioning = false;
+        r.draining = false;
+        r.down = false;
+        self.reindex(rid);
+        true
+    }
+
+    /// Set a replica's straggler duration multiplier (1.0 nominal, > 1
+    /// slower). Timing semantics mirror every other external epoch
+    /// interruption: completed round boundaries stick, the in-flight
+    /// short-decode round finishes at its original end (the epoch is
+    /// split there, per [`SimState::truncate_decode_epoch`]), and every
+    /// duration computed *after* this instant — prefill service times,
+    /// later decode rounds, long work starting here — is scaled by the
+    /// new multiplier. A long group decoding on this replica has its
+    /// remaining rounds rescheduled at the new group speed (passed
+    /// boundaries folded first); an in-flight long *prefill* stint keeps
+    /// its scheduled completion (the checkpoint granularity of §5.1).
+    pub fn set_replica_slowdown(&mut self, rid: ReplicaId, mult: f64) {
+        debug_assert!(mult.is_finite() && mult > 0.0, "bad slowdown {mult}");
+        if self.replicas[rid].slowdown == mult {
+            return;
+        }
+        // Split the short-decode epoch at the onset, while the old speed
+        // still governs the catch-up arithmetic.
+        self.truncate_decode_epoch(rid);
+        // A long group decoding here: fold the boundaries that already
+        // passed at the *old* speed (their durations were computed under
+        // it), cancel the stale epoch, and only then flip the multiplier
+        // and reschedule the remainder at the new group speed. Not a
+        // preemption — no pause is counted.
+        let long_reschedule = self.replicas[rid].long_group.filter(|&gid| {
+            self.groups[gid].as_ref().is_some_and(|g| {
+                matches!(g.phase, LongPhase::Decode { paused: false })
+                    && g.decode_epoch.is_some()
+            })
+        });
+        if let Some(gid) = long_reschedule {
+            self.catch_up_long_epoch(gid, self.now);
+            if let Some(g) = self.groups[gid].as_mut() {
+                g.decode_epoch = None;
+                g.gen += 1;
+            }
+        }
+        self.replicas[rid].slowdown = mult;
+        if let Some(gid) = long_reschedule {
+            self.schedule_long_decode_round(gid);
+        }
+    }
+
+    /// A long group's effective straggler multiplier: SP work advances in
+    /// lockstep across members, so the slowest member sets the pace.
+    fn group_slowdown(&self, gid: GroupId) -> f64 {
+        let Some(g) = self.groups[gid].as_ref() else { return 1.0 };
+        g.members
+            .iter()
+            .fold(1.0_f64, |acc, &rid| acc.max(self.replicas[rid].slowdown))
     }
 
     // ------------------------------------------------------------------
@@ -897,7 +1142,7 @@ impl SimState {
     pub fn enqueue_short_prefill(&mut self, rid: ReplicaId, req: ReqId) {
         debug_assert!(!self.reqs.meta[req].is_long);
         debug_assert!(!self.replicas[rid].down, "placing work on a failed replica");
-        self.reqs.phase[req] = ReqPhase::Queued;
+        self.set_phase(req, ReqPhase::Queued);
         let r = &mut self.replicas[rid];
         r.prefill_queue.push_back(req);
         r.queued_prefill_tokens += self.reqs.meta[req].input_len as u64;
@@ -971,12 +1216,12 @@ impl SimState {
         let gen = r.prefill_gen;
         r.busy.set_busy(self.now);
 
-        self.reqs.phase[req] = ReqPhase::Prefilling;
+        self.set_phase(req, ReqPhase::Prefilling);
         if self.reqs.prefill_start[req].is_none() {
             self.reqs.prefill_start[req] = Some(self.now);
             self.recent_prefill_starts.push(req);
         }
-        let dur = self.cm.short_prefill_time(len);
+        let dur = self.cm.short_prefill_time(len) * self.replicas[rid].slowdown;
         self.queue
             .push(self.now + dur, EventKind::ShortPrefillDone { rid, req, gen });
     }
@@ -1013,14 +1258,14 @@ impl SimState {
             None
         };
         if let Some(target) = decode_target {
-            self.reqs.phase[req] = ReqPhase::Migrating;
+            self.set_phase(req, ReqPhase::Migrating);
             let dur = self
                 .cm
                 .kv_migration_exposed_time(self.reqs.meta[req].input_len);
             self.queue
                 .push(self.now + dur, EventKind::MigrationDone { req, rid: target });
         } else {
-            self.reqs.phase[req] = ReqPhase::DecodeQueued;
+            self.set_phase(req, ReqPhase::DecodeQueued);
             let ctx = self.reqs.context_tokens(req);
             let r = &mut self.replicas[rid];
             r.decode_waiting.push_back(req);
@@ -1046,7 +1291,7 @@ impl SimState {
     /// displacement contract).
     pub fn on_migration_done(&mut self, req: ReqId, rid: ReplicaId) -> bool {
         if self.replicas[rid].down {
-            self.reqs.phase[req] = ReqPhase::Queued;
+            self.set_phase(req, ReqPhase::Queued);
             self.reqs.generated[req] = 0;
             self.reqs.colocated_on[req] = None;
             return false;
@@ -1054,7 +1299,7 @@ impl SimState {
         // Fold the in-flight epoch's progress *before* membership can
         // change, so deferred rounds are never credited to the newcomer.
         self.materialize_decode_epoch(rid);
-        self.reqs.phase[req] = ReqPhase::DecodeQueued;
+        self.set_phase(req, ReqPhase::DecodeQueued);
         let ctx = self.reqs.context_tokens(req);
         let r = &mut self.replicas[rid];
         r.decode_waiting.push_back(req);
@@ -1094,7 +1339,7 @@ impl SimState {
             r.decode_waiting_tokens -= ctx;
             r.decode_active.push(head);
             r.decode_active_tokens += ctx;
-            self.reqs.phase[head] = ReqPhase::Decoding;
+            self.set_phase(head, ReqPhase::Decoding);
         }
     }
 
@@ -1157,7 +1402,7 @@ impl SimState {
         let r = &mut self.replicas[from];
         r.decode_waiting.retain(|&q| q != req);
         r.decode_waiting_tokens -= ctx;
-        self.reqs.phase[req] = ReqPhase::Migrating;
+        self.set_phase(req, ReqPhase::Migrating);
         let dur = self
             .cm
             .kv_migration_exposed_time(self.reqs.meta[req].input_len);
@@ -1213,7 +1458,7 @@ impl SimState {
         let chunk = self.params.decode_chunk as u64;
         let r = &self.replicas[rid];
         let batch = r.decode_active.len();
-        let iter = self.cm.decode_iter_time(batch, r.decode_active_tokens);
+        let iter = self.cm.decode_iter_time(batch, r.decode_active_tokens) * r.slowdown;
         let r = &mut self.replicas[rid];
         r.decode_running = true;
         r.decode_gen += 1;
@@ -1249,19 +1494,21 @@ impl SimState {
         };
         debug_assert!(min_rem >= 1, "completed request still in the batch");
         let rounds = min_rem.div_ceil(chunk_u).max(1);
+        let slow = r.slowdown;
         let mut tokens = r.decode_active_tokens;
         let mut t = self.now;
         let mut first_round_end = self.now;
         if self.decode_mode == DecodeMode::EpochClosedForm && rounds > 1 {
-            let iter0 = self.cm.decode_iter_time(batch, tokens);
+            let iter0 = self.cm.decode_iter_time(batch, tokens) * slow;
             first_round_end = self.now + iter0 * chunk_f;
             t = self.now
                 + self
                     .cm
-                    .multi_round_decode_time(batch, tokens, rounds as u64, chunk);
+                    .multi_round_decode_time(batch, tokens, rounds as u64, chunk)
+                    * slow;
         } else {
             for k in 0..rounds {
-                let iter = self.cm.decode_iter_time(batch, tokens);
+                let iter = self.cm.decode_iter_time(batch, tokens) * slow;
                 t += iter * chunk_f;
                 if k == 0 {
                     first_round_end = t;
@@ -1298,13 +1545,17 @@ impl SimState {
         let chunk = self.params.decode_chunk as u64;
         let chunk_f = chunk as f64;
         let batch = self.replicas[rid].decode_active.len();
+        // The same `* slowdown` expression, in the same position, as
+        // `schedule_decode_epoch` — boundary arithmetic must stay
+        // bit-identical between the scheduler and the lazy cursor.
+        let slow = self.replicas[rid].slowdown;
         let mut tokens = self.replicas[rid].decode_active_tokens;
         let before = ep.rounds_done;
         while ep.rounds_done + 1 < ep.rounds_total && ep.round_end <= limit {
             tokens += batch as u64 * chunk;
             ep.rounds_done += 1;
             ep.pending_rounds += 1;
-            let iter = self.cm.decode_iter_time(batch, tokens);
+            let iter = self.cm.decode_iter_time(batch, tokens) * slow;
             ep.round_end += iter * chunk_f;
         }
         let changed = ep.rounds_done != before;
@@ -1537,7 +1788,7 @@ impl SimState {
             return;
         }
         let input_len = self.reqs.meta[g.req].input_len;
-        let dur = g.plan.total_time(&self.cm, input_len);
+        let dur = g.plan.total_time(&self.cm, input_len) * self.group_slowdown(gid);
         let req = g.req;
         let Some(g) = self.groups[gid].as_mut() else {
             return;
@@ -1552,7 +1803,7 @@ impl SimState {
         let gen = g.gen;
         self.scratch_members.clear();
         self.scratch_members.extend_from_slice(&g.members);
-        self.reqs.phase[req] = ReqPhase::Prefilling;
+        self.set_phase(req, ReqPhase::Prefilling);
         if self.reqs.prefill_start[req].is_none() {
             self.reqs.prefill_start[req] = Some(self.now);
             self.recent_prefill_starts.push(req);
@@ -1699,7 +1950,8 @@ impl SimState {
         };
         let ctx = self.reqs.context_tokens(g.req);
         let chunk = self.params.decode_chunk as f64;
-        let iter = self.cm.long_decode_iter_time(ctx, g.members.len());
+        let iter =
+            self.cm.long_decode_iter_time(ctx, g.members.len()) * self.group_slowdown(gid);
         let gen = g.gen;
         self.queue.push(
             self.now + iter * chunk,
@@ -1723,11 +1975,12 @@ impl SimState {
         debug_assert!(generated < out_len);
         let remaining = out_len - generated;
         let rounds = remaining.div_ceil(chunk_u).max(1);
+        let slow = self.group_slowdown(gid);
         let mut ctx = self.reqs.context_tokens(g.req);
         let mut t = self.now;
         let mut first_round_end = self.now;
         if self.decode_mode == DecodeMode::EpochClosedForm && rounds > 1 {
-            let iter0 = self.cm.long_decode_iter_time(ctx, n_members);
+            let iter0 = self.cm.long_decode_iter_time(ctx, n_members) * slow;
             first_round_end = self.now + iter0 * chunk_f;
             t = self.now
                 + self.cm.multi_round_long_decode_time(
@@ -1735,10 +1988,10 @@ impl SimState {
                     n_members,
                     rounds as u64,
                     chunk_u as u64,
-                );
+                ) * slow;
         } else {
             for k in 0..rounds {
-                let iter = self.cm.long_decode_iter_time(ctx, n_members);
+                let iter = self.cm.long_decode_iter_time(ctx, n_members) * slow;
                 t += iter * chunk_f;
                 if k == 0 {
                     first_round_end = t;
@@ -1770,12 +2023,16 @@ impl SimState {
         let (req, n_members) = (g.req, g.members.len());
         let chunk_u = self.params.decode_chunk;
         let chunk_f = chunk_u as f64;
+        // Same `* slowdown` expression and position as
+        // `schedule_long_decode_epoch` — bit-identical boundary arithmetic.
+        let slow = self.group_slowdown(gid);
         while ep.rounds_done + 1 < ep.rounds_total && ep.round_end <= limit {
             self.reqs.generated[req] += chunk_u;
             ep.rounds_done += 1;
             let iter = self
                 .cm
-                .long_decode_iter_time(self.reqs.context_tokens(req), n_members);
+                .long_decode_iter_time(self.reqs.context_tokens(req), n_members)
+                * slow;
             ep.round_end += iter * chunk_f;
         }
         if let Some(g) = self.groups[gid].as_mut() {
@@ -1823,7 +2080,7 @@ impl SimState {
         let chunk = self.params.decode_chunk;
         let step = chunk.min(self.reqs.meta[req].output_len - self.reqs.generated[req]);
         self.reqs.generated[req] += step;
-        self.reqs.phase[req] = ReqPhase::Decoding;
+        self.set_phase(req, ReqPhase::Decoding);
         if self.reqs.generated[req] >= self.reqs.meta[req].output_len {
             // Take the group out whole: its owned member list is both the
             // release worklist and the return value — no clone.
@@ -1851,15 +2108,77 @@ impl SimState {
     // completion & accounting
     // ------------------------------------------------------------------
 
+    /// Central phase-transition point: every phase write funnels through
+    /// here so the queued-backlog gauge stays exact without any scan.
+    /// Same-phase writes are no-ops; the decrement saturates so manually
+    /// driven tests that place work without routing arrivals through
+    /// [`SimState::note_arrival`] stay consistent.
+    pub(super) fn set_phase(&mut self, req: ReqId, ph: ReqPhase) {
+        let old = self.reqs.phase[req];
+        if old == ph {
+            return;
+        }
+        if old == ReqPhase::Queued {
+            self.queued_backlog = self.queued_backlog.saturating_sub(1);
+        }
+        if ph == ReqPhase::Queued {
+            self.queued_backlog += 1;
+        }
+        self.reqs.phase[req] = ph;
+    }
+
+    /// Count a request into the queued backlog at its `Arrival` event
+    /// (requests are constructed in `Queued` phase before they arrive, so
+    /// the arrival itself — not the phase value — starts the gauge).
+    pub fn note_arrival(&mut self, req: ReqId) {
+        debug_assert_eq!(self.reqs.phase[req], ReqPhase::Queued);
+        self.queued_backlog += 1;
+    }
+
+    /// Shed a queued request (admission control under overload): a
+    /// terminal outcome — the request never executes, is counted in the
+    /// shed totals, and participates in the conservation invariant
+    /// `done + shed == arrived`. Returns false — without mutating
+    /// anything — unless the request is in `Queued` phase. Callers must
+    /// not shed a request sitting in a replica's local prefill queue
+    /// (the ops-layer verb vetoes that case; the engine only sheds fresh
+    /// arrivals).
+    pub fn shed_request(&mut self, req: ReqId) -> bool {
+        if self.reqs.phase[req] != ReqPhase::Queued {
+            return false;
+        }
+        debug_assert!(
+            !self
+                .replicas
+                .iter()
+                .any(|r| r.prefill_queue.contains(&req)),
+            "shedding a request that sits in a local prefill queue"
+        );
+        self.set_phase(req, ReqPhase::Shed);
+        if self.reqs.meta[req].is_long {
+            self.longs_shed += 1;
+        } else {
+            self.shorts_shed += 1;
+            if self.shorts_done + self.shorts_shed == self.shorts_total
+                && self.t_shorts_done.is_none()
+            {
+                self.t_shorts_done = Some(self.now);
+            }
+        }
+        true
+    }
+
     fn complete_request(&mut self, req: ReqId) {
         debug_assert!(self.reqs.finish[req].is_none());
-        self.reqs.phase[req] = ReqPhase::Done;
+        self.set_phase(req, ReqPhase::Done);
         self.reqs.finish[req] = Some(self.now);
         if self.reqs.meta[req].is_long {
             self.longs_done += 1;
         } else {
             self.shorts_done += 1;
-            if self.shorts_done == self.shorts_total && self.t_shorts_done.is_none() {
+            if self.shorts_done + self.shorts_shed == self.shorts_total
+                && self.t_shorts_done.is_none()
+            {
                 self.t_shorts_done = Some(self.now);
             }
         }
@@ -1889,12 +2208,26 @@ impl SimState {
         } else {
             r.busy.set_idle(now);
         }
+        // A draining replica settles the moment its last in-flight item
+        // retires (new placements were blocked since the drain began, so
+        // this is monotone — once settled, nothing re-arms it).
+        if r.draining
+            && r.running_prefill.is_none()
+            && r.prefill_queue.is_empty()
+            && r.decode_active.is_empty()
+            && r.decode_waiting.is_empty()
+            && r.long_group.is_none()
+            && !r.decode_running
+        {
+            r.draining = false;
+        }
         self.reindex(rid);
     }
 
-    /// All requests finished?
+    /// All requests settled — every one either completed or shed?
     pub fn all_done(&self) -> bool {
-        self.shorts_done + self.longs_done == self.reqs.len()
+        self.shorts_done + self.longs_done + self.shorts_shed + self.longs_shed
+            == self.reqs.len()
     }
 }
 
@@ -1910,6 +2243,7 @@ mod tests {
             input_len: len,
             output_len: out,
             is_long: false,
+            deadline: None,
         }
     }
 
@@ -1920,6 +2254,7 @@ mod tests {
             input_len: len,
             output_len: out,
             is_long: true,
+            deadline: None,
         }
     }
 
@@ -1956,6 +2291,9 @@ mod tests {
                 }
                 EventKind::LongDecodeEpoch { gid, gen } => {
                     st.on_long_decode_epoch(gid, gen);
+                }
+                EventKind::ReplicaReady { rid, gen } => {
+                    st.on_replica_ready(rid, gen);
                 }
             }
         }
@@ -2275,5 +2613,93 @@ mod tests {
         // path coalesces them into one.
         assert_eq!(decode_events, 1, "expected a single epoch event");
         assert!(st.replicas[2].decode_epoch.is_none());
+    }
+
+    #[test]
+    fn drain_displaces_queued_but_finishes_running() {
+        let reqs = [short(0, 0.0, 900, 8), short(1, 0.0, 900, 8)];
+        let mut st = state(&reqs, AblationFlags::full(), false);
+        st.queue.pop();
+        st.queue.pop();
+        st.enqueue_short_prefill(0, 0);
+        st.enqueue_short_prefill(0, 1); // queued behind request 0
+        let mut displaced = Vec::new();
+        st.drain_replica(0, &mut displaced);
+        assert_eq!(displaced, vec![1], "queued short displaced, running kept");
+        assert!(st.replicas[0].down && st.replicas[0].draining);
+        assert!(st.validate_index().is_ok());
+        drain(&mut st);
+        // The running prefill (and its local decode) ran to completion.
+        assert_eq!(st.reqs.phase[0], ReqPhase::Done);
+        assert!(!st.replicas[0].draining, "drain settled");
+        assert!(st.replicas[0].down, "still out of service");
+    }
+
+    #[test]
+    fn provision_pays_cold_start_then_revives() {
+        let reqs = [short(0, 5.0, 900, 8)];
+        let mut st = state(&reqs, AblationFlags::full(), false);
+        st.queue.pop(); // discard arrival
+        let mut displaced = Vec::new();
+        st.fail_replica(0, &mut displaced);
+        let ready_at = st.provision_replica(0);
+        assert_eq!(ready_at, st.params.provision_cold_start);
+        assert!(st.replicas[0].provisioning);
+        drain(&mut st);
+        assert!(!st.replicas[0].down, "live after the cold start");
+        assert!(!st.replicas[0].provisioning);
+        assert!(st.validate_index().is_ok());
+    }
+
+    #[test]
+    fn crash_during_cold_start_drops_the_ready_event() {
+        let reqs = [short(0, 0.0, 900, 8)];
+        let mut st = state(&reqs, AblationFlags::full(), false);
+        st.queue.pop();
+        let mut displaced = Vec::new();
+        st.fail_replica(0, &mut displaced);
+        st.provision_replica(0);
+        st.fail_replica(0, &mut displaced); // crash mid cold start
+        drain(&mut st);
+        assert!(st.replicas[0].down, "stale ready must not revive");
+    }
+
+    #[test]
+    fn straggler_multiplier_slows_completion() {
+        let run = |mult: f64| {
+            let reqs = [short(0, 0.0, 1000, 80)];
+            let mut st = state(&reqs, AblationFlags::full(), false);
+            st.queue.pop();
+            st.set_replica_slowdown(2, mult);
+            st.enqueue_short_prefill(2, 0);
+            drain(&mut st);
+            st.reqs.finish[0].unwrap()
+        };
+        let nominal = run(1.0);
+        let slowed = run(3.0);
+        assert!(
+            slowed > nominal * 2.0,
+            "3x straggler must finish much later: {nominal} vs {slowed}"
+        );
+    }
+
+    #[test]
+    fn shed_is_terminal_and_counted() {
+        let reqs = [short(0, 0.0, 900, 8), short(1, 0.0, 900, 8)];
+        let mut st = state(&reqs, AblationFlags::full(), false);
+        st.queue.pop();
+        st.queue.pop();
+        st.note_arrival(0);
+        st.note_arrival(1);
+        assert_eq!(st.queued_backlog, 2);
+        assert!(st.shed_request(1));
+        assert_eq!(st.shorts_shed, 1);
+        assert_eq!(st.queued_backlog, 1);
+        assert_eq!(st.reqs.phase[1], ReqPhase::Shed);
+        assert!(!st.shed_request(1), "already terminal");
+        st.enqueue_short_prefill(0, 0);
+        drain(&mut st);
+        assert!(st.all_done(), "completed + shed covers every request");
+        assert!(st.t_shorts_done.is_some());
     }
 }

@@ -183,6 +183,29 @@ impl<'a> ClusterView<'a> {
         self.st.replicas[rid].down
     }
 
+    /// Is `rid` mid-drain (out of service but still retiring in-flight
+    /// work)?
+    pub fn is_draining(&self, rid: ReplicaId) -> bool {
+        self.st.replicas[rid].draining
+    }
+
+    /// Is a cold start in flight for `rid` (a `ReplicaReady` pending)?
+    pub fn is_provisioning(&self, rid: ReplicaId) -> bool {
+        self.st.replicas[rid].provisioning
+    }
+
+    /// `rid`'s straggler duration multiplier (1.0 nominal, > 1 slower).
+    pub fn slowdown(&self, rid: ReplicaId) -> f64 {
+        self.st.replicas[rid].slowdown
+    }
+
+    /// Arrived requests currently in `Queued` phase (global queue plus
+    /// local prefill queues) — the O(1) overload gauge for admission
+    /// control and autoscaling decisions.
+    pub fn queued_backlog(&self) -> usize {
+        self.st.queued_backlog
+    }
+
     /// Typed long-occupancy digest of `rid` (see [`LongOccupancy`]).
     pub fn long_occupancy(&self, rid: ReplicaId) -> LongOccupancy {
         let Some(gid) = self.st.replicas[rid].long_group else {

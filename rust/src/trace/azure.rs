@@ -123,6 +123,7 @@ pub fn parse_azure_csv(text: &str, rw: &AzureRewrite) -> Result<Trace> {
                 input_len,
                 output_len: gen,
                 is_long,
+                deadline: None,
             }
         })
         .collect();

@@ -257,6 +257,7 @@ pub fn generate_trace(
             input_len,
             output_len,
             is_long,
+            deadline: None,
         });
     }
     Trace::new(reqs)
@@ -440,6 +441,7 @@ mod tests {
                 input_len,
                 output_len,
                 is_long,
+                deadline: None,
             });
         }
         Trace::new(reqs)

@@ -42,6 +42,11 @@ pub struct Request {
     pub output_len: u32,
     /// True iff this is a rewritten long-input request (§6.2).
     pub is_long: bool,
+    /// Absolute completion deadline, seconds from trace start. `None`
+    /// means best-effort (no SLO). Known to the workload *and* surfaced to
+    /// metrics for SLO-attainment accounting; schedulers may read it but
+    /// none of the built-in policies do.
+    pub deadline: Option<f64>,
 }
 
 impl Request {
@@ -92,24 +97,31 @@ impl Trace {
         Self::new(self.shorts().copied().collect())
     }
 
-    /// Serialize as CSV (`arrival,input_len,output_len,is_long`).
+    /// Serialize as CSV (`arrival,input_len,output_len,is_long,deadline`).
+    /// An empty `deadline` field means no SLO.
     ///
-    /// Arrivals use Rust's shortest round-trip float formatting, so
-    /// [`Trace::from_csv`] reproduces every request *exactly* (property
-    /// tested in `rust/tests/prop_tests.rs`).
+    /// Arrivals and deadlines use Rust's shortest round-trip float
+    /// formatting, so [`Trace::from_csv`] reproduces every request
+    /// *exactly* (property tested in `rust/tests/prop_tests.rs`).
     pub fn to_csv(&self) -> String {
-        let mut out = String::from("arrival,input_len,output_len,is_long\n");
+        let mut out = String::from("arrival,input_len,output_len,is_long,deadline\n");
         for r in &self.requests {
             out.push_str(&format!(
-                "{},{},{},{}\n",
+                "{},{},{},{},",
                 r.arrival, r.input_len, r.output_len, r.is_long as u8
             ));
+            if let Some(d) = r.deadline {
+                out.push_str(&format!("{}", d));
+            }
+            out.push('\n');
         }
         out
     }
 
     /// Parse the CSV format produced by [`Trace::to_csv`] (also the format
-    /// to use when importing the real Azure trace).
+    /// to use when importing the real Azure trace). The trailing `deadline`
+    /// column is optional — 4-field rows (the pre-SLO format) parse as
+    /// best-effort requests, as do 5-field rows with an empty fifth field.
     pub fn from_csv(text: &str) -> anyhow::Result<Self> {
         let mut reqs = Vec::new();
         for (lineno, line) in text.lines().enumerate() {
@@ -120,13 +132,22 @@ impl Trace {
                 continue;
             }
             let f: Vec<&str> = line.split(',').collect();
-            anyhow::ensure!(f.len() == 4, "line {}: expected 4 fields", lineno + 1);
+            anyhow::ensure!(
+                f.len() == 4 || f.len() == 5,
+                "line {}: expected 4 or 5 fields",
+                lineno + 1
+            );
+            let deadline = match f.get(4).map(|s| s.trim()) {
+                None | Some("") => None,
+                Some(s) => Some(s.parse()?),
+            };
             reqs.push(Request {
                 id: 0,
                 arrival: f[0].trim().parse()?,
                 input_len: f[1].trim().parse()?,
                 output_len: f[2].trim().parse()?,
                 is_long: f[3].trim() == "1" || f[3].trim() == "true",
+                deadline,
             });
         }
         Ok(Self::new(reqs))
@@ -145,6 +166,7 @@ mod tests {
                 input_len: 100,
                 output_len: 10,
                 is_long: false,
+                deadline: Some(12.5),
             },
             Request {
                 id: 7,
@@ -152,6 +174,7 @@ mod tests {
                 input_len: 200_000,
                 output_len: 20,
                 is_long: true,
+                deadline: None,
             },
         ])
     }
@@ -171,6 +194,16 @@ mod tests {
         assert_eq!(back.len(), t.len());
         assert_eq!(back.requests[1].input_len, 100);
         assert!(back.requests[0].is_long);
+        assert_eq!(back.requests[0].deadline, None);
+        assert_eq!(back.requests[1].deadline, Some(12.5));
+    }
+
+    #[test]
+    fn from_csv_accepts_legacy_four_field_rows() {
+        let t = Trace::from_csv("arrival,input_len,output_len,is_long\n1.5,80,8,0\n")
+            .unwrap();
+        assert_eq!(t.len(), 1);
+        assert_eq!(t.requests[0].deadline, None);
     }
 
     #[test]

@@ -1,0 +1,237 @@
+//! Chaos properties: randomized, seeded fault schedules — crashes, spot
+//! reclaims (drain → kill → cold-start reprovision), stragglers, deadline
+//! stamps and admission-control shedding — thrown at every registered
+//! policy. The invariants under test:
+//!
+//! * **Conservation** — every arrived request ends in exactly one
+//!   terminal state: completed or shed (typed, counted). Nothing is
+//!   silently dropped, whatever the fault schedule does.
+//! * **Termination** — the run ends with a finite makespan (no stuck
+//!   provisioning/draining state can strand the event loop).
+//! * **Index integrity** — `validate_index` holds after *every* event
+//!   while lifecycle verbs (drain / provision / crash / slowdown) fire
+//!   mid-run.
+//!
+//! Schedules are generated from a fixed-seed [`Rng`], so failures are
+//! reproducible; every fault recovers (or reprovisions) well inside the
+//! arrival span so capacity is never terminally lost.
+
+use pecsched::config::{ModelSpec, PolicyKind};
+use pecsched::exp;
+use pecsched::scenario::{
+    ArrivalShape, DeadlineSpec, FaultKind, FaultPoint, FaultTarget, MixShape,
+    Scenario, SimOverrides,
+};
+use pecsched::sched::Policy;
+use pecsched::sim::{ClusterOps, SimConfig, SimState, Simulation};
+use pecsched::util::Rng;
+
+/// One random fault, always self-healing: crashes recover, reclaims
+/// reprovision, stragglers end — and every trigger lands at or before
+/// 0.7 of the span (recoveries by 0.9), while arrivals keep flowing to
+/// 1.0, so the hook always gets events to fire the recovery stages on.
+fn random_fault(rng: &mut Rng) -> FaultPoint {
+    let target = if rng.f64() < 0.3 {
+        FaultTarget::Node(rng.below(4))
+    } else {
+        FaultTarget::Replica(rng.below(32))
+    };
+    let at_frac = 0.1 + 0.5 * rng.f64();
+    let kind = match rng.below(3) {
+        0 => FaultKind::Crash {
+            recover_frac: Some(0.05 + 0.1 * rng.f64()),
+        },
+        1 => FaultKind::SpotReclaim {
+            deadline_frac: 0.05 + 0.05 * rng.f64(),
+            reprovision_frac: Some(0.05 + 0.05 * rng.f64()),
+        },
+        _ => FaultKind::Straggler {
+            slowdown: 1.5 + 3.0 * rng.f64(),
+            span_frac: 0.1 + 0.2 * rng.f64(),
+        },
+    };
+    FaultPoint {
+        at_frac,
+        target,
+        kind,
+    }
+}
+
+fn random_chaos_scenario(rng: &mut Rng) -> Scenario {
+    let n_faults = 1 + rng.below(3);
+    let faults = (0..n_faults).map(|_| random_fault(rng)).collect();
+    let deadlines = if rng.f64() < 0.5 {
+        Some(DeadlineSpec {
+            short_slack_s: 5.0 + 30.0 * rng.f64(),
+            long_slack_s: 300.0 + 900.0 * rng.f64(),
+        })
+    } else {
+        None
+    };
+    let shed_backlog = if rng.f64() < 0.5 {
+        Some(16 + rng.below(64))
+    } else {
+        None
+    };
+    Scenario {
+        name: "chaos",
+        description: "randomized fault schedule (test-only)",
+        arrival: ArrivalShape::Steady,
+        mix: MixShape::AzureStandard,
+        faults,
+        deadlines,
+        elastic: None,
+        overrides: SimOverrides {
+            decode_mode: None,
+            metrics_mode: None,
+            shed_backlog,
+        },
+    }
+}
+
+#[test]
+fn chaos_schedules_conserve_requests_across_all_policies() {
+    let mut rng = Rng::seed_from_u64(0x0C_A05);
+    let model = ModelSpec::mistral_7b();
+    let rps = exp::capacity_rps(&model, 0.6);
+    let policies = PolicyKind::all();
+    for case in 0..6 {
+        let sc = random_chaos_scenario(&mut rng);
+        let trace = sc.build_trace(200, rps, 100 + case);
+        for &kind in &policies {
+            let cfg = SimConfig::for_policy(model.clone(), kind);
+            let mut m = sc.run(cfg, &trace, kind);
+            assert_eq!(
+                m.shorts_completed + m.longs_completed + m.shorts_shed + m.longs_shed,
+                trace.len(),
+                "case {case}, policy {}: a request vanished (faults: {:?})",
+                kind.name(),
+                sc.faults
+            );
+            let sum = m.summary();
+            assert!(
+                sum.makespan.is_finite() && sum.makespan > 0.0,
+                "case {case}, policy {}: non-terminating run",
+                kind.name()
+            );
+            if sc.deadlines.is_some() {
+                assert_eq!(
+                    m.deadlines_total,
+                    trace.len(),
+                    "case {case}: every request should carry a deadline"
+                );
+                assert!(sum.slo_attainment() >= 0.0 && sum.slo_attainment() <= 1.0);
+            }
+            if sc.overrides.shed_backlog.is_none() {
+                assert_eq!(
+                    m.shorts_shed + m.longs_shed,
+                    0,
+                    "case {case}: shedding without an admission cap"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn chaos_runs_are_deterministic_given_the_schedule() {
+    // Same scenario + trace + policy twice → identical counters. The
+    // fault stage machines read simulated time only, so nothing about
+    // the schedule may leak host state into the run.
+    let mut rng = Rng::seed_from_u64(77);
+    let model = ModelSpec::mistral_7b();
+    let rps = exp::capacity_rps(&model, 0.6);
+    let sc = random_chaos_scenario(&mut rng);
+    let trace = sc.build_trace(200, rps, 9);
+    let kind = PolicyKind::comparison_set()[3];
+    let run = || {
+        let cfg = SimConfig::for_policy(model.clone(), kind);
+        let m = sc.run(cfg, &trace, kind);
+        (
+            m.shorts_completed,
+            m.longs_completed,
+            m.shorts_shed,
+            m.longs_shed,
+            m.deadlines_met,
+            m.preemptions,
+            m.events_processed,
+        )
+    };
+    assert_eq!(run(), run());
+}
+
+#[test]
+fn index_stays_valid_through_every_lifecycle_verb() {
+    // Manual drive of the full verb vocabulary — drain, missed-deadline
+    // kill, cold-start provision, crash + recover, slowdown on/off —
+    // with `validate_index` after every single event.
+    let model = ModelSpec::mistral_7b();
+    let rps = exp::capacity_rps(&model, 0.6);
+    let sc = Scenario {
+        name: "chaos-index",
+        description: "index validation drive (test-only)",
+        arrival: ArrivalShape::Steady,
+        mix: MixShape::AzureStandard,
+        faults: vec![],
+        deadlines: None,
+        elastic: None,
+        overrides: SimOverrides::default(),
+    };
+    let trace = sc.build_trace(250, rps, 21);
+    let span = trace.span();
+    let kind = PolicyKind::comparison_set()[3];
+    let cfg = SimConfig::for_policy(model, kind);
+    let mut sim = Simulation::new(cfg, &trace, kind);
+    let mut displaced: Vec<usize> = Vec::new();
+    let mut stage = 0u8;
+    let m = sim.run_with_hook(|st: &mut SimState, policy: &mut dyn Policy| {
+        let now = st.now();
+        if stage == 0 && now >= span * 0.2 {
+            stage = 1;
+            let _ = ClusterOps::new(st).drain(2, &mut displaced);
+            for i in 0..displaced.len() {
+                let req = displaced[i];
+                policy.on_arrival(&mut ClusterOps::new(st), req);
+            }
+            displaced.clear();
+        }
+        if stage == 1 && now >= span * 0.3 {
+            stage = 2;
+            if st.replica(2).is_draining() {
+                st.fail_replica(2, &mut displaced);
+                for i in 0..displaced.len() {
+                    let req = displaced[i];
+                    policy.on_arrival(&mut ClusterOps::new(st), req);
+                }
+                displaced.clear();
+            }
+            st.set_replica_slowdown(5, 2.5);
+        }
+        if stage == 2 && now >= span * 0.4 {
+            stage = 3;
+            let _ = ClusterOps::new(st).provision(2);
+            st.fail_replica(7, &mut displaced);
+            for i in 0..displaced.len() {
+                let req = displaced[i];
+                policy.on_arrival(&mut ClusterOps::new(st), req);
+            }
+            displaced.clear();
+        }
+        if stage == 3 && now >= span * 0.6 {
+            stage = 4;
+            st.set_replica_slowdown(5, 1.0);
+            if st.replica(7).is_down() {
+                st.recover_replica(7);
+            }
+        }
+        st.validate_index().unwrap_or_else(|e| {
+            panic!("index diverged at t={} (stage {stage}): {e}", st.now())
+        });
+    });
+    assert_eq!(stage, 4, "the schedule must fully play out");
+    assert_eq!(
+        m.shorts_completed + m.longs_completed,
+        trace.len(),
+        "no shedding configured: everything completes"
+    );
+}

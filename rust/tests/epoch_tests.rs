@@ -30,6 +30,7 @@ fn mixed_trace() -> Trace {
             input_len: 700 + 83 * (i % 13),
             output_len: 400 + 37 * (i % 11),
             is_long: false,
+            deadline: None,
         });
     }
     reqs.push(Request {
@@ -38,6 +39,7 @@ fn mixed_trace() -> Trace {
         input_len: 150_000,
         output_len: 260,
         is_long: true,
+        deadline: None,
     });
     reqs.push(Request {
         id: 0,
@@ -45,6 +47,7 @@ fn mixed_trace() -> Trace {
         input_len: 210_000,
         output_len: 180,
         is_long: true,
+        deadline: None,
     });
     Trace::new(reqs)
 }

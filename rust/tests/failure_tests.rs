@@ -95,6 +95,7 @@ fn crashed_long_group_is_redispatched() {
         input_len: 200_000,
         output_len: 16,
         is_long: true,
+        deadline: None,
     }];
     for i in 0..20 {
         reqs.push(Request {
@@ -103,6 +104,7 @@ fn crashed_long_group_is_redispatched() {
             input_len: 1200,
             output_len: 16,
             is_long: false,
+            deadline: None,
         });
     }
     let trace = Trace::new(reqs);
@@ -130,6 +132,7 @@ fn fail_replica_unit_semantics() {
             input_len: 1000,
             output_len: 8,
             is_long: false,
+            deadline: None,
         },
         Request {
             id: 1,
@@ -137,6 +140,7 @@ fn fail_replica_unit_semantics() {
             input_len: 900,
             output_len: 8,
             is_long: false,
+            deadline: None,
         },
     ];
     let mut st = SimState::new(&cfg, &reqs);

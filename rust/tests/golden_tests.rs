@@ -30,6 +30,7 @@ fn random_trace(rng: &mut Rng, n: usize) -> Trace {
             input_len,
             output_len: rng.u32_inclusive(1, 800),
             is_long,
+            deadline: None,
         });
     }
     Trace::new(reqs)
@@ -158,6 +159,7 @@ fn rejected_verbs_do_not_mutate() {
             input_len: 1000,
             output_len: 8,
             is_long: false,
+            deadline: None,
         },
         Request {
             id: 1,
@@ -165,6 +167,7 @@ fn rejected_verbs_do_not_mutate() {
             input_len: 200_000,
             output_len: 8,
             is_long: true,
+            deadline: None,
         },
     ];
     let cfg = SimConfig::pecsched(ModelSpec::mistral_7b(), AblationFlags::full());
@@ -233,6 +236,7 @@ fn migrate_and_requeue_success_paths() {
         input_len: input,
         output_len: 16,
         is_long: false,
+        deadline: None,
     };
     let reqs = [
         mk(0, 0.0, 60_000_000), // A: fills replica 0's KV alone

@@ -17,6 +17,7 @@ fn short(id: usize, arrival: f64, len: u32, out: u32) -> Request {
         input_len: len,
         output_len: out,
         is_long: false,
+        deadline: None,
     }
 }
 
@@ -27,6 +28,7 @@ fn long(id: usize, arrival: f64, len: u32, out: u32) -> Request {
         input_len: len,
         output_len: out,
         is_long: true,
+        deadline: None,
     }
 }
 
@@ -66,6 +68,9 @@ fn handle(st: &mut SimState, kind: pecsched::sim::EventKind) {
         }
         LongDecodeEpoch { gid, gen } => {
             st.on_long_decode_epoch(gid, gen);
+        }
+        ReplicaReady { rid, gen } => {
+            st.on_replica_ready(rid, gen);
         }
     }
 }

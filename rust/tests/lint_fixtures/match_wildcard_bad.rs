@@ -1,10 +1,26 @@
-// BAD: wildcard arm over a tracked enum — a new event variant would be
-// silently swallowed here instead of forcing this site to be revisited.
-use crate::sim::EventKind;
+// BAD: wildcard arms over tracked enums — a new event variant or fault
+// kind would be silently swallowed here instead of forcing this site to
+// be revisited.
+use crate::scenario::FaultKind;
+use crate::sim::{EventKind, ShedOutcome};
 
 pub fn is_arrival(k: &EventKind) -> bool {
     match k {
         EventKind::Arrival(_) => true,
+        _ => false,
+    }
+}
+
+pub fn is_crash(k: &FaultKind) -> bool {
+    match k {
+        FaultKind::Crash { .. } => true,
+        _ => false,
+    }
+}
+
+pub fn was_shed(o: ShedOutcome) -> bool {
+    match o {
+        ShedOutcome::Shed => true,
         _ => false,
     }
 }

@@ -1,5 +1,6 @@
 // GOOD: every variant enumerated — adding one breaks the build here.
-use crate::sim::EventKind;
+use crate::scenario::FaultKind;
+use crate::sim::{EventKind, ShedOutcome};
 
 pub fn class(k: &EventKind) -> u8 {
     match k {
@@ -11,5 +12,21 @@ pub fn class(k: &EventKind) -> u8 {
         EventKind::LongPrefillDone { .. } => 3,
         EventKind::LongDecodeRound { .. } => 3,
         EventKind::LongDecodeEpoch { .. } => 3,
+        EventKind::ReplicaReady { .. } => 4,
+    }
+}
+
+pub fn is_crash(k: &FaultKind) -> bool {
+    match k {
+        FaultKind::Crash { .. } => true,
+        FaultKind::SpotReclaim { .. } => false,
+        FaultKind::Straggler { .. } => false,
+    }
+}
+
+pub fn was_shed(o: ShedOutcome) -> bool {
+    match o {
+        ShedOutcome::Shed => true,
+        ShedOutcome::Rejected(_) => false,
     }
 }

@@ -26,12 +26,18 @@ fn random_trace(rng: &mut Rng, n: usize, with_longs: bool) -> Trace {
         } else {
             rng.u32_inclusive(16, 9_000)
         };
+        let deadline = if rng.f64() < 0.25 {
+            Some(t + rng.exponential(0.05))
+        } else {
+            None
+        };
         reqs.push(Request {
             id: 0,
             arrival: t,
             input_len,
             output_len: rng.u32_inclusive(1, 800),
             is_long,
+            deadline,
         });
     }
     Trace::new(reqs)
@@ -408,15 +414,21 @@ fn prop_trace_csv_roundtrip_exact() {
                 (b.input_len, b.output_len, b.is_long),
                 "case {case}"
             );
+            assert_eq!(
+                a.deadline.map(f64::to_bits),
+                b.deadline.map(f64::to_bits),
+                "case {case}: deadline not bit-identical"
+            );
         }
     }
 }
 
 #[test]
 fn trace_csv_malformed_inputs_are_errors() {
-    // Wrong field counts.
+    // Wrong field counts / unparsable deadline column.
     assert!(Trace::from_csv("arrival,input_len\n1,2\n").is_err());
     assert!(Trace::from_csv("1.0,100,10,0,extra\n").is_err());
+    assert!(Trace::from_csv("1.0,100,10,0,1.0,1.0\n").is_err());
     // Non-numeric fields.
     assert!(Trace::from_csv("abc,100,10,0\n").is_err());
     assert!(Trace::from_csv("1.0,banana,10,0\n").is_err());

@@ -80,6 +80,7 @@ fn fifo_long_blocks_shorts_behind_it() {
             input_len: 1500,
             output_len: 50,
             is_long: false,
+            deadline: None,
         });
     }
     reqs.push(Request {
@@ -88,6 +89,7 @@ fn fifo_long_blocks_shorts_behind_it() {
         input_len: 300_000,
         output_len: 100,
         is_long: true,
+        deadline: None,
     });
     for i in 0..16 {
         reqs.push(Request {
@@ -96,6 +98,7 @@ fn fifo_long_blocks_shorts_behind_it() {
             input_len: 1500,
             output_len: 50,
             is_long: false,
+            deadline: None,
         });
     }
     let trace = Trace::new(reqs);
