@@ -7,8 +7,16 @@ Two layers:
 
 * Intra-run: the `event_engine/metrics_streaming` cell must stay within
   STREAMING_OVERHEAD of the `event_engine/metrics_exact` cell — the GK
-  sketches may not tax the hot path. This gate is machine-independent
-  (both cells ran on the same runner) and always applies.
+  sketches may not tax the hot path. Likewise the source-driven
+  `event_engine/arrivals_streaming/*` cells must stay within
+  STREAMING_OVERHEAD of their `arrivals_eager` twins (lazy arrival pull
+  + completion-time retirement may not tax the event loop), and the
+  streaming 1m-request cell's peak RSS must stay within RSS_FLATNESS of
+  the streaming 100k cell (memory O(in-flight), not O(wall); VmHWM is
+  monotone and the suite runs the streaming cells first, so a flat
+  pipeline yields a ratio near 1). These gates are machine-independent
+  (all cells ran on the same runner) and always apply; the RSS check is
+  skipped where peak_rss_bytes is null (no /proc).
 
 * Cross-run: every cell present in both files must keep events/s within
   REGRESSION of the cached baseline from the previous main run. The
@@ -23,11 +31,27 @@ import sys
 
 # Fail if a cell's events/s drops more than 20% vs the cached baseline.
 REGRESSION = 0.20
-# Streaming metrics may cost at most 20% events/s vs exact digests.
+# Streaming metrics may cost at most 20% events/s vs exact digests; the
+# same bound covers source-driven arrivals vs eager trace injection.
 STREAMING_OVERHEAD = 0.20
+# The streaming 1m-request cell's VmHWM may be at most 2x the 100k cell's.
+RSS_FLATNESS = 2.0
 
 EXACT_CELL = "event_engine/metrics_exact/8k_reqs"
 STREAMING_CELL = "event_engine/metrics_streaming/8k_reqs"
+# (streaming, eager) twins for the bounded-memory arrival pipeline.
+ARRIVAL_PAIRS = [
+    (
+        "event_engine/arrivals_streaming/100k_reqs",
+        "event_engine/arrivals_eager/100k_reqs",
+    ),
+    (
+        "event_engine/arrivals_streaming/1m_reqs",
+        "event_engine/arrivals_eager/1m_reqs",
+    ),
+]
+RSS_SMALL_CELL = "event_engine/arrivals_streaming/100k_reqs"
+RSS_LARGE_CELL = "event_engine/arrivals_streaming/1m_reqs"
 
 
 def load(path):
@@ -65,6 +89,41 @@ def main():
         print(
             f"streaming-vs-exact OK: {streaming:.3g} vs {exact:.3g} events/s "
             f"({streaming / exact:.1%})"
+        )
+
+    for s_name, e_name in ARRIVAL_PAIRS:
+        s_eps = events_per_s(cur.get(s_name))
+        e_eps = events_per_s(cur.get(e_name))
+        if s_eps is None or e_eps is None:
+            failures.append(
+                "arrival-pipeline cells missing from current BENCH_sim.json "
+                f"(need {s_name} and {e_name} with events_per_s)"
+            )
+        elif s_eps < (1 - STREAMING_OVERHEAD) * e_eps:
+            failures.append(
+                f"streaming arrivals cost too much: {s_eps:.3g} events/s vs "
+                f"{e_eps:.3g} eager at {s_name} "
+                f"(allowed overhead {STREAMING_OVERHEAD:.0%})"
+            )
+        else:
+            print(
+                f"streaming-vs-eager arrivals OK at {s_name}: "
+                f"{s_eps:.3g} vs {e_eps:.3g} events/s ({s_eps / e_eps:.1%})"
+            )
+
+    small = cur.get(RSS_SMALL_CELL, {}).get("peak_rss_bytes")
+    large = cur.get(RSS_LARGE_CELL, {}).get("peak_rss_bytes")
+    if small is None or large is None:
+        print("peak_rss_bytes null in arrival cells: RSS-flatness gate skipped")
+    elif large > RSS_FLATNESS * small:
+        failures.append(
+            f"streaming peak RSS grew with trace length: {large} bytes at 1m "
+            f"vs {small} at 100k (allowed ratio {RSS_FLATNESS:g}x)"
+        )
+    else:
+        print(
+            f"streaming RSS flat: {large} bytes at 1m vs {small} at 100k "
+            f"({large / small:.2f}x)"
         )
 
     if os.path.exists(baseline_path):

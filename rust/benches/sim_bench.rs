@@ -11,6 +11,7 @@
 use pecsched::config::{AblationFlags, DecodeMode, ModelSpec, PolicyKind};
 use pecsched::exp::{capacity_rps, run_sweep, SweepSpec};
 use pecsched::metrics::MetricsMode;
+use pecsched::scenario;
 use pecsched::sim::{SimConfig, Simulation};
 use pecsched::trace::TraceConfig;
 use pecsched::util::{write_json, Bench, BenchReport};
@@ -50,6 +51,51 @@ fn sim_cell(
 fn main() {
     println!("--- sim_bench: discrete-event engine throughput ---");
     let mut reports: Vec<BenchReport> = Vec::new();
+
+    // Eager-vs-streaming arrival injection at 10^5 and 10^6 requests:
+    // the bounded-memory pipeline gate. Both sides run the fig15-huge
+    // configuration (closed-form decode, streaming metrics + retirement);
+    // the only delta is how arrivals reach the heap — streaming pulls one
+    // look-ahead request from a GenSource, eager materialises the whole
+    // trace and heap-seeds every arrival. Trace generation is inside the
+    // closure on both sides so each cell times its full pipeline.
+    //
+    // These cells run FIRST, streaming before eager and small before
+    // large: VmHWM (peak_rss_bytes) is process-wide and monotone, so the
+    // flat-memory cells must sample the high-water mark before the eager
+    // allocations raise it for good. ci/bench_gate.py asserts both the
+    // events/s ratio (streaming within 20% of eager) and RSS flatness
+    // (streaming 1m within 2x of streaming 100k).
+    {
+        let sc = scenario::by_name("fig15-huge").expect("fig15-huge registered");
+        let model = ModelSpec::mistral_7b();
+        let kind = PolicyKind::PecSched(AblationFlags::full());
+        let rps = capacity_rps(&model, 0.6);
+        for (eager, mode) in [(false, "streaming"), (true, "eager")] {
+            for (n, label, budget_ms, min_iters) in [
+                (100_000usize, "100k_reqs", 2000u64, 2usize),
+                (1_000_000, "1m_reqs", 1000, 1),
+            ] {
+                let name = format!("event_engine/arrivals_{mode}/{label}");
+                let r = sim_cell(&name, budget_ms, min_iters, || {
+                    let mut cfg = SimConfig::for_policy(model.clone(), kind);
+                    sc.apply_overrides(&mut cfg);
+                    if eager {
+                        let t = sc.build_trace(n, rps, 42);
+                        Simulation::new(cfg, &t, kind)
+                    } else {
+                        let src = sc.build_source(n, rps, 42);
+                        Simulation::new_streaming(cfg, Box::new(src), kind)
+                    }
+                })
+                .with_peak_rss();
+                if let Some(eps) = r.events_per_s {
+                    println!("  -> {name}: {:.2}M events/s", eps / 1e6);
+                }
+                reports.push(r);
+            }
+        }
+    }
 
     // Fig 9-11 cell: one full (model, policy) simulation.
     for kind in [

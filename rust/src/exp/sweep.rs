@@ -22,7 +22,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 use crate::config::{ClusterSpec, ModelSpec, PolicyKind, SchedParams};
-use crate::metrics::{aggregate_seeds, RunSummary, SeedAggregate, TailDigest};
+use crate::metrics::{aggregate_seeds, MetricsMode, RunSummary, SeedAggregate, TailDigest};
 use crate::scenario;
 use crate::sim::SimConfig;
 use crate::util::Json;
@@ -198,8 +198,6 @@ fn run_one(spec: &SweepSpec, cell: &SweepCell) -> CellResult {
         // request wall by sqrt(scale) keeps per-cell work bounded (§6.6).
         ((spec.n_requests as f64 * scale.sqrt()) as usize).max(1)
     };
-    let trace = sc.build_trace(n_requests, rps, cell.seed);
-
     let mut cfg = SimConfig::for_policy(cell.model.clone(), cell.policy);
     if cell.gpus != base_gpus {
         cfg.cluster = ClusterSpec::with_total_gpus(cell.gpus);
@@ -209,7 +207,19 @@ fn run_one(spec: &SweepSpec, cell: &SweepCell) -> CellResult {
     }
     let replicas = cfg.cluster.replicas_for(&cell.model);
 
-    let mut m = sc.run(cfg, &trace, cell.policy);
+    // Streaming-metrics scenarios go source-driven: same request
+    // sequence bit-for-bit (the GenSource draw-order contract), but the
+    // trace is never materialised, so 10^6+-request cells stay
+    // O(in-flight) in memory. Exact-mode scenarios keep the eager path —
+    // the golden sweep JSON depends on it byte for byte.
+    let mut m = if sc.overrides.metrics_mode == Some(MetricsMode::Streaming)
+        && sc.supports_streaming()
+    {
+        sc.run_source(cfg, n_requests, rps, cell.seed, cell.policy)
+    } else {
+        let trace = sc.build_trace(n_requests, rps, cell.seed);
+        sc.run(cfg, &trace, cell.policy)
+    };
     let pct99 =
         |d: &mut crate::metrics::Digest| d.quantile(0.99).unwrap_or(f64::NAN);
     let sched_p99_short = pct99(&mut m.sched_overhead_short);

@@ -81,9 +81,12 @@ const ALLOWED_SIM_IMPORTS: &[&str] = &[
 const PROTECTED_STRUCTS: &[&str] = &["SimState", "ReplicaRt", "LongGroup", "ReqArena"];
 
 /// Function-name prefixes marking the `sim/` per-event hot path: the
-/// `on_*` event handlers and the mechanical helpers they call per event.
-/// Setup (`new`, `from_*`), policy verbs (`start_*`, `try_*`) and
-/// post-run collection deliberately stay outside the rule.
+/// `on_*` event handlers, the mechanical helpers they call per event,
+/// and the streaming-pipeline verbs that run once per request — arrival
+/// pull (`pull_*`), completion-time retirement (`retire_*`, `flush_*`)
+/// and the metrics fold (`fold_*`). Setup (`new`, `from_*`), policy
+/// verbs (`start_*`, `try_*`) and post-run collection deliberately stay
+/// outside the rule.
 const HOT_PATH_FN_PREFIXES: &[&str] = &[
     "on_",
     "finish_",
@@ -93,6 +96,10 @@ const HOT_PATH_FN_PREFIXES: &[&str] = &[
     "fail_",
     "complete_",
     "schedule_",
+    "pull_",
+    "retire_",
+    "flush_",
+    "fold_",
 ];
 
 /// Enums whose `match` sites must stay exhaustive (no `_ =>`): the event

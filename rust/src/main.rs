@@ -13,9 +13,11 @@
 //! * `plan-sp`        — show the fast-SP strategy selection for a long
 //!                      request;
 //! * `huge-smoke`     — CI smoke for the massive-grid mode: a 65k-replica
-//!                      cluster under the `huge-sweep` scenario, asserting
-//!                      streaming-metric memory is trace-length independent
-//!                      and the run fits a wall-clock budget.
+//!                      cluster under the `huge-sweep` scenario with
+//!                      source-driven arrivals at 10⁶ requests, asserting
+//!                      streaming-metric memory and peak RSS are
+//!                      trace-length independent and the run fits a
+//!                      wall-clock budget.
 //!
 //! Run `pecsched help` for flags.
 
@@ -55,9 +57,12 @@ COMMANDS
   plan-sp         [--model <name>] [--input-len N]
   huge-smoke      [--gpus N] [--requests N] [--seed S] [--budget-s F]
                   scale smoke: huge-sweep scenario (closed-form decode +
-                  streaming sketches) on a 65,536-GPU cluster; fails if
-                  streaming metric entries grow with trace length or the
-                  wall clock exceeds the budget (use a release build)
+                  streaming sketches + completion-time retirement) on a
+                  65,536-GPU cluster, arrivals pulled lazily from a
+                  GenSource at N then 4N requests (default headline 10^6);
+                  fails if streaming metric entries or peak RSS grow with
+                  trace length or the wall clock exceeds the budget (use
+                  a release build)
   help
 ";
 
@@ -350,19 +355,23 @@ fn cmd_serve(args: &Args) -> Result<()> {
 }
 
 /// The huge-sweep CI smoke (DESIGN.md §6): one scaled-down grid cell on a
-/// 65,536-GPU cluster, run twice (n and 4n requests) in the scenario's
-/// streaming-metrics + closed-form-decode mode. Asserts the engine loses
-/// no requests, that streaming metric storage does NOT scale with trace
-/// length (the 4n run may hold at most 2× the entries of the n run, and
-/// stays well below one entry per request), and that both runs together
-/// fit the wall-clock budget. Run under `--release`: the debug-only
-/// index/digest oracles are O(R) per event and would dominate at 65k
-/// replicas.
+/// 65,536-GPU cluster, run twice (n and 4n requests; the default n puts
+/// the second run at 10⁶ requests) in the scenario's streaming-metrics +
+/// closed-form-decode mode, **source-driven** — arrivals pulled lazily
+/// from a `GenSource` with completion-time retirement, never an eager
+/// trace. Asserts the engine loses no requests, that streaming metric
+/// storage does NOT scale with trace length (the 4n run may hold at most
+/// 2× the entries of the n run, and stays well below one entry per
+/// request), that peak RSS (VmHWM) is flat in N (the 4n run's high-water
+/// mark within 2× of the n run's — the mark is monotone, so flat memory
+/// means a ratio near 1), and that both runs together fit the wall-clock
+/// budget. Run under `--release`: the debug-only index/digest oracles
+/// are O(R) per event and would dominate at 65k replicas.
 fn cmd_huge_smoke(args: &Args) -> Result<()> {
     let gpus = args.parse_or("gpus", 65_536usize)?;
-    let n = args.parse_or("requests", 8_000usize)?;
+    let n = args.parse_or("requests", 250_000usize)?;
     let seed = args.parse_or("seed", 42u64)?;
-    let budget_s = args.parse_or("budget-s", 120.0f64)?;
+    let budget_s = args.parse_or("budget-s", 240.0f64)?;
 
     let model = ModelSpec::mistral_7b();
     let kind = parse_policy("pecsched")?;
@@ -379,33 +388,37 @@ fn cmd_huge_smoke(args: &Args) -> Result<()> {
 
     println!(
         "huge-smoke: {gpus} GPUs ({n_replicas} replicas), {} then {} requests, \
-         scenario '{}'",
+         scenario '{}' (source-driven)",
         n,
         4 * n,
         sc.name
     );
     let t0 = std::time::Instant::now();
     let mut entries = [0usize; 2];
+    let mut hwm = [None::<u64>; 2];
     for (i, scale) in [1usize, 4].into_iter().enumerate() {
-        let trace = sc.build_trace(n * scale, rps, seed);
         let mut cfg = SimConfig::for_policy(model.clone(), kind);
         cfg.cluster = cluster.clone();
-        let m = sc.run(cfg, &trace, kind);
-        if m.shorts_completed + m.longs_completed != trace.len() {
+        let m = sc.run_source(cfg, n * scale, rps, seed, kind);
+        if m.shorts_completed + m.longs_completed != n * scale {
             bail!(
                 "huge-smoke lost requests at {scale}x: {} of {} completed",
                 m.shorts_completed + m.longs_completed,
-                trace.len()
+                n * scale
             );
         }
         entries[i] = m.metric_entries();
+        hwm[i] = pecsched::util::peak_rss_bytes();
         println!(
             "  {scale}x: {} requests -> {} metric entries, {} events, \
-             makespan {:.1}s",
+             makespan {:.1}s, peak RSS {}",
             n * scale,
             entries[i],
             m.events_processed,
-            m.makespan
+            m.makespan,
+            hwm[i]
+                .map(|b| format!("{:.1} MiB", b as f64 / (1024.0 * 1024.0)))
+                .unwrap_or_else(|| "n/a".into()),
         );
     }
     let wall = t0.elapsed().as_secs_f64();
@@ -416,6 +429,17 @@ fn cmd_huge_smoke(args: &Args) -> Result<()> {
     }
     if e4 * 2 > 4 * n {
         bail!("streaming metric entries not sublinear: {e4} entries for {} requests", 4 * n);
+    }
+    // Peak-RSS flatness: VmHWM is process-wide and monotone, so the n run
+    // (which ran first) bounds the baseline and a flat-memory 4n run can
+    // only nudge it — a ratio beyond 2x means per-request state survived
+    // retirement. Skipped where /proc is unavailable.
+    if let (Some(h1), Some(h4)) = (hwm[0], hwm[1]) {
+        if h4 > 2 * h1 {
+            bail!(
+                "peak RSS grew with trace length: {h1} bytes after 1x vs {h4} after 4x"
+            );
+        }
     }
     if wall > budget_s {
         bail!("huge-smoke exceeded its wall-clock budget: {wall:.1}s > {budget_s:.1}s");

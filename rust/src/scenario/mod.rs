@@ -22,8 +22,8 @@ pub use registry::{all, by_name, names};
 use crate::config::{DecodeMode, PolicyKind};
 use crate::metrics::{MetricsMode, RunMetrics};
 use crate::sched::Policy;
-use crate::sim::{run_sim, ClusterOps, SimConfig, SimState, Simulation};
-use crate::trace::{generate_trace, ArrivalProcess, LengthMix, Trace};
+use crate::sim::{run_sim, run_sim_source, ClusterOps, SimConfig, SimState, Simulation};
+use crate::trace::{generate_trace, ArrivalProcess, GenSource, LengthMix, Trace};
 
 /// What an injected fault does to its target (DESIGN.md §7).
 ///
@@ -251,6 +251,47 @@ impl Scenario {
             }
         }
         trace
+    }
+
+    /// The streaming twin of [`Scenario::build_trace`]: a lazily-drawn
+    /// [`GenSource`] emitting the *bit-identical* request sequence —
+    /// deadline stamping included — without ever materialising the trace
+    /// (see `rust/src/trace/source.rs` for the draw-order contract).
+    pub fn build_source(&self, n_requests: usize, rps: f64, seed: u64) -> GenSource {
+        let src = GenSource::new(n_requests, seed, self.arrival.process(rps), &self.mix.mix());
+        match self.deadlines {
+            Some(d) => src.with_deadlines(d.short_slack_s, d.long_slack_s),
+            None => src,
+        }
+    }
+
+    /// True when this scenario can run source-driven: fault schedules and
+    /// autoscaler specs resolve their stage timers against the trace's
+    /// arrival span, which only an eager trace knows up front.
+    pub fn supports_streaming(&self) -> bool {
+        self.faults.is_empty() && self.elastic.is_none()
+    }
+
+    /// Run one simulation source-driven (arrivals pulled lazily, memory
+    /// O(in-flight) when the overrides select `MetricsMode::Streaming`).
+    /// Only valid for scenarios where [`Scenario::supports_streaming`]
+    /// holds — fault/elastic schedules need the eager path.
+    pub fn run_source(
+        &self,
+        mut cfg: SimConfig,
+        n_requests: usize,
+        rps: f64,
+        seed: u64,
+        kind: PolicyKind,
+    ) -> RunMetrics {
+        assert!(
+            self.supports_streaming(),
+            "scenario {} has fault/elastic schedules and cannot run source-driven",
+            self.name
+        );
+        self.apply_overrides(&mut cfg);
+        let src = self.build_source(n_requests, rps, seed);
+        run_sim_source(cfg, Box::new(src), kind)
     }
 
     /// Apply the scenario's [`SimConfig`] overrides.

@@ -245,6 +245,24 @@ pub fn all() -> Vec<Scenario> {
                 shed_backlog: None,
             },
         },
+        Scenario {
+            name: "fig15-huge",
+            description: "Fig. 15 policy comparison at true trace scale: \
+                          steady arrivals, standard Azure mix, closed-form \
+                          decode + streaming sketches + source-driven \
+                          arrivals with completion-time retirement — memory \
+                          O(in-flight) at 10^6-10^7 requests (exp_huge)",
+            arrival: ArrivalShape::Steady,
+            mix: MixShape::AzureStandard,
+            faults: vec![],
+            deadlines: None,
+            elastic: None,
+            overrides: SimOverrides {
+                decode_mode: Some(DecodeMode::EpochClosedForm),
+                metrics_mode: Some(MetricsMode::Streaming),
+                shed_backlog: None,
+            },
+        },
     ]
 }
 

@@ -15,6 +15,18 @@
 //! collection keep the familiar row view through [`ReqRt`] *snapshots*
 //! ([`ReqArena::snapshot`], [`super::SimState::requests`]): `ReqRt` is
 //! `Copy`, so the row view is a value, not a borrow into the arena.
+//!
+//! ## Slot reuse (streaming-metrics mode)
+//!
+//! In `MetricsMode::Streaming` the engine retires a request's row at its
+//! completion event ([`ReqArena::retire_slot`]) and later arrivals reuse
+//! the slot ([`ReqArena::alloc`]), so the columns grow to the *in-flight*
+//! high-water mark, not the trace length. Each slot carries a generation
+//! counter: even while live, odd while retired. A retired slot's old
+//! [`ReqId`] is invalid — the row-view accessors `debug_assert!` liveness
+//! so stale ids are caught in debug builds (DESIGN.md §6). In
+//! `MetricsMode::Exact` nothing is ever retired and ids stay equal to
+//! trace positions for the run's whole lifetime.
 
 use crate::cluster::ReplicaId;
 use crate::trace::{ReqId, Request};
@@ -22,9 +34,8 @@ use crate::trace::{ReqId, Request};
 use super::state::{ReqPhase, ReqRt};
 
 /// Columnar per-request runtime state. Every column has one entry per
-/// trace request and [`ReqId`] indexes them all; the columns only ever
-/// grow together (built once in [`super::SimState::new`], never
-/// resized).
+/// arena slot and [`ReqId`] indexes them all; the columns only ever grow
+/// together (via [`ReqArena::from_requests`] or [`ReqArena::alloc`]).
 #[derive(Debug, Clone)]
 pub struct ReqArena {
     /// Immutable trace metadata (arrival, lengths, class).
@@ -41,6 +52,14 @@ pub struct ReqArena {
     pub(super) colocated_on: Vec<Option<ReplicaId>>,
     /// Wall-clock scheduling nanoseconds attributed (Table 7).
     pub(super) sched_ns: Vec<u64>,
+    /// Per-slot generation: even = live, odd = retired. Bumped once at
+    /// retirement and once at reuse, so any `ReqId` captured before a
+    /// retirement observes an odd (or advanced) value and fails the
+    /// liveness debug-asserts.
+    pub(super) slot_gen: Vec<u32>,
+    /// Retired slots available for reuse, LIFO (the hottest slot — most
+    /// recently touched cache lines — is handed out first).
+    pub(super) free: Vec<ReqId>,
 }
 
 impl ReqArena {
@@ -61,15 +80,73 @@ impl ReqArena {
             generated: vec![0; n],
             colocated_on: vec![None; n],
             sched_ns: vec![0; n],
+            slot_gen: vec![0; n],
+            free: Vec::new(),
         }
     }
 
-    /// Number of requests in the arena (the trace length).
+    /// Admit a streamed request: reuse a retired slot if one is free,
+    /// else append a fresh one. The request's `id` is rewritten to the
+    /// slot index (the arena, not the source, owns identity). Returns
+    /// the slot.
+    pub(super) fn alloc(&mut self, mut r: Request) -> ReqId {
+        if let Some(slot) = self.free.pop() {
+            debug_assert!(
+                self.slot_gen[slot] % 2 == 1,
+                "free list holds a live slot {slot}"
+            );
+            self.slot_gen[slot] += 1;
+            r.id = slot;
+            self.meta[slot] = r;
+            self.phase[slot] = ReqPhase::Queued;
+            self.prefill_start[slot] = None;
+            self.finish[slot] = None;
+            self.generated[slot] = 0;
+            self.colocated_on[slot] = None;
+            self.sched_ns[slot] = 0;
+            slot
+        } else {
+            let slot = self.meta.len();
+            r.id = slot;
+            self.meta.push(r);
+            self.phase.push(ReqPhase::Queued);
+            self.prefill_start.push(None);
+            self.finish.push(None);
+            self.generated.push(0);
+            self.colocated_on.push(None);
+            self.sched_ns.push(0);
+            self.slot_gen.push(0);
+            slot
+        }
+    }
+
+    /// Release a settled request's row to the free list. The slot's
+    /// generation goes odd: every accessor rejects the id until
+    /// [`ReqArena::alloc`] hands the slot to a new request.
+    pub(super) fn retire_slot(&mut self, req: ReqId) {
+        debug_assert!(self.is_live(req), "double retire of ReqId {req}");
+        debug_assert!(
+            matches!(self.phase[req], ReqPhase::Done | ReqPhase::Shed),
+            "retiring ReqId {req} in non-terminal phase {:?}",
+            self.phase[req]
+        );
+        self.slot_gen[req] += 1;
+        self.free.push(req);
+    }
+
+    /// True while `req` names the request currently occupying its slot
+    /// (always true in exact mode, where nothing is retired).
+    pub fn is_live(&self, req: ReqId) -> bool {
+        self.slot_gen[req] % 2 == 0
+    }
+
+    /// Number of slots in the arena: the trace length in exact mode, the
+    /// in-flight high-water mark under streaming retirement.
     pub fn len(&self) -> usize {
         self.meta.len()
     }
 
-    /// True when the arena holds no requests.
+    /// True when the arena holds no slots.
     pub fn is_empty(&self) -> bool {
         self.meta.is_empty()
     }
@@ -77,11 +154,20 @@ impl ReqArena {
     /// KV-cache context tokens `req` holds: full prompt plus tokens
     /// generated so far (the decode-admission and migration currency).
     pub fn context_tokens(&self, req: ReqId) -> u64 {
+        debug_assert!(self.is_live(req), "context_tokens on retired ReqId {req}");
         self.meta[req].input_len as u64 + self.generated[req] as u64
     }
 
     /// Materialise the row view of one request.
     pub fn snapshot(&self, req: ReqId) -> ReqRt {
+        debug_assert!(self.is_live(req), "snapshot of retired ReqId {req}");
+        self.snapshot_raw(req)
+    }
+
+    /// Row view without the liveness check — for bulk post-run dumps
+    /// ([`super::SimState::requests`]) that may legitimately walk retired
+    /// slots; such rows describe the *last* occupant of the slot.
+    pub(super) fn snapshot_raw(&self, req: ReqId) -> ReqRt {
         ReqRt {
             req: self.meta[req],
             phase: self.phase[req],

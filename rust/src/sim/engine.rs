@@ -6,11 +6,11 @@ use std::time::Instant;
 use crate::config::PolicyKind;
 use crate::metrics::{idle_rate, RunMetrics};
 use crate::sched::{build_policy, Policy};
-use crate::trace::Trace;
+use crate::trace::{ArrivalSource, Trace};
 
 use super::events::EventKind;
 use super::ops::{ClusterOps, ShedOutcome};
-use super::state::{SimConfig, SimState};
+use super::state::{fold_request, SimConfig, SimState};
 
 /// One simulation run = one (trace, model, policy) triple.
 pub struct Simulation {
@@ -35,6 +35,27 @@ impl Simulation {
     /// policy against the [`ClusterOps`] boundary.
     pub fn new(cfg: SimConfig, trace: &Trace, kind: PolicyKind) -> Self {
         let mut state = SimState::new(&cfg, &trace.requests);
+        let policy = build_policy(kind, &mut ClusterOps::new(&mut state));
+        Self {
+            state,
+            policy,
+            policy_kind: kind,
+        }
+    }
+
+    /// Like [`Simulation::new`], but source-driven: arrivals are pulled
+    /// lazily from `source` with a look-ahead of one instead of being
+    /// heap-seeded up front, so end-to-end memory is O(in-flight) when
+    /// combined with `MetricsMode::Streaming` retirement (DESIGN.md §6).
+    /// For a [`crate::trace::GenSource`] the replayed request sequence —
+    /// and therefore every timestamp and metric — is bit-identical to the
+    /// eager path (property-tested in `rust/tests/source_tests.rs`).
+    pub fn new_streaming(
+        cfg: SimConfig,
+        source: Box<dyn ArrivalSource>,
+        kind: PolicyKind,
+    ) -> Self {
+        let mut state = SimState::new_streaming(&cfg, source);
         let policy = build_policy(kind, &mut ClusterOps::new(&mut state));
         Self {
             state,
@@ -70,7 +91,7 @@ impl Simulation {
         H: FnMut(&mut SimState, &mut dyn Policy),
     {
         let st = &mut self.state;
-        let max_events = 500_000_000u64;
+        let max_events = st.max_events;
 
         while let Some(ev) = st.queue.pop() {
             debug_assert!(ev.time >= st.now - 1e-9, "time went backwards");
@@ -83,6 +104,10 @@ impl Simulation {
 
             match ev.kind {
                 EventKind::Arrival(req) => {
+                    // Look-ahead of one: consuming this arrival pulls the
+                    // next from the source (no-op for eager runs), so the
+                    // heap never holds more than in-flight events + 1.
+                    st.pull_next_arrival();
                     st.note_arrival(req);
                     if st.shed_backlog.is_some_and(|cap| st.queued_backlog > cap) {
                         // Admission control: past the backlog cap the
@@ -164,6 +189,11 @@ impl Simulation {
 
             hook(st, &mut *self.policy);
 
+            // Streaming retirement happens strictly after the hook:
+            // handlers touch rows post-completion (epoch bookkeeping) and
+            // fault hooks may inspect them. No-op in exact mode.
+            st.flush_retired();
+
             if st.all_done() {
                 break;
             }
@@ -203,70 +233,51 @@ impl Simulation {
 
     fn collect(&mut self) -> RunMetrics {
         let st = &mut self.state;
-        let mut m = RunMetrics::with_mode(st.metrics_mode);
+        // Streaming mode: per-request contributions already folded at
+        // settlement ([`SimState::flush_retired`]); take the accumulator
+        // and top it up with the rows still live (requests the run ended
+        // on without settling). Exact mode: the classic final pass over
+        // the dense arena, id order — the bit-identical oracle.
+        let streamed = st.streamed.take();
+        let streaming = streamed.is_some();
+        let mut m = match streamed {
+            Some(b) => *b,
+            None => RunMetrics::with_mode(st.metrics_mode),
+        };
         m.policy = self.policy_kind.name();
         m.model = st.cm.model.name.clone();
 
-        let makespan = st
-            .reqs
-            .finish
-            .iter()
-            .filter_map(|&f| f)
-            .fold(st.now, f64::max);
+        let makespan = if streaming {
+            // Retired rows' `finish` columns are recycled, so the column
+            // fold below would under-read; the running max is exact.
+            st.now.max(st.max_finish)
+        } else {
+            st.reqs
+                .finish
+                .iter()
+                .filter_map(|&f| f)
+                .fold(st.now, f64::max)
+        };
         m.makespan = makespan;
 
         let t_shorts_done = st.t_shorts_done.unwrap_or(makespan);
         m.t_shorts_done = t_shorts_done;
         for i in 0..st.reqs.len() {
+            if streaming && !st.reqs.is_live(i) {
+                continue;
+            }
             let rt = st.reqs.snapshot(i);
-            // SLO accounting: a deadline request counts as met only when
-            // it finished in time — shed or never-finished deadlines are
-            // misses. Goodput counts completions still useful under the
-            // SLO (best-effort completions always are).
-            if let Some(d) = rt.req.deadline {
-                m.deadlines_total += 1;
-                if rt.finish.is_some_and(|f| f <= d) {
-                    m.deadlines_met += 1;
-                }
-            }
-            if let Some(f) = rt.finish {
-                if !rt.req.deadline.is_some_and(|d| f > d) {
-                    m.good_completions += 1;
-                }
-            }
-            let is_long = rt.req.is_long;
-            if is_long {
-                m.longs_total += 1;
-                if let Some(d) = rt.queueing_delay() {
-                    m.long_queue_delay.add(d);
-                }
-                if let Some(j) = rt.jct() {
-                    m.long_jct.add(j);
-                    m.longs_completed += 1;
-                    m.sched_overhead_long
-                        .add(rt.sched_ns as f64 / 1e9 / j.max(1e-9));
-                }
-                // Starved = no service by the time the short workload was
-                // fully served (§3.2's Table 2 criterion).
-                let starved = match rt.prefill_start {
-                    None => true,
-                    Some(s) => s > t_shorts_done,
-                };
-                if starved {
-                    m.longs_starved += 1;
-                }
-            } else {
-                if let Some(d) = rt.queueing_delay() {
-                    m.short_queue_delay.add(d);
-                }
-                if let Some(j) = rt.jct() {
-                    m.short_jct.add(j);
-                    m.shorts_completed += 1;
-                    m.sched_overhead_short
-                        .add(rt.sched_ns as f64 / 1e9 / j.max(1e-9));
-                }
+            fold_request(&mut m, &rt, Some(t_shorts_done), &mut st.starve_pending);
+        }
+        // Longs whose starvation verdict was deferred past their own
+        // retirement and never resolved in-run (no short ever settled the
+        // reference): judge them against the collector's fallback.
+        for &s in &st.starve_pending {
+            if s > t_shorts_done {
+                m.longs_starved += 1;
             }
         }
+        st.starve_pending.clear();
 
         m.shorts_shed = st.shorts_shed;
         m.longs_shed = st.longs_shed;
@@ -286,4 +297,14 @@ impl Simulation {
 /// Convenience wrapper: build + run in one call.
 pub fn run_sim(cfg: SimConfig, trace: &Trace, kind: PolicyKind) -> RunMetrics {
     Simulation::new(cfg, trace, kind).run()
+}
+
+/// Convenience wrapper for the source-driven path: build + run in one
+/// call, arrivals pulled lazily (see [`Simulation::new_streaming`]).
+pub fn run_sim_source(
+    cfg: SimConfig,
+    source: Box<dyn ArrivalSource>,
+    kind: PolicyKind,
+) -> RunMetrics {
+    Simulation::new_streaming(cfg, source, kind).run()
 }

@@ -24,7 +24,7 @@ mod state;
 mod view;
 
 pub use arena::ReqArena;
-pub use engine::{run_sim, Simulation};
+pub use engine::{run_sim, run_sim_source, Simulation};
 pub use events::{Event, EventKind, EventQueue, GroupId};
 pub use index::{IndexEntry, SchedIndex};
 pub use ops::{

@@ -26,8 +26,8 @@ use crate::config::{
     AblationFlags, ClusterSpec, DecodeMode, ModelSpec, PolicyKind, SchedParams,
 };
 use crate::costmodel::{sp, CostModel, SpPlan};
-use crate::metrics::{BusyTracker, MetricsMode};
-use crate::trace::{ReqId, Request};
+use crate::metrics::{BusyTracker, MetricsMode, RunMetrics};
+use crate::trace::{ArrivalSource, ReqId, Request};
 
 use super::arena::ReqArena;
 use super::events::{Event, EventKind, EventQueue, GroupId};
@@ -446,7 +446,43 @@ pub struct SimState {
     pub(super) shed_backlog: Option<usize>,
     /// Time all shorts finished (starvation reference point).
     pub(super) t_shorts_done: Option<f64>,
+    /// Completion/shed time of the most recently settled short — the value
+    /// `t_shorts_done` resolves to once the arrival stream proves no more
+    /// shorts are coming (a streaming source grows `shorts_total` lazily,
+    /// so the "all shorts served" verdict can only be final after
+    /// exhaustion).
+    pub(super) last_short_settled: Option<f64>,
     pub(super) events_processed: u64,
+    /// Hard event-count backstop the engine enforces (from
+    /// [`SimConfig::max_events`]).
+    pub(super) max_events: u64,
+    /// Streaming arrival source, when the run is source-driven
+    /// ([`SimState::new_streaming`]): the heap holds exactly one
+    /// look-ahead arrival; popping it pulls the next (DESIGN.md §6).
+    pub(super) arrival_source: Option<Box<dyn ArrivalSource>>,
+    /// Requests admitted so far (== trace length for eager runs, grows
+    /// per pull for source-driven runs) — the conservation denominator.
+    pub(super) arrivals_total: usize,
+    /// True once no further arrival can appear (eager runs start
+    /// exhausted: every arrival is heap-seeded up front).
+    pub(super) arrivals_exhausted: bool,
+    /// Latest completion time seen — the streaming-mode makespan source
+    /// (retired rows' `finish` columns are recycled before collection).
+    pub(super) max_finish: f64,
+    /// Completion-time metrics accumulator (`MetricsMode::Streaming`):
+    /// per-request contributions fold in at settlement so rows can
+    /// retire. `None` in exact mode, where the engine's final pass over
+    /// the dense arena remains the oracle.
+    pub(super) streamed: Option<Box<RunMetrics>>,
+    /// Prefill starts of served longs whose §3.2 starvation verdict was
+    /// deferred because `t_shorts_done` was unresolved when they retired;
+    /// re-judged at resolution (or collection, against the makespan).
+    pub(super) starve_pending: Vec<f64>,
+    /// Settled requests awaiting retirement. Event handlers may touch a
+    /// request's row *after* `complete_request` (epoch bookkeeping), so
+    /// the engine drains this via [`SimState::flush_retired`] only after
+    /// the post-event hook ran.
+    pub(super) pending_retire: Vec<ReqId>,
     /// Requests whose prefill started since the engine last drained this
     /// (overhead attribution for Table 7 — avoids rescanning all requests).
     pub(super) recent_prefill_starts: Vec<ReqId>,
@@ -567,13 +603,38 @@ impl SimState {
             queued_backlog: 0,
             shed_backlog: cfg.shed_backlog,
             t_shorts_done: None,
+            last_short_settled: None,
             events_processed: 0,
+            max_events: cfg.max_events,
+            arrival_source: None,
+            arrivals_total: requests.len(),
+            arrivals_exhausted: true,
+            max_finish: f64::NEG_INFINITY,
+            streamed: (cfg.metrics_mode == MetricsMode::Streaming)
+                .then(|| Box::new(RunMetrics::with_mode(MetricsMode::Streaming))),
+            starve_pending: Vec::new(),
+            pending_retire: Vec::new(),
             recent_prefill_starts: Vec::new(),
             index,
             scratch_active: Vec::new(),
             scratch_done: Vec::new(),
             scratch_members: Vec::new(),
         }
+    }
+
+    /// Build a *source-driven* state: instead of heap-seeding every
+    /// arrival up front, the event heap holds exactly one look-ahead
+    /// arrival pulled from `source`, and popping it pulls the next — so
+    /// heap size (and, under `MetricsMode::Streaming`, total memory) is
+    /// O(in-flight), not O(trace length). Totals (`shorts_total`, the
+    /// conservation denominator) grow as requests are admitted, and
+    /// [`SimState::all_done`] additionally requires source exhaustion.
+    pub fn new_streaming(cfg: &SimConfig, source: Box<dyn ArrivalSource>) -> Self {
+        let mut st = Self::new(cfg, &[]);
+        st.arrivals_exhausted = false;
+        st.arrival_source = Some(source);
+        st.pull_next_arrival();
+        st
     }
 
     /// Recompute `rid`'s index entry from current state and apply it.
@@ -593,13 +654,17 @@ impl SimState {
         self.now
     }
 
-    /// Snapshot of every request's runtime entry, indexed by [`ReqId`].
+    /// Snapshot of every arena slot's runtime entry, indexed by [`ReqId`].
     ///
-    /// Materialises one [`ReqRt`] row per request from the columnar
+    /// Materialises one [`ReqRt`] row per slot from the columnar
     /// [`ReqArena`] — an allocation, intended for post-run inspection
-    /// and tests, not per-event use.
+    /// and tests, not per-event use. Under streaming retirement a row
+    /// describes the *last occupant* of its slot (see
+    /// [`ReqArena::is_live`]); in exact mode slots and requests coincide.
     pub fn requests(&self) -> Vec<ReqRt> {
-        (0..self.reqs.len()).map(|i| self.reqs.snapshot(i)).collect()
+        (0..self.reqs.len())
+            .map(|i| self.reqs.snapshot_raw(i))
+            .collect()
     }
 
     /// Snapshot of one request's runtime entry.
@@ -698,6 +763,19 @@ impl SimState {
     /// Events popped off the queue so far (engine-maintained).
     pub fn events_processed(&self) -> u64 {
         self.events_processed
+    }
+
+    /// Requests admitted so far: the trace length for eager runs, the
+    /// number pulled from the source so far for source-driven runs — the
+    /// denominator of the conservation invariant `done + shed == arrived`.
+    pub fn arrivals_total(&self) -> usize {
+        self.arrivals_total
+    }
+
+    /// True once the arrival stream can yield no more requests (always
+    /// true for eager runs, where every arrival is heap-seeded up front).
+    pub fn arrivals_exhausted(&self) -> bool {
+        self.arrivals_exhausted
     }
 
     /// Pop the next event and advance the clock to it. The manual-drive
@@ -2159,11 +2237,11 @@ impl SimState {
             self.longs_shed += 1;
         } else {
             self.shorts_shed += 1;
-            if self.shorts_done + self.shorts_shed == self.shorts_total
-                && self.t_shorts_done.is_none()
-            {
-                self.t_shorts_done = Some(self.now);
-            }
+            self.last_short_settled = Some(self.now);
+            self.maybe_mark_shorts_done();
+        }
+        if self.streamed.is_some() {
+            self.pending_retire.push(req);
         }
         true
     }
@@ -2172,16 +2250,104 @@ impl SimState {
         debug_assert!(self.reqs.finish[req].is_none());
         self.set_phase(req, ReqPhase::Done);
         self.reqs.finish[req] = Some(self.now);
+        if self.now > self.max_finish {
+            self.max_finish = self.now;
+        }
         if self.reqs.meta[req].is_long {
             self.longs_done += 1;
         } else {
             self.shorts_done += 1;
-            if self.shorts_done + self.shorts_shed == self.shorts_total
-                && self.t_shorts_done.is_none()
-            {
-                self.t_shorts_done = Some(self.now);
+            self.last_short_settled = Some(self.now);
+            self.maybe_mark_shorts_done();
+        }
+        if self.streamed.is_some() {
+            self.pending_retire.push(req);
+        }
+    }
+
+    /// Resolve `t_shorts_done` (§3.2's starvation reference — the moment
+    /// the short workload was fully served) once that verdict is *final*:
+    /// every short settled **and** the arrival stream can produce no more
+    /// of them. For eager runs the exhaustion gate is vacuous and this
+    /// fires exactly where the old inline trigger did, with the same
+    /// value (the settlement `now` of the last short, remembered in
+    /// `last_short_settled`); for source-driven runs it may fire later —
+    /// at exhaustion — but still resolves to that same settlement time.
+    /// Starvation verdicts deferred past their request's retirement are
+    /// re-judged here.
+    fn maybe_mark_shorts_done(&mut self) {
+        if self.t_shorts_done.is_some()
+            || !self.arrivals_exhausted
+            || self.shorts_done + self.shorts_shed != self.shorts_total
+        {
+            return;
+        }
+        let Some(t) = self.last_short_settled else {
+            // No short ever existed: keep `None` and let the collector
+            // fall back to the makespan, exactly like the eager path.
+            return;
+        };
+        self.t_shorts_done = Some(t);
+        if let Some(m) = self.streamed.as_deref_mut() {
+            let mut i = 0;
+            while i < self.starve_pending.len() {
+                if self.starve_pending[i] > t {
+                    m.longs_starved += 1;
+                }
+                i += 1;
+            }
+            self.starve_pending.clear();
+        }
+    }
+
+    /// Pull the next request from the arrival source (if any) and
+    /// schedule its arrival event — the look-ahead-of-one step the engine
+    /// performs on every popped `Arrival`. On exhaustion the source is
+    /// dropped, the stream is marked final, and any pending
+    /// `t_shorts_done` resolution fires.
+    pub(super) fn pull_next_arrival(&mut self) {
+        let Some(src) = self.arrival_source.as_deref_mut() else {
+            return;
+        };
+        match src.next_request() {
+            Some(r) => {
+                let is_long = r.is_long;
+                let arrival = r.arrival;
+                let id = self.reqs.alloc(r);
+                self.queue.push(arrival, EventKind::Arrival(id));
+                self.arrivals_total += 1;
+                if !is_long {
+                    self.shorts_total += 1;
+                }
+            }
+            None => {
+                self.arrival_source = None;
+                self.arrivals_exhausted = true;
+                self.maybe_mark_shorts_done();
             }
         }
+    }
+
+    /// Retire every settled request queued by `complete_request` /
+    /// `shed_request` this event: fold its metric contributions into the
+    /// streaming accumulator, then release its arena row to the free
+    /// list. A no-op in exact mode (nothing is ever queued). Called by
+    /// the engine *after* the post-event hook, because handlers touch a
+    /// request's row after completion (epoch bookkeeping) and hooks may
+    /// inspect it.
+    pub(super) fn flush_retired(&mut self) {
+        let Some(m) = self.streamed.as_deref_mut() else {
+            return;
+        };
+        let mut i = 0;
+        while i < self.pending_retire.len() {
+            let req = self.pending_retire[i];
+            let rt = self.reqs.snapshot(req);
+            fold_request(m, &rt, self.t_shorts_done, &mut self.starve_pending);
+            self.reqs.retire_slot(req);
+            i += 1;
+        }
+        self.pending_retire.clear();
     }
 
     /// Recompute the busy flag of a replica after any transition.
@@ -2224,10 +2390,81 @@ impl SimState {
         self.reindex(rid);
     }
 
-    /// All requests settled — every one either completed or shed?
+    /// All requests settled — every one either completed or shed, and no
+    /// further arrival can appear? (For eager runs the exhaustion gate is
+    /// vacuously true and the count equals the trace length, exactly the
+    /// old condition.)
     pub fn all_done(&self) -> bool {
-        self.shorts_done + self.longs_done + self.shorts_shed + self.longs_shed
-            == self.reqs.len()
+        self.arrivals_exhausted
+            && self.shorts_done + self.longs_done + self.shorts_shed + self.longs_shed
+                == self.arrivals_total
+    }
+}
+
+/// Fold one request's metric contributions into `m` — the single
+/// accounting routine shared by the exact collector (final pass over the
+/// dense arena, id order) and streaming retirement (settlement order).
+///
+/// `t_shorts_done` is §3.2's starvation reference. When it is still
+/// unresolved at fold time (a long retires while shorts are outstanding),
+/// the verdict for a *served* long is deferred by pushing its prefill
+/// start onto `starve_pending`, re-judged at resolution; a never-served
+/// long is starved under every reference and counts immediately.
+pub(super) fn fold_request(
+    m: &mut RunMetrics,
+    rt: &ReqRt,
+    t_shorts_done: Option<f64>,
+    starve_pending: &mut Vec<f64>,
+) {
+    // SLO accounting: a deadline request counts as met only when it
+    // finished in time — shed or never-finished deadlines are misses.
+    // Goodput counts completions still useful under the SLO (best-effort
+    // completions always are).
+    if let Some(d) = rt.req.deadline {
+        m.deadlines_total += 1;
+        if rt.finish.is_some_and(|f| f <= d) {
+            m.deadlines_met += 1;
+        }
+    }
+    if let Some(f) = rt.finish {
+        if !rt.req.deadline.is_some_and(|d| f > d) {
+            m.good_completions += 1;
+        }
+    }
+    if rt.req.is_long {
+        m.longs_total += 1;
+        if let Some(d) = rt.queueing_delay() {
+            m.long_queue_delay.add(d);
+        }
+        if let Some(j) = rt.jct() {
+            m.long_jct.add(j);
+            m.longs_completed += 1;
+            m.sched_overhead_long
+                .add(rt.sched_ns as f64 / 1e9 / j.max(1e-9));
+        }
+        // Starved = no service by the time the short workload was fully
+        // served (§3.2's Table 2 criterion).
+        match rt.prefill_start {
+            None => m.longs_starved += 1,
+            Some(s) => match t_shorts_done {
+                Some(t) => {
+                    if s > t {
+                        m.longs_starved += 1;
+                    }
+                }
+                None => starve_pending.push(s),
+            },
+        }
+    } else {
+        if let Some(d) = rt.queueing_delay() {
+            m.short_queue_delay.add(d);
+        }
+        if let Some(j) = rt.jct() {
+            m.short_jct.add(j);
+            m.shorts_completed += 1;
+            m.sched_overhead_short
+                .add(rt.sched_ns as f64 / 1e9 / j.max(1e-9));
+        }
     }
 }
 

@@ -7,6 +7,12 @@
 //! and applies the paper's §6.2 rewrite (inputs at or above a quantile →
 //! U(long_min, long_max), flagged long) so a user with the real dataset
 //! can drop it in where the synthetic generator is used.
+//!
+//! At full trace length, don't hold the result: convert once
+//! (`load_azure_trace` needs the whole file anyway — the rewrite
+//! quantile is global — then [`Trace::to_csv`] to disk) and replay it
+//! through [`super::CsvSource`] + `Simulation::new_streaming`, which
+//! keeps one row in memory at a time (DESIGN.md §6).
 
 use anyhow::{bail, Context, Result};
 

@@ -93,7 +93,9 @@ impl ArrivalProcess {
         }
     }
 
-    fn validate(&self) {
+    /// Panic on malformed process parameters — shared by the eager
+    /// generator and the streaming [`GenSource`](super::GenSource).
+    pub(crate) fn validate(&self) {
         assert!(self.mean_rps() > 0.0, "non-positive arrival rate");
         match self {
             Self::Poisson { .. } => {}

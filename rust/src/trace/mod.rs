@@ -16,6 +16,7 @@
 
 mod azure;
 mod gen;
+mod source;
 mod stats;
 
 pub use azure::{load_azure_trace, parse_azure_csv, parse_timestamp, AzureRewrite};
@@ -23,6 +24,7 @@ pub use gen::{
     generate_trace, normal_quantile, ArrivalProcess, LengthMix, LengthSampler,
     LongRewrite, TraceConfig,
 };
+pub use source::{ArrivalSource, CsvSource, GenSource, TraceSource};
 pub use stats::{histogram, percentile_of, LengthStats};
 
 

@@ -1,0 +1,337 @@
+//! Streaming arrival sources: the bounded-memory alternative to an eager
+//! [`Trace`](super::Trace).
+//!
+//! A [`ArrivalSource`] hands the simulator one request at a time, in
+//! non-decreasing arrival order, so end-to-end memory is O(in-flight
+//! requests) instead of O(trace length). The engine keeps exactly one
+//! look-ahead arrival in its event heap: popping `Arrival(i)` pulls and
+//! schedules arrival `i+1` (DESIGN.md §6).
+//!
+//! ## Draw-order invariance contract
+//!
+//! [`GenSource`] replays [`generate_trace`](super::generate_trace)'s RNG
+//! call sequence *exactly* — per request: one arrival-gap draw, then the
+//! body lognormal / conditional long-rewrite / output lognormal of
+//! [`LengthSampler::sample`] — and stamps deadlines per class inline
+//! (`arrival + slack`, the same f64 add the eager post-pass performs).
+//! Because generated arrivals are non-decreasing, the eager path's
+//! stable sort is a no-op and ids equal generation order, so the streamed
+//! request sequence is bit-identical to the eager trace: same arrival
+//! bits, lengths, flags and deadlines, request by request. The property
+//! tests in `rust/tests/source_tests.rs` enforce this across every
+//! registry policy.
+//!
+//! Equal-timestamp caveat: synthetic gaps are strictly positive, but a
+//! coarse-timestamped CSV import may contain ties. Among arrivals the
+//! streamed order still matches the eager order (both FIFO), but an
+//! arrival that ties a *service* event to the exact f64 may be handled on
+//! the other side of it than in the eager run, where all arrivals were
+//! heap-seeded first. The eager path remains the oracle for such traces.
+
+use std::io::BufRead;
+
+use crate::util::Rng;
+
+use super::{ArrivalProcess, LengthMix, LengthSampler, Request, Trace};
+
+/// A stream of requests in non-decreasing arrival order.
+///
+/// Implementations must be deterministic: two sources built from the same
+/// inputs yield the same sequence. The simulator pulls one request per
+/// consumed arrival event (look-ahead of one), so a source is the memory
+/// bound of the whole run — keep per-pull state O(1).
+pub trait ArrivalSource {
+    /// The next request, or `None` when the stream is exhausted. The `id`
+    /// field is advisory — the simulator re-assigns arena slots.
+    fn next_request(&mut self) -> Option<Request>;
+
+    /// Requests remaining, when known up front (generators know; readers
+    /// over a pipe do not). Used for progress display only — never for
+    /// allocation or termination decisions.
+    fn len_hint(&self) -> Option<usize>;
+}
+
+/// Lazily-generated scenario trace: the streaming twin of
+/// [`generate_trace`](super::generate_trace).
+///
+/// Construction mirrors the eager generator's initialization (argument
+/// validation, sampler derivation, RNG seeding) and each
+/// [`next_request`](ArrivalSource::next_request) replays one loop
+/// iteration, so the emitted sequence is bit-identical to the eager
+/// trace (see the module docs for the contract).
+#[derive(Debug)]
+pub struct GenSource {
+    arrival: ArrivalProcess,
+    sampler: LengthSampler,
+    rng: Rng,
+    t: f64,
+    emitted: usize,
+    n_requests: usize,
+    /// `(short_slack_s, long_slack_s)` — per-class deadline stamping,
+    /// folded into the source so no post-pass needs the full trace.
+    deadlines: Option<(f64, f64)>,
+}
+
+impl GenSource {
+    /// A source that will emit exactly `n_requests` requests, drawn with
+    /// the same validation and RNG seeding as the eager generator.
+    pub fn new(
+        n_requests: usize,
+        seed: u64,
+        arrival: ArrivalProcess,
+        mix: &LengthMix,
+    ) -> Self {
+        assert!(n_requests > 0, "empty trace requested");
+        arrival.validate();
+        Self {
+            sampler: mix.sampler(),
+            rng: Rng::seed_from_u64(seed),
+            t: 0.0,
+            emitted: 0,
+            n_requests,
+            deadlines: None,
+            arrival,
+        }
+    }
+
+    /// Stamp each emitted request's deadline as `arrival + slack` for its
+    /// class — the RNG stream is untouched, exactly like the eager
+    /// deadline post-pass.
+    pub fn with_deadlines(mut self, short_slack_s: f64, long_slack_s: f64) -> Self {
+        self.deadlines = Some((short_slack_s, long_slack_s));
+        self
+    }
+}
+
+impl ArrivalSource for GenSource {
+    fn next_request(&mut self) -> Option<Request> {
+        if self.emitted == self.n_requests {
+            return None;
+        }
+        self.t += self.arrival.next_gap(self.t, &mut self.rng);
+        let (input_len, output_len, is_long) = self.sampler.sample(&mut self.rng);
+        let id = self.emitted;
+        self.emitted += 1;
+        let deadline = self
+            .deadlines
+            .map(|(s, l)| self.t + if is_long { l } else { s });
+        Some(Request {
+            id,
+            arrival: self.t,
+            input_len,
+            output_len,
+            is_long,
+            deadline,
+        })
+    }
+
+    fn len_hint(&self) -> Option<usize> {
+        Some(self.n_requests - self.emitted)
+    }
+}
+
+/// Buffered-reader CSV source over the [`Trace::to_csv`] format — the
+/// import path for the real Azure trace at full length, one row in memory
+/// at a time (convert once with `load_azure_trace` + `to_csv`, then
+/// stream).
+///
+/// Rows must arrive in non-decreasing arrival order (the eager parser
+/// sorts; a streaming one cannot). Malformed rows and order violations
+/// panic with the offending line number — a trace file is configuration,
+/// not runtime input, and a silent skip would desynchronize every
+/// downstream id.
+#[derive(Debug)]
+pub struct CsvSource<R: BufRead> {
+    reader: R,
+    buf: String,
+    lineno: usize,
+    last_arrival: f64,
+    next_id: usize,
+}
+
+impl<R: BufRead> CsvSource<R> {
+    /// Wrap a buffered reader positioned at the start of the CSV (an
+    /// `arrival,...` header row is skipped if present).
+    pub fn new(reader: R) -> Self {
+        Self {
+            reader,
+            buf: String::new(),
+            lineno: 0,
+            last_arrival: f64::NEG_INFINITY,
+            next_id: 0,
+        }
+    }
+}
+
+impl<R: BufRead> ArrivalSource for CsvSource<R> {
+    fn next_request(&mut self) -> Option<Request> {
+        loop {
+            self.buf.clear();
+            let n = self
+                .reader
+                .read_line(&mut self.buf)
+                .unwrap_or_else(|e| panic!("trace CSV read failed: {e}"));
+            if n == 0 {
+                return None;
+            }
+            self.lineno += 1;
+            let line = self.buf.trim_end_matches(['\n', '\r']);
+            if line.trim().is_empty() || (self.lineno == 1 && line.starts_with("arrival")) {
+                continue;
+            }
+            let lineno = self.lineno;
+            let f: Vec<&str> = line.split(',').collect();
+            assert!(
+                f.len() == 4 || f.len() == 5,
+                "trace CSV line {lineno}: expected 4 or 5 fields"
+            );
+            let field = |i: usize, what: &str| -> f64 {
+                f[i].trim()
+                    .parse()
+                    .unwrap_or_else(|_| panic!("trace CSV line {lineno}: bad {what} {:?}", f[i]))
+            };
+            let arrival = field(0, "arrival");
+            assert!(
+                arrival >= self.last_arrival,
+                "trace CSV line {lineno}: arrivals must be non-decreasing \
+                 ({arrival} after {}); sort the file or use Trace::from_csv",
+                self.last_arrival
+            );
+            self.last_arrival = arrival;
+            let deadline = match f.get(4).map(|s| s.trim()) {
+                None | Some("") => None,
+                Some(_) => Some(field(4, "deadline")),
+            };
+            let id = self.next_id;
+            self.next_id += 1;
+            return Some(Request {
+                id,
+                arrival,
+                input_len: field(1, "input_len") as u32,
+                output_len: field(2, "output_len") as u32,
+                is_long: f[3].trim() == "1" || f[3].trim() == "true",
+                deadline,
+            });
+        }
+    }
+
+    fn len_hint(&self) -> Option<usize> {
+        None
+    }
+}
+
+/// An eager [`Trace`] replayed as a source — the adapter that lets every
+/// equivalence test (and any fault scenario that needed `trace.span()`)
+/// drive the streaming path with a known request sequence.
+#[derive(Debug)]
+pub struct TraceSource {
+    requests: Vec<Request>,
+    next: usize,
+}
+
+impl TraceSource {
+    /// Stream `trace`'s requests in order (they are already sorted).
+    pub fn new(trace: &Trace) -> Self {
+        Self {
+            requests: trace.requests.clone(),
+            next: 0,
+        }
+    }
+}
+
+impl ArrivalSource for TraceSource {
+    fn next_request(&mut self) -> Option<Request> {
+        let r = self.requests.get(self.next).copied()?;
+        self.next += 1;
+        Some(r)
+    }
+
+    fn len_hint(&self) -> Option<usize> {
+        Some(self.requests.len() - self.next)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::TraceConfig;
+    use super::*;
+
+    #[test]
+    fn gen_source_replays_generate_trace_bit_for_bit() {
+        let cfg = TraceConfig::small(800, 9.0, 13);
+        let eager = cfg.generate();
+        let mut src = GenSource::new(800, 13, cfg.arrival(), &cfg.length_mix());
+        for want in &eager.requests {
+            let got = src.next_request().expect("source ended early");
+            assert_eq!(got.arrival.to_bits(), want.arrival.to_bits());
+            assert_eq!(
+                (got.id, got.input_len, got.output_len, got.is_long, got.deadline),
+                (want.id, want.input_len, want.output_len, want.is_long, want.deadline)
+            );
+        }
+        assert!(src.next_request().is_none(), "source over-emitted");
+    }
+
+    #[test]
+    fn gen_source_deadline_stamp_matches_post_pass() {
+        let cfg = TraceConfig::small(300, 12.0, 7);
+        let mut eager = cfg.generate();
+        for r in &mut eager.requests {
+            let slack = if r.is_long { 900.0 } else { 20.0 };
+            r.deadline = Some(r.arrival + slack);
+        }
+        let mut src = GenSource::new(300, 7, cfg.arrival(), &cfg.length_mix())
+            .with_deadlines(20.0, 900.0);
+        for want in &eager.requests {
+            let got = src.next_request().expect("source ended early");
+            assert_eq!(got.deadline, want.deadline);
+            assert_eq!(got.arrival.to_bits(), want.arrival.to_bits());
+        }
+    }
+
+    #[test]
+    fn len_hint_counts_down() {
+        let cfg = TraceConfig::small(5, 4.0, 1);
+        let mut src = GenSource::new(5, 1, cfg.arrival(), &cfg.length_mix());
+        assert_eq!(src.len_hint(), Some(5));
+        src.next_request();
+        assert_eq!(src.len_hint(), Some(4));
+    }
+
+    #[test]
+    fn csv_source_replays_to_csv_output() {
+        let trace = TraceConfig::small(200, 10.0, 21).generate();
+        let csv = trace.to_csv();
+        let mut src = CsvSource::new(std::io::BufReader::new(csv.as_bytes()));
+        for want in &trace.requests {
+            let got = src.next_request().expect("csv source ended early");
+            assert_eq!(got.arrival.to_bits(), want.arrival.to_bits());
+            assert_eq!(
+                (got.input_len, got.output_len, got.is_long, got.deadline),
+                (want.input_len, want.output_len, want.is_long, want.deadline)
+            );
+        }
+        assert!(src.next_request().is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "non-decreasing")]
+    fn csv_source_rejects_out_of_order_rows() {
+        let csv = "arrival,input_len,output_len,is_long,deadline\n2.0,10,5,0,\n1.0,10,5,0,\n";
+        let mut src = CsvSource::new(std::io::BufReader::new(csv.as_bytes()));
+        src.next_request();
+        src.next_request();
+    }
+
+    #[test]
+    fn trace_source_replays_in_order() {
+        let trace = TraceConfig::small(50, 6.0, 3).generate();
+        let mut src = TraceSource::new(&trace);
+        let mut n = 0;
+        while let Some(r) = src.next_request() {
+            assert_eq!(r.id, trace.requests[n].id);
+            n += 1;
+        }
+        assert_eq!(n, trace.len());
+    }
+}

@@ -33,6 +33,12 @@ pub struct BenchReport {
     /// Raw event count of one iteration — the decode-epoch event-volume
     /// regression signal, tracked in the JSON alongside the rate.
     pub events_per_run: Option<u64>,
+    /// Process peak RSS (VmHWM) observed right after the cell ran (set
+    /// via [`BenchReport::with_peak_rss`]); `null` in the JSON when not
+    /// sampled or on platforms without `/proc`. The high-water mark is
+    /// process-wide and monotone, so suites order memory-sensitive cells
+    /// smallest-footprint first.
+    pub peak_rss_bytes: Option<u64>,
 }
 
 impl BenchReport {
@@ -43,6 +49,14 @@ impl BenchReport {
             self.events_per_s = Some(events as f64 / self.mean_s);
         }
         self.events_per_run = Some(events);
+        self
+    }
+
+    /// Record the process peak RSS ([`peak_rss_bytes`]) as of now —
+    /// called immediately after the cell's runs so the high-water mark
+    /// reflects this cell (and everything before it; see the field doc).
+    pub fn with_peak_rss(mut self) -> Self {
+        self.peak_rss_bytes = peak_rss_bytes();
         self
     }
 
@@ -108,6 +122,7 @@ impl Bench {
             min_s: samples[0],
             events_per_s: None,
             events_per_run: None,
+            peak_rss_bytes: None,
         };
         println!("{report}");
         report
@@ -143,10 +158,14 @@ pub fn write_json(path: &str, suite: &str, reports: &[BenchReport]) -> std::io::
             .events_per_run
             .map(|e| e.to_string())
             .unwrap_or_else(|| "null".into());
+        let rss = r
+            .peak_rss_bytes
+            .map(|b| b.to_string())
+            .unwrap_or_else(|| "null".into());
         out.push_str(&format!(
             "  {{\"name\": \"{}\", \"iters\": {}, \"mean_s\": {}, \"p50_s\": {}, \
              \"p99_s\": {}, \"min_s\": {}, \"ops_per_s\": {}, \"events_per_s\": {}, \
-             \"events_per_run\": {}}}",
+             \"events_per_run\": {}, \"peak_rss_bytes\": {}}}",
             esc(&r.name),
             r.iters,
             num(r.mean_s),
@@ -156,6 +175,7 @@ pub fn write_json(path: &str, suite: &str, reports: &[BenchReport]) -> std::io::
             num(r.ops_per_s()),
             events,
             events_n,
+            rss,
         ));
     }
     out.push_str("\n]}\n");
@@ -175,6 +195,23 @@ impl std::fmt::Display for BenchReport {
             fmt_s(self.min_s),
         )
     }
+}
+
+/// Process peak resident-set size in bytes, read from `/proc/self/status`
+/// `VmHWM` — the kernel's high-water mark, monotone over the process
+/// lifetime. `None` where `/proc` is unavailable (non-Linux) or the field
+/// is missing. The memory-flatness signal `pecsched huge-smoke` and the
+/// bench suites assert on: at 10⁶+ requests under streaming arrivals +
+/// retirement the mark must not grow with trace length.
+pub fn peak_rss_bytes() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            let kb: u64 = rest.trim().trim_end_matches("kB").trim().parse().ok()?;
+            return Some(kb * 1024);
+        }
+    }
+    None
 }
 
 /// Human-scale duration formatting.
@@ -199,6 +236,17 @@ mod tests {
         let r = Bench::new("noop").budget_ms(30).min_iters(5).run(|| 1 + 1);
         assert!(r.iters >= 5);
         assert!(r.min_s <= r.p50_s && r.p50_s <= r.p99_s);
+    }
+
+    #[test]
+    fn peak_rss_reads_proc_on_linux() {
+        let rss = peak_rss_bytes();
+        if cfg!(target_os = "linux") {
+            let b = rss.expect("VmHWM missing from /proc/self/status");
+            // A running test binary has touched at least a page and far
+            // less than a petabyte.
+            assert!(b > 4096 && b < (1 << 50), "implausible VmHWM {b}");
+        }
     }
 
     #[test]

@@ -8,7 +8,7 @@ pub mod cli;
 pub mod json;
 pub mod rng;
 
-pub use bench::{write_json, Bench, BenchReport};
+pub use bench::{peak_rss_bytes, write_json, Bench, BenchReport};
 pub use cli::Args;
 pub use json::Json;
 pub use rng::Rng;

@@ -1,9 +1,12 @@
 //! Bad: per-event allocations inside `sim/` event-path functions —
 //! `Vec::new`, `vec!` and `.clone()` in an `on_*`/`finish_*` body all
-//! fire `hot-path-alloc`.
+//! fire `hot-path-alloc`, and the streaming-pipeline verbs (`pull_*`,
+//! `retire_*`, `flush_*`, `fold_*`) are in scope too: they run once per
+//! request, every request, for the lifetime of a million-request run.
 
 pub struct Core {
     members: Vec<usize>,
+    pending: Vec<usize>,
 }
 
 impl Core {
@@ -12,5 +15,16 @@ impl Core {
         let mut done = Vec::new();
         done.extend(vec![0usize; n]);
         members.len() + done.len()
+    }
+
+    fn pull_next_item(&mut self) -> usize {
+        let staged = self.pending.clone();
+        staged.len()
+    }
+
+    fn flush_pending(&mut self) -> Vec<usize> {
+        let mut out = Vec::new();
+        out.extend_from_slice(&self.pending);
+        out
     }
 }

