@@ -8,7 +8,7 @@
 //! fig15 cell (512 GPUs) is the regression gate for the incremental
 //! replica index (dispatch used to rescan all replicas per arrival).
 
-use pecsched::config::{AblationFlags, DecodeMode, ModelSpec, PolicyKind};
+use pecsched::config::{AblationFlags, DecodeMode, ModelSpec, PolicyKind, PredictorKind};
 use pecsched::exp::{capacity_rps, run_sweep, SweepSpec};
 use pecsched::metrics::MetricsMode;
 use pecsched::scenario;
@@ -196,6 +196,7 @@ fn main() {
         scenarios: vec!["azure-steady".into(), "burst".into()],
         loads: vec![0.6],
         seeds: vec![1, 2],
+        predictors: vec![PredictorKind::default()],
         n_requests: 800,
         gpu_counts: vec![32],
         threads,

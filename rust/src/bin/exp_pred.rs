@@ -1,0 +1,68 @@
+//! Predictor-robustness grid (DESIGN.md §8): how much scheduling quality
+//! each prediction-driven policy loses as length predictions degrade.
+//!
+//! A thin [`SweepSpec`] over the `pred-noise` scenario crossing the
+//! prediction-driven policies (SJF, Quantile-SJF, TailAware, PecSched)
+//! with the predictor lineup: the exact oracle, the calibrated unbiased
+//! model at three noise levels, the heavy-tailed model, and the
+//! systematically-short model. The table reports each (policy, predictor)
+//! cell's p99 short queueing delay as a multiple of that policy's oracle
+//! row — the degradation factor the robustness claims of
+//! arXiv 2604.00499 / 2606.18431 are about — plus the misprediction
+//! regret (delay attributable to prediction error, 0 by construction
+//! under the oracle).
+
+use pecsched::config::{AblationFlags, ModelSpec, PolicyKind, PredictorKind};
+use pecsched::exp::{aggregate, banner, run_sweep, write_sweep_json, SweepSpec};
+
+fn main() {
+    let spec = SweepSpec {
+        models: vec![ModelSpec::mistral_7b()],
+        policies: vec![
+            PolicyKind::Sjf,
+            PolicyKind::QuantileSjf { q_milli: 900 },
+            PolicyKind::TailAware,
+            PolicyKind::PecSched(AblationFlags::full()),
+        ],
+        predictors: vec![
+            PredictorKind::Oracle,
+            PredictorKind::Unbiased { noise_milli: 100 },
+            PredictorKind::Unbiased { noise_milli: 300 },
+            PredictorKind::Unbiased { noise_milli: 600 },
+            PredictorKind::HeavyTailed { noise_milli: 300 },
+            PredictorKind::SystematicShort { noise_milli: 300 },
+        ],
+        scenarios: vec!["pred-noise".into()],
+        ..SweepSpec::from_env("pred")
+    };
+
+    banner("Predictor robustness: policy quality vs prediction noise");
+    println!("(p99 short queueing delay, normalised per policy by its oracle row)\n");
+    let results = run_sweep(&spec);
+    let rows = aggregate(&results);
+
+    // Oracle anchor per policy: the degradation denominators.
+    let oracle_p99 = |policy: &str| -> f64 {
+        rows.iter()
+            .find(|r| r.policy == policy && r.predictor == "Oracle")
+            .map(|r| r.agg.short_p99_delay_mean)
+            .unwrap_or(f64::NAN)
+    };
+
+    println!(
+        "{:<14} {:<18} {:>12} {:>10} {:>12}",
+        "policy", "predictor", "p99 delay", "vs oracle", "regret"
+    );
+    for r in &rows {
+        let base = oracle_p99(&r.policy);
+        let p99 = r.agg.short_p99_delay_mean;
+        let factor = if base > 0.0 { p99 / base } else { f64::NAN };
+        println!(
+            "{:<14} {:<18} {:>11.3}s {:>9.2}x {:>11.3}s",
+            r.policy, r.predictor, p99, factor, r.agg.mispredict_regret_mean
+        );
+    }
+
+    write_sweep_json("SWEEP_pred.json", &spec, &results).expect("write SWEEP_pred.json");
+    println!("\nwrote SWEEP_pred.json ({} cells)", results.len());
+}

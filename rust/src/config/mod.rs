@@ -7,9 +7,11 @@
 
 mod model;
 mod policy;
+mod predictor;
 
 pub use model::{ModelSpec, BYTES_PER_PARAM};
 pub use policy::{AblationFlags, PolicyKind};
+pub use predictor::PredictorKind;
 
 /// How the simulator advances batched decode progress.
 ///

@@ -135,9 +135,41 @@ pub enum PolicyKind {
     /// ELIS-style shortest-predicted-output-first (arXiv 2505.09142),
     /// written purely against the policy API boundary.
     Sjf,
+    /// Quantile-SJF (arXiv 2604.00499): rank by a configurable quantile
+    /// of the predictor's *believed* error distribution instead of its
+    /// point estimate. `q_milli` is the quantile in milli units
+    /// (900 ⇒ q = 0.9) so the kind stays `Copy + Eq`. At q = 0.5 on a
+    /// symmetric error model this degenerates to [`PolicyKind::Sjf`].
+    QuantileSjf {
+        /// Scheduling quantile in milli units (500 = median).
+        q_milli: u32,
+    },
+    /// Tail-aware Gittins-style SJF (arXiv 2606.18431): predicted-short
+    /// ranking plus a linear waiting-time credit, so a mispredicted
+    /// request ages out of the back of the fast lane instead of starving
+    /// behind an endless stream of shorter predictions.
+    TailAware,
     /// The paper's system.
     PecSched(AblationFlags),
 }
+
+/// Registered Quantile-SJF operating points: the table behind
+/// [`PolicyKind::cli_name`] / [`PolicyKind::description`] /
+/// [`PolicyKind::all`] for the `QuantileSjf` family (mirrors
+/// `PECSCHED_VARIANTS` — add an operating point here once and parsing,
+/// listing and sweeps pick it up).
+const QUANTILE_SJF_POINTS: [(u32, &str, &str); 2] = [
+    (
+        900,
+        "quantile-sjf",
+        "quantile-SJF at q=0.9: rank by the believed p90 length (arXiv 2604.00499)",
+    ),
+    (
+        500,
+        "quantile-sjf-p50",
+        "quantile-SJF at the median: degenerates to SJF under zero noise",
+    ),
+];
 
 impl PolicyKind {
     /// Display name used in tables and JSON (`"FIFO"`, `"PecSched/PE"`, ...).
@@ -147,6 +179,8 @@ impl PolicyKind {
             PolicyKind::Reservation => "Reservation".into(),
             PolicyKind::Priority => "Priority".into(),
             PolicyKind::Sjf => "SJF".into(),
+            PolicyKind::QuantileSjf { q_milli } => format!("Q-SJF(q{})", q_milli / 10),
+            PolicyKind::TailAware => "TailAware".into(),
             PolicyKind::PecSched(f) => f.label().into(),
         }
     }
@@ -163,6 +197,12 @@ impl PolicyKind {
             PolicyKind::Reservation => "reservation",
             PolicyKind::Priority => "priority",
             PolicyKind::Sjf => "sjf",
+            PolicyKind::QuantileSjf { q_milli } => QUANTILE_SJF_POINTS
+                .iter()
+                .find(|(q, _, _)| q == q_milli)
+                .map(|(_, cli, _)| *cli)
+                .unwrap_or("quantile-sjf-custom"),
+            PolicyKind::TailAware => "tail-aware",
             PolicyKind::PecSched(f) => PECSCHED_VARIANTS
                 .iter()
                 .find(|v| v.flags == *f)
@@ -184,7 +224,15 @@ impl PolicyKind {
                 "Past-Future-style: shorts always first, longs on leftover idle"
             }
             PolicyKind::Sjf => {
-                "ELIS-style shortest-predicted-output-first with a proxy predictor"
+                "ELIS-style shortest-predicted-output-first on the configured predictor"
+            }
+            PolicyKind::QuantileSjf { q_milli } => QUANTILE_SJF_POINTS
+                .iter()
+                .find(|(q, _, _)| q == q_milli)
+                .map(|(_, _, desc)| *desc)
+                .unwrap_or("quantile-SJF at a custom scheduling quantile"),
+            PolicyKind::TailAware => {
+                "Gittins-style tail-aware SJF: waiting-time credit ages mispredictions forward"
             }
             PolicyKind::PecSched(f) => PECSCHED_VARIANTS
                 .iter()
@@ -201,12 +249,19 @@ impl PolicyKind {
     /// implementation needs.
     pub fn all() -> Vec<Self> {
         let mut v = vec![Self::Fifo, Self::Reservation, Self::Priority, Self::Sjf];
+        v.extend(
+            QUANTILE_SJF_POINTS
+                .iter()
+                .map(|(q, _, _)| Self::QuantileSjf { q_milli: *q }),
+        );
+        v.push(Self::TailAware);
         v.extend(PECSCHED_VARIANTS.iter().map(|p| Self::PecSched(p.flags)));
         v
     }
 
     /// Parse a CLI policy name against the [`PolicyKind::all`] registry
-    /// (`fifo | reservation | priority | sjf | pecsched | pecsched-no-pe |
+    /// (`fifo | reservation | priority | sjf | quantile-sjf |
+    /// quantile-sjf-p50 | tail-aware | pecsched | pecsched-no-pe |
     /// pecsched-no-dis | pecsched-no-col | pecsched-no-fsp`).
     pub fn parse(s: &str) -> Option<Self> {
         Self::all().into_iter().find(|k| k.cli_name() == s)
@@ -266,6 +321,9 @@ mod tests {
             ("reservation", PolicyKind::Reservation),
             ("priority", PolicyKind::Priority),
             ("sjf", PolicyKind::Sjf),
+            ("quantile-sjf", PolicyKind::QuantileSjf { q_milli: 900 }),
+            ("quantile-sjf-p50", PolicyKind::QuantileSjf { q_milli: 500 }),
+            ("tail-aware", PolicyKind::TailAware),
             ("pecsched", PolicyKind::PecSched(AblationFlags::full())),
             ("pecsched-no-pe", PolicyKind::PecSched(AblationFlags::no_preemption())),
             ("pecsched-no-dis", PolicyKind::PecSched(AblationFlags::no_disaggregation())),
@@ -297,7 +355,22 @@ mod tests {
             assert_eq!(PolicyKind::parse(k.cli_name()), Some(*k));
             assert!(!k.description().is_empty());
         }
-        // The new-policy slot is registered and sweepable by name.
+        // The new-policy slots are registered and sweepable by name.
         assert!(all.contains(&PolicyKind::Sjf));
+        assert!(all.contains(&PolicyKind::QuantileSjf { q_milli: 900 }));
+        assert!(all.contains(&PolicyKind::QuantileSjf { q_milli: 500 }));
+        assert!(all.contains(&PolicyKind::TailAware));
+    }
+
+    #[test]
+    fn quantile_sjf_names_encode_the_quantile() {
+        assert_eq!(PolicyKind::QuantileSjf { q_milli: 900 }.name(), "Q-SJF(q90)");
+        assert_eq!(PolicyKind::QuantileSjf { q_milli: 500 }.name(), "Q-SJF(q50)");
+        // An unregistered operating point still has a stable (if
+        // unparseable) CLI spelling, mirroring pecsched-custom.
+        assert_eq!(
+            PolicyKind::QuantileSjf { q_milli: 750 }.cli_name(),
+            "quantile-sjf-custom"
+        );
     }
 }

@@ -1,0 +1,210 @@
+//! The predictor registry: every output-length prediction model a run
+//! can be configured with, as a CLI-parseable value type.
+//!
+//! [`PredictorKind`] is to [`crate::pred`] what [`super::PolicyKind`] is
+//! to [`crate::sched`]: a `Copy + Eq` grid key the sweep runner can
+//! enumerate, parse from `--predictors`, and round-trip through its CLI
+//! name byte-for-byte. Noise levels are stored in *milli* units
+//! (`noise_milli == 300` means σ = 0.3) so the kind stays hashable and
+//! exactly comparable — no `f64` field, no `Eq` loophole.
+
+/// Selects the output-length predictor a simulation run is built with
+/// (instantiated by [`crate::pred::build`]).
+///
+/// The three noisy kinds carry their noise level σ in milli units; see
+/// [`crate::pred`] for the exact error model each one implements and
+/// the determinism rules they all obey.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PredictorKind {
+    /// The deterministic two-piece proxy curve over the *input* length
+    /// (PR 5's `sched/sjf.rs::LenPredictor`, migrated to
+    /// [`crate::pred::ProxyCurve`]). The default: golden replays predate
+    /// the predictor axis and must keep their bytes.
+    #[default]
+    ProxyCurve,
+    /// Exact oracle: the true output length, the true class, zero error.
+    Oracle,
+    /// Lognormal relative error centred on the truth — the calibrated
+    /// well-behaved predictor of arXiv 2604.00499.
+    Unbiased {
+        /// σ of the ln-factor, in milli units (300 ⇒ σ = 0.3).
+        noise_milli: u32,
+    },
+    /// Mostly-lognormal error with symmetric exponential (Pareto-like
+    /// ln-factor) outlier tails — the occasionally-wildly-wrong
+    /// predictor arXiv 2606.18431 shows breaks point-estimate SJF.
+    HeavyTailed {
+        /// σ of the central ln-factor, in milli units.
+        noise_milli: u32,
+    },
+    /// Systematic underestimation: every prediction is biased short by
+    /// `e^{-σ}` while the *believed* error distribution stays narrow —
+    /// the miscalibration failure mode of arXiv 2606.18431.
+    SystematicShort {
+        /// Bias σ in milli units (the believed jitter is 0.1σ).
+        noise_milli: u32,
+    },
+}
+
+impl PredictorKind {
+    /// Human-readable display name (tables, banners).
+    pub fn name(&self) -> String {
+        match self {
+            PredictorKind::ProxyCurve => "ProxyCurve".into(),
+            PredictorKind::Oracle => "Oracle".into(),
+            PredictorKind::Unbiased { noise_milli } => {
+                format!("Unbiased(s={})", *noise_milli as f64 / 1000.0)
+            }
+            PredictorKind::HeavyTailed { noise_milli } => {
+                format!("HeavyTailed(s={})", *noise_milli as f64 / 1000.0)
+            }
+            PredictorKind::SystematicShort { noise_milli } => {
+                format!("SystShort(s={})", *noise_milli as f64 / 1000.0)
+            }
+        }
+    }
+
+    /// The exact string [`PredictorKind::parse`] round-trips: the base
+    /// name, plus an `@<sigma>` suffix for the noisy kinds (f64 `Display`
+    /// prints the shortest representation, so `300` renders `@0.3` and
+    /// parses back to `300`).
+    pub fn cli_name(&self) -> String {
+        match self {
+            PredictorKind::ProxyCurve => "proxy".into(),
+            PredictorKind::Oracle => "oracle".into(),
+            PredictorKind::Unbiased { noise_milli } => {
+                format!("unbiased@{}", *noise_milli as f64 / 1000.0)
+            }
+            PredictorKind::HeavyTailed { noise_milli } => {
+                format!("heavy-tailed@{}", *noise_milli as f64 / 1000.0)
+            }
+            PredictorKind::SystematicShort { noise_milli } => {
+                format!("syst-short@{}", *noise_milli as f64 / 1000.0)
+            }
+        }
+    }
+
+    /// One-line description for `pecsched list-predictors`.
+    pub fn description(&self) -> &'static str {
+        match self {
+            PredictorKind::ProxyCurve => {
+                "deterministic input-length proxy curve (PR-5 SJF default; golden-stable)"
+            }
+            PredictorKind::Oracle => "exact oracle: true output length, true class, zero error",
+            PredictorKind::Unbiased { .. } => {
+                "lognormal relative error, calibrated quantiles (arXiv 2604.00499)"
+            }
+            PredictorKind::HeavyTailed { .. } => {
+                "lognormal body + exponential ln-factor outlier tails (arXiv 2606.18431)"
+            }
+            PredictorKind::SystematicShort { .. } => {
+                "consistent underestimation with overconfident believed error (2606.18431)"
+            }
+        }
+    }
+
+    /// The noise level σ this kind is parameterised by (0 for the
+    /// noise-free kinds).
+    pub fn noise(&self) -> f64 {
+        match self {
+            PredictorKind::ProxyCurve | PredictorKind::Oracle => 0.0,
+            PredictorKind::Unbiased { noise_milli }
+            | PredictorKind::HeavyTailed { noise_milli }
+            | PredictorKind::SystematicShort { noise_milli } => *noise_milli as f64 / 1000.0,
+        }
+    }
+
+    /// Every registered predictor at its default noise level — what
+    /// `--predictors all` expands to.
+    pub fn all() -> Vec<PredictorKind> {
+        vec![
+            PredictorKind::ProxyCurve,
+            PredictorKind::Oracle,
+            PredictorKind::Unbiased { noise_milli: 300 },
+            PredictorKind::HeavyTailed { noise_milli: 300 },
+            PredictorKind::SystematicShort { noise_milli: 300 },
+        ]
+    }
+
+    /// Parse a CLI name: a base name (`proxy`, `oracle`, `unbiased`,
+    /// `heavy-tailed`, `syst-short`), optionally suffixed `@<sigma>`
+    /// (decimal, e.g. `unbiased@0.6`) for the noisy kinds. A bare noisy
+    /// name means σ = 0.3; the noise-free kinds reject a suffix.
+    pub fn parse(s: &str) -> Option<PredictorKind> {
+        let (base, sigma) = match s.split_once('@') {
+            Some((b, n)) => (b, Some(n.parse::<f64>().ok()?)),
+            None => (s, None),
+        };
+        let milli = |default: f64| -> Option<u32> {
+            let sig = sigma.unwrap_or(default);
+            if !sig.is_finite() || !(0.0..=1000.0).contains(&sig) {
+                return None;
+            }
+            Some((sig * 1000.0).round() as u32)
+        };
+        match base {
+            "proxy" if sigma.is_none() => Some(PredictorKind::ProxyCurve),
+            "oracle" if sigma.is_none() => Some(PredictorKind::Oracle),
+            "unbiased" => Some(PredictorKind::Unbiased {
+                noise_milli: milli(0.3)?,
+            }),
+            "heavy-tailed" => Some(PredictorKind::HeavyTailed {
+                noise_milli: milli(0.3)?,
+            }),
+            "syst-short" => Some(PredictorKind::SystematicShort {
+                noise_milli: milli(0.3)?,
+            }),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cli_names_roundtrip_exactly() {
+        for k in PredictorKind::all() {
+            assert_eq!(PredictorKind::parse(&k.cli_name()), Some(k));
+        }
+        // Non-default noise levels round-trip too (incl. trailing zeros
+        // collapsed by shortest-repr Display).
+        for k in [
+            PredictorKind::Unbiased { noise_milli: 0 },
+            PredictorKind::Unbiased { noise_milli: 100 },
+            PredictorKind::HeavyTailed { noise_milli: 600 },
+            PredictorKind::SystematicShort { noise_milli: 50 },
+        ] {
+            assert_eq!(PredictorKind::parse(&k.cli_name()), Some(k));
+        }
+    }
+
+    #[test]
+    fn parse_defaults_and_rejections() {
+        assert_eq!(
+            PredictorKind::parse("unbiased"),
+            Some(PredictorKind::Unbiased { noise_milli: 300 })
+        );
+        assert_eq!(
+            PredictorKind::parse("heavy-tailed@0.6"),
+            Some(PredictorKind::HeavyTailed { noise_milli: 600 })
+        );
+        assert_eq!(PredictorKind::parse("proxy@0.3"), None);
+        assert_eq!(PredictorKind::parse("oracle@0"), None);
+        assert_eq!(PredictorKind::parse("unbiased@-1"), None);
+        assert_eq!(PredictorKind::parse("unbiased@nope"), None);
+        assert_eq!(PredictorKind::parse("nonesuch"), None);
+        assert_eq!(PredictorKind::default(), PredictorKind::ProxyCurve);
+    }
+
+    #[test]
+    fn noise_matches_milli() {
+        assert_eq!(PredictorKind::Oracle.noise(), 0.0);
+        assert_eq!(PredictorKind::Unbiased { noise_milli: 300 }.noise(), 0.3);
+        assert_eq!(
+            PredictorKind::SystematicShort { noise_milli: 50 }.noise(),
+            0.05
+        );
+    }
+}

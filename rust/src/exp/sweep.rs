@@ -21,7 +21,7 @@ use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
-use crate::config::{ClusterSpec, ModelSpec, PolicyKind, SchedParams};
+use crate::config::{ClusterSpec, ModelSpec, PolicyKind, PredictorKind, SchedParams};
 use crate::metrics::{aggregate_seeds, MetricsMode, RunSummary, SeedAggregate, TailDigest};
 use crate::scenario;
 use crate::sim::SimConfig;
@@ -42,6 +42,10 @@ pub struct SweepSpec {
     /// Load levels, as fractions of each model's calibrated capacity.
     pub loads: Vec<f64>,
     pub seeds: Vec<u64>,
+    /// Length-prediction models (DESIGN.md §8) each cell runs under; the
+    /// default axis is the single [`PredictorKind::ProxyCurve`], which
+    /// keeps pre-existing sweeps byte-identical.
+    pub predictors: Vec<PredictorKind>,
     pub n_requests: usize,
     /// Cluster sizes (total GPUs). For sizes other than the default
     /// testbed the arrival rate scales linearly and the request count by
@@ -62,6 +66,7 @@ impl SweepSpec {
             scenarios: vec!["azure-steady".to_string()],
             loads: vec![ExpParams::default().load],
             seeds: vec![ExpParams::default().seed],
+            predictors: vec![PredictorKind::default()],
             n_requests: ExpParams::default().n_requests,
             gpu_counts: vec![ClusterSpec::default().total_gpus()],
             threads: default_threads(),
@@ -81,8 +86,8 @@ impl SweepSpec {
     }
 
     /// The grid, flattened in canonical order: model, cluster size,
-    /// scenario, load, seed, policy (policy innermost so per-model tables
-    /// read off consecutive runs of cells).
+    /// scenario, load, seed, predictor, policy (policy innermost so
+    /// per-model tables read off consecutive runs of cells).
     pub fn cells(&self) -> Vec<SweepCell> {
         let mut out = Vec::new();
         for model in &self.models {
@@ -90,15 +95,18 @@ impl SweepSpec {
                 for scen in &self.scenarios {
                     for &load in &self.loads {
                         for &seed in &self.seeds {
-                            for &policy in &self.policies {
-                                out.push(SweepCell {
-                                    model: model.clone(),
-                                    policy,
-                                    scenario: scen.clone(),
-                                    load,
-                                    seed,
-                                    gpus,
-                                });
+                            for &predictor in &self.predictors {
+                                for &policy in &self.policies {
+                                    out.push(SweepCell {
+                                        model: model.clone(),
+                                        policy,
+                                        predictor,
+                                        scenario: scen.clone(),
+                                        load,
+                                        seed,
+                                        gpus,
+                                    });
+                                }
                             }
                         }
                     }
@@ -122,6 +130,7 @@ impl SweepSpec {
         assert!(!self.scenarios.is_empty(), "sweep with no scenarios");
         assert!(!self.loads.is_empty(), "sweep with no loads");
         assert!(!self.seeds.is_empty(), "sweep with no seeds");
+        assert!(!self.predictors.is_empty(), "sweep with no predictors");
         assert!(!self.gpu_counts.is_empty(), "sweep with no cluster sizes");
         assert!(self.n_requests > 0, "sweep with zero requests per cell");
         for &g in &self.gpu_counts {
@@ -150,6 +159,8 @@ impl SweepSpec {
 pub struct SweepCell {
     pub model: ModelSpec,
     pub policy: PolicyKind,
+    /// The length-prediction model this cell's policies read.
+    pub predictor: PredictorKind,
     pub scenario: String,
     pub load: f64,
     pub seed: u64,
@@ -199,6 +210,7 @@ fn run_one(spec: &SweepSpec, cell: &SweepCell) -> CellResult {
         ((spec.n_requests as f64 * scale.sqrt()) as usize).max(1)
     };
     let mut cfg = SimConfig::for_policy(cell.model.clone(), cell.policy);
+    cfg.predictor = cell.predictor;
     if cell.gpus != base_gpus {
         cfg.cluster = ClusterSpec::with_total_gpus(cell.gpus);
         cfg.params.decode_replicas = (SchedParams::decode_replicas_for(&cell.model) as f64
@@ -272,12 +284,14 @@ pub fn run_sweep(spec: &SweepSpec) -> Vec<CellResult> {
         .collect()
 }
 
-/// One cross-seed aggregate row: a (model, policy, scenario, load, gpus)
-/// group reduced over its seeds.
+/// One cross-seed aggregate row: a (model, policy, predictor, scenario,
+/// load, gpus) group reduced over its seeds.
 #[derive(Debug, Clone)]
 pub struct AggregateRow {
     pub model: String,
     pub policy: String,
+    /// Display name of the group's [`PredictorKind`].
+    pub predictor: String,
     pub scenario: String,
     pub load: f64,
     pub gpus: usize,
@@ -295,7 +309,7 @@ pub struct AggregateRow {
 /// deterministic output order comes from the first-seen `Vec` alone (and
 /// the D1 lint keeps order-nondeterministic maps out of this path).
 pub fn aggregate(results: &[CellResult]) -> Vec<AggregateRow> {
-    type Key = (String, String, String, u64, usize);
+    type Key = (String, String, String, String, u64, usize);
     let mut index: BTreeMap<Key, usize> = BTreeMap::new();
     let mut keys: Vec<Key> = Vec::new();
     let mut groups: Vec<Vec<RunSummary>> = Vec::new();
@@ -307,6 +321,7 @@ pub fn aggregate(results: &[CellResult]) -> Vec<AggregateRow> {
         let key = (
             r.cell.model.name.clone(),
             r.cell.policy.name(),
+            r.cell.predictor.name(),
             r.cell.scenario.clone(),
             r.cell.load.to_bits(),
             r.cell.gpus,
@@ -328,9 +343,10 @@ pub fn aggregate(results: &[CellResult]) -> Vec<AggregateRow> {
         .zip(groups)
         .zip(pooled)
         .map(
-            |(((model, policy, scenario, load_bits, gpus), g), mut dig)| AggregateRow {
+            |(((model, policy, predictor, scenario, load_bits, gpus), g), mut dig)| AggregateRow {
                 model,
                 policy,
+                predictor,
                 scenario,
                 load: f64::from_bits(load_bits),
                 gpus,
@@ -376,6 +392,10 @@ pub fn sweep_json(spec: &SweepSpec, results: &[CellResult]) -> Json {
             "policies",
             str_arr(&spec.policies.iter().map(|p| p.name()).collect::<Vec<_>>()),
         ),
+        (
+            "predictors",
+            str_arr(&spec.predictors.iter().map(|p| p.name()).collect::<Vec<_>>()),
+        ),
         ("scenarios", str_arr(&spec.scenarios)),
         (
             "loads",
@@ -399,6 +419,7 @@ pub fn sweep_json(spec: &SweepSpec, results: &[CellResult]) -> Json {
                 obj(vec![
                     ("model", Json::Str(r.cell.model.name.clone())),
                     ("policy", Json::Str(r.cell.policy.name())),
+                    ("predictor", Json::Str(r.cell.predictor.name())),
                     ("scenario", Json::Str(r.cell.scenario.clone())),
                     ("load", num(r.cell.load)),
                     ("seed", num(r.cell.seed as f64)),
@@ -425,6 +446,7 @@ pub fn sweep_json(spec: &SweepSpec, results: &[CellResult]) -> Json {
                     ("deadlines_met", num(s.deadlines_met as f64)),
                     ("slo_attainment", num(s.slo_attainment())),
                     ("goodput_rps", num(s.goodput_rps())),
+                    ("mispredict_regret_s", num(s.mispredict_regret)),
                 ])
             })
             .collect(),
@@ -437,6 +459,7 @@ pub fn sweep_json(spec: &SweepSpec, results: &[CellResult]) -> Json {
                 obj(vec![
                     ("model", Json::Str(row.model)),
                     ("policy", Json::Str(row.policy)),
+                    ("predictor", Json::Str(row.predictor)),
                     ("scenario", Json::Str(row.scenario)),
                     ("load", num(row.load)),
                     ("gpus", num(row.gpus as f64)),
@@ -452,6 +475,7 @@ pub fn sweep_json(spec: &SweepSpec, results: &[CellResult]) -> Json {
                     ("slo_attainment_mean", num(row.agg.slo_attainment_mean)),
                     ("goodput_rps_mean", num(row.agg.goodput_rps_mean)),
                     ("shed_frac_mean", num(row.agg.shed_frac_mean)),
+                    ("mispredict_regret_mean_s", num(row.agg.mispredict_regret_mean)),
                 ])
             })
             .collect(),
@@ -492,6 +516,7 @@ mod tests {
             scenarios: vec!["azure-steady".into(), "burst".into()],
             loads: vec![0.5],
             seeds: vec![1, 2],
+            predictors: vec![PredictorKind::default()],
             n_requests: 250,
             gpu_counts: vec![32],
             threads,
@@ -516,6 +541,7 @@ mod tests {
             cells.len(),
             spec.models.len()
                 * spec.policies.len()
+                * spec.predictors.len()
                 * spec.scenarios.len()
                 * spec.loads.len()
                 * spec.seeds.len()
@@ -562,6 +588,7 @@ mod tests {
             scenarios: vec!["failures".into()],
             loads: vec![0.5],
             seeds: vec![3],
+            predictors: vec![PredictorKind::default()],
             n_requests: 250,
             gpu_counts: vec![32],
             threads: 1,
@@ -610,6 +637,7 @@ mod tests {
             scenarios: vec!["deadline-mix".into()],
             loads: vec![0.5],
             seeds: vec![3],
+            predictors: vec![PredictorKind::default()],
             n_requests: 250,
             gpu_counts: vec![32],
             threads: 1,

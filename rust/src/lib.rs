@@ -50,6 +50,11 @@ pub mod exp;
 #[warn(missing_docs)]
 pub mod lint;
 pub mod metrics;
+// The length-prediction subsystem (DESIGN.md §8): the layer between the
+// trace and the policies, with the same doc discipline as the policy
+// boundary it feeds.
+#[warn(missing_docs)]
+pub mod pred;
 pub mod runtime;
 pub mod scenario;
 // `missing_docs` warns at build time and is denied in CI's doc gate

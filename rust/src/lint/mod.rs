@@ -53,7 +53,7 @@ use scan::{has_token, parse_allows, CleanSource};
 /// JSON rendering sit on the deterministic path; its bench timer is the
 /// one legitimate wall-clock user and carries justified allows.
 const SIM_TIME_MODULES: &[&str] = &[
-    "sim", "sched", "scenario", "trace", "exp", "metrics", "util",
+    "sim", "sched", "scenario", "trace", "exp", "metrics", "util", "pred",
 ];
 
 /// The `sim` items `sched/` is allowed to name: the typed view/ops
@@ -118,6 +118,7 @@ const TRACKED_ENUMS: &[&str] = &[
     "DrainOutcome",
     "ShedOutcome",
     "FaultKind",
+    "PredictorKind",
 ];
 
 /// One invariant the lint enforces. `id()` is the name used in

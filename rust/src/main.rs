@@ -7,6 +7,7 @@
 //!                      seeds) grid in parallel and write `SWEEP_*.json`;
 //! * `list-scenarios` — show the scenario registry;
 //! * `list-policies`  — show the policy registry (`PolicyKind::all`);
+//! * `list-predictors` — show the predictor registry (`PredictorKind::all`);
 //! * `trace-gen`      — emit a scenario-shaped trace as CSV on stdout;
 //! * `serve`          — run the real PJRT serving engine on a synthetic
 //!                      workload;
@@ -23,7 +24,7 @@
 
 use anyhow::{bail, Result};
 
-use pecsched::config::{ModelSpec, PolicyKind};
+use pecsched::config::{ModelSpec, PolicyKind, PredictorKind};
 use pecsched::costmodel::{sp, CostModel};
 use pecsched::exp::{self, ExpParams, SweepSpec};
 use pecsched::scenario;
@@ -44,14 +45,18 @@ COMMANDS
                   models:   mistral-7b | phi-3-14b | yi-34b | llama-3.1-70b
   sweep           [--name NAME] [--models a,b|all]
                   [--policies p,q|all|comparison|ablation]
-                  [--scenarios s,t] [--loads 0.5,0.8] [--seeds 1,2,3]
+                  [--predictors p,q|all] [--scenarios s,t]
+                  [--loads 0.5,0.8] [--seeds 1,2,3]
                   [--gpus 32,512] [--requests N] [--threads T] [--out FILE]
                   runs the grid in parallel; the JSON is byte-identical
                   for any --threads value; policy names from the registry
                   (`all` = the whole registry as shown by `list-policies`,
-                  `comparison` = the §6.3 lineup, `ablation` = §6.4)
+                  `comparison` = the §6.3 lineup, `ablation` = §6.4);
+                  predictor names from `list-predictors` (noise level via
+                  `@`, e.g. unbiased@0.6; `all` = the registry lineup)
   list-scenarios  show the scenario registry (names, shapes, failures)
   list-policies   show the policy registry (CLI name, display name, role)
+  list-predictors show the predictor registry (DESIGN.md §8 noise models)
   trace-gen       [--scenario <s>] [--requests N] [--rps F] [--seed S]
   serve           [--artifacts DIR] [--requests N] [--mode fifo|pecsched]
   plan-sp         [--model <name>] [--input-len N]
@@ -87,6 +92,7 @@ fn main() -> Result<()> {
         "sweep" => cmd_sweep(&args),
         "list-scenarios" => cmd_list_scenarios(),
         "list-policies" => cmd_list_policies(),
+        "list-predictors" => cmd_list_predictors(),
         "trace-gen" => cmd_trace_gen(&args),
         "serve" => cmd_serve(&args),
         "plan-sp" => cmd_plan_sp(&args),
@@ -190,6 +196,21 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     if let Some(s) = args.get("seeds") {
         spec.seeds = parse_num_list::<u64>(s, "seeds")?;
     }
+    if let Some(p) = args.get("predictors") {
+        spec.predictors = match p {
+            "all" => PredictorKind::all(),
+            list => split_list(list)
+                .iter()
+                .map(|x| {
+                    PredictorKind::parse(x).ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "unknown predictor {x} (see `pecsched list-predictors`)"
+                        )
+                    })
+                })
+                .collect::<Result<_>>()?,
+        };
+    }
     if let Some(g) = args.get("gpus") {
         spec.gpu_counts = parse_num_list::<usize>(g, "gpus")?;
     }
@@ -199,11 +220,12 @@ fn cmd_sweep(args: &Args) -> Result<()> {
 
     let n_cells = spec.cells().len();
     println!(
-        "sweep '{}': {} cells ({} models x {} policies x {} scenarios x {} loads x {} seeds x {} cluster sizes), {} threads",
+        "sweep '{}': {} cells ({} models x {} policies x {} predictors x {} scenarios x {} loads x {} seeds x {} cluster sizes), {} threads",
         spec.name,
         n_cells,
         spec.models.len(),
         spec.policies.len(),
+        spec.predictors.len(),
         spec.scenarios.len(),
         spec.loads.len(),
         spec.seeds.len(),
@@ -215,14 +237,15 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     let wall = t0.elapsed().as_secs_f64();
 
     println!(
-        "\n{:<16} {:<14} {:<13} {:>5} {:>6} {:>12} {:>10} {:>12} {:>9}",
-        "model", "policy", "scenario", "load", "seeds", "p99 delay", "+/-", "short RPS", "long JCT"
+        "\n{:<16} {:<14} {:<18} {:<13} {:>5} {:>6} {:>12} {:>10} {:>12} {:>9}",
+        "model", "policy", "predictor", "scenario", "load", "seeds", "p99 delay", "+/-", "short RPS", "long JCT"
     );
     for row in exp::aggregate(&results) {
         println!(
-            "{:<16} {:<14} {:<13} {:>5.2} {:>6} {:>11.3}s {:>10} {:>12.2} {:>8.1}s",
+            "{:<16} {:<14} {:<18} {:<13} {:>5.2} {:>6} {:>11.3}s {:>10} {:>12.2} {:>8.1}s",
             row.model,
             row.policy,
+            row.predictor,
             row.scenario,
             row.load,
             row.agg.seeds,
@@ -282,6 +305,14 @@ fn cmd_list_policies() -> Result<()> {
     println!("{:<16} {:<14}  description", "name", "table label");
     for k in PolicyKind::all() {
         println!("{:<16} {:<14}  {}", k.cli_name(), k.name(), k.description());
+    }
+    Ok(())
+}
+
+fn cmd_list_predictors() -> Result<()> {
+    println!("{:<20} {:<22}  description", "name", "table label");
+    for k in PredictorKind::all() {
+        println!("{:<20} {:<22}  {}", k.cli_name(), k.name(), k.description());
     }
     Ok(())
 }

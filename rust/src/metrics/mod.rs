@@ -368,6 +368,12 @@ pub struct RunMetrics {
     pub t_shorts_done: f64,
     /// Eq. (1) idle rate over the run.
     pub gpu_idle_rate: f64,
+    /// Misprediction regret (DESIGN.md §8): each short's queueing delay
+    /// weighted by the configured predictor's capped relative length
+    /// error on that request, summed in seconds. Isolates how much of
+    /// the queueing the scheduler inflicted on requests it mis-sized —
+    /// exactly 0.0 under the Oracle predictor.
+    pub mispredict_regret: f64,
     /// Simulated events the engine processed — the event-volume regression
     /// signal for the decode epoch fast-forward (events per completion is
     /// O(1) between interruptions instead of O(output_len / decode_chunk)).
@@ -447,6 +453,7 @@ impl RunMetrics {
             longs_starved: self.longs_starved,
             preemptions: self.preemptions,
             gpu_idle_rate: self.gpu_idle_rate,
+            mispredict_regret: self.mispredict_regret,
             makespan: self.makespan,
             events_processed: self.events_processed,
         }
@@ -478,6 +485,9 @@ pub struct RunSummary {
     pub longs_starved: usize,
     pub preemptions: u64,
     pub gpu_idle_rate: f64,
+    /// Misprediction regret, seconds (see
+    /// [`RunMetrics::mispredict_regret`]).
+    pub mispredict_regret: f64,
     pub makespan: f64,
     pub events_processed: u64,
 }
@@ -544,6 +554,8 @@ pub struct SeedAggregate {
     pub goodput_rps_mean: f64,
     /// Mean fraction of arrivals shed at admission across seeds.
     pub shed_frac_mean: f64,
+    /// Mean misprediction regret (seconds) across seeds.
+    pub mispredict_regret_mean: f64,
 }
 
 /// Aggregate one group of per-seed summaries (all from the same
@@ -565,6 +577,7 @@ pub fn aggregate_seeds(runs: &[RunSummary]) -> SeedAggregate {
         slo_attainment_mean: mean(&|r| r.slo_attainment()),
         goodput_rps_mean: mean(&|r| r.goodput_rps()),
         shed_frac_mean: mean(&|r| r.shed_frac()),
+        mispredict_regret_mean: mean(&|r| r.mispredict_regret),
     }
 }
 
@@ -803,6 +816,7 @@ mod tests {
             long_jct_mean: 100.0,
             preemptions: 4,
             gpu_idle_rate: 0.5,
+            mispredict_regret: rps / 10.0,
             ..Default::default()
         };
         let a = aggregate_seeds(&[mk(1.0, 10.0), mk(3.0, 20.0)]);
@@ -812,6 +826,7 @@ mod tests {
         assert_eq!(a.short_p99_delay_max, 3.0);
         assert!((a.short_rps_mean - 15.0).abs() < 1e-12);
         assert!((a.preemptions_mean - 4.0).abs() < 1e-12);
+        assert!((a.mispredict_regret_mean - 1.5).abs() < 1e-12);
     }
 
     #[test]

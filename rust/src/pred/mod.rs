@@ -1,0 +1,518 @@
+//! Output-length prediction: the layer between the trace and the
+//! policies.
+//!
+//! PecSched's premise is that the scheduler *knows* which requests are
+//! short. The seed (and PR 5's SJF) hardcoded the easy half of that
+//! problem — a deterministic proxy curve over the input length. This
+//! module makes prediction a first-class, configurable subsystem:
+//!
+//! * [`LenPredictor`] — the trait every model implements: a point
+//!   estimate ([`LenPredictor::predict`]), a *calibrated error
+//!   distribution* queried by quantile
+//!   ([`LenPredictor::predict_quantile`], after arXiv 2604.00499), and a
+//!   short/long classification ([`LenPredictor::predicted_is_long`]).
+//! * [`ProxyCurve`] — PR 5's two-piece input-length curve, migrated here
+//!   (re-exported as `sched::LenPredictor` for back-compat). The default:
+//!   golden replays predate the predictor axis and keep their bytes.
+//! * [`Oracle`] — the truth: exact output length, exact class.
+//! * [`Unbiased`] — lognormal relative error centred on the truth, with
+//!   exactly calibrated quantiles (the well-behaved predictor).
+//! * [`HeavyTailed`] — lognormal body plus symmetric exponential
+//!   ln-factor outlier tails: occasionally wildly wrong, the regime
+//!   arXiv 2606.18431 shows breaks point-estimate SJF.
+//! * [`SystematicShort`] — consistent underestimation whose *believed*
+//!   error stays narrow (miscalibration, 2606.18431's failure mode).
+//!
+//! # Determinism rules
+//!
+//! Every model is a **pure function of the request's content** — each
+//! draw seeds a fresh [`Rng`] from a SplitMix64 hash of
+//! `(input_len, output_len, arrival)` plus a per-purpose salt. No
+//! predictor holds mutable state, so:
+//!
+//! * the same request gets the same prediction no matter how many times
+//!   or in what order policies ask (sweep threads share nothing);
+//! * eager and source-driven replays agree bit-for-bit (arena slot ids
+//!   are deliberately *not* hashed — they are recycled under streaming
+//!   retirement);
+//! * two noise levels of the same model share the underlying unit draw,
+//!   so degradation curves vary smoothly in σ.
+//!
+//! # Adding a predictor
+//!
+//! 1. Implement [`LenPredictor`] here (pure, seeded as above; document
+//!    the error model).
+//! 2. Register a [`PredictorKind`] variant (`config/predictor.rs`):
+//!    name, CLI name, description, `all()`, `parse()` — every match is
+//!    exhaustive (pallas-lint tracks `PredictorKind`).
+//! 3. Map it in [`build`].
+//! 4. Extend the property tests in `rust/tests/pred_tests.rs`
+//!    (seed-determinism + quantile monotonicity cover any model).
+
+use crate::config::PredictorKind;
+use crate::trace::{normal_quantile, Request};
+use crate::util::Rng;
+
+/// A predictor of request output lengths with a calibrated error
+/// distribution.
+///
+/// Implementations must be pure functions of the request content (see
+/// the module docs for the determinism rules) — `Send + Sync` is
+/// required so sweep workers can share the boxed model.
+pub trait LenPredictor: std::fmt::Debug + Send + Sync {
+    /// Point estimate of `r`'s output length, tokens (≥ 1).
+    fn predict(&self, r: &Request) -> u32;
+
+    /// The `q`-quantile of the predictor's *believed* distribution of
+    /// `r`'s output length (its point estimate times the q-quantile of
+    /// its calibrated error model). Monotone in `q`; `q` is clamped to
+    /// (0, 1). A noise-free model returns the point estimate for all `q`.
+    fn predict_quantile(&self, r: &Request, q: f64) -> u32;
+
+    /// Predicted short/long classification — the bit PecSched's lane
+    /// split and SJF's queue routing consume. Noisy models may flip the
+    /// true class; the simulator's verbs still enforce the *true* class,
+    /// so policies route by this bit but must truth-check before placing.
+    fn predicted_is_long(&self, r: &Request) -> bool;
+}
+
+/// Salt for the length-error draw (distinct from the class draw so the
+/// two are independent).
+const SALT_LEN: u64 = 0x70c5_ed1c_4a11_ab1e;
+/// Salt for the classification-flip draw.
+const SALT_CLASS: u64 = 0xc1a5_5f11_9b0a_7735;
+
+/// SplitMix64 finalizer — the same mixing the RNG's seeding uses.
+fn mix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Content hash of a request — everything that identifies it across
+/// eager and streaming replays (NOT the arena slot id, which is
+/// recycled under streaming retirement).
+fn req_key(r: &Request) -> u64 {
+    (r.input_len as u64)
+        ^ ((r.output_len as u64) << 32)
+        ^ r.arrival.to_bits().rotate_left(17)
+}
+
+/// Fresh deterministic RNG for one (request, purpose) draw.
+fn req_rng(r: &Request, salt: u64) -> Rng {
+    Rng::seed_from_u64(mix64(salt ^ req_key(r)))
+}
+
+/// Round a raw length to the valid token range [1, u32::MAX].
+fn clamp_len(x: f64) -> u32 {
+    if !x.is_finite() {
+        return u32::MAX;
+    }
+    let r = x.round();
+    if r < 1.0 {
+        1
+    } else if r >= u32::MAX as f64 {
+        u32::MAX
+    } else {
+        r as u32
+    }
+}
+
+/// Φ(x): standard normal CDF via the Abramowitz–Stegun 7.1.26 erf
+/// approximation (|ε| < 1.5e-7) — good far beyond the u32 rounding of
+/// every consumer, and strictly monotone over the bisection bracket.
+fn normal_cdf(x: f64) -> f64 {
+    let z = x / std::f64::consts::SQRT_2;
+    let t = 1.0 / (1.0 + 0.327_591_1 * z.abs());
+    let poly = t
+        * (0.254_829_592
+            + t * (-0.284_496_736
+                + t * (1.421_413_741 + t * (-1.453_152_027 + t * 1.061_405_429))));
+    let erf = 1.0 - poly * (-z * z).exp();
+    let erf = if z < 0.0 { -erf } else { erf };
+    0.5 * (1.0 + erf)
+}
+
+/// Clamp a quantile strictly inside (0, 1) — keeps `normal_quantile`'s
+/// open-interval contract safe and preserves monotonicity.
+fn clamp_q(q: f64) -> f64 {
+    q.clamp(1e-9, 1.0 - 1e-9)
+}
+
+// ---------------------------------------------------------------------
+// Noise-free models
+// ---------------------------------------------------------------------
+
+/// PR 5's deterministic proxy: a two-piece curve over the *input*
+/// length (short prompts beget proportionally longer answers; very long
+/// prompts are mostly summarization with shorter answers). No error
+/// model — the quantile query is degenerate at the point estimate — and
+/// the classification is the truth, so replays that predate the
+/// predictor axis keep their bytes.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ProxyCurve;
+
+impl ProxyCurve {
+    /// The raw curve (kept callable on a bare input length: the shape
+    /// the PR-5 tests pin down).
+    pub fn curve(input_len: u32) -> u32 {
+        if input_len < 2048 {
+            64 + input_len / 4
+        } else {
+            (576u32.saturating_sub(input_len / 64)).max(96)
+        }
+    }
+}
+
+impl LenPredictor for ProxyCurve {
+    fn predict(&self, r: &Request) -> u32 {
+        Self::curve(r.input_len)
+    }
+
+    fn predict_quantile(&self, r: &Request, _q: f64) -> u32 {
+        self.predict(r)
+    }
+
+    fn predicted_is_long(&self, r: &Request) -> bool {
+        r.is_long
+    }
+}
+
+/// The exact oracle: true output length, true class, zero error. The
+/// baseline every degradation curve is measured against.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Oracle;
+
+impl LenPredictor for Oracle {
+    fn predict(&self, r: &Request) -> u32 {
+        r.output_len
+    }
+
+    fn predict_quantile(&self, r: &Request, _q: f64) -> u32 {
+        r.output_len
+    }
+
+    fn predicted_is_long(&self, r: &Request) -> bool {
+        r.is_long
+    }
+}
+
+// ---------------------------------------------------------------------
+// Noisy models
+// ---------------------------------------------------------------------
+
+/// Symmetric-flip classification shared by the unbiased/heavy-tailed
+/// models: the predicted class is the truth flipped with probability
+/// `min(0.5, 0.1σ)` (a 0.3-σ predictor misclassifies 3% of requests).
+fn flip_symmetric(r: &Request, sigma: f64) -> bool {
+    let p = (0.1 * sigma).min(0.5);
+    if p <= 0.0 {
+        return r.is_long;
+    }
+    let mut rng = req_rng(r, SALT_CLASS);
+    r.is_long != (rng.f64() < p)
+}
+
+/// Lognormal relative error centred on the truth: the prediction is
+/// `truth · e^{σZ}` with `Z ~ N(0,1)` drawn per request, and the
+/// believed `q`-quantile is `prediction · e^{σΦ⁻¹(q)}` — exactly
+/// calibrated, so quantile scheduling (arXiv 2604.00499) has the
+/// information it needs. At σ = 0 this is the oracle.
+#[derive(Debug, Clone, Copy)]
+pub struct Unbiased {
+    /// σ of the ln-factor.
+    pub sigma: f64,
+}
+
+impl Unbiased {
+    /// Model with ln-error σ (`sigma ≥ 0`).
+    pub fn new(sigma: f64) -> Self {
+        Self {
+            sigma: sigma.max(0.0),
+        }
+    }
+
+    /// Raw (unclamped) point estimate — kept in f64 so the quantile
+    /// scaling below stays monotone before the final rounding.
+    fn point_raw(&self, r: &Request) -> f64 {
+        if self.sigma <= 0.0 {
+            return r.output_len as f64;
+        }
+        let z = req_rng(r, SALT_LEN).normal();
+        r.output_len as f64 * (self.sigma * z).exp()
+    }
+}
+
+impl LenPredictor for Unbiased {
+    fn predict(&self, r: &Request) -> u32 {
+        clamp_len(self.point_raw(r))
+    }
+
+    fn predict_quantile(&self, r: &Request, q: f64) -> u32 {
+        let z = normal_quantile(clamp_q(q));
+        clamp_len(self.point_raw(r) * (self.sigma * z).exp())
+    }
+
+    fn predicted_is_long(&self, r: &Request) -> bool {
+        flip_symmetric(r, self.sigma)
+    }
+}
+
+/// Heavy-tailed error: the ln-factor is a mixture — 90% `N(0, σ²)`
+/// body, 5% `+Exp(α)` and 5% `−Exp(α)` outlier tails with
+/// `α = 1 + 1/σ` (heavier tails at higher noise; the multiplicative
+/// error is Pareto-tailed since `e^{Exp(α)}` is Pareto(α)). Quantiles
+/// invert the closed-form mixture CDF by bisection — the believed
+/// distribution is still exactly calibrated, but its tails are fat
+/// enough that the mean and the p90 diverge wildly (the regime where
+/// arXiv 2606.18431 separates tail-aware policies from SJF).
+#[derive(Debug, Clone, Copy)]
+pub struct HeavyTailed {
+    /// σ of the central lognormal component.
+    pub sigma: f64,
+}
+
+/// Mixture weights of the heavy-tailed ln-factor.
+const HT_BODY: f64 = 0.9;
+const HT_TAIL: f64 = 0.05;
+
+impl HeavyTailed {
+    /// Model with central σ (`sigma ≥ 0`).
+    pub fn new(sigma: f64) -> Self {
+        Self {
+            sigma: sigma.max(0.0),
+        }
+    }
+
+    /// Tail rate α = 1 + 1/σ (σ floored so α stays finite).
+    fn alpha(&self) -> f64 {
+        1.0 + 1.0 / self.sigma.max(1e-6)
+    }
+
+    /// CDF of the ln-factor mixture at `x`.
+    fn ln_cdf(&self, x: f64) -> f64 {
+        let body = if self.sigma > 0.0 {
+            normal_cdf(x / self.sigma)
+        } else if x >= 0.0 {
+            1.0
+        } else {
+            0.0
+        };
+        let a = self.alpha();
+        let up = if x >= 0.0 { 1.0 - (-a * x).exp() } else { 0.0 };
+        let down = if x >= 0.0 { 1.0 } else { (a * x).exp() };
+        HT_BODY * body + HT_TAIL * up + HT_TAIL * down
+    }
+
+    /// Inverse CDF by bisection on [−40, 40] (the CDF is strictly
+    /// monotone there; 64 halvings ≈ 4e-18 bracket width). Monotone in
+    /// `q`: two searches diverge only at a midpoint whose CDF separates
+    /// their targets, after which the lower `q` stays below it.
+    fn ln_quantile(&self, q: f64) -> f64 {
+        let (mut lo, mut hi) = (-40.0f64, 40.0f64);
+        for _ in 0..64 {
+            let mid = 0.5 * (lo + hi);
+            if self.ln_cdf(mid) < q {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        0.5 * (lo + hi)
+    }
+
+    /// Raw point estimate: truth times the mixture-drawn factor.
+    fn point_raw(&self, r: &Request) -> f64 {
+        let mut rng = req_rng(r, SALT_LEN);
+        // One uniform picks the component, then the component draws —
+        // the body shares the unbiased model's N(0,1) shape.
+        let u = rng.f64();
+        let ln_factor = if u < HT_BODY {
+            self.sigma * rng.normal()
+        } else if u < HT_BODY + HT_TAIL {
+            rng.exponential(self.alpha())
+        } else {
+            -rng.exponential(self.alpha())
+        };
+        r.output_len as f64 * ln_factor.exp()
+    }
+}
+
+impl LenPredictor for HeavyTailed {
+    fn predict(&self, r: &Request) -> u32 {
+        clamp_len(self.point_raw(r))
+    }
+
+    fn predict_quantile(&self, r: &Request, q: f64) -> u32 {
+        let x = self.ln_quantile(clamp_q(q));
+        clamp_len(self.point_raw(r) * x.exp())
+    }
+
+    fn predicted_is_long(&self, r: &Request) -> bool {
+        flip_symmetric(r, self.sigma)
+    }
+}
+
+/// Systematic underestimation: the prediction is `truth · e^{−σ}` with
+/// only a small `0.1σ` jitter, and — crucially — the *believed* error
+/// distribution is the narrow jitter, not the bias. Quantile queries
+/// therefore cannot recover the truth: even `predict_quantile(0.99)`
+/// stays far short at moderate σ. Classification degrades the same
+/// way: long requests leak into the predicted-short class with
+/// probability `min(0.9, 0.5σ)`, while shorts are never misread as
+/// long. This is the misprediction mode that starves SJF's fast lane.
+#[derive(Debug, Clone, Copy)]
+pub struct SystematicShort {
+    /// Underestimation bias σ (the believed jitter is 0.1σ).
+    pub sigma: f64,
+}
+
+impl SystematicShort {
+    /// Model with bias σ (`sigma ≥ 0`).
+    pub fn new(sigma: f64) -> Self {
+        Self {
+            sigma: sigma.max(0.0),
+        }
+    }
+
+    /// Believed jitter scale: a tenth of the bias.
+    fn jitter(&self) -> f64 {
+        0.1 * self.sigma
+    }
+
+    /// Raw point estimate: biased short, lightly jittered.
+    fn point_raw(&self, r: &Request) -> f64 {
+        if self.sigma <= 0.0 {
+            return r.output_len as f64;
+        }
+        let z = req_rng(r, SALT_LEN).normal();
+        r.output_len as f64 * (-self.sigma + self.jitter() * z).exp()
+    }
+}
+
+impl LenPredictor for SystematicShort {
+    fn predict(&self, r: &Request) -> u32 {
+        clamp_len(self.point_raw(r))
+    }
+
+    fn predict_quantile(&self, r: &Request, q: f64) -> u32 {
+        // Calibrated against the *believed* jitter only — the bias is
+        // invisible to the model, which is the point.
+        let z = normal_quantile(clamp_q(q));
+        clamp_len(self.point_raw(r) * (self.jitter() * z).exp())
+    }
+
+    fn predicted_is_long(&self, r: &Request) -> bool {
+        if !r.is_long {
+            return false;
+        }
+        let p = (0.5 * self.sigma).min(0.9);
+        if p <= 0.0 {
+            return true;
+        }
+        let mut rng = req_rng(r, SALT_CLASS);
+        rng.f64() >= p
+    }
+}
+
+/// Instantiate the predictor a [`PredictorKind`] names.
+pub fn build(kind: PredictorKind) -> Box<dyn LenPredictor> {
+    match kind {
+        PredictorKind::ProxyCurve => Box::new(ProxyCurve),
+        PredictorKind::Oracle => Box::new(Oracle),
+        PredictorKind::Unbiased { noise_milli } => {
+            Box::new(Unbiased::new(noise_milli as f64 / 1000.0))
+        }
+        PredictorKind::HeavyTailed { noise_milli } => {
+            Box::new(HeavyTailed::new(noise_milli as f64 / 1000.0))
+        }
+        PredictorKind::SystematicShort { noise_milli } => {
+            Box::new(SystematicShort::new(noise_milli as f64 / 1000.0))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: usize, input: u32, output: u32, is_long: bool) -> Request {
+        Request {
+            id,
+            arrival: 0.25 + id as f64 * 0.125,
+            input_len: input,
+            output_len: output,
+            is_long,
+            deadline: None,
+        }
+    }
+
+    #[test]
+    fn proxy_curve_matches_the_pr5_shape() {
+        assert_eq!(ProxyCurve::curve(0), 64);
+        assert_eq!(ProxyCurve::curve(1000), 64 + 250);
+        assert_eq!(ProxyCurve::curve(4096), 576 - 64);
+        assert_eq!(ProxyCurve::curve(u32::MAX), 96);
+        let r = req(0, 1000, 9999, false);
+        assert_eq!(ProxyCurve.predict(&r), 314);
+        assert_eq!(ProxyCurve.predict_quantile(&r, 0.99), 314);
+    }
+
+    #[test]
+    fn slot_id_does_not_enter_the_draw() {
+        // Streaming retirement recycles arena slots: the same request
+        // content under a different id must predict identically.
+        let m = Unbiased::new(0.5);
+        let a = req(3, 700, 120, false);
+        let mut b = a;
+        b.id = 9000;
+        assert_eq!(m.predict(&a), m.predict(&b));
+        assert_eq!(m.predicted_is_long(&a), m.predicted_is_long(&b));
+    }
+
+    #[test]
+    fn heavy_tailed_cdf_inverts() {
+        let m = HeavyTailed::new(0.4);
+        for q in [0.01, 0.1, 0.5, 0.9, 0.99] {
+            let x = m.ln_quantile(q);
+            assert!((m.ln_cdf(x) - q).abs() < 1e-9, "q={q} x={x}");
+        }
+        // Median of the symmetric mixture is 0.
+        assert!(m.ln_quantile(0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn normal_cdf_sane() {
+        assert!((normal_cdf(0.0) - 0.5).abs() < 1e-7);
+        assert!((normal_cdf(1.6449) - 0.95).abs() < 1e-4);
+        assert!((normal_cdf(-1.6449) - 0.05).abs() < 1e-4);
+        assert!(normal_cdf(10.0) > 1.0 - 1e-7);
+    }
+
+    #[test]
+    fn clamp_len_bounds() {
+        assert_eq!(clamp_len(0.2), 1);
+        assert_eq!(clamp_len(-5.0), 1);
+        assert_eq!(clamp_len(64.4), 64);
+        assert_eq!(clamp_len(1e300), u32::MAX);
+        assert_eq!(clamp_len(f64::INFINITY), u32::MAX);
+        assert_eq!(clamp_len(f64::NAN), u32::MAX);
+    }
+
+    #[test]
+    fn systematic_short_underestimates_and_stays_confident() {
+        let m = SystematicShort::new(0.6);
+        let r = req(1, 512, 1000, false);
+        // e^{-0.6} ≈ 0.55: the point estimate is far short even after
+        // jitter, and the believed p99 cannot bridge the bias.
+        assert!(m.predict(&r) < 900, "point {}", m.predict(&r));
+        assert!(
+            m.predict_quantile(&r, 0.99) < 1000,
+            "believed p99 {}",
+            m.predict_quantile(&r, 0.99)
+        );
+        // Shorts are never misread as long.
+        assert!(!m.predicted_is_long(&r));
+    }
+}

@@ -515,6 +515,7 @@ mod tests {
             "spot-reclaim",
             "elastic-diurnal",
             "deadline-mix",
+            "pred-noise",
         ] {
             assert!(names.contains(&required), "missing scenario {required}");
         }

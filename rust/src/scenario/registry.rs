@@ -229,6 +229,19 @@ pub fn all() -> Vec<Scenario> {
             },
         },
         Scenario {
+            name: "pred-noise",
+            description: "azure-steady as the misprediction benchmark: pair \
+                          with `--predictors` to sweep predictor noise while \
+                          holding the workload fixed — the operating point for \
+                          exp_pred's robustness grid (DESIGN.md §8)",
+            arrival: ArrivalShape::Steady,
+            mix: MixShape::AzureStandard,
+            faults: vec![],
+            deadlines: None,
+            elastic: None,
+            overrides: SimOverrides::default(),
+        },
+        Scenario {
             name: "huge-sweep",
             description: "azure-steady under the approximate closed-form \
                           decode fast-forward (DecodeMode::EpochClosedForm) \

@@ -1,6 +1,7 @@
 //! Cluster-level scheduling policies (§2.1, §6.2): FIFO, Reservation,
-//! Priority, ELIS-style SJF, and PecSched itself (with §6.4's ablation
-//! switches).
+//! Priority, ELIS-style SJF, the prediction-uncertainty family
+//! (Quantile-SJF, TailAware — DESIGN.md §8), and PecSched itself (with
+//! §6.4's ablation switches).
 //!
 //! Policies decide placement; the execution mechanics (preemption,
 //! colocation budgets, decode batching) live in [`crate::sim`]. The
@@ -19,12 +20,14 @@ mod pecsched;
 mod priority;
 mod reservation;
 mod sjf;
+mod tail_aware;
 
 pub use fifo::Fifo;
 pub use pecsched::PecSched;
 pub use priority::Priority;
 pub use reservation::Reservation;
 pub use sjf::{LenPredictor, Sjf};
+pub use tail_aware::TailAware;
 
 use crate::config::PolicyKind;
 use crate::sim::ClusterOps;
@@ -71,6 +74,8 @@ pub fn build_policy(kind: PolicyKind, ops: &mut ClusterOps<'_>) -> Box<dyn Polic
         PolicyKind::Reservation => Box::new(Reservation::new(ops)),
         PolicyKind::Priority => Box::new(Priority::new()),
         PolicyKind::Sjf => Box::new(Sjf::new()),
+        PolicyKind::QuantileSjf { q_milli } => Box::new(Sjf::with_quantile(q_milli)),
+        PolicyKind::TailAware => Box::new(TailAware::new()),
         PolicyKind::PecSched(flags) => Box::new(PecSched::new(flags)),
     }
 }

@@ -179,6 +179,17 @@ impl PecSched {
 
     fn dispatch_longs(&mut self, ops: &mut ClusterOps<'_>) {
         while let Some(&head) = self.pending_longs.front() {
+            // A truly-short request the predictor classified long takes
+            // the short ladder from here — the long verbs enforce the
+            // true class and would reject it. Never executes under a
+            // truth-classifying predictor.
+            if !ops.view().request(head).req.is_long {
+                self.pending_longs.pop_front();
+                if !self.try_place_short(ops, head) {
+                    self.pending_shorts.push_back(head);
+                }
+                continue;
+            }
             match ops.start_long_group(head, LongEligibility::LongFree, usize::MAX) {
                 LongStartOutcome::Started { displaced } => {
                     self.pending_longs.pop_front();
@@ -201,7 +212,17 @@ impl PecSched {
 
 impl Policy for PecSched {
     fn on_arrival(&mut self, ops: &mut ClusterOps<'_>, req: ReqId) {
-        if ops.view().request(req).req.is_long {
+        // Lane split is by the *predicted* class (§5's short/long
+        // classification now reads the configured predictor). A
+        // truly-long request predicted short cannot take the short
+        // ladder — the verbs enforce the true class — so it is
+        // discovered at the gate and routed long immediately; a
+        // truly-short one predicted long is filtered back out at the
+        // head of `dispatch_longs`. Under a truth-classifying predictor
+        // (the default ProxyCurve, Oracle) both conditions reduce to
+        // `is_long` and replays keep their bytes.
+        let view = ops.view();
+        if view.request(req).req.is_long || view.predicted_is_long(req) {
             self.pending_longs.push_back(req);
             self.dispatch_longs(ops);
         } else if !self.try_place_short(ops, req) {

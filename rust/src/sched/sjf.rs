@@ -4,9 +4,12 @@
 //! serving the jobs predicted to finish soonest first minimises mean
 //! waiting time (classic SJF) at the cost of fairness for verbose
 //! requests. This reproduction keeps the *scheduling* contribution and
-//! replaces the learned predictor with a deterministic calibration-free
-//! proxy ([`LenPredictor`]) — the ranking, not the regressor, is what the
-//! cluster layer exercises.
+//! reads predictions from the run's configured
+//! [`crate::pred::LenPredictor`] through the view's
+//! [`crate::sim::ClusterView::predicted_len`] family — the ranking, not
+//! the regressor, is what the cluster layer exercises. Under the default
+//! [`crate::config::PredictorKind::ProxyCurve`] the ranking is exactly
+//! the PR-5 proxy curve, so golden replays keep their bytes.
 //!
 //! The policy is also this repo's out-of-tree proof for the PR-5 API
 //! boundary: it is written exclusively against [`crate::sim::ClusterView`]
@@ -17,6 +20,20 @@
 //! capacity exactly like [`super::Priority`] (ELIS schedules a
 //! single-class stream; the long tail falls back to the conservative
 //! baseline behaviour).
+//!
+//! With [`Sjf::with_quantile`] the same machinery becomes **Quantile-SJF**
+//! (arXiv 2604.00499): the ranking key is a configurable quantile of the
+//! predictor's believed error distribution instead of its point estimate.
+//! Under an uncertain predictor, ranking on a high quantile demotes the
+//! requests that *might* be long — exactly the ones point-estimate SJF
+//! wrongly fast-lanes.
+//!
+//! Misprediction handling: requests are *routed* by the predicted class,
+//! but the simulator's verbs enforce the true class — so a truly-long
+//! request that was predicted short is discovered at placement time and
+//! demoted to the long lane (and a truly-short one predicted long is
+//! placed through the short path when it reaches the long queue's head).
+//! Under a truth-classifying predictor neither path ever executes.
 
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, VecDeque};
@@ -25,35 +42,18 @@ use super::Policy;
 use crate::sim::{ClusterOps, LongEligibility, LongStartOutcome};
 use crate::trace::ReqId;
 
-/// Deterministic stand-in for ELIS's response-length predictor.
-///
-/// Real ELIS retrains a BERT-style estimator online; this proxy maps the
-/// prompt length to a predicted output length with a fixed two-piece
-/// affine curve (short prompts tend to open-ended chat, long prompts to
-/// constrained completions — the qualitative shape of the Azure trace's
-/// conversation/summarisation split). Only the induced *ordering*
-/// matters to the policy; ties break by arrival order.
-#[derive(Debug, Clone, Copy, Default)]
-pub struct LenPredictor;
+/// Back-compat alias: PR 5's deterministic proxy predictor now lives in
+/// [`crate::pred`] as the `ProxyCurve` model (the default
+/// [`crate::config::PredictorKind`]).
+pub use crate::pred::ProxyCurve as LenPredictor;
 
-impl LenPredictor {
-    /// Predicted output tokens for a prompt of `input_len` tokens.
-    pub fn predict(&self, input_len: u32) -> u32 {
-        if input_len < 2048 {
-            // Chatty regime: predicted output grows with the prompt.
-            64 + input_len / 4
-        } else {
-            // Summarisation/completion regime: long prompts, terse
-            // outputs — predicted length shrinks toward a floor.
-            (576u32.saturating_sub(input_len / 64)).max(96)
-        }
-    }
-}
-
-/// Shortest-predicted-output-first policy (the ELIS-style scheduler).
+/// Shortest-predicted-output-first policy (the ELIS-style scheduler),
+/// optionally ranking on a predicted quantile (Quantile-SJF).
 #[derive(Debug, Default)]
 pub struct Sjf {
-    predictor: LenPredictor,
+    /// Scheduling quantile in milli units; `None` ranks on the point
+    /// estimate (plain SJF).
+    q_milli: Option<u32>,
     /// Min-heap of `(predicted output, arrival order)` — SJF with FIFO
     /// tie-breaking.
     shorts: BinaryHeap<Reverse<(u32, ReqId)>>,
@@ -61,21 +61,51 @@ pub struct Sjf {
 }
 
 impl Sjf {
-    /// An empty SJF scheduler with the default predictor.
+    /// An empty SJF scheduler ranking on the predictor's point estimate.
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// An empty Quantile-SJF scheduler ranking on the predictor's
+    /// believed `q_milli`/1000 quantile (arXiv 2604.00499).
+    pub fn with_quantile(q_milli: u32) -> Self {
+        Self {
+            q_milli: Some(q_milli),
+            ..Self::default()
+        }
+    }
+
+    /// The ranking key for `req` under this scheduler's configuration.
+    fn key(&self, ops: &mut ClusterOps<'_>, req: ReqId) -> u32 {
+        match self.q_milli {
+            None => ops.view().predicted_len(req),
+            Some(qm) => ops.view().predicted_len_quantile(req, qm as f64 / 1000.0),
+        }
+    }
+
+    /// Place one predicted-short request through the short path. Returns
+    /// false when no ordinary replica can take it right now.
+    fn place_short(&mut self, ops: &mut ClusterOps<'_>, req: ReqId) -> bool {
+        match ops.view().pick_least_loaded_ordinary() {
+            Some(rid) => {
+                let placed = ops.start_prefill(rid, req);
+                debug_assert!(placed.placed(), "indexed pick was placeable");
+                placed.settled()
+            }
+            None => false,
+        }
     }
 }
 
 impl Policy for Sjf {
     fn on_arrival(&mut self, ops: &mut ClusterOps<'_>, req: ReqId) {
-        let r = &ops.view().request(req).req;
-        if r.is_long {
+        // Route on the *prediction* only — peeking at the trace's true
+        // class or output length would be an oracle no real system has
+        // (the Oracle predictor models exactly that ceiling).
+        if ops.view().predicted_is_long(req) {
             self.longs.push_back(req);
         } else {
-            // Rank on the *prediction* only — peeking at the trace's true
-            // output length would be an oracle no real system has.
-            let key = self.predictor.predict(r.input_len);
+            let key = self.key(ops, req);
             self.shorts.push(Reverse((key, req)));
         }
         self.dispatch(ops);
@@ -84,20 +114,29 @@ impl Policy for Sjf {
     fn dispatch(&mut self, ops: &mut ClusterOps<'_>) {
         // Shortest predicted job first onto the lightest ordinary queue.
         while let Some(&Reverse((_, head))) = self.shorts.peek() {
-            match ops.view().pick_least_loaded_ordinary() {
-                Some(rid) => {
-                    let placed = ops.start_prefill(rid, head);
-                    debug_assert!(placed.placed(), "indexed pick was placeable");
-                    if !placed.settled() {
-                        break; // still needs placing; retry next wake
-                    }
-                    self.shorts.pop();
-                }
-                None => break,
+            // The verbs enforce the *true* class: a mispredicted long
+            // cannot take the short path. Demote it to the long lane.
+            if ops.view().request(head).req.is_long {
+                self.shorts.pop();
+                self.longs.push_back(head);
+                continue;
             }
+            if !self.place_short(ops, head) {
+                break; // still needs placing; retry next wake
+            }
+            self.shorts.pop();
         }
         // Longs on leftover idle capacity (conservative baseline tail).
         while let Some(&head) = self.longs.front() {
+            // A truly-short request predicted long goes through the
+            // short path from here (the long verbs would reject it).
+            if !ops.view().request(head).req.is_long {
+                if !self.place_short(ops, head) {
+                    break;
+                }
+                self.longs.pop_front();
+                continue;
+            }
             match ops.start_long_group(head, LongEligibility::Idle, usize::MAX) {
                 LongStartOutcome::Started { displaced } => {
                     debug_assert!(displaced.is_empty());
@@ -124,12 +163,13 @@ mod tests {
 
     #[test]
     fn predictor_is_deterministic_and_orders_regimes() {
-        let p = LenPredictor;
-        assert_eq!(p.predict(100), p.predict(100));
+        // The migrated PR-5 proxy keeps its two-regime shape (the alias
+        // proves the old `sched::LenPredictor` path still resolves).
+        assert_eq!(LenPredictor::curve(100), LenPredictor::curve(100));
         // Chatty regime grows with the prompt.
-        assert!(p.predict(1000) > p.predict(100));
+        assert!(LenPredictor::curve(1000) > LenPredictor::curve(100));
         // Long-prompt regime shrinks toward the floor.
-        assert!(p.predict(40_000) < p.predict(4000));
-        assert!(p.predict(u32::MAX) >= 96);
+        assert!(LenPredictor::curve(40_000) < LenPredictor::curve(4000));
+        assert!(LenPredictor::curve(u32::MAX) >= 96);
     }
 }

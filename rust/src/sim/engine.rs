@@ -267,7 +267,7 @@ impl Simulation {
                 continue;
             }
             let rt = st.reqs.snapshot(i);
-            fold_request(&mut m, &rt, Some(t_shorts_done), &mut st.starve_pending);
+            fold_request(&mut m, &rt, &*st.predictor, Some(t_shorts_done), &mut st.starve_pending);
         }
         // Longs whose starvation verdict was deferred past their own
         // retirement and never resolved in-run (no short ever settled the

@@ -99,7 +99,15 @@ pub enum EventKind {
 pub struct Event {
     /// Simulated time the event fires, seconds.
     pub time: f64,
-    /// Push sequence number — the FIFO tie-break for equal timestamps.
+    /// Ordering class at equal timestamps: arrivals (0) before everything
+    /// else (1), so a request whose trace timestamp ties an in-flight
+    /// completion is queued before the completion's dispatch runs —
+    /// regardless of when the arrival was *pushed*. Eager runs seed every
+    /// arrival first and are unaffected; this makes streaming sources
+    /// (which push arrivals lazily, one look-ahead at a time) order
+    /// identically.
+    pub class: u8,
+    /// Push sequence number — the FIFO tie-break within a class.
     pub seq: u64,
     /// What happened.
     pub kind: EventKind,
@@ -107,7 +115,7 @@ pub struct Event {
 
 impl PartialEq for Event {
     fn eq(&self, other: &Self) -> bool {
-        self.time == other.time && self.seq == other.seq
+        self.time == other.time && self.class == other.class && self.seq == other.seq
     }
 }
 impl Eq for Event {}
@@ -118,6 +126,7 @@ impl Ord for Event {
         other
             .time
             .total_cmp(&self.time)
+            .then(other.class.cmp(&self.class))
             .then(other.seq.cmp(&self.seq))
     }
 }
@@ -140,12 +149,24 @@ impl EventQueue {
         Self::default()
     }
 
-    /// Schedule `kind` at `time` (FIFO among equal timestamps).
+    /// Schedule `kind` at `time` (arrivals first among equal timestamps,
+    /// then FIFO by push order).
     pub fn push(&mut self, time: f64, kind: EventKind) {
         debug_assert!(time.is_finite(), "non-finite event time");
+        let class = match kind {
+            EventKind::Arrival(_) => 0,
+            EventKind::ShortPrefillDone { .. }
+            | EventKind::MigrationDone { .. }
+            | EventKind::DecodeRound { .. }
+            | EventKind::LongPrefillDone { .. }
+            | EventKind::LongDecodeRound { .. }
+            | EventKind::DecodeEpoch { .. }
+            | EventKind::LongDecodeEpoch { .. }
+            | EventKind::ReplicaReady { .. } => 1,
+        };
         let seq = self.next_seq;
         self.next_seq += 1;
-        self.heap.push(Event { time, seq, kind });
+        self.heap.push(Event { time, class, seq, kind });
     }
 
     /// Pop the earliest pending event.
@@ -189,6 +210,23 @@ mod tests {
             }
             _ => unreachable!(),
         }
+    }
+
+    #[test]
+    fn arrivals_precede_completions_at_equal_timestamps() {
+        // A decode round pushed *before* an arrival with the same
+        // timestamp still pops second: class beats push order. This is
+        // what makes a lazily-pushed streaming arrival order identically
+        // to its eager-seeded twin (eager arrivals hold the lowest seqs
+        // anyway, so eager replays are unchanged).
+        let mut q = EventQueue::new();
+        q.push(2.0, EventKind::DecodeRound { rid: 0, gen: 0 });
+        q.push(2.0, EventKind::Arrival(7));
+        assert!(matches!(q.pop().unwrap().kind, EventKind::Arrival(7)));
+        assert!(matches!(
+            q.pop().unwrap().kind,
+            EventKind::DecodeRound { rid: 0, gen: 0 }
+        ));
     }
 
     #[test]

@@ -23,7 +23,8 @@ use std::collections::VecDeque;
 
 use crate::cluster::{ReplicaId, Topology};
 use crate::config::{
-    AblationFlags, ClusterSpec, DecodeMode, ModelSpec, PolicyKind, SchedParams,
+    AblationFlags, ClusterSpec, DecodeMode, ModelSpec, PolicyKind, PredictorKind,
+    SchedParams,
 };
 use crate::costmodel::{sp, CostModel, SpPlan};
 use crate::metrics::{BusyTracker, MetricsMode, RunMetrics};
@@ -345,6 +346,10 @@ pub struct SimConfig {
     /// Tail-metric storage: exact digests (default) or O(1)-memory
     /// streaming sketches; see [`MetricsMode`].
     pub metrics_mode: MetricsMode,
+    /// Length-prediction model the policies read (DESIGN.md §8); the
+    /// default [`PredictorKind::ProxyCurve`] reproduces the PR-5 proxy
+    /// bit for bit.
+    pub predictor: PredictorKind,
     /// Admission-control backlog cap: an arrival that would push the
     /// queued backlog past this is shed (typed, counted) instead of
     /// queued, so overload degrades to bounded staleness rather than
@@ -366,6 +371,7 @@ impl SimConfig {
             dedicated_decode_pool: false,
             decode_mode: DecodeMode::default(),
             metrics_mode: MetricsMode::default(),
+            predictor: PredictorKind::default(),
             shed_backlog: None,
             max_events: 500_000_000,
         }
@@ -383,6 +389,7 @@ impl SimConfig {
             dedicated_decode_pool: flags.disaggregation,
             decode_mode: DecodeMode::default(),
             metrics_mode: MetricsMode::default(),
+            predictor: PredictorKind::default(),
             shed_backlog: None,
             max_events: 500_000_000,
         }
@@ -399,7 +406,9 @@ impl SimConfig {
             PolicyKind::Fifo
             | PolicyKind::Reservation
             | PolicyKind::Priority
-            | PolicyKind::Sjf => Self::baseline(model),
+            | PolicyKind::Sjf
+            | PolicyKind::QuantileSjf { .. }
+            | PolicyKind::TailAware => Self::baseline(model),
         }
     }
 }
@@ -421,6 +430,10 @@ pub struct SimState {
     pub(super) decode_mode: DecodeMode,
     /// Tail-metric storage mode (consumed by the engine's collector).
     pub(super) metrics_mode: MetricsMode,
+    /// The run's length-prediction model (DESIGN.md §8) — what the
+    /// view's `predicted_*` queries and the misprediction-regret metric
+    /// consult. Built once from [`SimConfig::predictor`].
+    pub(super) predictor: Box<dyn crate::pred::LenPredictor>,
     /// Columnar per-request runtime state (see [`ReqArena`]).
     pub(super) reqs: ReqArena,
     pub(super) replicas: Vec<ReplicaRt>,
@@ -589,6 +602,7 @@ impl SimState {
             flags: cfg.flags,
             decode_mode: cfg.decode_mode,
             metrics_mode: cfg.metrics_mode,
+            predictor: crate::pred::build(cfg.predictor),
             reqs,
             replicas,
             groups,
@@ -2343,7 +2357,7 @@ impl SimState {
         while i < self.pending_retire.len() {
             let req = self.pending_retire[i];
             let rt = self.reqs.snapshot(req);
-            fold_request(m, &rt, self.t_shorts_done, &mut self.starve_pending);
+            fold_request(m, &rt, &*self.predictor, self.t_shorts_done, &mut self.starve_pending);
             self.reqs.retire_slot(req);
             i += 1;
         }
@@ -2410,9 +2424,15 @@ impl SimState {
 /// the verdict for a *served* long is deferred by pushing its prefill
 /// start onto `starve_pending`, re-judged at resolution; a never-served
 /// long is starved under every reference and counts immediately.
+///
+/// `pred` is the run's predictor, consulted for misprediction regret:
+/// each short's queueing delay weighted by its (capped) relative length
+/// prediction error — the latency the scheduler imposed on requests it
+/// was most wrong about. Zero under the Oracle predictor.
 pub(super) fn fold_request(
     m: &mut RunMetrics,
     rt: &ReqRt,
+    pred: &dyn crate::pred::LenPredictor,
     t_shorts_done: Option<f64>,
     starve_pending: &mut Vec<f64>,
 ) {
@@ -2458,6 +2478,9 @@ pub(super) fn fold_request(
     } else {
         if let Some(d) = rt.queueing_delay() {
             m.short_queue_delay.add(d);
+            let err = (pred.predict(&rt.req) as f64 - rt.req.output_len as f64).abs()
+                / rt.req.output_len.max(1) as f64;
+            m.mispredict_regret += d * err.min(1.0);
         }
         if let Some(j) = rt.jct() {
             m.short_jct.add(j);

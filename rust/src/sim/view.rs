@@ -206,6 +206,38 @@ impl<'a> ClusterView<'a> {
         self.st.queued_backlog
     }
 
+    /// The configured predictor's point estimate of `req`'s output
+    /// length, in tokens (DESIGN.md §8).
+    ///
+    /// Policies rank and route on this — never on the trace's true
+    /// `output_len`, which no real scheduler can observe. Deterministic:
+    /// a pure function of the request's content and the run's
+    /// [`crate::config::PredictorKind`].
+    pub fn predicted_len(&self, req: ReqId) -> u32 {
+        let rt = self.st.reqs.snapshot(req);
+        self.st.predictor.predict(&rt.req)
+    }
+
+    /// The predictor's believed `q`-quantile of `req`'s output length —
+    /// its point estimate adjusted for its own error model (DESIGN.md
+    /// §8). Monotone in `q`; at `q = 0.5` the noise models return their
+    /// point estimate.
+    pub fn predicted_len_quantile(&self, req: ReqId, q: f64) -> u32 {
+        let rt = self.st.reqs.snapshot(req);
+        self.st.predictor.predict_quantile(&rt.req, q)
+    }
+
+    /// Does the configured predictor classify `req` as long (§5's
+    /// short/long split, as the scheduler *believes* it)?
+    ///
+    /// The mutation verbs still enforce the *true* class, so a policy
+    /// routing on this must be prepared for
+    /// vetoes ([`super::Veto::WrongClass`]) on mispredicted requests.
+    pub fn predicted_is_long(&self, req: ReqId) -> bool {
+        let rt = self.st.reqs.snapshot(req);
+        self.st.predictor.predicted_is_long(&rt.req)
+    }
+
     /// Typed long-occupancy digest of `rid` (see [`LongOccupancy`]).
     pub fn long_occupancy(&self, rid: ReplicaId) -> LongOccupancy {
         let Some(gid) = self.st.replicas[rid].long_group else {

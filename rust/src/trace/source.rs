@@ -21,12 +21,12 @@
 //! tests in `rust/tests/source_tests.rs` enforce this across every
 //! registry policy.
 //!
-//! Equal-timestamp caveat: synthetic gaps are strictly positive, but a
-//! coarse-timestamped CSV import may contain ties. Among arrivals the
-//! streamed order still matches the eager order (both FIFO), but an
-//! arrival that ties a *service* event to the exact f64 may be handled on
-//! the other side of it than in the eager run, where all arrivals were
-//! heap-seeded first. The eager path remains the oracle for such traces.
+//! Equal timestamps (a coarse-timestamped CSV import may contain ties)
+//! are safe: the event heap orders `(time, class, seq)` with arrivals in
+//! class 0, so an arrival that ties a *service* event to the exact f64
+//! is handled before it whether the arrival was heap-seeded up front
+//! (eager) or pushed lazily at pull time (streaming). Among tied
+//! arrivals both paths are FIFO.
 
 use std::io::BufRead;
 

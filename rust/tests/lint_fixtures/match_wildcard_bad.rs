@@ -1,6 +1,7 @@
 // BAD: wildcard arms over tracked enums — a new event variant or fault
 // kind would be silently swallowed here instead of forcing this site to
 // be revisited.
+use crate::config::PredictorKind;
 use crate::scenario::FaultKind;
 use crate::sim::{EventKind, ShedOutcome};
 
@@ -21,6 +22,13 @@ pub fn is_crash(k: &FaultKind) -> bool {
 pub fn was_shed(o: ShedOutcome) -> bool {
     match o {
         ShedOutcome::Shed => true,
+        _ => false,
+    }
+}
+
+pub fn is_noisy(k: &PredictorKind) -> bool {
+    match k {
+        PredictorKind::Unbiased { .. } => true,
         _ => false,
     }
 }

@@ -1,4 +1,5 @@
 // GOOD: every variant enumerated — adding one breaks the build here.
+use crate::config::PredictorKind;
 use crate::scenario::FaultKind;
 use crate::sim::{EventKind, ShedOutcome};
 
@@ -28,5 +29,15 @@ pub fn was_shed(o: ShedOutcome) -> bool {
     match o {
         ShedOutcome::Shed => true,
         ShedOutcome::Rejected(_) => false,
+    }
+}
+
+pub fn is_noisy(k: &PredictorKind) -> bool {
+    match k {
+        PredictorKind::ProxyCurve => false,
+        PredictorKind::Oracle => false,
+        PredictorKind::Unbiased { .. } => true,
+        PredictorKind::HeavyTailed { .. } => true,
+        PredictorKind::SystematicShort { .. } => true,
     }
 }

@@ -1,0 +1,186 @@
+//! Prediction-subsystem integration tests (DESIGN.md §8): determinism
+//! and calibration of the noise models, and the golden-equivalence gate
+//! — Quantile-SJF at its median operating point under a noise-free
+//! predictor must be indistinguishable from plain SJF on every
+//! registered scenario.
+
+use pecsched::config::{ModelSpec, PolicyKind, PredictorKind};
+use pecsched::exp;
+use pecsched::pred::{self, LenPredictor};
+use pecsched::scenario;
+use pecsched::sim::SimConfig;
+use pecsched::trace::Request;
+
+fn req(id: usize, input_len: u32, output_len: u32, is_long: bool) -> Request {
+    Request {
+        id,
+        arrival: 0.5 + id as f64 * 0.375,
+        input_len,
+        output_len,
+        is_long,
+        deadline: None,
+    }
+}
+
+/// A small panel of requests spanning shorts and longs.
+fn panel() -> Vec<Request> {
+    vec![
+        req(0, 120, 40, false),
+        req(1, 1_100, 230, false),
+        req(2, 3_000, 510, false),
+        req(3, 200_000, 1, true),
+        req(4, 480_000, 1, true),
+    ]
+}
+
+/// Every registered predictor kind is a pure function of request
+/// content: two independently built instances agree on every query, and
+/// repeated queries of one instance agree with themselves (no hidden
+/// stream state).
+#[test]
+fn predictions_are_seed_deterministic_across_builds() {
+    for kind in PredictorKind::all() {
+        let a = pred::build(kind);
+        let b = pred::build(kind);
+        for r in &panel() {
+            assert_eq!(a.predict(r), b.predict(r), "{}: predict", kind.name());
+            assert_eq!(a.predict(r), a.predict(r), "{}: predict stable", kind.name());
+            assert_eq!(
+                a.predicted_is_long(r),
+                b.predicted_is_long(r),
+                "{}: class",
+                kind.name()
+            );
+            for q in [0.1, 0.5, 0.9] {
+                assert_eq!(
+                    a.predict_quantile(r, q),
+                    b.predict_quantile(r, q),
+                    "{}: quantile q={q}",
+                    kind.name()
+                );
+            }
+        }
+    }
+}
+
+/// Quantile queries are monotone in `q` for every model (the property
+/// Quantile-SJF's ranking rests on), and the extremes stay finite.
+#[test]
+fn quantiles_are_monotone_in_q() {
+    let grid = [0.01, 0.1, 0.25, 0.5, 0.75, 0.9, 0.99];
+    for kind in PredictorKind::all() {
+        let p = pred::build(kind);
+        for r in &panel() {
+            let qs: Vec<u32> = grid.iter().map(|&q| p.predict_quantile(r, q)).collect();
+            for w in qs.windows(2) {
+                assert!(
+                    w[0] <= w[1],
+                    "{} non-monotone on req {}: {:?}",
+                    kind.name(),
+                    r.id,
+                    qs
+                );
+            }
+            assert!(qs[0] >= 1, "{}: quantile below the 1-token floor", kind.name());
+        }
+    }
+}
+
+/// The oracle is exact, and the unbiased model at zero noise degenerates
+/// to the oracle (point and every quantile).
+#[test]
+fn oracle_and_zero_noise_unbiased_return_the_truth() {
+    let oracle = pred::build(PredictorKind::Oracle);
+    let flat = pred::build(PredictorKind::Unbiased { noise_milli: 0 });
+    for r in &panel() {
+        assert_eq!(oracle.predict(r), r.output_len);
+        assert_eq!(oracle.predicted_is_long(r), r.is_long);
+        assert_eq!(flat.predict(r), r.output_len);
+        assert_eq!(flat.predicted_is_long(r), r.is_long);
+        for q in [0.05, 0.5, 0.95] {
+            assert_eq!(oracle.predict_quantile(r, q), r.output_len);
+            assert_eq!(flat.predict_quantile(r, q), r.output_len);
+        }
+    }
+}
+
+/// The golden-equivalence gate: Quantile-SJF at q = 0.5 under the
+/// default (noise-free) predictor produces bit-identical results to
+/// plain SJF on **every** registered scenario — the quantile axis is a
+/// strict generalisation, not a behaviour change.
+#[test]
+fn median_quantile_sjf_matches_sjf_on_every_scenario() {
+    let model = ModelSpec::mistral_7b();
+    let rps = exp::capacity_rps(&model, 0.5);
+    for sc in scenario::all() {
+        let trace = sc.build_trace(200, rps, 11);
+        let mut a = sc.run(
+            SimConfig::for_policy(model.clone(), PolicyKind::Sjf),
+            &trace,
+            PolicyKind::Sjf,
+        );
+        let kind = PolicyKind::QuantileSjf { q_milli: 500 };
+        let mut b = sc.run(SimConfig::for_policy(model.clone(), kind), &trace, kind);
+        let (sa, sb) = (a.summary(), b.summary());
+        assert_eq!(sa, sb, "scenario {}: summaries diverged", sc.name);
+        // Bit-level equality on the latency percentiles, not just ==.
+        for (x, y) in sa.short_delay_pcts.iter().zip(&sb.short_delay_pcts) {
+            assert_eq!(x.to_bits(), y.to_bits(), "scenario {}: pct bits", sc.name);
+        }
+        assert_eq!(
+            sa.makespan.to_bits(),
+            sb.makespan.to_bits(),
+            "scenario {}: makespan bits",
+            sc.name
+        );
+    }
+}
+
+/// Misprediction regret: exactly zero under the oracle (no error, no
+/// regret), finite and non-negative under every other predictor.
+#[test]
+fn regret_is_zero_under_the_oracle_and_finite_elsewhere() {
+    let model = ModelSpec::mistral_7b();
+    let rps = exp::capacity_rps(&model, 0.5);
+    let sc = scenario::by_name("pred-noise").unwrap();
+    let trace = sc.build_trace(200, rps, 11);
+    let kind = PolicyKind::Sjf;
+    for pk in PredictorKind::all() {
+        let mut cfg = SimConfig::for_policy(model.clone(), kind);
+        cfg.predictor = pk;
+        let mut m = sc.run(cfg, &trace, kind);
+        let s = m.summary();
+        assert!(
+            s.mispredict_regret.is_finite() && s.mispredict_regret >= 0.0,
+            "{}: regret {}",
+            pk.name(),
+            s.mispredict_regret
+        );
+        if pk == PredictorKind::Oracle {
+            assert_eq!(s.mispredict_regret, 0.0, "oracle must have zero regret");
+        }
+    }
+}
+
+/// The predictor axis actually reaches the simulator: a systematically
+/// short predictor changes SJF's regret relative to the oracle.
+#[test]
+fn noisy_predictors_change_the_measured_regret() {
+    let model = ModelSpec::mistral_7b();
+    let rps = exp::capacity_rps(&model, 0.5);
+    let sc = scenario::by_name("pred-noise").unwrap();
+    let trace = sc.build_trace(300, rps, 11);
+    let kind = PolicyKind::Sjf;
+    let regret = |pk: PredictorKind| {
+        let mut cfg = SimConfig::for_policy(model.clone(), kind);
+        cfg.predictor = pk;
+        sc.run(cfg, &trace, kind).summary().mispredict_regret
+    };
+    let oracle = regret(PredictorKind::Oracle);
+    let biased = regret(PredictorKind::SystematicShort { noise_milli: 900 });
+    assert_eq!(oracle, 0.0);
+    assert!(
+        biased > 0.0,
+        "systematic underestimation should accrue regret, got {biased}"
+    );
+}

@@ -3,7 +3,7 @@
 //! end-to-end runs of every registered scenario, and the sweep runner's
 //! cluster-size axis.
 
-use pecsched::config::{AblationFlags, ModelSpec, PolicyKind};
+use pecsched::config::{AblationFlags, ModelSpec, PolicyKind, PredictorKind};
 use pecsched::exp::{self, run_sweep, SweepSpec};
 use pecsched::scenario;
 use pecsched::sim::SimConfig;
@@ -90,6 +90,7 @@ fn sweep_cluster_axis_scales_replicas_and_workload() {
         scenarios: vec!["azure-steady".into()],
         loads: vec![0.5],
         seeds: vec![1],
+        predictors: vec![PredictorKind::default()],
         n_requests: 200,
         gpu_counts: vec![32, 64],
         threads: 2,

@@ -16,6 +16,7 @@ use pecsched::exp;
 use pecsched::metrics::MetricsMode;
 use pecsched::scenario;
 use pecsched::sim::{SimConfig, Simulation};
+use pecsched::trace::{Trace, TraceSource};
 
 /// Relative-tolerance check for digest means: the streaming fold visits
 /// requests in settlement order, the exact collector in id order, and
@@ -89,6 +90,57 @@ fn source_replay_is_bit_identical_across_all_policies() {
                 ms.summary(),
                 "{scen}/{}: run summaries diverged",
                 kind.name()
+            );
+        }
+    }
+}
+
+/// Equal arrival timestamps are no longer a caveat: the event heap
+/// orders (time, class, seq) with arrivals in class 0, so a batch of
+/// requests sharing one timestamp drains FIFO-by-id on both the eager
+/// and the source-driven path — bit-identical rows, every policy.
+#[test]
+fn tied_arrival_timestamps_replay_bit_identically() {
+    let model = ModelSpec::mistral_7b();
+    let rps = exp::capacity_rps(&model, 0.5);
+    let sc = scenario::by_name("azure-steady").expect("scenario registered");
+    // Quantise the generated arrivals onto a coarse grid so many requests
+    // share an exact timestamp (the regime the old module-doc caveat
+    // warned about). Trace::new's stable sort keeps id order among ties.
+    let mut reqs = sc.build_trace(250, rps, 37).requests;
+    for r in &mut reqs {
+        r.arrival = (r.arrival * 2.0).floor() / 2.0;
+    }
+    let trace = Trace::new(reqs);
+    let tied = trace
+        .requests
+        .windows(2)
+        .filter(|w| w[0].arrival.to_bits() == w[1].arrival.to_bits())
+        .count();
+    assert!(tied > 20, "grid too fine to exercise ties (got {tied})");
+
+    for kind in PolicyKind::all() {
+        let mk_cfg = || {
+            let mut cfg = SimConfig::for_policy(model.clone(), kind);
+            cfg.metrics_mode = MetricsMode::Exact;
+            cfg
+        };
+        let mut eager = Simulation::new(mk_cfg(), &trace, kind);
+        let mut me = eager.run();
+        let src = TraceSource::new(&trace);
+        let mut streamed = Simulation::new_streaming(mk_cfg(), Box::new(src), kind);
+        let mut ms = streamed.run();
+        assert_eq!(me.summary(), ms.summary(), "{}: summaries", kind.name());
+        let re = eager.state.requests();
+        let rs = streamed.state.requests();
+        assert_eq!(re.len(), rs.len());
+        for (a, b) in re.iter().zip(&rs) {
+            assert_eq!(
+                a.finish.map(f64::to_bits),
+                b.finish.map(f64::to_bits),
+                "{}: finish bits of req {} diverged under tied arrivals",
+                kind.name(),
+                a.req.id
             );
         }
     }
